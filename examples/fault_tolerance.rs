@@ -1,0 +1,65 @@
+//! Fault tolerance (§2.3.1, §3.6): what a stalled or crashed
+//! participant does to each reclamation scheme.
+//!
+//! * CMP — consumers crash right after their claim CAS: reclamation
+//!   recovers the abandoned nodes after W cycles; memory stays bounded.
+//! * EBR — a thread stalls while pinned: retention grows with churn.
+//! * Hazard pointers — a never-cleared hazard pins its node forever.
+//!
+//! ```sh
+//! cargo run --release --example fault_tolerance
+//! ```
+
+use cmpq::bench::faults::{
+    cmp_stalled_consumer, ebr_stalled_reader, fault_table, hp_stalled_reader,
+};
+use cmpq::queue::cmp::{CmpConfig, CmpQueue, ReclaimTrigger};
+
+fn main() {
+    let churn = 50_000;
+
+    println!("Injecting faults and churning {churn} ops through each scheme...\n");
+    let outcomes = vec![
+        cmp_stalled_consumer(churn, 8),
+        hp_stalled_reader(churn),
+        ebr_stalled_reader(churn),
+    ];
+    println!("{}", fault_table(&outcomes));
+
+    println!("Interpretation:");
+    println!("  cmp    — 8 consumers crashed mid-dequeue; retention stays ≈ W.");
+    println!("  ms-hp  — the pinned node leaks until the thread recovers (leak ∝ pinned slots).");
+    println!("  ms-ebr — a single pinned stall blocks ALL reclamation: retention ≈ churn.\n");
+
+    // Bounded-recovery detail for CMP: watch the abandoned payloads get
+    // dropped by the reclaimer as the window slides past them.
+    let cfg = CmpConfig::default()
+        .with_window(256)
+        .with_min_batch(1)
+        .with_trigger(ReclaimTrigger::Manual);
+    let q: CmpQueue<Vec<u8>> = CmpQueue::with_config(cfg);
+    for i in 0..64u8 {
+        q.push(vec![i; 16]).unwrap();
+    }
+    for _ in 0..8 {
+        assert!(q.inject_stalled_claim(), "claim injected");
+    }
+    // Drain the rest normally, then slide the window far past the
+    // abandoned claims.
+    while q.pop().is_some() {}
+    for i in 0..1024u64 {
+        q.push(vec![i as u8; 4]).unwrap();
+        q.pop();
+    }
+    let freed = q.reclaim();
+    let stats = q.stats();
+    println!("CMP recovery detail:");
+    println!("  nodes recycled this pass: {freed}");
+    println!(
+        "  payloads recovered from crashed claimers: {}",
+        stats.payloads_reclaimed
+    );
+    println!("  pool footprint: {} nodes", q.footprint_nodes());
+    assert!(stats.payloads_reclaimed >= 8, "all abandoned payloads dropped");
+    println!("\nCMP recovered every abandoned node without any coordination. ✓");
+}

@@ -1,0 +1,148 @@
+//! Multi-stage data pipeline on CMP queues — the producer/consumer
+//! chains the paper's intro motivates (training-style ingestion:
+//! decode → augment → batch), each stage a thread pool connected by
+//! CMP queues, with backpressure via bounded node pools.
+//!
+//! ```sh
+//! cargo run --release --example pipeline_stages
+//! ```
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use cmpq::queue::cmp::{CmpConfig, CmpQueue, ReclaimTrigger};
+use cmpq::util::XorShift64;
+
+/// A "record" moving through the pipeline.
+#[derive(Debug)]
+struct Record {
+    id: u64,
+    payload: Vec<u8>,
+    checksum: u64,
+}
+
+fn stage_queue() -> Arc<CmpQueue<Record>> {
+    // Bounded pool ⇒ natural backpressure: a stage that outruns its
+    // consumer hits the cap, reclaims, and retries (§3.3 Phase 1).
+    Arc::new(CmpQueue::with_config(
+        CmpConfig::default()
+            .with_max_nodes(8192)
+            .with_window(1024)
+            .with_min_batch(16)
+            .with_reclaim_period(512)
+            .with_trigger(ReclaimTrigger::Modulo),
+    ))
+}
+
+fn main() {
+    let total: u64 = 100_000;
+    let decode_q = stage_queue(); // source → decode
+    let augment_q = stage_queue(); // decode → augment
+    let sink_count = Arc::new(AtomicU64::new(0));
+    let sink_checksum = Arc::new(AtomicU64::new(0));
+    let done_decode = Arc::new(AtomicBool::new(false));
+    let done_augment = Arc::new(AtomicBool::new(false));
+
+    let t0 = Instant::now();
+
+    // Stage 1: two source threads synthesize records.
+    let sources: Vec<_> = (0..2u64)
+        .map(|s| {
+            let q = decode_q.clone();
+            std::thread::spawn(move || {
+                let mut rng = XorShift64::new(s + 1);
+                for i in 0..total / 2 {
+                    let id = s * (total / 2) + i;
+                    let payload: Vec<u8> = (0..64).map(|_| rng.next_u64() as u8).collect();
+                    q.push(Record {
+                        id,
+                        payload,
+                        checksum: 0,
+                    })
+                    .expect("backpressure never fails permanently");
+                }
+            })
+        })
+        .collect();
+
+    // Stage 2: three decoders compute checksums.
+    let decoders: Vec<_> = (0..3)
+        .map(|_| {
+            let src = decode_q.clone();
+            let dst = augment_q.clone();
+            let done = done_decode.clone();
+            std::thread::spawn(move || loop {
+                match src.pop() {
+                    Some(mut r) => {
+                        r.checksum = r
+                            .payload
+                            .iter()
+                            .fold(0u64, |a, &b| a.rotate_left(7) ^ b as u64);
+                        dst.push(r).unwrap();
+                    }
+                    None => {
+                        if done.load(Ordering::Acquire) && src.pop().is_none() {
+                            return;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+
+    // Stage 3: two augmenters/sinks fold results.
+    let sinks: Vec<_> = (0..2)
+        .map(|_| {
+            let src = augment_q.clone();
+            let done = done_augment.clone();
+            let count = sink_count.clone();
+            let sum = sink_checksum.clone();
+            std::thread::spawn(move || loop {
+                match src.pop() {
+                    Some(r) => {
+                        count.fetch_add(1, Ordering::AcqRel);
+                        sum.fetch_xor(r.checksum ^ r.id, Ordering::AcqRel);
+                    }
+                    None => {
+                        if done.load(Ordering::Acquire) && src.pop().is_none() {
+                            return;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+
+    for h in sources {
+        h.join().unwrap();
+    }
+    done_decode.store(true, Ordering::Release);
+    for h in decoders {
+        h.join().unwrap();
+    }
+    done_augment.store(true, Ordering::Release);
+    for h in sinks {
+        h.join().unwrap();
+    }
+    let dt = t0.elapsed();
+
+    let processed = sink_count.load(Ordering::Acquire);
+    assert_eq!(processed, total, "every record reached the sink exactly once");
+    println!(
+        "3-stage pipeline: {total} records in {dt:.2?} ({:.2}M rec/s)",
+        total as f64 / dt.as_secs_f64() / 1e6
+    );
+    println!("final checksum: {:#018x}", sink_checksum.load(Ordering::Acquire));
+    println!(
+        "stage-queue footprints: decode={} augment={} nodes (caps 8192 — backpressure held)",
+        decode_q.footprint_nodes(),
+        augment_q.footprint_nodes()
+    );
+    assert!(decode_q.footprint_nodes() <= 8192);
+    assert!(augment_q.footprint_nodes() <= 8192);
+    println!("decode stats:  {}", decode_q.stats().summary());
+    println!("augment stats: {}", augment_q.stats().summary());
+}

@@ -1,0 +1,87 @@
+//! Quickstart: the CMP queue public API in five minutes.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use cmpq::queue::cmp::ReclaimTrigger;
+use cmpq::{CmpConfig, CmpQueue, ConcurrentQueue};
+
+fn main() {
+    // 1. Default queue: unbounded, strict FIFO, lock-free.
+    let q: CmpQueue<u64> = CmpQueue::new();
+    for i in 0..10 {
+        q.push(i).unwrap();
+    }
+    let drained: Vec<u64> = std::iter::from_fn(|| q.pop()).collect();
+    assert_eq!(drained, (0..10).collect::<Vec<_>>());
+    println!("FIFO drain: {drained:?}");
+
+    // 2. Tuned queue: the paper's window sizing rule (§3.1) —
+    //    W = max(MIN_WINDOW, expected_ops_per_sec × resilience_secs).
+    let window = CmpConfig::window_for(1_000_000, 0.01); // 10ms resilience
+    let cfg = CmpConfig::default()
+        .with_window(window)
+        .with_reclaim_period(2048)
+        .with_trigger(ReclaimTrigger::Modulo);
+    println!("window for 1M ops/s @ 10ms resilience: {window} cycles");
+
+    // 3. MPMC: 4 producers, 4 consumers, zero coordination.
+    let q = Arc::new(CmpQueue::<u64>::with_config(cfg));
+    let total: u64 = 400_000;
+    let per = total / 4;
+    let t0 = Instant::now();
+    let producers: Vec<_> = (0..4u64)
+        .map(|p| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    q.push(p * per + i).unwrap();
+                }
+            })
+        })
+        .collect();
+    let consumers: Vec<_> = (0..4)
+        .map(|_| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut n = 0u64;
+                let mut checksum = 0u64;
+                while n < per {
+                    if let Some(v) = q.pop() {
+                        checksum ^= v;
+                        n += 1;
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                (n, checksum)
+            })
+        })
+        .collect();
+    for h in producers {
+        h.join().unwrap();
+    }
+    let consumed: u64 = consumers.into_iter().map(|h| h.join().unwrap().0).sum();
+    let dt = t0.elapsed();
+    assert_eq!(consumed, total);
+    println!(
+        "4P4C moved {total} items in {dt:.2?} ({:.2}M items/s)",
+        total as f64 / dt.as_secs_f64() / 1e6
+    );
+
+    // 4. Introspection: bounded memory + operation stats.
+    println!(
+        "pool footprint: {} nodes (bounded by W + reclaim slack, not by {total})",
+        q.footprint_nodes()
+    );
+    println!("stats: {}", q.stats().summary());
+
+    // 5. The trait object view used by the benches.
+    let dynq: Arc<dyn ConcurrentQueue<String>> = Arc::new(CmpQueue::new());
+    dynq.enqueue("via trait".to_string());
+    println!("trait dequeue: {:?}", dynq.try_dequeue());
+}

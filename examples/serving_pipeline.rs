@@ -1,0 +1,128 @@
+//! END-TO-END driver: batched inference serving over the CMP fabric —
+//! the paper's motivating "AI era" workload (§1), with all three layers
+//! composing:
+//!
+//!   clients → Router (CMP shard queues) → dynamic Batcher
+//!           → CMP work queue → Workers (PJRT executes the AOT-compiled
+//!             JAX model whose hot-spot is the L1 Pallas kernel)
+//!           → completion slots → clients
+//!
+//! Requires `make artifacts` (falls back to an echo engine otherwise so
+//! the pipeline itself is still demonstrated). Reports throughput and
+//! latency percentiles; the run is recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serving_pipeline
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cmpq::coordinator::batcher::BatchPolicy;
+use cmpq::coordinator::router::RoutePolicy;
+use cmpq::coordinator::server::{Server, ServerConfig};
+use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+use cmpq::runtime::client::artifacts_dir;
+use cmpq::runtime::{ModelRuntime, TestVectors};
+use cmpq::util::XorShift64;
+
+fn main() {
+    let dir = artifacts_dir();
+    let have_model = dir.join("model.hlo.txt").exists();
+
+    // --- Stage 0: prove the artifact's numerics before serving it.
+    if have_model {
+        let rt = ModelRuntime::load_from_artifacts(&dir).expect("load model");
+        let tv = TestVectors::load(&dir).expect("load test vectors");
+        let out = rt.infer(&tv.input).expect("inference");
+        tv.check(&out).expect("JAX-vs-PJRT numerics");
+        println!(
+            "model ok: {:?} -> {:?}, matches JAX within rtol={}",
+            rt.input_shape(),
+            rt.output_shape(),
+            tv.rtol
+        );
+    } else {
+        println!("artifacts missing — run `make artifacts`; using echo engine");
+    }
+
+    let factory: EngineFactory = if have_model {
+        let dir = dir.clone();
+        Arc::new(move || {
+            Ok(Box::new(ModelRuntime::load_from_artifacts(&dir)?) as Box<dyn InferenceEngine>)
+        })
+    } else {
+        Arc::new(|| {
+            Ok(Box::new(EchoEngine {
+                batch: 8,
+                features: 128,
+                outputs: 16,
+                scale: 1.0,
+            }) as Box<dyn InferenceEngine>)
+        })
+    };
+
+    // --- Stage 1: start the pipeline.
+    let server = Arc::new(Server::start(
+        ServerConfig {
+            shards: 2,
+            workers: 2,
+            route_policy: RoutePolicy::RoundRobin,
+            batch_policy: BatchPolicy {
+                max_batch: 8, // = model batch
+                max_wait: Duration::from_millis(2),
+            },
+            ..ServerConfig::default()
+        },
+        factory,
+    ));
+
+    // --- Stage 2: closed-loop clients.
+    let n_clients = 8usize;
+    let per_client = 64u64;
+    let total = n_clients as u64 * per_client;
+    println!("serving {total} requests from {n_clients} closed-loop clients...");
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let mut rng = XorShift64::new(c as u64 + 1);
+                let mut checksum = 0f64;
+                for _ in 0..per_client {
+                    let features: Vec<f32> =
+                        (0..128).map(|_| rng.next_f64() as f32 - 0.5).collect();
+                    let resp = server
+                        .submit(features)
+                        .wait_timeout(Duration::from_secs(120))
+                        .expect("request timed out");
+                    assert_eq!(resp.output.len(), 16, "one logit row");
+                    checksum += resp.output[0] as f64;
+                }
+                checksum
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client panicked");
+    }
+    let elapsed = t0.elapsed();
+
+    // --- Stage 3: report.
+    println!(
+        "\nthroughput: {total} requests in {elapsed:.2?} = {:.1} req/s",
+        total as f64 / elapsed.as_secs_f64()
+    );
+    println!("pipeline metrics: {}", server.metrics().report());
+    println!(
+        "CMP work-queue footprint: {} nodes (bounded)",
+        server.work_queue_footprint()
+    );
+    let server = Arc::try_unwrap(server).ok().expect("clients joined");
+    let m = server.shutdown();
+    assert_eq!(
+        m.completed.load(std::sync::atomic::Ordering::Relaxed),
+        total
+    );
+    println!("clean shutdown: all {total} requests completed. ✓");
+}

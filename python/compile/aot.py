@@ -1,0 +1,142 @@
+"""AOT compile path: lower the L2 model (with its L1 Pallas kernel) to
+HLO **text** and emit artifacts the Rust runtime loads.
+
+HLO text — NOT ``lowered.compile()`` output or ``.serialize()`` protos:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and gen_hlo.py).
+
+Outputs (``--out-dir``, default ../artifacts):
+  model.hlo.txt      — batch-8 classifier forward (params baked in)
+  synthload.hlo.txt  — compute-burn graph for the loaded regime
+  testvec.json       — seeded input + expected output for the Rust
+                       runtime integration test
+  meta.json          — shapes/dtypes/artifact inventory
+
+Usage: cd python && python -m compile.aot [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from .model import ModelConfig, forward, forward_ref, init_params, synth_load
+
+SYNTH_DIM = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe path).
+
+    ``print_large_constants=True`` is load-bearing: the default text
+    dump elides big array constants as ``constant({...})`` and the
+    XLA 0.5.1 text *parser* silently zero-fills them — baked model
+    weights would all read as zeros on the Rust side.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def build_model_artifact(cfg: ModelConfig, seed: int):
+    params = init_params(cfg, seed)
+
+    def fn(x):
+        return forward(x, params, cfg)
+
+    spec = jax.ShapeDtypeStruct((cfg.batch, cfg.d_model), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    hlo = to_hlo_text(lowered)
+
+    # Deterministic test vectors, checked end-to-end from Rust.
+    key = jax.random.PRNGKey(seed + 1)
+    x = jax.random.normal(key, (cfg.batch, cfg.d_model), jnp.float32)
+    y = fn(x)
+    y_ref = forward_ref(x, params, cfg)
+    import numpy as np
+
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-5, atol=2e-5)
+
+    testvec = {
+        "input_shape": list(x.shape),
+        "output_shape": list(y.shape),
+        "input": [float(v) for v in np.asarray(x).reshape(-1)],
+        "expected": [float(v) for v in np.asarray(y).reshape(-1)],
+        "rtol": 1e-4,
+        "seed": seed,
+    }
+    return hlo, testvec
+
+
+def build_synthload_artifact():
+    spec = jax.ShapeDtypeStruct((SYNTH_DIM, SYNTH_DIM), jnp.float32)
+    lowered = jax.jit(lambda x: (synth_load(x),)).lower(spec)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    cfg = ModelConfig()
+    hlo, testvec = build_model_artifact(cfg, args.seed)
+    model_path = os.path.join(args.out_dir, "model.hlo.txt")
+    with open(model_path, "w") as f:
+        f.write(hlo)
+    print(f"wrote {model_path} ({len(hlo)} chars)")
+
+    tv_path = os.path.join(args.out_dir, "testvec.json")
+    with open(tv_path, "w") as f:
+        json.dump(testvec, f)
+    print(f"wrote {tv_path}")
+
+    synth = build_synthload_artifact()
+    synth_path = os.path.join(args.out_dir, "synthload.hlo.txt")
+    with open(synth_path, "w") as f:
+        f.write(synth)
+    print(f"wrote {synth_path} ({len(synth)} chars)")
+
+    from .kernels.mlp_block import vmem_bytes
+
+    meta = {
+        "model": {
+            "path": "model.hlo.txt",
+            "input_shape": [cfg.batch, cfg.d_model],
+            "output_shape": [cfg.batch, cfg.n_classes],
+            "dtype": "f32",
+            "d_hidden": cfg.d_hidden,
+            "tile_b": cfg.tile_b,
+            "kernel_vmem_bytes_per_step": vmem_bytes(
+                cfg.tile_b, cfg.d_model, cfg.d_hidden, cfg.d_model
+            ),
+        },
+        "synthload": {
+            "path": "synthload.hlo.txt",
+            "input_shape": [SYNTH_DIM, SYNTH_DIM],
+            "output_shape": [SYNTH_DIM, SYNTH_DIM],
+            "dtype": "f32",
+        },
+        "jax_version": jax.__version__,
+        "model_module": model_mod.__name__,
+    }
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

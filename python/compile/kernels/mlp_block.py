@@ -1,0 +1,105 @@
+"""L1 — Pallas kernel: fused MLP block (Linear -> GELU -> Linear).
+
+The compute hot-spot of the serving workload the coordinator drives
+(DESIGN.md §1). TPU-style structure even though we execute through the
+CPU PJRT client with ``interpret=True`` (real-TPU lowering emits Mosaic
+custom-calls the CPU plugin cannot run — see /opt/xla-example/README):
+
+* the batch dimension is tiled through the grid + ``BlockSpec`` so each
+  step works on a VMEM-resident ``(TILE_B, D)`` activation tile — the
+  HBM<->VMEM schedule a GPU implementation would express with
+  threadblocks;
+* both matmuls use ``preferred_element_type=float32`` (MXU accumulation
+  width) and the weight operands are kept whole per grid step (they are
+  small: D x H + H x D);
+* dimensions default to multiples of 128 to match the MXU systolic
+  array shape.
+
+VMEM footprint per grid step (all f32, defaults TILE_B=8, D=128,
+H=512): x tile 8*128*4 = 4 KiB, W1 128*512*4 = 256 KiB, W2 512*128*4 =
+256 KiB, h 8*512*4 = 16 KiB, out 4 KiB, biases ~2.5 KiB -> ~540 KiB,
+comfortably inside one TPU core's VMEM (16 MiB) with double-buffering
+headroom. Recorded in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_B = 8
+
+
+def _gelu(x):
+    """tanh-approximation GELU (matches ref.py exactly)."""
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    """One grid step: o = gelu(x @ W1 + b1) @ W2 + b2 on a batch tile."""
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...], preferred_element_type=jnp.float32)
+    h = h + b1_ref[...][None, :]
+    h = _gelu(h)
+    o = jnp.dot(h, w2_ref[...], preferred_element_type=jnp.float32)
+    o = o + b2_ref[...][None, :]
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_b", "interpret"))
+def mlp_block(x, w1, b1, w2, b2, *, tile_b: int = DEFAULT_TILE_B, interpret: bool = True):
+    """Fused Linear->GELU->Linear over batch tiles.
+
+    Args:
+      x: ``(B, D)`` activations; ``B`` must be divisible by ``tile_b``.
+      w1: ``(D, H)``;  b1: ``(H,)``;  w2: ``(H, D_out)``;  b2: ``(D_out,)``.
+      tile_b: batch tile per grid step.
+      interpret: must stay True for CPU-PJRT execution.
+
+    Returns:
+      ``(B, D_out)`` with ``x``'s dtype.
+    """
+    B, D = x.shape
+    Dw, H = w1.shape
+    H2, D_out = w2.shape
+    if D != Dw or H != H2 or b1.shape != (H,) or b2.shape != (D_out,):
+        raise ValueError(
+            f"shape mismatch: x{x.shape} w1{w1.shape} b1{b1.shape} "
+            f"w2{w2.shape} b2{b2.shape}"
+        )
+    if B % tile_b != 0:
+        raise ValueError(f"batch {B} not divisible by tile_b {tile_b}")
+
+    grid = (B // tile_b,)
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            # Activation tile marches down the batch.
+            pl.BlockSpec((tile_b, D), lambda i: (i, 0)),
+            # Weights/biases: whole array resident every step.
+            pl.BlockSpec((D, H), lambda i: (0, 0)),
+            pl.BlockSpec((H,), lambda i: (0,)),
+            pl.BlockSpec((H, D_out), lambda i: (0, 0)),
+            pl.BlockSpec((D_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile_b, D_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, D_out), x.dtype),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def vmem_bytes(tile_b: int, d: int, h: int, d_out: int, bytes_per_el: int = 4) -> int:
+    """Estimated VMEM residency per grid step (perf-model input)."""
+    x_tile = tile_b * d
+    w1 = d * h
+    b1 = h
+    hidden = tile_b * h
+    w2 = h * d_out
+    b2 = d_out
+    out = tile_b * d_out
+    return (x_tile + w1 + b1 + hidden + w2 + b2 + out) * bytes_per_el

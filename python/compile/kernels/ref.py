@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Pallas kernels — the CORE correctness signal
+(pytest asserts kernel == ref across shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gelu_ref(x):
+    """tanh-approximation GELU, bit-matching the kernel's formula."""
+    c = 0.7978845608028654  # sqrt(2/pi)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def mlp_block_ref(x, w1, b1, w2, b2):
+    """o = gelu(x @ W1 + b1) @ W2 + b2, accumulating in f32."""
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1[None, :]
+    h = gelu_ref(h)
+    o = jnp.dot(h, w2, preferred_element_type=jnp.float32) + b2[None, :]
+    return o.astype(x.dtype)
+
+
+def layer_norm_ref(x, gamma, beta, eps: float = 1e-6):
+    """Row-wise layer norm."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta

@@ -1,0 +1,89 @@
+"""L2 — JAX model: transformer-style MLP classifier block served by the
+Rust coordinator (the inference workload of the paper's motivating "AI
+era" pipelines, §1).
+
+forward(x) = LayerNorm(x + MlpBlock(x)) @ W_out + b_out
+
+The MLP block is the L1 Pallas kernel; the residual/norm/projection
+stay plain jnp so the lowered HLO exercises both kernel and non-kernel
+paths through the same artifact. Python runs at build time only.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.mlp_block import mlp_block
+from .kernels.ref import layer_norm_ref, mlp_block_ref
+
+
+class ModelConfig(NamedTuple):
+    batch: int = 8
+    d_model: int = 128
+    d_hidden: int = 512
+    n_classes: int = 16
+    tile_b: int = 8
+
+
+class Params(NamedTuple):
+    w1: jax.Array  # (D, H)
+    b1: jax.Array  # (H,)
+    w2: jax.Array  # (H, D)
+    b2: jax.Array  # (D,)
+    gamma: jax.Array  # (D,)
+    beta: jax.Array  # (D,)
+    w_out: jax.Array  # (D, C)
+    b_out: jax.Array  # (C,)
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """Seeded, scale-sane initialization (fan-in scaled normals)."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(k, 3)
+    d, h, c = cfg.d_model, cfg.d_hidden, cfg.n_classes
+    return Params(
+        w1=jax.random.normal(k1, (d, h), jnp.float32) / jnp.sqrt(d),
+        b1=jnp.zeros((h,), jnp.float32),
+        w2=jax.random.normal(k2, (h, d), jnp.float32) / jnp.sqrt(h),
+        b2=jnp.zeros((d,), jnp.float32),
+        gamma=jnp.ones((d,), jnp.float32),
+        beta=jnp.zeros((d,), jnp.float32),
+        w_out=jax.random.normal(k3, (d, c), jnp.float32) / jnp.sqrt(d),
+        b_out=jnp.zeros((c,), jnp.float32),
+    )
+
+
+def forward(x, params: Params, cfg: ModelConfig, *, interpret: bool = True):
+    """Model forward pass: (B, D) -> (B, C) logits."""
+    h = mlp_block(
+        x,
+        params.w1,
+        params.b1,
+        params.w2,
+        params.b2,
+        tile_b=cfg.tile_b,
+        interpret=interpret,
+    )
+    h = x + h  # residual
+    h = layer_norm_ref(h, params.gamma, params.beta)
+    return jnp.dot(h, params.w_out) + params.b_out[None, :]
+
+
+def forward_ref(x, params: Params, cfg: ModelConfig):
+    """Oracle forward using the pure-jnp MLP reference."""
+    h = mlp_block_ref(x, params.w1, params.b1, params.w2, params.b2)
+    h = x + h
+    h = layer_norm_ref(h, params.gamma, params.beta)
+    return jnp.dot(h, params.w_out) + params.b_out[None, :]
+
+
+def synth_load(x, steps: int = 8):
+    """Build-time compute-burn graph for the PJRT-backed synthetic-load
+    regime: an iterated matmul chain on a small square tile."""
+    def body(_, acc):
+        return jnp.tanh(acc @ acc.T) @ x / 8.0
+
+    return jax.lax.fori_loop(0, steps, body, x)

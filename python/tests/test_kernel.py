@@ -1,0 +1,126 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle — the core signal.
+
+hypothesis sweeps shapes and dtypes; every case asserts allclose
+against ref.py (the prompt's required methodology)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.mlp_block import mlp_block, vmem_bytes
+from compile.kernels.ref import gelu_ref, mlp_block_ref
+
+
+def make_inputs(b, d, h, d_out, dtype, seed=0):
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4, k5 = jax.random.split(k, 5)
+    x = jax.random.normal(k1, (b, d), jnp.float32).astype(dtype)
+    w1 = (jax.random.normal(k2, (d, h), jnp.float32) / np.sqrt(d)).astype(dtype)
+    b1 = (jax.random.normal(k3, (h,), jnp.float32) * 0.1).astype(dtype)
+    w2 = (jax.random.normal(k4, (h, d_out), jnp.float32) / np.sqrt(h)).astype(dtype)
+    b2 = (jax.random.normal(k5, (d_out,), jnp.float32) * 0.1).astype(dtype)
+    return x, w1, b1, w2, b2
+
+
+def tol_for(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestKernelBasics:
+    def test_matches_ref_default_shape(self):
+        args = make_inputs(8, 128, 512, 128, jnp.float32)
+        out = mlp_block(*args)
+        ref = mlp_block_ref(*args)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **tol_for(jnp.float32))
+
+    def test_output_shape_and_dtype(self):
+        args = make_inputs(16, 64, 128, 32, jnp.float32)
+        out = mlp_block(*args, tile_b=4)
+        assert out.shape == (16, 32)
+        assert out.dtype == jnp.float32
+
+    def test_multiple_batch_tiles_consistent(self):
+        """Tiling must not change the result: tile_b=2 vs tile_b=8."""
+        args = make_inputs(16, 64, 128, 64, jnp.float32)
+        a = mlp_block(*args, tile_b=2)
+        b = mlp_block(*args, tile_b=8)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    def test_rejects_bad_tile(self):
+        args = make_inputs(10, 64, 128, 64, jnp.float32)
+        with pytest.raises(ValueError, match="not divisible"):
+            mlp_block(*args, tile_b=4)
+
+    def test_rejects_shape_mismatch(self):
+        x, w1, b1, w2, b2 = make_inputs(8, 64, 128, 64, jnp.float32)
+        bad_b1 = jnp.zeros((b1.shape[0] + 1,), b1.dtype)
+        with pytest.raises(ValueError, match="shape mismatch"):
+            mlp_block(x, w1, bad_b1, w2, b2)
+
+    def test_gelu_ref_known_values(self):
+        x = jnp.array([0.0, 1.0, -1.0, 3.0])
+        g = np.asarray(gelu_ref(x))
+        assert g[0] == 0.0
+        assert abs(g[1] - 0.8412) < 1e-3
+        assert abs(g[2] + 0.1588) < 1e-3
+        assert abs(g[3] - 2.9964) < 1e-3
+
+    def test_zero_input_gives_bias_path(self):
+        x, w1, b1, w2, b2 = make_inputs(8, 64, 128, 64, jnp.float32)
+        x = jnp.zeros_like(x)
+        out = mlp_block(x, w1, b1, w2, b2)
+        ref = mlp_block_ref(x, w1, b1, w2, b2)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_tiles=st.integers(min_value=1, max_value=4),
+    tile_b=st.sampled_from([1, 2, 4, 8]),
+    d=st.sampled_from([8, 32, 64, 128]),
+    h=st.sampled_from([16, 64, 256]),
+    d_out=st.sampled_from([8, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_shape_sweep(b_tiles, tile_b, d, h, d_out, seed):
+    """hypothesis: kernel == ref across the shape lattice (f32)."""
+    b = b_tiles * tile_b
+    args = make_inputs(b, d, h, d_out, jnp.float32, seed=seed)
+    out = mlp_block(*args, tile_b=tile_b)
+    ref = mlp_block_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), **tol_for(jnp.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    tile_b=st.sampled_from([2, 4]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_kernel_matches_ref_dtype_sweep(dtype, tile_b, seed):
+    """hypothesis: dtype sweep (f32 + bf16) at a fixed MXU-ish shape."""
+    args = make_inputs(8, 64, 128, 64, dtype, seed=seed)
+    out = mlp_block(*args, tile_b=tile_b)
+    ref = mlp_block_ref(*args)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32),
+        np.asarray(ref, dtype=np.float32),
+        **tol_for(dtype),
+    )
+
+
+class TestVmemModel:
+    def test_default_config_fits_vmem(self):
+        """Shipped config must fit a TPU core's VMEM with headroom."""
+        bytes_ = vmem_bytes(8, 128, 512, 128)
+        assert bytes_ < 2 * 1024 * 1024, f"{bytes_} exceeds 2 MiB budget"
+
+    def test_scales_linearly_in_tile(self):
+        a = vmem_bytes(8, 128, 512, 128)
+        b = vmem_bytes(16, 128, 512, 128)
+        # Only activation tiles scale; weights dominate and are constant.
+        assert b > a
+        assert b - a == (8 * 128 + 8 * 512 + 8 * 128) * 4

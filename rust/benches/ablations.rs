@@ -1,0 +1,135 @@
+//! Ablation studies for the design choices DESIGN.md calls out:
+//!
+//! * ABL-HELP   — §3.4: M&S-style helping vs retry-with-fresh-state.
+//! * ABL-WIN    — §3.1: protection window W sweep (throughput + memory).
+//! * ABL-RECL   — §3.3: reclaim period N sweep + trigger policy.
+//! * ABL-CURSOR — §3.5: scan-cursor on/off.
+//! * FAULT      — §3.6: stall/crash tolerance vs HP/EBR.
+//!
+//! `cargo bench --bench ablations` (env: `BENCH_OPS`, `BENCH_ROUNDS`).
+
+use std::sync::Arc;
+
+use cmpq::bench::faults::{
+    cmp_stalled_consumer, ebr_stalled_reader, fault_table, hp_stalled_reader,
+};
+use cmpq::bench::sigma;
+use cmpq::bench::workload::{run_throughput_on, PairConfig, TrialConfig};
+use cmpq::queue::cmp::{CmpConfig, CmpQueue, ReclaimTrigger};
+use cmpq::queue::ConcurrentQueue;
+
+fn env_u64(k: &str, d: u64) -> u64 {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+/// Mean throughput of `rounds` trials of a fresh queue per trial.
+fn bench_config(make: &dyn Fn() -> CmpConfig, pair: PairConfig, ops: u64, rounds: usize) -> f64 {
+    let mut samples = Vec::with_capacity(rounds);
+    for _ in 0..rounds {
+        let q: Arc<dyn ConcurrentQueue<u64>> =
+            Arc::new(CmpQueue::<u64>::with_config(make()));
+        let cfg = TrialConfig {
+            total_ops: ops,
+            ..TrialConfig::default()
+        };
+        samples.push(run_throughput_on(q, pair, &cfg).items_per_sec);
+    }
+    let (kept, _) = sigma::three_sigma(&samples);
+    sigma::mean_std(&kept).0
+}
+
+fn main() {
+    let ops = env_u64("BENCH_OPS", 60_000);
+    let rounds = env_u64("BENCH_ROUNDS", 3) as usize;
+
+    // ---------------- ABL-HELP ----------------
+    println!("# ABL-HELP — §3.4 helping vs retry-with-fresh-state (items/s)");
+    println!("{:<10}{:>16}{:>16}{:>10}", "config", "no-helping", "helping", "Δ%");
+    for n in [1usize, 4, 16, 32] {
+        let pair = PairConfig::symmetric(n);
+        let no_help = bench_config(&CmpConfig::default, pair, ops, rounds);
+        let help = bench_config(&|| CmpConfig::default().with_helping(), pair, ops, rounds);
+        println!(
+            "{:<10}{:>16.0}{:>16.0}{:>9.1}%",
+            pair.label(),
+            no_help,
+            help,
+            100.0 * (no_help - help) / help
+        );
+    }
+
+    // ---------------- ABL-WIN ----------------
+    println!("\n# ABL-WIN — §3.1 protection window sweep (4P4C)");
+    println!("{:<12}{:>16}{:>18}", "window", "items/s", "peak pool nodes");
+    for w in [256u64, 1024, 4096, 16384, 65536, 1 << 20] {
+        let pair = PairConfig::symmetric(4);
+        // One instrumented trial for footprint + separate rounds for rate.
+        let q = Arc::new(CmpQueue::<u64>::with_config(
+            CmpConfig::default().with_window(w),
+        ));
+        let cfg = TrialConfig {
+            total_ops: ops,
+            ..TrialConfig::default()
+        };
+        let dynq: Arc<dyn ConcurrentQueue<u64>> = q.clone();
+        run_throughput_on(dynq, pair, &cfg);
+        let footprint = q.footprint_nodes();
+        let rate = bench_config(&|| CmpConfig::default().with_window(w), pair, ops, rounds);
+        println!("{:<12}{:>16.0}{:>18}", w, rate, footprint);
+    }
+
+    // ---------------- ABL-RECL ----------------
+    println!("\n# ABL-RECL — §3.3 reclaim trigger policy (4P4C, items/s)");
+    println!("{:<14}{:>12}{:>16}", "period N", "modulo", "bernoulli");
+    for n in [128u64, 512, 1024, 4096, 16384] {
+        let pair = PairConfig::symmetric(4);
+        let modulo = bench_config(
+            &|| CmpConfig::default().with_reclaim_period(n),
+            pair,
+            ops,
+            rounds,
+        );
+        let bern = bench_config(
+            &|| {
+                CmpConfig::default()
+                    .with_reclaim_period(n)
+                    .with_trigger(ReclaimTrigger::Bernoulli)
+            },
+            pair,
+            ops,
+            rounds,
+        );
+        println!("{:<14}{:>12.0}{:>16.0}", n, modulo, bern);
+    }
+
+    // ---------------- ABL-CURSOR ----------------
+    println!("\n# ABL-CURSOR — §3.5 scan-cursor on/off (items/s)");
+    println!("{:<10}{:>14}{:>14}{:>10}", "config", "cursor", "no-cursor", "speedup");
+    for n in [1usize, 4, 16] {
+        let pair = PairConfig::symmetric(n);
+        let with = bench_config(&CmpConfig::default, pair, ops, rounds);
+        let without = bench_config(
+            &|| CmpConfig::default().without_scan_cursor(),
+            pair,
+            ops,
+            rounds,
+        );
+        println!(
+            "{:<10}{:>14.0}{:>14.0}{:>9.2}x",
+            pair.label(),
+            with,
+            without,
+            with / without
+        );
+    }
+
+    // ---------------- FAULT ----------------
+    println!();
+    let churn = ops.min(50_000);
+    let rows = vec![
+        cmp_stalled_consumer(churn, 8),
+        hp_stalled_reader(churn),
+        ebr_stalled_reader(churn),
+    ];
+    println!("{}", fault_table(&rows));
+}

@@ -1,0 +1,51 @@
+//! TAB1–TAB3 — the paper's latency tables: avg + P99 enqueue/dequeue
+//! latency (ns) at 1P1C (Table 1), 4P4C (Table 2), 32P32C (Table 3),
+//! plus the 64P64C numbers quoted in the text. 3-sigma filtered per §4.
+//!
+//! `cargo bench --bench latency` (env: `BENCH_OPS`, `BENCH_ROUNDS`).
+
+use cmpq::bench::report;
+use cmpq::bench::runner::{latency_suite, SuiteOptions};
+use cmpq::bench::workload::PairConfig;
+use cmpq::queue::Impl;
+
+fn env_u64(k: &str, d: u64) -> u64 {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let opts = SuiteOptions {
+        total_ops: env_u64("BENCH_OPS", 40_000),
+        rounds: env_u64("BENCH_ROUNDS", 2) as usize,
+        warmup_rounds: 1,
+        verbose: std::env::var("BENCH_VERBOSE").is_ok(),
+        ..SuiteOptions::default()
+    };
+    let impls = [Impl::Cmp, Impl::Segmented, Impl::MsHp];
+    let pairs = [
+        PairConfig::symmetric(1),
+        PairConfig::symmetric(4),
+        PairConfig::symmetric(32),
+        PairConfig::symmetric(64),
+    ];
+    eprintln!(
+        "TABLES: {} impls × {:?} × {} rounds",
+        impls.len(),
+        pairs.iter().map(|p| p.label()).collect::<Vec<_>>(),
+        opts.rounds
+    );
+    let cells = latency_suite(&impls, &pairs, &opts);
+    let titles = [
+        "Table 1 — Latency with no contention (1P1C, ns)",
+        "Table 2 — Balanced contention (4P4C, ns)",
+        "Table 3 — High contention (32P32C, ns)",
+        "Extreme contention (64P64C, ns — §4.1 text)",
+    ];
+    for (p, title) in pairs.iter().zip(titles) {
+        let sub: Vec<_> = cells.iter().filter(|c| c.pair == *p).cloned().collect();
+        println!("{}", report::latency_table(title, &sub));
+    }
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/tables_latency.json", report::latency_json(&cells)).ok();
+    eprintln!("wrote bench_results/tables_latency.json");
+}

@@ -1,0 +1,55 @@
+//! FIG2 — Figure 2: performance retention under synthetic mixed load
+//! (threads compute between queue ops, inducing cache pressure and
+//! scheduling interference). Retention = loaded / baseline throughput.
+//!
+//! `cargo bench --bench retention` (env: `BENCH_OPS`, `BENCH_ROUNDS`,
+//! `BENCH_INTENSITY`).
+
+use cmpq::bench::report;
+use cmpq::bench::runner::{retention_suite, SuiteOptions};
+use cmpq::bench::workload::PairConfig;
+use cmpq::queue::Impl;
+
+fn env_u64(k: &str, d: u64) -> u64 {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let opts = SuiteOptions {
+        total_ops: env_u64("BENCH_OPS", 30_000),
+        rounds: env_u64("BENCH_ROUNDS", 2) as usize,
+        warmup_rounds: 1,
+        verbose: std::env::var("BENCH_VERBOSE").is_ok(),
+        ..SuiteOptions::default()
+    };
+    let intensity = env_u64("BENCH_INTENSITY", 8) as u32;
+    let impls = [Impl::Cmp, Impl::Segmented, Impl::MsHp];
+    // Figure 2 reports the paper sweep; 8P8C is its headline point.
+    let pairs: Vec<PairConfig> = [1usize, 2, 4, 8, 16, 32]
+        .into_iter()
+        .map(PairConfig::symmetric)
+        .collect();
+
+    eprintln!(
+        "FIG2: baseline vs synthetic(x{intensity}), {} impls × {} pairs",
+        impls.len(),
+        pairs.len()
+    );
+    let cells = retention_suite(&impls, &pairs, &opts, intensity);
+    println!("{}", report::fig2_table(&cells));
+
+    let series: Vec<(String, f64)> = cells
+        .iter()
+        .map(|c| {
+            (
+                format!("{} {}", c.pair.label(), c.imp.name()),
+                c.retention_pct,
+            )
+        })
+        .collect();
+    println!("{}", report::bar_chart("Figure 2 (retention %)", &series, 48));
+
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write("bench_results/fig2_retention.json", report::retention_json(&cells)).ok();
+    eprintln!("wrote bench_results/fig2_retention.json");
+}

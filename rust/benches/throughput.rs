@@ -1,0 +1,57 @@
+//! FIG1 — Figure 1 + the §4.1 throughput narrative: items/sec across
+//! 1P1C…64P64C for CMP vs the paper's comparator set (plus the extra
+//! baselines), with round-robin sequencing and 3-sigma filtering.
+//!
+//! `cargo bench --bench throughput` — or `repro bench fig1` for the
+//! CLI-configurable version. Env knobs: `BENCH_OPS`, `BENCH_ROUNDS`,
+//! `BENCH_FULL=1` to include every implementation.
+
+use cmpq::bench::report;
+use cmpq::bench::runner::{throughput_suite, SuiteOptions};
+use cmpq::bench::workload::PairConfig;
+use cmpq::queue::Impl;
+
+fn env_u64(k: &str, d: u64) -> u64 {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() {
+    let opts = SuiteOptions {
+        total_ops: env_u64("BENCH_OPS", 60_000),
+        rounds: env_u64("BENCH_ROUNDS", 3) as usize,
+        warmup_rounds: 1,
+        verbose: std::env::var("BENCH_VERBOSE").is_ok(),
+        ..SuiteOptions::default()
+    };
+    let impls: Vec<Impl> = if std::env::var("BENCH_FULL").is_ok() {
+        Impl::ALL.to_vec()
+    } else {
+        // The paper's set + the lock-based comparator for context.
+        vec![Impl::Cmp, Impl::Segmented, Impl::MsHp, Impl::Mutex]
+    };
+    let pairs = PairConfig::paper_sweep();
+
+    eprintln!(
+        "FIG1: {} impls × {} pairs × {} rounds, {} ops/trial",
+        impls.len(),
+        pairs.len(),
+        opts.rounds,
+        opts.total_ops
+    );
+    let cells = throughput_suite(&impls, &pairs, &opts);
+    println!("{}", report::fig1_table(&cells));
+
+    let series: Vec<(String, f64)> = cells
+        .iter()
+        .map(|c| (format!("{} {}", c.pair.label(), c.imp.name()), c.mean_ips))
+        .collect();
+    println!("{}", report::bar_chart("Figure 1 (items/sec)", &series, 48));
+
+    std::fs::create_dir_all("bench_results").ok();
+    std::fs::write(
+        "bench_results/fig1_throughput.json",
+        report::throughput_json(&cells),
+    )
+    .ok();
+    eprintln!("wrote bench_results/fig1_throughput.json");
+}

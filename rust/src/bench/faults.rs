@@ -1,0 +1,264 @@
+//! Fault-injection experiments (FAULT, §2.3.1 / §3.6): what happens to
+//! *reclamation* when a participant stalls or crashes mid-operation?
+//!
+//! * CMP: a consumer crashed right after its claim CAS
+//!   ([`crate::queue::cmp::CmpQueue::inject_stalled_claim`]) — the
+//!   paper's claim is that reclamation proceeds and the abandoned node
+//!   is recovered within W cycles.
+//! * Hazard pointers: a thread that published a hazard and never
+//!   cleared it pins its target forever; the queue keeps retiring nodes
+//!   that can be freed, but the pinned one never is.
+//! * EBR: a thread that pinned an epoch and stalled blocks the global
+//!   epoch — retention grows without bound while the queue churns.
+
+use std::sync::atomic::{AtomicBool, AtomicPtr, Ordering};
+use std::sync::Arc;
+
+use crate::queue::baselines::ms_ebr::MsEbrQueue;
+use crate::queue::baselines::ms_hp::MsHpQueue;
+use crate::queue::cmp::{CmpConfig, CmpQueue, ReclaimTrigger};
+
+/// Outcome of a fault experiment.
+#[derive(Debug, Clone)]
+pub struct FaultOutcome {
+    pub scheme: &'static str,
+    /// Items churned through the queue after the fault.
+    pub churn_ops: u64,
+    /// Unreclaimed nodes after the churn (pool in-use for CMP, pending
+    /// retirees for HP/EBR).
+    pub retained_after: u64,
+    /// Whether retention stayed bounded (the paper's resilience
+    /// criterion: retained ≤ bound).
+    pub bounded: bool,
+    /// The bound used for the verdict.
+    pub bound: u64,
+}
+
+/// CMP under a crashed consumer: claim-then-abandon `faults` nodes,
+/// then churn; retention must stay ≤ W + slack.
+pub fn cmp_stalled_consumer(churn_ops: u64, faults: u64) -> FaultOutcome {
+    let window = 512u64;
+    let cfg = CmpConfig::default()
+        .with_window(window)
+        .with_min_batch(1)
+        .with_reclaim_period(256)
+        .with_trigger(ReclaimTrigger::Modulo);
+    let q: CmpQueue<u64> = CmpQueue::with_config(cfg);
+
+    // Seed and crash `faults` consumers mid-dequeue.
+    for i in 0..faults {
+        q.push(i).unwrap();
+    }
+    let mut injected = 0;
+    for _ in 0..faults {
+        if q.inject_stalled_claim() {
+            injected += 1;
+        }
+    }
+    assert_eq!(injected, faults, "all claims injected");
+
+    // Churn: the queue keeps operating; reclamation keeps running.
+    for i in 0..churn_ops {
+        q.push(i).unwrap();
+        q.pop();
+    }
+    q.reclaim();
+
+    let retained = q.nodes_in_use();
+    // Bound: window + injected-but-recent + reclaim batch slack + dummy.
+    let bound = window + 256 + faults + 1;
+    FaultOutcome {
+        scheme: "cmp",
+        churn_ops,
+        retained_after: retained,
+        bounded: retained <= bound,
+        bound,
+    }
+}
+
+/// Hazard pointers under a stalled reader: one thread publishes a
+/// hazard on the current head and never clears it, while the main
+/// thread churns. HP keeps freeing *unpinned* nodes (bounded leak of 1
+/// here), so `bounded` is true but the pinned node is never freed —
+/// returned via `retained_after ≥ 1`.
+pub fn hp_stalled_reader(churn_ops: u64) -> FaultOutcome {
+    let q: Arc<MsHpQueue<u64>> = Arc::new(MsHpQueue::new());
+    q.push(1);
+    q.push(2);
+
+    // Stalled thread: protect head and never clear; park forever.
+    let hold = Arc::new(AtomicBool::new(true));
+    let h2 = hold.clone();
+    let q2 = q.clone();
+    let stalled = std::thread::spawn(move || {
+        // Publish a hazard through the domain on an arbitrary live node
+        // pointer source — we use a private AtomicPtr holding a node
+        // we know is in the queue by dequeuing its *value* later.
+        // Simplest faithful stall: protect the queue's internals via a
+        // dequeue that never finishes is not expressible through the
+        // public API, so we emulate with a domain-level pin of a node
+        // we retire ourselves.
+        let obj = Box::into_raw(Box::new(0xDEADu64));
+        let slot = AtomicPtr::new(obj);
+        let p = q2.domain().protect(0, &slot);
+        assert!(!p.is_null());
+        unsafe {
+            q2.domain()
+                .retire(obj, crate::queue::reclamation::hazard::drop_box::<u64>)
+        };
+        while h2.load(Ordering::Acquire) {
+            std::thread::park_timeout(std::time::Duration::from_millis(1));
+        }
+        // Cleanup on release so the test harness doesn't leak.
+        q2.domain().clear_all();
+    });
+
+    // Wait for the stalled thread's hazard to be pinned.
+    while q.domain().pending() == 0 {
+        std::thread::yield_now();
+    }
+
+    for i in 0..churn_ops {
+        q.push(i);
+        q.pop();
+    }
+    q.domain().scan();
+    let retained = q.domain().pending() as u64;
+
+    hold.store(false, Ordering::Release);
+    stalled.thread().unpark();
+    stalled.join().unwrap();
+    q.domain().scan();
+
+    FaultOutcome {
+        scheme: "ms-hp",
+        churn_ops,
+        retained_after: retained,
+        // HP's leak is proportional to pinned pointers (here 1) — it is
+        // "bounded" per stalled slot but *permanent* until the thread
+        // recovers. We report bounded=true with the caveat in docs.
+        bounded: retained <= 64 + 1,
+        bound: 65,
+    }
+}
+
+/// EBR under a stalled pinned thread: retention grows with churn —
+/// unbounded (the §2.2 failure mode).
+pub fn ebr_stalled_reader(churn_ops: u64) -> FaultOutcome {
+    let q: Arc<MsEbrQueue<u64>> = Arc::new(MsEbrQueue::new());
+    let hold = Arc::new(AtomicBool::new(true));
+    let h2 = hold.clone();
+    let q2 = q.clone();
+    let pinned = Arc::new(AtomicBool::new(false));
+    let p2 = pinned.clone();
+    let stalled = std::thread::spawn(move || {
+        let _guard = q2.domain().pin(); // pinned and stalled mid-operation
+        p2.store(true, Ordering::Release);
+        while h2.load(Ordering::Acquire) {
+            std::thread::park_timeout(std::time::Duration::from_millis(1));
+        }
+    });
+    while !pinned.load(Ordering::Acquire) {
+        std::thread::yield_now();
+    }
+    // Let the pinned epoch fall behind by advancing once.
+    q.domain().try_advance();
+
+    for i in 0..churn_ops {
+        q.push(i);
+        q.pop();
+    }
+    q.domain().collect();
+    let retained = q.domain().pending() as u64;
+
+    hold.store(false, Ordering::Release);
+    stalled.thread().unpark();
+    stalled.join().unwrap();
+
+    FaultOutcome {
+        scheme: "ms-ebr",
+        churn_ops,
+        retained_after: retained,
+        // Criterion: did retention scale with churn (unbounded) rather
+        // than staying near a constant?
+        bounded: retained < churn_ops / 2,
+        bound: churn_ops / 2,
+    }
+}
+
+/// Render outcomes as an aligned table.
+pub fn fault_table(outcomes: &[FaultOutcome]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "# FAULT — retention after a stalled/crashed participant ({}k churn ops)",
+        outcomes.first().map(|o| o.churn_ops / 1000).unwrap_or(0)
+    );
+    let _ = writeln!(
+        s,
+        "{:<10}{:>16}{:>14}{:>10}",
+        "scheme", "retained_nodes", "bound", "bounded"
+    );
+    for o in outcomes {
+        let _ = writeln!(
+            s,
+            "{:<10}{:>16}{:>14}{:>10}",
+            o.scheme,
+            o.retained_after,
+            o.bound,
+            if o.bounded { "yes" } else { "NO" }
+        );
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cmp_recovers_from_crashed_consumer() {
+        let o = cmp_stalled_consumer(20_000, 8);
+        assert!(
+            o.bounded,
+            "CMP retention must stay bounded: retained={} bound={}",
+            o.retained_after, o.bound
+        );
+    }
+
+    #[test]
+    fn ebr_retention_grows_with_stall() {
+        let o = ebr_stalled_reader(20_000);
+        assert!(
+            !o.bounded,
+            "EBR under a pinned stall should retain ~all churned nodes, got {}",
+            o.retained_after
+        );
+        assert!(o.retained_after > 10_000);
+    }
+
+    #[test]
+    fn hp_pins_only_the_hazarded_node() {
+        let o = hp_stalled_reader(20_000);
+        assert!(
+            o.bounded,
+            "HP leak is per-pinned-pointer: retained={}",
+            o.retained_after
+        );
+        assert!(o.retained_after >= 1, "the pinned object is never freed");
+    }
+
+    #[test]
+    fn table_renders_all_schemes() {
+        let rows = vec![
+            cmp_stalled_consumer(5_000, 2),
+            hp_stalled_reader(5_000),
+            ebr_stalled_reader(5_000),
+        ];
+        let t = fault_table(&rows);
+        assert!(t.contains("cmp"));
+        assert!(t.contains("ms-hp"));
+        assert!(t.contains("ms-ebr"));
+    }
+}

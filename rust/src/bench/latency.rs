@@ -1,0 +1,259 @@
+//! Latency recording: log-bucket histogram (HDR-style) for nanosecond
+//! samples plus exact raw-sample collection for the paper's 3-sigma
+//! filtering methodology (§4).
+
+/// Buckets: 64 major (power of two) × 16 minor = 1024 buckets covering
+/// 1ns .. ~590years with ≤ 6.25% relative error — plenty for queue ops.
+const MINORS: usize = 16;
+const BUCKETS: usize = 64 * MINORS;
+
+/// Log-bucket latency histogram.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    max: u64,
+    min: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![0; BUCKETS],
+            total: 0,
+            sum: 0,
+            max: 0,
+            min: u64::MAX,
+        }
+    }
+
+    #[inline]
+    fn bucket_of(v: u64) -> usize {
+        if v < MINORS as u64 {
+            return v as usize;
+        }
+        let major = 63 - v.leading_zeros() as usize; // ≥ 4
+        let minor = ((v >> (major - 4)) & (MINORS as u64 - 1)) as usize;
+        ((major - 3) * MINORS + minor).min(BUCKETS - 1)
+    }
+
+    /// Representative (lower-bound) value of a bucket.
+    fn bucket_low(idx: usize) -> u64 {
+        if idx < MINORS {
+            return idx as u64;
+        }
+        let major = idx / MINORS + 3;
+        let minor = (idx % MINORS) as u64;
+        (1u64 << major) | (minor << (major - 4))
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+        self.min = self.min.min(v);
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+        self.min = self.min.min(other.min);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum as f64 / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile `q ∈ [0,1]` (bucket lower bound — a slight
+    /// underestimate, consistent across implementations).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Self::bucket_low(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+}
+
+/// Summary statistics the paper's tables report (avg + P99, ns).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LatencySummary {
+    pub count: u64,
+    pub avg_ns: f64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub min_ns: u64,
+    pub max_ns: u64,
+}
+
+impl LatencySummary {
+    pub fn from_histogram(h: &Histogram) -> Self {
+        LatencySummary {
+            count: h.count(),
+            avg_ns: h.mean(),
+            p50_ns: h.p50(),
+            p99_ns: h.p99(),
+            min_ns: h.min(),
+            max_ns: h.max(),
+        }
+    }
+
+    /// Summary from raw samples (used after 3-sigma filtering).
+    pub fn from_samples(samples: &[u64]) -> Self {
+        if samples.is_empty() {
+            return LatencySummary::default();
+        }
+        let mut h = Histogram::new();
+        for &s in samples {
+            h.record(s);
+        }
+        Self::from_histogram(&h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_histogram() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.p99(), 0);
+        assert_eq!(h.min(), 0);
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 15);
+        // rank ⌈0.5·16⌉ = 8 ⇒ the 8th smallest value, which is 7.
+        assert_eq!(h.p50(), 7);
+    }
+
+    #[test]
+    fn bucket_error_is_bounded() {
+        // Relative error of bucket_low ≤ 1/16 for any value ≥ 16.
+        for v in [17u64, 100, 1000, 54321, 1 << 20, (1 << 40) + 12345] {
+            let b = Histogram::bucket_of(v);
+            let low = Histogram::bucket_low(b);
+            assert!(low <= v, "low {low} > v {v}");
+            assert!(
+                (v - low) as f64 / v as f64 <= 1.0 / 16.0 + 1e-9,
+                "error too large for {v}: low={low}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantiles_are_monotonic() {
+        let mut h = Histogram::new();
+        for i in 1..=10_000u64 {
+            h.record(i);
+        }
+        assert!(h.p50() <= h.p99());
+        assert!(h.p99() <= h.max());
+        // p50 of uniform 1..10000 ≈ 5000 (within bucket error).
+        let p50 = h.p50() as f64;
+        assert!((4400.0..=5200.0).contains(&p50), "p50={p50}");
+        let p99 = h.p99() as f64;
+        assert!((9200.0..=10000.0).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut c = Histogram::new();
+        for i in 0..1000u64 {
+            a.record(i * 3);
+            c.record(i * 3);
+        }
+        for i in 0..500u64 {
+            b.record(i * 7);
+            c.record(i * 7);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.mean(), c.mean());
+        assert_eq!(a.p99(), c.p99());
+    }
+
+    #[test]
+    fn mean_is_exact() {
+        let mut h = Histogram::new();
+        h.record(100);
+        h.record(200);
+        h.record(600);
+        assert_eq!(h.mean(), 300.0);
+    }
+
+    #[test]
+    fn summary_from_samples() {
+        let samples: Vec<u64> = (1..=100).collect();
+        let s = LatencySummary::from_samples(&samples);
+        assert_eq!(s.count, 100);
+        assert!((s.avg_ns - 50.5).abs() < 1e-9);
+        assert_eq!(s.min_ns, 1);
+        assert_eq!(s.max_ns, 100);
+        assert!(s.p99_ns >= 95);
+    }
+
+    #[test]
+    fn summary_from_empty_samples() {
+        assert_eq!(LatencySummary::from_samples(&[]), LatencySummary::default());
+    }
+}

@@ -1,0 +1,12 @@
+//! Criterion-style benchmark harness (the offline image has no
+//! criterion; DESIGN.md §3) reproducing the paper's methodology (§4):
+//! round-robin sequencing across implementations, 3-sigma filtering,
+//! baseline vs synthetic-load regimes, avg + P99 latency.
+
+pub mod faults;
+pub mod latency;
+pub mod report;
+pub mod runner;
+pub mod sigma;
+pub mod synthetic;
+pub mod workload;

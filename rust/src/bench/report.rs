@@ -1,0 +1,311 @@
+//! Report rendering: the same rows/series the paper reports, as
+//! aligned ASCII tables (and simple bar charts for the figures), plus a
+//! minimal JSON dump for machine consumption.
+
+use std::fmt::Write as _;
+
+use super::runner::{LatencyCell, RetentionCell, ThroughputCell};
+use crate::queue::Impl;
+use crate::util::time::fmt_rate;
+
+/// Figure 1: throughput comparison across thread configurations.
+pub fn fig1_table(cells: &[ThroughputCell]) -> String {
+    let mut pairs: Vec<_> = Vec::new();
+    let mut impls: Vec<Impl> = Vec::new();
+    for c in cells {
+        if !pairs.contains(&c.pair) {
+            pairs.push(c.pair);
+        }
+        if !impls.contains(&c.imp) {
+            impls.push(c.imp);
+        }
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "# Figure 1 — Throughput (items/sec) by configuration");
+    let _ = write!(s, "{:<10}", "config");
+    for i in &impls {
+        let _ = write!(s, "{:>16}", i.name());
+    }
+    let _ = writeln!(s);
+    for p in &pairs {
+        let _ = write!(s, "{:<10}", p.label());
+        for i in &impls {
+            let cell = cells.iter().find(|c| c.pair == *p && c.imp == *i).unwrap();
+            let _ = write!(s, "{:>16}", fmt_rate(cell.mean_ips));
+        }
+        let _ = writeln!(s);
+    }
+    // Relative-to-CMP rows, matching the paper's "% higher" narrative.
+    if impls.contains(&Impl::Cmp) {
+        let _ = writeln!(s, "\n## CMP advantage (CMP / other, ×)");
+        let _ = write!(s, "{:<10}", "config");
+        for i in impls.iter().filter(|i| **i != Impl::Cmp) {
+            let _ = write!(s, "{:>16}", i.name());
+        }
+        let _ = writeln!(s);
+        for p in &pairs {
+            let cmp = cells
+                .iter()
+                .find(|c| c.pair == *p && c.imp == Impl::Cmp)
+                .unwrap();
+            let _ = write!(s, "{:<10}", p.label());
+            for i in impls.iter().filter(|i| **i != Impl::Cmp) {
+                let other = cells.iter().find(|c| c.pair == *p && c.imp == *i).unwrap();
+                let ratio = if other.mean_ips > 0.0 {
+                    cmp.mean_ips / other.mean_ips
+                } else {
+                    f64::INFINITY
+                };
+                let _ = write!(s, "{:>15.2}x", ratio);
+            }
+            let _ = writeln!(s);
+        }
+    }
+    s
+}
+
+/// ASCII bar chart for a figure series (log-ish scaling by sqrt).
+pub fn bar_chart(title: &str, rows: &[(String, f64)], width: usize) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# {title}");
+    let max = rows.iter().map(|(_, v)| *v).fold(0.0f64, f64::max);
+    if max <= 0.0 {
+        return s;
+    }
+    for (label, v) in rows {
+        let frac = (v / max).sqrt(); // sqrt softens the dynamic range
+        let bars = ((width as f64) * frac).round() as usize;
+        let _ = writeln!(s, "{label:<22} {} {}", "#".repeat(bars), fmt_rate(*v));
+    }
+    s
+}
+
+/// Tables 1–3: latency table for one pair configuration.
+pub fn latency_table(title: &str, cells: &[LatencyCell]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# {title}");
+    let _ = writeln!(
+        s,
+        "{:<28}{:>10}{:>10}{:>10}{:>10}",
+        "Impl", "Avg Enq", "P99 Enq", "Avg Deq", "P99 Deq"
+    );
+    for c in cells {
+        let _ = writeln!(
+            s,
+            "{:<28}{:>10.1}{:>10}{:>10.1}{:>10}",
+            c.imp.label(),
+            c.enqueue.avg_ns,
+            c.enqueue.p99_ns,
+            c.dequeue.avg_ns,
+            c.dequeue.p99_ns
+        );
+    }
+    s
+}
+
+/// Figure 2: retention under synthetic load.
+pub fn fig2_table(cells: &[RetentionCell]) -> String {
+    let mut pairs: Vec<_> = Vec::new();
+    let mut impls: Vec<Impl> = Vec::new();
+    for c in cells {
+        if !pairs.contains(&c.pair) {
+            pairs.push(c.pair);
+        }
+        if !impls.contains(&c.imp) {
+            impls.push(c.imp);
+        }
+    }
+    let mut s = String::new();
+    let _ = writeln!(s, "# Figure 2 — Retention under synthetic load (% of baseline)");
+    let _ = write!(s, "{:<10}", "config");
+    for i in &impls {
+        let _ = write!(s, "{:>16}", i.name());
+    }
+    let _ = writeln!(s);
+    for p in &pairs {
+        let _ = write!(s, "{:<10}", p.label());
+        for i in &impls {
+            let cell = cells.iter().find(|c| c.pair == *p && c.imp == *i).unwrap();
+            let _ = write!(s, "{:>15.1}%", cell.retention_pct);
+        }
+        let _ = writeln!(s);
+    }
+    s
+}
+
+/// Minimal JSON encoder for result dumps (no serde offline).
+pub fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            '\n' => "\\n".chars().collect(),
+            '\t' => "\\t".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+pub fn throughput_json(cells: &[ThroughputCell]) -> String {
+    let mut s = String::from("[");
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"impl\":\"{}\",\"pair\":\"{}\",\"mean_ips\":{:.3},\"std_ips\":{:.3},\"discarded\":{},\"samples\":{:?}}}",
+            c.imp.name(),
+            c.pair.label(),
+            c.mean_ips,
+            c.std_ips,
+            c.discarded,
+            c.samples
+        );
+    }
+    s.push(']');
+    s
+}
+
+pub fn latency_json(cells: &[LatencyCell]) -> String {
+    let mut s = String::from("[");
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"impl\":\"{}\",\"pair\":\"{}\",\"enq_avg\":{:.2},\"enq_p99\":{},\"deq_avg\":{:.2},\"deq_p99\":{}}}",
+            c.imp.name(),
+            c.pair.label(),
+            c.enqueue.avg_ns,
+            c.enqueue.p99_ns,
+            c.dequeue.avg_ns,
+            c.dequeue.p99_ns
+        );
+    }
+    s.push(']');
+    s
+}
+
+pub fn retention_json(cells: &[RetentionCell]) -> String {
+    let mut s = String::from("[");
+    for (i, c) in cells.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"impl\":\"{}\",\"pair\":\"{}\",\"baseline_ips\":{:.1},\"loaded_ips\":{:.1},\"retention_pct\":{:.2}}}",
+            c.imp.name(),
+            c.pair.label(),
+            c.baseline_ips,
+            c.loaded_ips,
+            c.retention_pct
+        );
+    }
+    s.push(']');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::latency::LatencySummary;
+    use crate::bench::workload::PairConfig;
+
+    fn tcell(imp: Impl, n: usize, ips: f64) -> ThroughputCell {
+        ThroughputCell {
+            imp,
+            pair: PairConfig::symmetric(n),
+            samples: vec![ips],
+            mean_ips: ips,
+            std_ips: 0.0,
+            discarded: 0,
+        }
+    }
+
+    #[test]
+    fn fig1_table_contains_ratios() {
+        let cells = vec![
+            tcell(Impl::Cmp, 1, 6.49e6),
+            tcell(Impl::Segmented, 1, 3.77e6),
+            tcell(Impl::MsHp, 1, 2.25e6),
+        ];
+        let t = fig1_table(&cells);
+        assert!(t.contains("1P1C"));
+        assert!(t.contains("6.49M/s"));
+        assert!(t.contains("CMP advantage"));
+        assert!(t.contains("1.72x"), "CMP/MC ratio from the paper: {t}");
+    }
+
+    #[test]
+    fn latency_table_has_paper_columns() {
+        let cells = vec![LatencyCell {
+            imp: Impl::Cmp,
+            pair: PairConfig::symmetric(1),
+            enqueue: LatencySummary {
+                count: 10,
+                avg_ns: 63.9,
+                p50_ns: 60,
+                p99_ns: 111,
+                min_ns: 40,
+                max_ns: 150,
+            },
+            dequeue: LatencySummary {
+                count: 10,
+                avg_ns: 70.6,
+                p50_ns: 70,
+                p99_ns: 74,
+                min_ns: 50,
+                max_ns: 90,
+            },
+            enq_discarded: 0,
+            deq_discarded: 0,
+        }];
+        let t = latency_table("Table 1 — no contention", &cells);
+        for col in ["Avg Enq", "P99 Enq", "Avg Deq", "P99 Deq", "63.9", "111"] {
+            assert!(t.contains(col), "missing {col} in\n{t}");
+        }
+    }
+
+    #[test]
+    fn fig2_table_percentages() {
+        let cells = vec![RetentionCell {
+            imp: Impl::Cmp,
+            pair: PairConfig::symmetric(8),
+            baseline_ips: 100.0,
+            loaded_ips: 92.0,
+            retention_pct: 92.0,
+        }];
+        let t = fig2_table(&cells);
+        assert!(t.contains("92.0%"));
+        assert!(t.contains("8P8C"));
+    }
+
+    #[test]
+    fn bar_chart_renders() {
+        let rows = vec![
+            ("cmp".to_string(), 100.0),
+            ("boost".to_string(), 25.0),
+        ];
+        let c = bar_chart("demo", &rows, 40);
+        assert!(c.contains("cmp"));
+        assert!(c.contains('#'));
+    }
+
+    #[test]
+    fn json_escape_specials() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn json_dumps_parse_shallowly() {
+        let cells = vec![tcell(Impl::Cmp, 1, 1000.0)];
+        let j = throughput_json(&cells);
+        assert!(j.starts_with('['));
+        assert!(j.ends_with(']'));
+        assert!(j.contains("\"impl\":\"cmp\""));
+    }
+}

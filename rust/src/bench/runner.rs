@@ -1,0 +1,294 @@
+//! Suite runner: round-robin sequencing of implementations (§4: "all
+//! experiments were conducted ... with round-robin sequencing of
+//! implementations to eliminate bias from CPU thermal throttling and
+//! dynamic frequency scaling"), multiple rounds per configuration,
+//! 3-sigma filtering of the per-round samples.
+
+use super::latency::LatencySummary;
+use super::sigma;
+use super::synthetic::LoadProfile;
+use super::workload::{latency_trial, throughput_trial, PairConfig, TrialConfig};
+use crate::queue::Impl;
+
+/// Suite-level options.
+#[derive(Debug, Clone)]
+pub struct SuiteOptions {
+    /// Items per trial (scaled per pair internally if desired).
+    pub total_ops: u64,
+    /// Measured rounds per (impl, pair) cell.
+    pub rounds: usize,
+    /// Unmeasured warmup rounds per cell.
+    pub warmup_rounds: usize,
+    /// Inter-op load profile.
+    pub load: LoadProfile,
+    /// Bounded-queue capacity hint.
+    pub capacity_hint: usize,
+    /// Print progress lines to stderr.
+    pub verbose: bool,
+}
+
+impl Default for SuiteOptions {
+    fn default() -> Self {
+        SuiteOptions {
+            total_ops: 100_000,
+            rounds: 3,
+            warmup_rounds: 1,
+            load: LoadProfile::None,
+            capacity_hint: 1 << 16,
+            verbose: false,
+        }
+    }
+}
+
+impl SuiteOptions {
+    fn trial_config(&self, pair: PairConfig) -> TrialConfig {
+        // Scale total ops down at very high thread counts so a sweep
+        // stays tractable on small testbeds (the paper's absolute op
+        // counts are not specified; shapes are what matters).
+        let threads = (pair.producers + pair.consumers) as u64;
+        let scale = if threads >= 64 { 4 } else { 1 };
+        TrialConfig {
+            total_ops: (self.total_ops / scale).max(1000),
+            load: self.load,
+            capacity_hint: self.capacity_hint,
+            max_samples_per_thread: 200_000,
+        }
+    }
+}
+
+/// One cell of the Figure-1 style throughput matrix.
+#[derive(Debug, Clone)]
+pub struct ThroughputCell {
+    pub imp: Impl,
+    pub pair: PairConfig,
+    /// Per-round samples (items/sec), pre-filter.
+    pub samples: Vec<f64>,
+    /// 3-sigma filtered mean.
+    pub mean_ips: f64,
+    pub std_ips: f64,
+    pub discarded: usize,
+}
+
+/// Round-robin throughput suite over `impls × pairs`.
+pub fn throughput_suite(
+    impls: &[Impl],
+    pairs: &[PairConfig],
+    opts: &SuiteOptions,
+) -> Vec<ThroughputCell> {
+    let mut samples: Vec<Vec<f64>> = vec![Vec::new(); impls.len() * pairs.len()];
+    for round in 0..(opts.rounds + opts.warmup_rounds) {
+        let measured = round >= opts.warmup_rounds;
+        // Round-robin: every impl runs once per round before any impl
+        // runs again (thermal fairness per the paper).
+        for (pi, &pair) in pairs.iter().enumerate() {
+            for (ii, &imp) in impls.iter().enumerate() {
+                let cfg = opts.trial_config(pair);
+                let t = throughput_trial(imp, pair, &cfg);
+                if opts.verbose {
+                    eprintln!(
+                        "[throughput] round={round} {} {} -> {:.0} items/s{}",
+                        pair.label(),
+                        imp.name(),
+                        t.items_per_sec,
+                        if measured { "" } else { " (warmup)" },
+                    );
+                }
+                if measured {
+                    samples[pi * impls.len() + ii].push(t.items_per_sec);
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (pi, &pair) in pairs.iter().enumerate() {
+        for (ii, &imp) in impls.iter().enumerate() {
+            let raw = &samples[pi * impls.len() + ii];
+            let (kept, discarded) = sigma::three_sigma(raw);
+            let (mean, std) = sigma::mean_std(&kept);
+            out.push(ThroughputCell {
+                imp,
+                pair,
+                samples: raw.clone(),
+                mean_ips: mean,
+                std_ips: std,
+                discarded,
+            });
+        }
+    }
+    out
+}
+
+/// One cell of the Tables 1–3 style latency matrix.
+#[derive(Debug, Clone)]
+pub struct LatencyCell {
+    pub imp: Impl,
+    pub pair: PairConfig,
+    pub enqueue: LatencySummary,
+    pub dequeue: LatencySummary,
+    pub enq_discarded: usize,
+    pub deq_discarded: usize,
+}
+
+/// Round-robin latency suite. Per-op samples from all rounds are
+/// pooled, 3-sigma filtered (the paper's anomaly removal), then
+/// summarized.
+pub fn latency_suite(
+    impls: &[Impl],
+    pairs: &[PairConfig],
+    opts: &SuiteOptions,
+) -> Vec<LatencyCell> {
+    let mut enq: Vec<Vec<u64>> = vec![Vec::new(); impls.len() * pairs.len()];
+    let mut deq: Vec<Vec<u64>> = vec![Vec::new(); impls.len() * pairs.len()];
+    for round in 0..(opts.rounds + opts.warmup_rounds) {
+        let measured = round >= opts.warmup_rounds;
+        for (pi, &pair) in pairs.iter().enumerate() {
+            for (ii, &imp) in impls.iter().enumerate() {
+                let cfg = opts.trial_config(pair);
+                let t = latency_trial(imp, pair, &cfg);
+                if opts.verbose {
+                    eprintln!(
+                        "[latency] round={round} {} {} -> enq avg {:.1}ns deq avg {:.1}ns{}",
+                        pair.label(),
+                        imp.name(),
+                        t.enqueue.mean(),
+                        t.dequeue.mean(),
+                        if measured { "" } else { " (warmup)" },
+                    );
+                }
+                if measured {
+                    enq[pi * impls.len() + ii].extend(t.enqueue_raw);
+                    deq[pi * impls.len() + ii].extend(t.dequeue_raw);
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (pi, &pair) in pairs.iter().enumerate() {
+        for (ii, &imp) in impls.iter().enumerate() {
+            let (ek, ed) = sigma::three_sigma_u64(&enq[pi * impls.len() + ii]);
+            let (dk, dd) = sigma::three_sigma_u64(&deq[pi * impls.len() + ii]);
+            out.push(LatencyCell {
+                imp,
+                pair,
+                enqueue: LatencySummary::from_samples(&ek),
+                dequeue: LatencySummary::from_samples(&dk),
+                enq_discarded: ed,
+                deq_discarded: dd,
+            });
+        }
+    }
+    out
+}
+
+/// One cell of the Figure-2 retention matrix.
+#[derive(Debug, Clone)]
+pub struct RetentionCell {
+    pub imp: Impl,
+    pub pair: PairConfig,
+    pub baseline_ips: f64,
+    pub loaded_ips: f64,
+    /// `loaded / baseline` as a percentage (the paper's retention).
+    pub retention_pct: f64,
+}
+
+/// Figure 2: run baseline and synthetic-load regimes, report retention.
+pub fn retention_suite(
+    impls: &[Impl],
+    pairs: &[PairConfig],
+    opts: &SuiteOptions,
+    intensity: u32,
+) -> Vec<RetentionCell> {
+    let base_opts = SuiteOptions {
+        load: LoadProfile::None,
+        ..opts.clone()
+    };
+    let load_opts = SuiteOptions {
+        load: LoadProfile::Synthetic(intensity),
+        ..opts.clone()
+    };
+    let base = throughput_suite(impls, pairs, &base_opts);
+    let loaded = throughput_suite(impls, pairs, &load_opts);
+    base.iter()
+        .zip(loaded.iter())
+        .map(|(b, l)| {
+            debug_assert_eq!(b.imp, l.imp);
+            RetentionCell {
+                imp: b.imp,
+                pair: b.pair,
+                baseline_ips: b.mean_ips,
+                loaded_ips: l.mean_ips,
+                retention_pct: if b.mean_ips > 0.0 {
+                    100.0 * l.mean_ips / b.mean_ips
+                } else {
+                    0.0
+                },
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_opts() -> SuiteOptions {
+        SuiteOptions {
+            total_ops: 2000,
+            rounds: 2,
+            warmup_rounds: 0,
+            ..SuiteOptions::default()
+        }
+    }
+
+    #[test]
+    fn throughput_suite_shape() {
+        let impls = [Impl::Cmp, Impl::Mutex];
+        let pairs = [PairConfig::symmetric(1), PairConfig::symmetric(2)];
+        let cells = throughput_suite(&impls, &pairs, &tiny_opts());
+        assert_eq!(cells.len(), 4);
+        for c in &cells {
+            assert_eq!(c.samples.len(), 2);
+            assert!(c.mean_ips > 0.0);
+        }
+    }
+
+    #[test]
+    fn latency_suite_shape() {
+        let impls = [Impl::Cmp];
+        let pairs = [PairConfig::symmetric(1)];
+        let cells = latency_suite(&impls, &pairs, &tiny_opts());
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert!(c.enqueue.count > 0);
+        assert!(c.dequeue.count > 0);
+        assert!(c.enqueue.avg_ns > 0.0);
+        assert!(c.enqueue.p99_ns >= c.enqueue.p50_ns);
+    }
+
+    #[test]
+    fn retention_suite_reports_percentage() {
+        let impls = [Impl::Cmp];
+        let pairs = [PairConfig::symmetric(1)];
+        let cells = retention_suite(&impls, &pairs, &tiny_opts(), 4);
+        assert_eq!(cells.len(), 1);
+        let c = &cells[0];
+        assert!(c.retention_pct > 0.0);
+        assert!(
+            c.retention_pct < 120.0,
+            "loaded should not beat baseline by much: {}",
+            c.retention_pct
+        );
+    }
+
+    #[test]
+    fn warmup_rounds_are_not_counted() {
+        let opts = SuiteOptions {
+            total_ops: 1000,
+            rounds: 1,
+            warmup_rounds: 2,
+            ..SuiteOptions::default()
+        };
+        let cells = throughput_suite(&[Impl::Cmp], &[PairConfig::symmetric(1)], &opts);
+        assert_eq!(cells[0].samples.len(), 1);
+    }
+}

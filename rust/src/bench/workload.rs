@@ -1,0 +1,391 @@
+//! Producer/consumer workload generator: the NPNC trial engine behind
+//! every figure and table (§4). One *trial* runs N producers and N
+//! consumers against a fresh queue instance, measuring either wall-
+//! clock throughput or per-operation latency, with an optional
+//! synthetic load between operations (Figure 2 regime).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use super::latency::Histogram;
+use super::synthetic::LoadProfile;
+use crate::queue::{ConcurrentQueue, Impl};
+
+/// Producer/consumer pair configuration. The paper sweeps symmetric
+/// pairs 1P1C … 64P64C.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PairConfig {
+    pub producers: usize,
+    pub consumers: usize,
+}
+
+impl PairConfig {
+    pub fn symmetric(n: usize) -> Self {
+        PairConfig {
+            producers: n,
+            consumers: n,
+        }
+    }
+
+    /// The paper's Figure 1 sweep.
+    pub fn paper_sweep() -> Vec<PairConfig> {
+        [1, 2, 4, 8, 16, 32, 64]
+            .into_iter()
+            .map(PairConfig::symmetric)
+            .collect()
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}P{}C", self.producers, self.consumers)
+    }
+}
+
+/// One trial's knobs.
+#[derive(Debug, Clone)]
+pub struct TrialConfig {
+    /// Total items enqueued across all producers in the trial.
+    pub total_ops: u64,
+    /// Inter-operation load (baseline vs synthetic regimes).
+    pub load: LoadProfile,
+    /// Capacity hint for bounded comparators (Vyukov ring).
+    pub capacity_hint: usize,
+    /// Cap on recorded latency samples per thread (memory bound).
+    pub max_samples_per_thread: usize,
+}
+
+impl Default for TrialConfig {
+    fn default() -> Self {
+        TrialConfig {
+            total_ops: 100_000,
+            load: LoadProfile::None,
+            capacity_hint: 1 << 16,
+            max_samples_per_thread: 200_000,
+        }
+    }
+}
+
+/// Result of a throughput trial.
+#[derive(Debug, Clone, Copy)]
+pub struct ThroughputTrial {
+    /// Items actually consumed. Can be slightly below the enqueued
+    /// count for CMP when a consumer is preempted past the protection
+    /// window and the reclaimer recovers its claimed payload — the
+    /// paper's bounded-window semantics (§3.6). Reported, never hidden.
+    pub items: u64,
+    pub elapsed: Duration,
+    pub items_per_sec: f64,
+    /// Items enqueued but recovered by reclamation instead of consumed.
+    pub lost: u64,
+}
+
+/// Consecutive empty polls (with producers finished) that terminate a
+/// consumer. After producers are done, `None` from a strict queue means
+/// empty-at-linearization; the streak absorbs transient claim races.
+const EMPTY_STREAK_EXIT: u32 = 256;
+
+/// Result of a latency trial: merged per-op histograms.
+pub struct LatencyTrial {
+    pub enqueue: Histogram,
+    pub dequeue: Histogram,
+    /// Raw samples (for 3-sigma filtering), truncated per thread.
+    pub enqueue_raw: Vec<u64>,
+    pub dequeue_raw: Vec<u64>,
+}
+
+/// Run one throughput trial of `imp` at `pair`.
+pub fn throughput_trial(imp: Impl, pair: PairConfig, cfg: &TrialConfig) -> ThroughputTrial {
+    let queue: Arc<dyn ConcurrentQueue<u64>> = imp.make(cfg.capacity_hint);
+    run_throughput_on(queue, pair, cfg)
+}
+
+/// Run one throughput trial against a caller-supplied queue (used by
+/// the ablation benches to test specific CMP configurations).
+pub fn run_throughput_on(
+    queue: Arc<dyn ConcurrentQueue<u64>>,
+    pair: PairConfig,
+    cfg: &TrialConfig,
+) -> ThroughputTrial {
+    let per_producer = (cfg.total_ops / pair.producers as u64).max(1);
+    let total = per_producer * pair.producers as u64;
+    let consumed = Arc::new(AtomicU64::new(0));
+    let producers_done = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(pair.producers + pair.consumers + 1));
+    let load = cfg.load;
+    // Workers stamp the trial's start/end themselves: on an
+    // oversubscribed single core the whole trial can finish before the
+    // *main* thread (also a barrier participant) gets scheduled to read
+    // a clock, which would report near-zero elapsed time.
+    let anchor = crate::util::time::Anchor::now();
+    let start_ns = Arc::new(AtomicU64::new(0));
+    let end_ns = Arc::new(AtomicU64::new(0));
+    fn stamp_start(anchor: crate::util::time::Anchor, s: &AtomicU64) {
+        let now = anchor.ns().max(1);
+        let _ = s.compare_exchange(0, now, Ordering::AcqRel, Ordering::Acquire);
+    }
+
+    let mut handles = Vec::with_capacity(pair.producers + pair.consumers);
+    for p in 0..pair.producers {
+        let queue = queue.clone();
+        let barrier = barrier.clone();
+        let producers_done = producers_done.clone();
+        let (start_ns, end_ns) = (start_ns.clone(), end_ns.clone());
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            stamp_start(anchor, &start_ns);
+            for i in 0..per_producer {
+                load.run(i ^ (p as u64) << 32);
+                queue.enqueue(p as u64 * per_producer + i);
+            }
+            producers_done.fetch_add(1, Ordering::AcqRel);
+            end_ns.fetch_max(anchor.ns(), Ordering::AcqRel);
+        }));
+    }
+    let n_producers = pair.producers as u64;
+    for c in 0..pair.consumers {
+        let queue = queue.clone();
+        let barrier = barrier.clone();
+        let consumed = consumed.clone();
+        let producers_done = producers_done.clone();
+        let (start_ns, end_ns) = (start_ns.clone(), end_ns.clone());
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            stamp_start(anchor, &start_ns);
+            let mut salt = c as u64;
+            let mut empty_streak = 0u32;
+            loop {
+                load.run(salt);
+                salt = salt.wrapping_add(0x9E37_79B9);
+                match queue.try_dequeue() {
+                    Some(_) => {
+                        consumed.fetch_add(1, Ordering::AcqRel);
+                        empty_streak = 0;
+                    }
+                    None => {
+                        if consumed.load(Ordering::Acquire) >= total {
+                            break;
+                        }
+                        // Termination must not depend on `consumed`
+                        // alone: CMP may *recover* a payload whose
+                        // claimer was preempted past the window (§3.6),
+                        // so `consumed` can stall below `total`.
+                        if producers_done.load(Ordering::Acquire) == n_producers {
+                            empty_streak += 1;
+                            if empty_streak >= EMPTY_STREAK_EXIT {
+                                break;
+                            }
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }
+            end_ns.fetch_max(anchor.ns(), Ordering::AcqRel);
+        }));
+    }
+
+    barrier.wait();
+    for h in handles {
+        h.join().expect("worker panicked");
+    }
+    let t0 = start_ns.load(Ordering::Acquire);
+    let t1 = end_ns.load(Ordering::Acquire).max(t0 + 1);
+    let elapsed = Duration::from_nanos(t1 - t0);
+    let got = consumed.load(Ordering::Acquire);
+    ThroughputTrial {
+        items: got,
+        elapsed,
+        items_per_sec: got as f64 / elapsed.as_secs_f64().max(1e-12),
+        lost: total - got,
+    }
+}
+
+/// Run one latency trial of `imp` at `pair`: every enqueue and every
+/// successful dequeue is individually timed.
+pub fn latency_trial(imp: Impl, pair: PairConfig, cfg: &TrialConfig) -> LatencyTrial {
+    let queue: Arc<dyn ConcurrentQueue<u64>> = imp.make(cfg.capacity_hint);
+    run_latency_on(queue, pair, cfg)
+}
+
+/// Latency trial against a caller-supplied queue.
+pub fn run_latency_on(
+    queue: Arc<dyn ConcurrentQueue<u64>>,
+    pair: PairConfig,
+    cfg: &TrialConfig,
+) -> LatencyTrial {
+    let per_producer = (cfg.total_ops / pair.producers as u64).max(1);
+    let total = per_producer * pair.producers as u64;
+    let consumed = Arc::new(AtomicU64::new(0));
+    let producers_done = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(pair.producers + pair.consumers + 1));
+    let load = cfg.load;
+    let cap = cfg.max_samples_per_thread;
+
+    let mut prod_handles = Vec::with_capacity(pair.producers);
+    for p in 0..pair.producers {
+        let queue = queue.clone();
+        let barrier = barrier.clone();
+        let producers_done = producers_done.clone();
+        prod_handles.push(std::thread::spawn(move || {
+            let mut hist = Histogram::new();
+            let mut raw = Vec::with_capacity(per_producer.min(cap as u64) as usize);
+            barrier.wait();
+            for i in 0..per_producer {
+                load.run(i);
+                let t0 = Instant::now();
+                queue.enqueue(p as u64 * per_producer + i);
+                let ns = t0.elapsed().as_nanos() as u64;
+                hist.record(ns);
+                if raw.len() < cap {
+                    raw.push(ns);
+                }
+            }
+            producers_done.fetch_add(1, Ordering::AcqRel);
+            (hist, raw)
+        }));
+    }
+    let n_producers = pair.producers as u64;
+    let mut cons_handles = Vec::with_capacity(pair.consumers);
+    for _ in 0..pair.consumers {
+        let queue = queue.clone();
+        let barrier = barrier.clone();
+        let consumed = consumed.clone();
+        let producers_done = producers_done.clone();
+        cons_handles.push(std::thread::spawn(move || {
+            let mut hist = Histogram::new();
+            let mut raw = Vec::new();
+            barrier.wait();
+            let mut salt = 0u64;
+            let mut empty_streak = 0u32;
+            loop {
+                load.run(salt);
+                salt = salt.wrapping_add(1);
+                let t0 = Instant::now();
+                let r = queue.try_dequeue();
+                let ns = t0.elapsed().as_nanos() as u64;
+                match r {
+                    Some(_) => {
+                        hist.record(ns);
+                        if raw.len() < cap {
+                            raw.push(ns);
+                        }
+                        consumed.fetch_add(1, Ordering::AcqRel);
+                        empty_streak = 0;
+                    }
+                    None => {
+                        if consumed.load(Ordering::Acquire) >= total {
+                            break;
+                        }
+                        // See run_throughput_on: window-recovered
+                        // payloads mean `consumed` can stall below
+                        // `total` — terminate on producer completion +
+                        // a sustained empty streak.
+                        if producers_done.load(Ordering::Acquire) == n_producers {
+                            empty_streak += 1;
+                            if empty_streak >= EMPTY_STREAK_EXIT {
+                                break;
+                            }
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            }
+            (hist, raw)
+        }));
+    }
+
+    barrier.wait();
+    let mut enqueue = Histogram::new();
+    let mut enqueue_raw = Vec::new();
+    for h in prod_handles {
+        let (hist, raw) = h.join().expect("producer panicked");
+        enqueue.merge(&hist);
+        enqueue_raw.extend(raw);
+    }
+    let mut dequeue = Histogram::new();
+    let mut dequeue_raw = Vec::new();
+    for h in cons_handles {
+        let (hist, raw) = h.join().expect("consumer panicked");
+        dequeue.merge(&hist);
+        dequeue_raw.extend(raw);
+    }
+    LatencyTrial {
+        enqueue,
+        dequeue,
+        enqueue_raw,
+        dequeue_raw,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> TrialConfig {
+        TrialConfig {
+            total_ops: 4000,
+            ..TrialConfig::default()
+        }
+    }
+
+    #[test]
+    fn pair_labels() {
+        assert_eq!(PairConfig::symmetric(4).label(), "4P4C");
+        let sweep = PairConfig::paper_sweep();
+        assert_eq!(sweep.len(), 7);
+        assert_eq!(sweep[0].label(), "1P1C");
+        assert_eq!(sweep[6].label(), "64P64C");
+    }
+
+    #[test]
+    fn throughput_trial_conserves_items() {
+        let t = throughput_trial(Impl::Cmp, PairConfig::symmetric(2), &small_cfg());
+        assert_eq!(t.items, 4000);
+        assert!(t.items_per_sec > 0.0);
+        assert!(t.elapsed > Duration::ZERO);
+    }
+
+    #[test]
+    fn throughput_trial_all_impls_1p1c() {
+        for imp in Impl::ALL {
+            let t = throughput_trial(imp, PairConfig::symmetric(1), &small_cfg());
+            assert_eq!(t.items, 4000, "{}", imp.name());
+        }
+    }
+
+    #[test]
+    fn latency_trial_counts_match() {
+        let t = latency_trial(Impl::Cmp, PairConfig::symmetric(2), &small_cfg());
+        assert_eq!(t.enqueue.count(), 4000);
+        assert_eq!(t.dequeue.count(), 4000);
+        assert_eq!(t.enqueue_raw.len(), 4000);
+        assert_eq!(t.dequeue_raw.len(), 4000);
+        assert!(t.enqueue.mean() > 0.0);
+    }
+
+    #[test]
+    fn synthetic_load_slows_throughput() {
+        let base = throughput_trial(Impl::Cmp, PairConfig::symmetric(1), &small_cfg());
+        let loaded_cfg = TrialConfig {
+            total_ops: 4000,
+            load: LoadProfile::Synthetic(64),
+            ..TrialConfig::default()
+        };
+        let loaded = throughput_trial(Impl::Cmp, PairConfig::symmetric(1), &loaded_cfg);
+        assert!(
+            loaded.items_per_sec < base.items_per_sec,
+            "load must reduce throughput ({} vs {})",
+            loaded.items_per_sec,
+            base.items_per_sec
+        );
+    }
+
+    #[test]
+    fn uneven_ops_round_down_consistently() {
+        let cfg = TrialConfig {
+            total_ops: 1001,
+            ..TrialConfig::default()
+        };
+        let t = throughput_trial(Impl::Mutex, PairConfig::symmetric(3), &cfg);
+        assert_eq!(t.items, 999, "333 per producer × 3");
+    }
+}

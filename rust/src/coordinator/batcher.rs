@@ -1,0 +1,213 @@
+//! Dynamic batcher: collects requests from a router shard into model-
+//! sized batches, flushing on size or deadline — the standard serving
+//! trade-off between padding waste and tail latency. Batches travel to
+//! workers over another CMP queue (the whole pipeline is CMP fabric).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::queue::cmp::{CmpConfig, CmpQueue};
+
+use super::request::InferRequest;
+use super::router::Router;
+
+/// A batch headed to a worker.
+pub struct Batch {
+    pub requests: Vec<InferRequest>,
+    pub formed_at: Instant,
+}
+
+/// Batching knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are collected (model batch size).
+    pub max_batch: usize,
+    /// Flush a non-empty partial batch after this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// The work queue between batchers and workers.
+pub type WorkQueue = Arc<CmpQueue<Batch>>;
+
+pub fn new_work_queue() -> WorkQueue {
+    Arc::new(CmpQueue::with_config(CmpConfig::default()))
+}
+
+/// Run one batcher loop over `shard` of `router`, publishing batches to
+/// `work`. Returns when `stop` is set *and* the shard is drained.
+pub fn batcher_loop(
+    router: Arc<Router>,
+    shard: usize,
+    policy: BatchPolicy,
+    work: WorkQueue,
+    stop: Arc<AtomicBool>,
+) {
+    let mut pending: Vec<InferRequest> = Vec::with_capacity(policy.max_batch);
+    let mut window_start: Option<Instant> = None;
+    loop {
+        match router.drain_one(shard) {
+            Some(req) => {
+                if pending.is_empty() {
+                    window_start = Some(Instant::now());
+                }
+                pending.push(req);
+                if pending.len() >= policy.max_batch {
+                    flush(&mut pending, &work);
+                    window_start = None;
+                }
+            }
+            None => {
+                let expired = window_start
+                    .map(|t| t.elapsed() >= policy.max_wait)
+                    .unwrap_or(false);
+                if !pending.is_empty() && expired {
+                    flush(&mut pending, &work);
+                    window_start = None;
+                } else if stop.load(Ordering::Acquire) {
+                    // Drain-then-exit: flush whatever is left.
+                    if router.inflight(shard) == 0 {
+                        if !pending.is_empty() {
+                            flush(&mut pending, &work);
+                        }
+                        return;
+                    }
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+fn flush(pending: &mut Vec<InferRequest>, work: &WorkQueue) {
+    let batch = Batch {
+        requests: std::mem::take(pending),
+        formed_at: Instant::now(),
+    };
+    work.push(batch)
+        .unwrap_or_else(|_| panic!("unbounded work queue rejected a batch"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ResponseSlot;
+    use crate::coordinator::router::RoutePolicy;
+    use crate::queue::cmp::CmpConfig;
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest {
+            id,
+            features: vec![0.0; 2],
+            submitted_at: Instant::now(),
+            slot: ResponseSlot::new(),
+        }
+    }
+
+    fn spawn_batcher(
+        router: &Arc<Router>,
+        policy: BatchPolicy,
+    ) -> (WorkQueue, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        let work = new_work_queue();
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = {
+            let router = router.clone();
+            let work = work.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || batcher_loop(router, 0, policy, work, stop))
+        };
+        (work, stop, h)
+    }
+
+    #[test]
+    fn full_batches_flush_on_size() {
+        let router = Arc::new(Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default()));
+        let (work, stop, h) = spawn_batcher(
+            &router,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_secs(10), // deadline never fires
+            },
+        );
+        for i in 0..8 {
+            router.route(req(i));
+        }
+        // Two full batches must appear without the deadline.
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.len() < 2 && Instant::now() < deadline {
+            if let Some(b) = work.pop() {
+                got.push(b);
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].requests.len(), 4);
+        assert_eq!(got[1].requests.len(), 4);
+        // FIFO preserved through router + batcher.
+        let ids: Vec<u64> = got
+            .iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id))
+            .collect();
+        assert_eq!(ids, (0..8).collect::<Vec<_>>());
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn partial_batch_flushes_on_deadline() {
+        let router = Arc::new(Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default()));
+        let (work, stop, h) = spawn_batcher(
+            &router,
+            BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+            },
+        );
+        for i in 0..3 {
+            router.route(req(i));
+        }
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let batch = loop {
+            if let Some(b) = work.pop() {
+                break b;
+            }
+            assert!(Instant::now() < deadline, "deadline flush never happened");
+            std::thread::yield_now();
+        };
+        assert_eq!(batch.requests.len(), 3, "partial batch after max_wait");
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn stop_drains_remaining() {
+        let router = Arc::new(Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default()));
+        let (work, stop, h) = spawn_batcher(
+            &router,
+            BatchPolicy {
+                max_batch: 100,
+                max_wait: Duration::from_secs(10),
+            },
+        );
+        for i in 0..5 {
+            router.route(req(i));
+        }
+        std::thread::sleep(Duration::from_millis(10));
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+        let b = work.pop().expect("drain flush");
+        assert_eq!(b.requests.len(), 5);
+    }
+}

@@ -1,0 +1,129 @@
+//! Pipeline metrics: counters plus an end-to-end latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::bench::latency::{Histogram, LatencySummary};
+
+/// Shared pipeline metrics (cheap counters, mutex-guarded histogram —
+/// recorded once per *batch*, not per queue op).
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of padded rows (batch capacity − real requests).
+    pub padding_rows: AtomicU64,
+    /// Failed inferences (responses completed with empty output).
+    pub failures: AtomicU64,
+    latency: Mutex<Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_submit(&self) {
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, real: usize, capacity: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.padding_rows
+            .fetch_add((capacity - real) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_complete(&self, latency: Duration, ok: bool) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.failures.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latency
+            .lock()
+            .unwrap()
+            .record(latency.as_nanos() as u64);
+    }
+
+    pub fn latency_summary(&self) -> LatencySummary {
+        LatencySummary::from_histogram(&self.latency.lock().unwrap())
+    }
+
+    /// Padding overhead ratio: padded rows / total rows.
+    pub fn padding_ratio(&self) -> f64 {
+        let pads = self.padding_rows.load(Ordering::Relaxed) as f64;
+        let real = self.completed.load(Ordering::Relaxed) as f64;
+        if pads + real == 0.0 {
+            0.0
+        } else {
+            pads / (pads + real)
+        }
+    }
+
+    pub fn report(&self) -> String {
+        let s = self.latency_summary();
+        format!(
+            "submitted={} completed={} failures={} batches={} padding_ratio={:.3} \
+             latency: avg={:.1}us p50={}us p99={}us",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failures.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.padding_ratio(),
+            s.avg_ns / 1000.0,
+            s.p50_ns / 1000,
+            s.p99_ns / 1000,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_submit();
+        m.record_batch(6, 8);
+        m.record_complete(Duration::from_micros(100), true);
+        m.record_complete(Duration::from_micros(300), false);
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 2);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.failures.load(Ordering::Relaxed), 1);
+        assert_eq!(m.batches.load(Ordering::Relaxed), 1);
+        assert_eq!(m.padding_rows.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn padding_ratio_math() {
+        let m = Metrics::new();
+        assert_eq!(m.padding_ratio(), 0.0);
+        m.record_batch(6, 8); // 2 pads
+        m.record_complete(Duration::from_micros(1), true);
+        m.record_complete(Duration::from_micros(1), true);
+        // 2 pads vs 2 real → 0.5
+        assert!((m.padding_ratio() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_summary_reflects_records() {
+        let m = Metrics::new();
+        m.record_complete(Duration::from_nanos(1000), true);
+        m.record_complete(Duration::from_nanos(3000), true);
+        let s = m.latency_summary();
+        assert_eq!(s.count, 2);
+        assert!((s.avg_ns - 2000.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn report_contains_fields() {
+        let m = Metrics::new();
+        m.record_submit();
+        let r = m.report();
+        assert!(r.contains("submitted=1"));
+        assert!(r.contains("latency:"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Inference-serving pipeline over CMP queues — the paper's motivating
+//! "AI era" workload (§1): request router → dynamic batcher → model
+//! workers → response path, with CMP queues as the only inter-thread
+//! fabric. Workers execute the AOT-compiled JAX/Pallas model through
+//! [`crate::runtime`]; Python is never on the request path.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod worker;

@@ -1,0 +1,141 @@
+//! Request/response types and the completion slot clients wait on.
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// An inference request flowing through the CMP fabric.
+pub struct InferRequest {
+    pub id: u64,
+    /// Flattened feature row (`features_per_row` elements).
+    pub features: Vec<f32>,
+    pub submitted_at: Instant,
+    /// Completion slot the client blocks on.
+    pub slot: Arc<ResponseSlot>,
+}
+
+/// An inference result.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    /// Flattened output row (logits).
+    pub output: Vec<f32>,
+    /// Submit → complete latency.
+    pub latency: Duration,
+    /// Size of the batch this request rode in (telemetry).
+    pub batch_size: usize,
+}
+
+/// One-shot completion slot (std-only oneshot channel: Mutex+Condvar).
+#[derive(Default)]
+pub struct ResponseSlot {
+    inner: Mutex<Option<InferResponse>>,
+    cv: Condvar,
+}
+
+impl ResponseSlot {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Complete the slot (worker side). Later completions are ignored —
+    /// a slot completes exactly once.
+    pub fn complete(&self, resp: InferResponse) {
+        let mut g = self.inner.lock().unwrap();
+        if g.is_none() {
+            *g = Some(resp);
+            self.cv.notify_all();
+        }
+    }
+
+    /// Block until completed.
+    pub fn wait(&self) -> InferResponse {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return r;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Block with a timeout; `None` on expiry.
+    pub fn wait_timeout(&self, dur: Duration) -> Option<InferResponse> {
+        let deadline = Instant::now() + dur;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(r) = g.take() {
+                return Some(r);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.is_none() {
+                return None;
+            }
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<InferResponse> {
+        self.inner.lock().unwrap().take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(id: u64) -> InferResponse {
+        InferResponse {
+            id,
+            output: vec![1.0],
+            latency: Duration::from_micros(5),
+            batch_size: 8,
+        }
+    }
+
+    #[test]
+    fn complete_then_wait() {
+        let s = ResponseSlot::new();
+        s.complete(resp(1));
+        assert_eq!(s.wait().id, 1);
+    }
+
+    #[test]
+    fn wait_blocks_until_complete() {
+        let s = ResponseSlot::new();
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.wait().id);
+        std::thread::sleep(Duration::from_millis(5));
+        s.complete(resp(7));
+        assert_eq!(h.join().unwrap(), 7);
+    }
+
+    #[test]
+    fn double_complete_keeps_first() {
+        let s = ResponseSlot::new();
+        s.complete(resp(1));
+        s.complete(resp(2));
+        assert_eq!(s.wait().id, 1);
+    }
+
+    #[test]
+    fn timeout_expires() {
+        let s = ResponseSlot::new();
+        assert!(s.wait_timeout(Duration::from_millis(5)).is_none());
+        s.complete(resp(3));
+        assert_eq!(s.wait_timeout(Duration::from_millis(5)).unwrap().id, 3);
+    }
+
+    #[test]
+    fn try_take_is_nonblocking() {
+        let s = ResponseSlot::new();
+        assert!(s.try_take().is_none());
+        s.complete(resp(4));
+        assert_eq!(s.try_take().unwrap().id, 4);
+        assert!(s.try_take().is_none(), "taken once");
+    }
+}

@@ -1,0 +1,168 @@
+//! Request router: spreads incoming requests across per-shard CMP
+//! queues (the fabric the paper motivates for many-thread inference
+//! pipelines). Sharding bounds contention per queue instance while the
+//! queues themselves stay coordination-free.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::queue::cmp::{CmpConfig, CmpQueue};
+
+use super::request::InferRequest;
+
+/// Routing policy across shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Strict rotation — even spread, the default.
+    RoundRobin,
+    /// Pick the shard with the fewest in-flight requests (tracked with
+    /// relaxed counters; approximate by design).
+    LeastLoaded,
+    /// `id % shards` — sticky per request id.
+    HashId,
+}
+
+/// Sharded router over CMP queues.
+pub struct Router {
+    shards: Vec<Arc<CmpQueue<InferRequest>>>,
+    policy: RoutePolicy,
+    rr: AtomicU64,
+    /// In-flight (routed − drained) per shard, for LeastLoaded.
+    inflight: Vec<AtomicU64>,
+    routed: AtomicU64,
+}
+
+impl Router {
+    pub fn new(shards: usize, policy: RoutePolicy, cfg: CmpConfig) -> Self {
+        assert!(shards > 0);
+        Router {
+            shards: (0..shards)
+                .map(|_| Arc::new(CmpQueue::with_config(cfg.clone())))
+                .collect(),
+            policy,
+            rr: AtomicU64::new(0),
+            inflight: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            routed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard(&self, i: usize) -> &Arc<CmpQueue<InferRequest>> {
+        &self.shards[i]
+    }
+
+    /// Total requests routed so far.
+    pub fn routed(&self) -> u64 {
+        self.routed.load(Ordering::Relaxed)
+    }
+
+    /// Approximate in-flight depth of shard `i`.
+    pub fn inflight(&self, i: usize) -> u64 {
+        self.inflight[i].load(Ordering::Relaxed)
+    }
+
+    fn pick(&self, req: &InferRequest) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize
+            }
+            RoutePolicy::HashId => (req.id % self.shards.len() as u64) as usize,
+            RoutePolicy::LeastLoaded => {
+                let mut best = 0;
+                let mut best_load = u64::MAX;
+                for (i, c) in self.inflight.iter().enumerate() {
+                    let l = c.load(Ordering::Relaxed);
+                    if l < best_load {
+                        best_load = l;
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Route a request onto its shard queue. Returns the shard index.
+    pub fn route(&self, req: InferRequest) -> usize {
+        let shard = self.pick(&req);
+        self.inflight[shard].fetch_add(1, Ordering::Relaxed);
+        self.routed.fetch_add(1, Ordering::Relaxed);
+        self.shards[shard]
+            .push(req)
+            .unwrap_or_else(|_| panic!("unbounded CMP shard rejected a request"));
+        shard
+    }
+
+    /// Dequeue from shard `i` (batcher side). Decrements the in-flight
+    /// gauge on success.
+    pub fn drain_one(&self, i: usize) -> Option<InferRequest> {
+        let r = self.shards[i].pop();
+        if r.is_some() {
+            self.inflight[i].fetch_sub(1, Ordering::Relaxed);
+        }
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::ResponseSlot;
+    use std::time::Instant;
+
+    fn req(id: u64) -> InferRequest {
+        InferRequest {
+            id,
+            features: vec![0.0; 4],
+            submitted_at: Instant::now(),
+            slot: ResponseSlot::new(),
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let r = Router::new(4, RoutePolicy::RoundRobin, CmpConfig::default());
+        let mut counts = [0u32; 4];
+        for i in 0..100 {
+            counts[r.route(req(i))] += 1;
+        }
+        assert_eq!(counts, [25, 25, 25, 25]);
+        assert_eq!(r.routed(), 100);
+    }
+
+    #[test]
+    fn hash_id_is_sticky() {
+        let r = Router::new(3, RoutePolicy::HashId, CmpConfig::default());
+        assert_eq!(r.route(req(7)), 1);
+        assert_eq!(r.route(req(7)), 1);
+        assert_eq!(r.route(req(9)), 0);
+    }
+
+    #[test]
+    fn least_loaded_balances_after_drain() {
+        let r = Router::new(2, RoutePolicy::LeastLoaded, CmpConfig::default());
+        // Both start at 0 → shard 0 wins, then 1, then even.
+        let s1 = r.route(req(1));
+        let s2 = r.route(req(2));
+        assert_ne!(s1, s2, "second request must go to the other shard");
+        // Drain shard s1 → next request prefers it again.
+        assert!(r.drain_one(s1).is_some());
+        assert_eq!(r.route(req(3)), s1);
+    }
+
+    #[test]
+    fn drain_preserves_fifo_per_shard() {
+        let r = Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default());
+        for i in 0..10 {
+            r.route(req(i));
+        }
+        for i in 0..10 {
+            assert_eq!(r.drain_one(0).unwrap().id, i);
+        }
+        assert!(r.drain_one(0).is_none());
+        assert_eq!(r.inflight(0), 0);
+    }
+}

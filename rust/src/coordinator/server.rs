@@ -1,0 +1,221 @@
+//! The serving pipeline: router → batchers → CMP work queue → workers.
+//! Every hand-off is a CMP queue; the only blocking point is the
+//! client-facing completion slot (by design — clients sleep, the
+//! pipeline never does).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::queue::cmp::CmpConfig;
+
+use super::batcher::{batcher_loop, new_work_queue, BatchPolicy, WorkQueue};
+use super::metrics::Metrics;
+use super::request::{InferRequest, ResponseSlot};
+use super::router::{RoutePolicy, Router};
+use super::worker::{worker_loop, EngineFactory};
+
+/// Pipeline configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub shards: usize,
+    pub workers: usize,
+    pub route_policy: RoutePolicy,
+    pub batch_policy: BatchPolicy,
+    pub queue_config: CmpConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            shards: 2,
+            workers: 2,
+            route_policy: RoutePolicy::RoundRobin,
+            batch_policy: BatchPolicy::default(),
+            queue_config: CmpConfig::default(),
+        }
+    }
+}
+
+/// A running pipeline. Submit requests with [`Server::submit`]; call
+/// [`Server::shutdown`] to drain and join.
+pub struct Server {
+    router: Arc<Router>,
+    work: WorkQueue,
+    metrics: Arc<Metrics>,
+    stop_batchers: Arc<AtomicBool>,
+    stop_workers: Arc<AtomicBool>,
+    batchers: Vec<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Start batcher and worker threads.
+    pub fn start(cfg: ServerConfig, engine_factory: EngineFactory) -> Self {
+        let router = Arc::new(Router::new(
+            cfg.shards,
+            cfg.route_policy,
+            cfg.queue_config.clone(),
+        ));
+        let work = new_work_queue();
+        let metrics = Arc::new(Metrics::new());
+        let stop_batchers = Arc::new(AtomicBool::new(false));
+        let stop_workers = Arc::new(AtomicBool::new(false));
+
+        let batchers = (0..cfg.shards)
+            .map(|shard| {
+                let (r, w, s) = (router.clone(), work.clone(), stop_batchers.clone());
+                let policy = cfg.batch_policy.clone();
+                std::thread::Builder::new()
+                    .name(format!("batcher-{shard}"))
+                    .spawn(move || batcher_loop(r, shard, policy, w, s))
+                    .expect("spawn batcher")
+            })
+            .collect();
+        let workers = (0..cfg.workers)
+            .map(|i| {
+                let (w, m, s) = (work.clone(), metrics.clone(), stop_workers.clone());
+                let f = engine_factory.clone();
+                std::thread::Builder::new()
+                    .name(format!("worker-{i}"))
+                    .spawn(move || worker_loop(w, f, m, s))
+                    .expect("spawn worker")
+            })
+            .collect();
+
+        Server {
+            router,
+            work,
+            metrics,
+            stop_batchers,
+            stop_workers,
+            batchers,
+            workers,
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Submit a request; returns the slot to wait on.
+    pub fn submit(&self, features: Vec<f32>) -> Arc<ResponseSlot> {
+        let slot = ResponseSlot::new();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            features,
+            submitted_at: std::time::Instant::now(),
+            slot: slot.clone(),
+        };
+        self.metrics.record_submit();
+        self.router.route(req);
+        slot
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn infer_blocking(&self, features: Vec<f32>, timeout: Duration) -> Option<Vec<f32>> {
+        self.submit(features).wait_timeout(timeout).map(|r| r.output)
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Nodes retained by the work queue's CMP pool (telemetry).
+    pub fn work_queue_footprint(&self) -> u64 {
+        self.work.footprint_nodes()
+    }
+
+    /// Drain everything and join all threads. Batchers stop first (they
+    /// flush remaining requests), then workers.
+    pub fn shutdown(mut self) -> Arc<Metrics> {
+        self.stop_batchers.store(true, Ordering::Release);
+        for b in self.batchers.drain(..) {
+            b.join().expect("batcher panicked");
+        }
+        self.stop_workers.store(true, Ordering::Release);
+        for w in self.workers.drain(..) {
+            w.join().expect("worker panicked");
+        }
+        self.metrics.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::{EchoEngine, InferenceEngine};
+
+    fn echo_factory() -> EngineFactory {
+        Arc::new(|| {
+            Ok(Box::new(EchoEngine {
+                batch: 4,
+                features: 2,
+                outputs: 1,
+                scale: 2.0,
+            }) as Box<dyn InferenceEngine>)
+        })
+    }
+
+    #[test]
+    fn end_to_end_pipeline_with_echo_engine() {
+        let server = Server::start(
+            ServerConfig {
+                shards: 2,
+                workers: 2,
+                batch_policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                ..ServerConfig::default()
+            },
+            echo_factory(),
+        );
+        let mut slots = Vec::new();
+        for i in 0..50u32 {
+            slots.push((i, server.submit(vec![i as f32, i as f32])));
+        }
+        for (i, s) in &slots {
+            let r = s.wait_timeout(Duration::from_secs(20)).expect("response");
+            assert_eq!(r.output, vec![*i as f32 * 2.0]);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 50);
+        assert!(metrics.latency_summary().count >= 50);
+    }
+
+    #[test]
+    fn shutdown_drains_in_flight_requests() {
+        let server = Server::start(
+            ServerConfig {
+                shards: 1,
+                workers: 1,
+                batch_policy: BatchPolicy {
+                    max_batch: 64, // never fills → only drain flushes
+                    max_wait: Duration::from_secs(30),
+                },
+                ..ServerConfig::default()
+            },
+            echo_factory(),
+        );
+        let slots: Vec<_> = (0..5).map(|i| server.submit(vec![i as f32, 0.0])).collect();
+        let metrics = server.shutdown();
+        for s in slots {
+            assert!(s.try_take().is_some(), "drained at shutdown");
+        }
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn blocking_helper_roundtrip() {
+        let server = Server::start(ServerConfig::default(), echo_factory());
+        let out = server
+            .infer_blocking(vec![3.0, 5.0], Duration::from_secs(20))
+            .expect("response");
+        assert_eq!(out, vec![8.0]); // mean 4 × scale 2
+        server.shutdown();
+    }
+}

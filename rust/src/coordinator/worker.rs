@@ -1,0 +1,262 @@
+//! Model workers: pull batches off the CMP work queue, assemble the
+//! padded model input, run inference, complete each request's slot.
+//!
+//! Workers are generic over an [`InferenceEngine`] so the pipeline is
+//! testable without artifacts; production workers use
+//! [`crate::runtime::ModelRuntime`] (each worker owns its own PJRT
+//! executable — `PjRtLoadedExecutable` is not `Send`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::batcher::{Batch, WorkQueue};
+use super::metrics::Metrics;
+use super::request::InferResponse;
+
+/// Something that can run a fixed-shape batched inference.
+pub trait InferenceEngine {
+    /// Rows per model invocation.
+    fn batch_size(&self) -> usize;
+    /// Features per row.
+    fn features_per_row(&self) -> usize;
+    /// Outputs per row.
+    fn outputs_per_row(&self) -> usize;
+    /// Run one full batch: input is `batch_size × features_per_row`.
+    fn infer(&self, input: &[f32]) -> Result<Vec<f32>>;
+}
+
+/// Per-worker engine constructor (runs on the worker thread because
+/// PJRT executables are not `Send`).
+pub type EngineFactory = Arc<dyn Fn() -> Result<Box<dyn InferenceEngine>> + Send + Sync>;
+
+impl InferenceEngine for crate::runtime::ModelRuntime {
+    fn batch_size(&self) -> usize {
+        crate::runtime::ModelRuntime::batch_size(self)
+    }
+
+    fn features_per_row(&self) -> usize {
+        crate::runtime::ModelRuntime::features_per_row(self)
+    }
+
+    fn outputs_per_row(&self) -> usize {
+        crate::runtime::ModelRuntime::outputs_per_row(self)
+    }
+
+    fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        crate::runtime::ModelRuntime::infer(self, input)
+    }
+}
+
+/// A trivial engine for tests and the no-artifacts demo path: output
+/// row = `scale ×` mean of the input row, replicated.
+pub struct EchoEngine {
+    pub batch: usize,
+    pub features: usize,
+    pub outputs: usize,
+    pub scale: f32,
+}
+
+impl InferenceEngine for EchoEngine {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn features_per_row(&self) -> usize {
+        self.features
+    }
+
+    fn outputs_per_row(&self) -> usize {
+        self.outputs
+    }
+
+    fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(self.batch * self.outputs);
+        for row in 0..self.batch {
+            let s: f32 =
+                input[row * self.features..(row + 1) * self.features].iter().sum();
+            let mean = s / self.features as f32;
+            out.extend(std::iter::repeat(mean * self.scale).take(self.outputs));
+        }
+        Ok(out)
+    }
+}
+
+/// Worker loop: consume batches until `stop` is set and the queue is
+/// empty. Oversized batches (more requests than the model batch) are
+/// split into multiple invocations; undersized ones are zero-padded.
+pub fn worker_loop(
+    work: WorkQueue,
+    factory: EngineFactory,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+) {
+    let engine = factory().expect("engine construction failed");
+    loop {
+        match work.pop() {
+            Some(batch) => run_batch(&*engine, batch, &metrics),
+            None => {
+                if stop.load(Ordering::Acquire) && work.pop().is_none() {
+                    return;
+                }
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+fn run_batch(engine: &dyn InferenceEngine, batch: Batch, metrics: &Metrics) {
+    let cap = engine.batch_size();
+    let fpr = engine.features_per_row();
+    let opr = engine.outputs_per_row();
+
+    for chunk in batch.requests.chunks(cap) {
+        let mut input = vec![0.0f32; cap * fpr];
+        for (row, req) in chunk.iter().enumerate() {
+            let n = req.features.len().min(fpr);
+            input[row * fpr..row * fpr + n].copy_from_slice(&req.features[..n]);
+        }
+        metrics.record_batch(chunk.len(), cap);
+        match engine.infer(&input) {
+            Ok(out) => {
+                for (row, req) in chunk.iter().enumerate() {
+                    let latency = req.submitted_at.elapsed();
+                    req.slot.complete(InferResponse {
+                        id: req.id,
+                        output: out[row * opr..(row + 1) * opr].to_vec(),
+                        latency,
+                        batch_size: chunk.len(),
+                    });
+                    metrics.record_complete(latency, true);
+                }
+            }
+            Err(e) => {
+                eprintln!("worker: inference failed: {e:#}");
+                for req in chunk {
+                    let latency = req.submitted_at.elapsed();
+                    req.slot.complete(InferResponse {
+                        id: req.id,
+                        output: Vec::new(),
+                        latency,
+                        batch_size: chunk.len(),
+                    });
+                    metrics.record_complete(latency, false);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::new_work_queue;
+    use crate::coordinator::request::{InferRequest, ResponseSlot};
+    use std::time::Instant;
+
+    fn echo_factory() -> EngineFactory {
+        Arc::new(|| {
+            Ok(Box::new(EchoEngine {
+                batch: 4,
+                features: 2,
+                outputs: 3,
+                scale: 10.0,
+            }) as Box<dyn InferenceEngine>)
+        })
+    }
+
+    fn req(id: u64, f: Vec<f32>) -> (InferRequest, Arc<ResponseSlot>) {
+        let slot = ResponseSlot::new();
+        (
+            InferRequest {
+                id,
+                features: f,
+                submitted_at: Instant::now(),
+                slot: slot.clone(),
+            },
+            slot,
+        )
+    }
+
+    #[test]
+    fn worker_completes_requests_with_engine_output() {
+        let work = new_work_queue();
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = {
+            let (w, m, s) = (work.clone(), metrics.clone(), stop.clone());
+            std::thread::spawn(move || worker_loop(w, echo_factory(), m, s))
+        };
+        let (r1, s1) = req(1, vec![1.0, 3.0]); // mean 2 → 20
+        let (r2, s2) = req(2, vec![4.0, 6.0]); // mean 5 → 50
+        work.push(Batch {
+            requests: vec![r1, r2],
+            formed_at: Instant::now(),
+        })
+        .ok()
+        .unwrap();
+        let o1 = s1.wait();
+        let o2 = s2.wait();
+        assert_eq!(o1.output, vec![20.0, 20.0, 20.0]);
+        assert_eq!(o2.output, vec![50.0, 50.0, 50.0]);
+        assert_eq!(o1.batch_size, 2);
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
+        assert!(metrics.padding_ratio() > 0.0, "2 real rows in a 4-batch");
+    }
+
+    #[test]
+    fn oversized_batch_is_split() {
+        let work = new_work_queue();
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = {
+            let (w, m, s) = (work.clone(), metrics.clone(), stop.clone());
+            std::thread::spawn(move || worker_loop(w, echo_factory(), m, s))
+        };
+        let mut slots = Vec::new();
+        let mut requests = Vec::new();
+        for i in 0..10 {
+            let (r, s) = req(i, vec![i as f32, i as f32]);
+            requests.push(r);
+            slots.push(s);
+        }
+        work.push(Batch {
+            requests,
+            formed_at: Instant::now(),
+        })
+        .ok()
+        .unwrap();
+        for (i, s) in slots.iter().enumerate() {
+            let o = s.wait();
+            assert_eq!(o.output[0], i as f32 * 10.0);
+        }
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+        // 10 requests with engine batch 4 → 3 model invocations.
+        assert_eq!(metrics.batches.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn short_feature_rows_are_zero_padded() {
+        let work = new_work_queue();
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = {
+            let (w, m, s) = (work.clone(), metrics.clone(), stop.clone());
+            std::thread::spawn(move || worker_loop(w, echo_factory(), m, s))
+        };
+        let (r, s) = req(1, vec![8.0]); // one of two features → mean 4
+        work.push(Batch {
+            requests: vec![r],
+            formed_at: Instant::now(),
+        })
+        .ok()
+        .unwrap();
+        assert_eq!(s.wait().output[0], 40.0);
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,36 @@
+//! # cmpq — Cyclic Memory Protection queues
+//!
+//! Reproduction of *"No Cords Attached: Coordination-Free Concurrent
+//! Lock-Free Queues"* (CS.DC 2025). The crate provides:
+//!
+//! * [`queue::cmp::CmpQueue`] — the paper's contribution: a lock-free,
+//!   strict-FIFO, unbounded MPMC queue with **Cyclic Memory Protection**
+//!   (bounded temporal protection windows instead of hazard-pointer /
+//!   epoch coordination).
+//! * [`queue::baselines`] — every comparator the paper evaluates or
+//!   discusses: Michael & Scott + hazard pointers ("Boost" stand-in),
+//!   M&S + epoch-based reclamation, a per-producer segmented relaxed-FIFO
+//!   queue ("moodycamel" stand-in), Vyukov's bounded MPMC ring, a
+//!   mutex-protected queue (TBB/Folly stand-in), and the original M&S
+//!   *with* helping (the §3.4 ablation).
+//! * [`queue::reclamation`] — the reclamation substrates those baselines
+//!   need (hazard-pointer domain, epoch-based-reclamation domain).
+//! * [`bench`] — a criterion-style benchmark harness (offline image has no
+//!   criterion) reproducing Figure 1, Tables 1–3, Figure 2 and the
+//!   ablation studies, including the paper's round-robin sequencing and
+//!   3-sigma filtering methodology.
+//! * [`coordinator`] — an inference-serving pipeline (router → dynamic
+//!   batcher → model workers) whose request fabric is CMP queues; workers
+//!   execute an AOT-compiled JAX/Pallas model through [`runtime`].
+//! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod bench;
+pub mod coordinator;
+pub mod queue;
+pub mod runtime;
+pub mod util;
+
+pub use queue::cmp::{CmpConfig, CmpQueue};
+pub use queue::ConcurrentQueue;

@@ -1,0 +1,323 @@
+//! `repro` — CLI launcher for the CMP reproduction.
+//!
+//! ```text
+//! repro bench fig1      reproduce Figure 1 (+ throughput table)
+//! repro bench tables    reproduce Tables 1–3 (latency)
+//! repro bench fig2      reproduce Figure 2 (retention under load)
+//! repro bench faults    FAULT experiment (stall/crash tolerance)
+//! repro bench all       everything above
+//! repro serve           run the inference pipeline on the AOT model
+//! repro selftest        runtime numerics check against testvec.json
+//! repro demo            quickstart walk-through
+//! ```
+//!
+//! Common options: `--ops N --rounds R --threads 1,2,4 --impls a,b,c
+//! --verbose --out-dir bench_results`.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cmpq::bench::faults::{cmp_stalled_consumer, ebr_stalled_reader, fault_table, hp_stalled_reader};
+use cmpq::bench::report;
+use cmpq::bench::runner::{latency_suite, retention_suite, throughput_suite, SuiteOptions};
+use cmpq::bench::synthetic::LoadProfile;
+use cmpq::bench::workload::PairConfig;
+use cmpq::coordinator::server::{Server, ServerConfig};
+use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+use cmpq::queue::Impl;
+use cmpq::runtime::client::artifacts_dir;
+use cmpq::runtime::{ModelRuntime, TestVectors};
+use cmpq::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "bench" => cmd_bench(&args),
+        "serve" => cmd_serve(&args),
+        "selftest" => cmd_selftest(&args),
+        "demo" => cmd_demo(),
+        _ => {
+            eprintln!("{}", HELP);
+            if cmd == "help" {
+                0
+            } else {
+                eprintln!("unknown command: {cmd}");
+                2
+            }
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "repro — CMP queue reproduction (see README.md)\n\
+commands:\n  \
+bench <fig1|tables|fig2|faults|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--verbose]\n  \
+serve [--requests N] [--clients C] [--shards S] [--workers W] [--echo]\n  \
+selftest [--artifacts DIR]\n  \
+demo";
+
+fn suite_options(args: &Args) -> SuiteOptions {
+    SuiteOptions {
+        total_ops: args.get_parse("ops", 50_000u64),
+        rounds: args.get_parse("rounds", 3usize),
+        warmup_rounds: args.get_parse("warmup", 1usize),
+        load: LoadProfile::None,
+        capacity_hint: args.get_parse("capacity", 1usize << 16),
+        verbose: args.flag("verbose"),
+    }
+}
+
+fn parse_impls(args: &Args) -> Vec<Impl> {
+    match args.get_list::<String>("impls") {
+        Some(names) => names
+            .iter()
+            .map(|n| Impl::parse(n).unwrap_or_else(|| panic!("unknown impl {n:?}")))
+            .collect(),
+        None => Impl::PAPER_SET.to_vec(),
+    }
+}
+
+fn parse_pairs(args: &Args) -> Vec<PairConfig> {
+    match args.get_list::<usize>("threads") {
+        Some(ns) => ns.into_iter().map(PairConfig::symmetric).collect(),
+        None => PairConfig::paper_sweep(),
+    }
+}
+
+fn write_out(args: &Args, name: &str, content: &str) {
+    let dir = args.get_or("out-dir", "bench_results");
+    std::fs::create_dir_all(dir).expect("create out dir");
+    let path = format!("{dir}/{name}");
+    std::fs::write(&path, content).expect("write results");
+    eprintln!("wrote {path}");
+}
+
+fn cmd_bench(args: &Args) -> i32 {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let impls = parse_impls(args);
+    let pairs = parse_pairs(args);
+    let opts = suite_options(args);
+
+    let run_fig1 = || {
+        eprintln!(
+            "== FIG1: throughput sweep ({} impls × {} pairs) ==",
+            impls.len(),
+            pairs.len()
+        );
+        let cells = throughput_suite(&impls, &pairs, &opts);
+        let table = report::fig1_table(&cells);
+        println!("{table}");
+        let series: Vec<(String, f64)> = cells
+            .iter()
+            .map(|c| (format!("{} {}", c.pair.label(), c.imp.name()), c.mean_ips))
+            .collect();
+        println!("{}", report::bar_chart("Figure 1 (items/sec)", &series, 48));
+        write_out(args, "fig1_throughput.txt", &table);
+        write_out(args, "fig1_throughput.json", &report::throughput_json(&cells));
+    };
+    let run_tables = || {
+        // The paper's latency tables: 1P1C, 4P4C, 32P32C (+64P64C text).
+        let latency_pairs: Vec<PairConfig> = args
+            .get_list::<usize>("threads")
+            .map(|ns| ns.into_iter().map(PairConfig::symmetric).collect())
+            .unwrap_or_else(|| {
+                vec![
+                    PairConfig::symmetric(1),
+                    PairConfig::symmetric(4),
+                    PairConfig::symmetric(32),
+                    PairConfig::symmetric(64),
+                ]
+            });
+        eprintln!("== TABLES 1–3: latency ==");
+        let cells = latency_suite(&impls, &latency_pairs, &opts);
+        let mut all = String::new();
+        for (i, p) in latency_pairs.iter().enumerate() {
+            let sub: Vec<_> = cells.iter().filter(|c| c.pair == *p).cloned().collect();
+            let title = match i {
+                0 => format!("Table 1 — no contention ({})", p.label()),
+                1 => format!("Table 2 — balanced contention ({})", p.label()),
+                2 => format!("Table 3 — high contention ({})", p.label()),
+                _ => format!("Extreme contention ({})", p.label()),
+            };
+            let t = report::latency_table(&title, &sub);
+            println!("{t}");
+            all.push_str(&t);
+            all.push('\n');
+        }
+        write_out(args, "tables_latency.txt", &all);
+        write_out(args, "tables_latency.json", &report::latency_json(&cells));
+    };
+    let run_fig2 = || {
+        eprintln!("== FIG2: retention under synthetic load ==");
+        let intensity = args.get_parse("intensity", 8u32);
+        let cells = retention_suite(&impls, &pairs, &opts, intensity);
+        let table = report::fig2_table(&cells);
+        println!("{table}");
+        write_out(args, "fig2_retention.txt", &table);
+        write_out(args, "fig2_retention.json", &report::retention_json(&cells));
+    };
+    let run_faults = || {
+        eprintln!("== FAULT: stalled/crashed participants ==");
+        let churn = args.get_parse("ops", 50_000u64);
+        let rows = vec![
+            cmp_stalled_consumer(churn, 8),
+            hp_stalled_reader(churn),
+            ebr_stalled_reader(churn),
+        ];
+        let t = fault_table(&rows);
+        println!("{t}");
+        write_out(args, "faults.txt", &t);
+    };
+
+    match what {
+        "fig1" => run_fig1(),
+        "tables" => run_tables(),
+        "fig2" => run_fig2(),
+        "faults" => run_faults(),
+        "all" => {
+            run_fig1();
+            run_tables();
+            run_fig2();
+            run_faults();
+        }
+        other => {
+            eprintln!("unknown bench target {other:?} (fig1|tables|fig2|faults|all)");
+            return 2;
+        }
+    }
+    0
+}
+
+fn model_factory(dir: &Path) -> EngineFactory {
+    let dir = dir.to_path_buf();
+    Arc::new(move || {
+        let rt = ModelRuntime::load_from_artifacts(&dir)?;
+        Ok(Box::new(rt) as Box<dyn InferenceEngine>)
+    })
+}
+
+fn echo_factory() -> EngineFactory {
+    Arc::new(|| {
+        Ok(Box::new(EchoEngine {
+            batch: 8,
+            features: 128,
+            outputs: 16,
+            scale: 1.0,
+        }) as Box<dyn InferenceEngine>)
+    })
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let dir = artifacts_dir();
+    let use_echo = args.flag("echo") || !dir.join("model.hlo.txt").exists();
+    let factory = if use_echo {
+        eprintln!("serve: using echo engine (build artifacts for the real model)");
+        echo_factory()
+    } else {
+        eprintln!("serve: loading AOT model from {}", dir.display());
+        model_factory(&dir)
+    };
+    let cfg = ServerConfig {
+        shards: args.get_parse("shards", 2usize),
+        workers: args.get_parse("workers", 2usize),
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::start(cfg, factory));
+
+    let n_requests: u64 = args.get_parse("requests", 512u64);
+    let n_clients: usize = args.get_parse("clients", 8usize);
+    let per_client = (n_requests / n_clients as u64).max(1);
+    eprintln!("serve: {n_clients} clients × {per_client} requests");
+
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let mut rng = cmpq::util::XorShift64::new(c as u64 + 1);
+                for _ in 0..per_client {
+                    let features: Vec<f32> =
+                        (0..128).map(|_| (rng.next_f64() as f32) - 0.5).collect();
+                    let out = server
+                        .submit(features)
+                        .wait_timeout(Duration::from_secs(120))
+                        .expect("request timed out");
+                    assert!(!out.output.is_empty(), "inference failed");
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().expect("client panicked");
+    }
+    let elapsed = t0.elapsed();
+    let total = per_client * n_clients as u64;
+    println!(
+        "served {total} requests in {elapsed:.2?} -> {:.1} req/s",
+        total as f64 / elapsed.as_secs_f64()
+    );
+    let server = Arc::try_unwrap(server).ok().expect("all clients joined");
+    let metrics = server.shutdown();
+    println!("{}", metrics.report());
+    0
+}
+
+fn cmd_selftest(args: &Args) -> i32 {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    eprintln!("selftest: artifacts at {}", dir.display());
+    let rt = match ModelRuntime::load_from_artifacts(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("selftest: cannot load model: {e:#}\nrun `make artifacts` first");
+            return 1;
+        }
+    };
+    let tv = match TestVectors::load(&dir) {
+        Ok(tv) => tv,
+        Err(e) => {
+            eprintln!("selftest: cannot load test vectors: {e:#}");
+            return 1;
+        }
+    };
+    let t0 = Instant::now();
+    let out = rt.infer(&tv.input).expect("inference failed");
+    let dt = t0.elapsed();
+    match tv.check(&out) {
+        Ok(()) => {
+            println!(
+                "selftest OK: output matches JAX within rtol={} ({} values, {dt:.2?}/batch)",
+                tv.rtol,
+                out.len()
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("selftest FAILED: {e:#}");
+            1
+        }
+    }
+}
+
+fn cmd_demo() -> i32 {
+    use cmpq::{CmpQueue, ConcurrentQueue};
+    println!("CMP queue demo — see examples/quickstart.rs for the full tour");
+    let q: CmpQueue<String> = CmpQueue::new();
+    for i in 0..5 {
+        q.push(format!("msg-{i}")).unwrap();
+    }
+    while let Some(m) = q.pop() {
+        println!("dequeued {m}");
+    }
+    println!("stats: {}", q.stats().summary());
+    println!(
+        "strict_fifo={} lock_free={}",
+        q.is_strict_fifo(),
+        q.is_lock_free()
+    );
+    0
+}

@@ -1,0 +1,10 @@
+//! Comparator queues (§2.3.2, §4): every implementation the paper
+//! evaluates against or discusses, rebuilt from scratch (DESIGN.md §3
+//! documents each stand-in).
+
+pub mod ms_ebr;
+pub mod ms_helping;
+pub mod ms_hp;
+pub mod mutex_queue;
+pub mod segmented;
+pub mod vyukov;

@@ -1,0 +1,262 @@
+//! Michael & Scott queue + epoch-based reclamation — the §2.2
+//! comparator family (EBR/DEBRA). Identical linking discipline to
+//! [`super::ms_hp`], but protection is a per-operation epoch pin instead
+//! of per-pointer hazard publications. Cheaper per op than hazard
+//! pointers, but reclamation stalls with any pinned thread (§2.3.1).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::ptr;
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+use crossbeam_utils::CachePadded;
+
+use crate::queue::reclamation::ebr::{drop_box, EbrDomain};
+use crate::queue::ConcurrentQueue;
+
+struct MsNode<T> {
+    next: AtomicPtr<MsNode<T>>,
+    data: UnsafeCell<MaybeUninit<T>>,
+}
+
+impl<T> MsNode<T> {
+    fn dummy() -> *mut Self {
+        Box::into_raw(Box::new(MsNode {
+            next: AtomicPtr::new(ptr::null_mut()),
+            data: UnsafeCell::new(MaybeUninit::uninit()),
+        }))
+    }
+
+    fn with_data(v: T) -> *mut Self {
+        Box::into_raw(Box::new(MsNode {
+            next: AtomicPtr::new(ptr::null_mut()),
+            data: UnsafeCell::new(MaybeUninit::new(v)),
+        }))
+    }
+}
+
+/// M&S queue with EBR reclamation.
+pub struct MsEbrQueue<T> {
+    head: CachePadded<AtomicPtr<MsNode<T>>>,
+    tail: CachePadded<AtomicPtr<MsNode<T>>>,
+    domain: EbrDomain,
+}
+
+unsafe impl<T: Send> Send for MsEbrQueue<T> {}
+unsafe impl<T: Send> Sync for MsEbrQueue<T> {}
+
+impl<T: Send> Default for MsEbrQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Send> MsEbrQueue<T> {
+    pub fn new() -> Self {
+        let dummy = MsNode::<T>::dummy();
+        MsEbrQueue {
+            head: CachePadded::new(AtomicPtr::new(dummy)),
+            tail: CachePadded::new(AtomicPtr::new(dummy)),
+            domain: EbrDomain::new(),
+        }
+    }
+
+    /// Reclamation diagnostics (FAULT experiment).
+    pub fn domain(&self) -> &EbrDomain {
+        &self.domain
+    }
+
+    pub fn push(&self, item: T) {
+        let node = MsNode::with_data(item);
+        let _guard = self.domain.pin();
+        loop {
+            let tail = self.tail.load(Ordering::Acquire);
+            let next = unsafe { (*tail).next.load(Ordering::Acquire) };
+            if tail != self.tail.load(Ordering::Acquire) {
+                continue;
+            }
+            if !next.is_null() {
+                let _ = self.tail.compare_exchange(
+                    tail,
+                    next,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                );
+                continue;
+            }
+            if unsafe {
+                (*tail)
+                    .next
+                    .compare_exchange(ptr::null_mut(), node, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            } {
+                let _ = self
+                    .tail
+                    .compare_exchange(tail, node, Ordering::AcqRel, Ordering::Acquire);
+                return;
+            }
+        }
+    }
+
+    pub fn pop(&self) -> Option<T> {
+        let _guard = self.domain.pin();
+        loop {
+            let head = self.head.load(Ordering::Acquire);
+            let tail = self.tail.load(Ordering::Acquire);
+            let next = unsafe { (*head).next.load(Ordering::Acquire) };
+            if head != self.head.load(Ordering::Acquire) {
+                continue;
+            }
+            if next.is_null() {
+                return None;
+            }
+            if head == tail {
+                let _ = self.tail.compare_exchange(
+                    tail,
+                    next,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                );
+                continue;
+            }
+            if self
+                .head
+                .compare_exchange(head, next, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                let data = unsafe { (*(*next).data.get()).assume_init_read() };
+                unsafe { self.domain.retire(head, drop_box::<MsNode<T>>) };
+                return Some(data);
+            }
+        }
+    }
+}
+
+impl<T: Send> ConcurrentQueue<T> for MsEbrQueue<T> {
+    fn try_enqueue(&self, item: T) -> Result<(), T> {
+        self.push(item);
+        Ok(())
+    }
+
+    fn try_dequeue(&self) -> Option<T> {
+        self.pop()
+    }
+
+    fn name(&self) -> &'static str {
+        "ms-ebr"
+    }
+
+    fn is_strict_fifo(&self) -> bool {
+        true
+    }
+
+    fn is_lock_free(&self) -> bool {
+        true // queue ops are lock-free; *reclamation* can stall (§2.2)
+    }
+}
+
+impl<T> Drop for MsEbrQueue<T> {
+    fn drop(&mut self) {
+        unsafe {
+            let mut cur = self.head.load(Ordering::Acquire);
+            let mut is_dummy = true;
+            while !cur.is_null() {
+                let next = (*cur).next.load(Ordering::Acquire);
+                if !is_dummy {
+                    (*(*cur).data.get()).assume_init_drop();
+                }
+                drop(Box::from_raw(cur));
+                cur = next;
+                is_dummy = false;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    #[test]
+    fn spsc_fifo() {
+        let q: MsEbrQueue<u32> = MsEbrQueue::new();
+        for i in 0..500 {
+            q.push(i);
+        }
+        for i in 0..500 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        let q: Arc<MsEbrQueue<u64>> = Arc::new(MsEbrQueue::new());
+        let done = Arc::new(AtomicBool::new(false));
+        let per = 3000u64;
+        let producers: Vec<_> = (0..3u64)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        q.push(p * per + i);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let done = done.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop() {
+                            Some(v) => got.push(v),
+                            None => {
+                                if done.load(Ordering::Acquire) && q.pop().is_none() {
+                                    break;
+                                }
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Release);
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        assert_eq!(all.len() as u64, 3 * per);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, 3 * per);
+    }
+
+    #[test]
+    fn churn_reclaims_nodes() {
+        let q: MsEbrQueue<u64> = MsEbrQueue::new();
+        for i in 0..10_000 {
+            q.push(i);
+            q.pop();
+        }
+        assert!(q.domain().freed() > 0);
+    }
+
+    #[test]
+    fn drop_with_live_items() {
+        let q: MsEbrQueue<String> = MsEbrQueue::new();
+        for i in 0..50 {
+            q.push(format!("item-{i}"));
+        }
+        drop(q); // must not leak or double-free (asan-less smoke)
+    }
+}

@@ -1,0 +1,121 @@
+//! Mutex-protected queue — the Intel TBB / Meta Folly stand-in
+//! (§2.3.2: frameworks that "retain both FIFO and unbounded capacity by
+//! introducing fine-grained or hybrid locks, but giving up lock-freedom
+//! and incurring blocking overhead under contention").
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::queue::ConcurrentQueue;
+
+/// Blocking FIFO queue: `Mutex<VecDeque>`.
+pub struct MutexQueue<T> {
+    inner: Mutex<VecDeque<T>>,
+}
+
+impl<T: Send> Default for MutexQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Send> MutexQueue<T> {
+    pub fn new() -> Self {
+        MutexQueue {
+            inner: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    pub fn push(&self, item: T) {
+        self.inner.lock().unwrap().push_back(item);
+    }
+
+    pub fn pop(&self) -> Option<T> {
+        self.inner.lock().unwrap().pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T: Send> ConcurrentQueue<T> for MutexQueue<T> {
+    fn try_enqueue(&self, item: T) -> Result<(), T> {
+        self.push(item);
+        Ok(())
+    }
+
+    fn try_dequeue(&self) -> Option<T> {
+        self.pop()
+    }
+
+    fn name(&self) -> &'static str {
+        "mutex"
+    }
+
+    fn is_strict_fifo(&self) -> bool {
+        true
+    }
+
+    fn is_lock_free(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q: MutexQueue<u32> = MutexQueue::new();
+        for i in 0..100 {
+            q.push(i);
+        }
+        for i in 0..100 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn len_tracks() {
+        let q: MutexQueue<u8> = MutexQueue::new();
+        assert!(q.is_empty());
+        q.push(1);
+        q.push(2);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn mpmc_no_loss() {
+        let q = Arc::new(MutexQueue::<u64>::new());
+        let handles: Vec<_> = (0..4u64)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..1000 {
+                        q.push(p * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut all = Vec::new();
+        while let Some(v) = q.pop() {
+            all.push(v);
+        }
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 4000);
+    }
+}

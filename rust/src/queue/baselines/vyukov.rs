@@ -1,0 +1,273 @@
+//! Vyukov bounded MPMC ring — §2.3.2: "delivers near-O(1) operations
+//! with strict per-slot FIFO but requires capacity to be fixed at
+//! initialization, sacrificing unboundedness." Per-slot sequence
+//! numbers arbitrate producers and consumers without locks.
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crossbeam_utils::CachePadded;
+
+use crate::queue::ConcurrentQueue;
+
+struct Slot<T> {
+    /// Sequence protocol: `seq == pos` ⇒ writable by the enqueuer of
+    /// `pos`; `seq == pos + 1` ⇒ readable by the dequeuer of `pos`;
+    /// `seq == pos + cap` ⇒ consumed, writable next lap.
+    seq: AtomicUsize,
+    val: UnsafeCell<MaybeUninit<T>>,
+}
+
+/// Bounded lock-free MPMC queue (fixed capacity, power of two).
+pub struct VyukovQueue<T> {
+    slots: Box<[Slot<T>]>,
+    mask: usize,
+    enqueue_pos: CachePadded<AtomicUsize>,
+    dequeue_pos: CachePadded<AtomicUsize>,
+}
+
+unsafe impl<T: Send> Send for VyukovQueue<T> {}
+unsafe impl<T: Send> Sync for VyukovQueue<T> {}
+
+impl<T: Send> VyukovQueue<T> {
+    /// Capacity is rounded up to the next power of two (min 2).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots: Vec<Slot<T>> = (0..cap)
+            .map(|i| Slot {
+                seq: AtomicUsize::new(i),
+                val: UnsafeCell::new(MaybeUninit::uninit()),
+            })
+            .collect();
+        VyukovQueue {
+            slots: slots.into_boxed_slice(),
+            mask: cap - 1,
+            enqueue_pos: CachePadded::new(AtomicUsize::new(0)),
+            dequeue_pos: CachePadded::new(AtomicUsize::new(0)),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn push(&self, item: T) -> Result<(), T> {
+        let mut pos = self.enqueue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                match self.enqueue_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => {
+                        unsafe { (*slot.val.get()).write(item) };
+                        slot.seq.store(pos + 1, Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if diff < 0 {
+                return Err(item); // full
+            } else {
+                pos = self.enqueue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn pop(&self) -> Option<T> {
+        let mut pos = self.dequeue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - (pos + 1) as isize;
+            if diff == 0 {
+                match self.dequeue_pos.compare_exchange_weak(
+                    pos,
+                    pos + 1,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => {
+                        let v = unsafe { (*slot.val.get()).assume_init_read() };
+                        slot.seq
+                            .store(pos + self.mask + 1, Ordering::Release);
+                        return Some(v);
+                    }
+                    Err(now) => pos = now,
+                }
+            } else if diff < 0 {
+                return None; // empty
+            } else {
+                pos = self.dequeue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl<T: Send> ConcurrentQueue<T> for VyukovQueue<T> {
+    fn try_enqueue(&self, item: T) -> Result<(), T> {
+        self.push(item)
+    }
+
+    fn try_dequeue(&self) -> Option<T> {
+        self.pop()
+    }
+
+    fn name(&self) -> &'static str {
+        "vyukov"
+    }
+
+    fn is_strict_fifo(&self) -> bool {
+        true // per-slot FIFO on a single ring
+    }
+
+    fn is_lock_free(&self) -> bool {
+        true
+    }
+
+    fn is_bounded(&self) -> bool {
+        true
+    }
+}
+
+impl<T> Drop for VyukovQueue<T> {
+    fn drop(&mut self) {
+        // Drop any unconsumed payloads.
+        let mut pos = *self.dequeue_pos.get_mut();
+        let end = *self.enqueue_pos.get_mut();
+        while pos < end {
+            let slot = &mut self.slots[pos & self.mask];
+            // Only slots whose write completed (seq == pos+1) hold data.
+            if *slot.seq.get_mut() == pos + 1 {
+                unsafe { (*slot.val.get()).assume_init_drop() };
+            }
+            pos += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        let q: VyukovQueue<u8> = VyukovQueue::new(100);
+        assert_eq!(q.capacity(), 128);
+        let q: VyukovQueue<u8> = VyukovQueue::new(1);
+        assert_eq!(q.capacity(), 2);
+    }
+
+    #[test]
+    fn fifo_until_full_then_err() {
+        let q: VyukovQueue<u32> = VyukovQueue::new(4);
+        for i in 0..4 {
+            assert!(q.push(i).is_ok());
+        }
+        assert_eq!(q.push(99), Err(99), "full");
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn wraparound_many_laps() {
+        let q: VyukovQueue<u64> = VyukovQueue::new(8);
+        for lap in 0..1000u64 {
+            for i in 0..8 {
+                q.push(lap * 8 + i).unwrap();
+            }
+            for i in 0..8 {
+                assert_eq!(q.pop(), Some(lap * 8 + i));
+            }
+        }
+    }
+
+    #[test]
+    fn drop_releases_unconsumed() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        DROPS.store(0, Ordering::Relaxed);
+        {
+            let q: VyukovQueue<D> = VyukovQueue::new(8);
+            for _ in 0..5 {
+                q.push(D).ok().unwrap();
+            }
+            drop(q.pop());
+        }
+        assert_eq!(DROPS.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        let q = Arc::new(VyukovQueue::<u64>::new(1024));
+        let per = 5000u64;
+        let done = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let producers: Vec<_> = (0..3u64)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        let mut v = p * per + i;
+                        loop {
+                            match q.push(v) {
+                                Ok(()) => break,
+                                Err(back) => {
+                                    v = back;
+                                    std::thread::yield_now();
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                let done = done.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    loop {
+                        match q.pop() {
+                            Some(v) => got.push(v),
+                            None => {
+                                if done.load(Ordering::Acquire) && q.pop().is_none() {
+                                    break;
+                                }
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Release);
+        let mut all: Vec<u64> = consumers
+            .into_iter()
+            .flat_map(|h| h.join().unwrap())
+            .collect();
+        assert_eq!(all.len() as u64, 3 * per);
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, 3 * per);
+    }
+}

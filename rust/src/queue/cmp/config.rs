@@ -1,0 +1,168 @@
+//! CMP tuning parameters (§3.1, §3.3 Phase 3, §3.6).
+
+/// Reclamation trigger policy (§3.3 Phase 3: "the algorithm is agnostic
+/// to the triggering policy — deterministic modulo, randomized
+/// (Bernoulli p = 1/N), or hybrid").
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ReclaimTrigger {
+    /// `cycle % N == 0` — the variant shown in Algorithm 1.
+    Modulo,
+    /// Bernoulli trial with `p = 1/N` per enqueue (per-thread PRNG).
+    Bernoulli,
+    /// Never trigger from enqueue; reclamation only via explicit
+    /// [`super::CmpQueue::reclaim`] calls (useful in tests/ablations).
+    Manual,
+}
+
+/// Configuration for a [`super::CmpQueue`] instance. The paper sizes the
+/// window per queue instance (§3.1): `W = max(MIN_WINDOW, OPS × R)`.
+#[derive(Debug, Clone)]
+pub struct CmpConfig {
+    /// Protection window size `W` in dequeue cycles. Nodes are reclaimed
+    /// only when `cycle < deque_cycle − W`. Bounds retained memory by
+    /// `W × node_size` and must exceed the worst-case dequeue-progress
+    /// delay (§3.1) and the producer count (tail-boundary margin,
+    /// DESIGN.md §6).
+    pub window: u64,
+    /// Reclamation period `N`: enqueue triggers a reclamation pass every
+    /// `N` cycles (Algorithm 1 Phase 3).
+    pub reclaim_period: u64,
+    /// Trigger policy for the period above.
+    pub trigger: ReclaimTrigger,
+    /// Minimum batch size before a reclamation pass commits a head
+    /// advance (Algorithm 4 "Enforce minimum batch size").
+    pub min_reclaim_batch: usize,
+    /// Optional cap on pool nodes (None = unbounded growth). When the
+    /// cap is hit, enqueue triggers reclamation and retries (§3.3
+    /// Phase 1 "automatic memory pressure relief").
+    pub max_nodes: Option<usize>,
+    /// Enable the scan-cursor optimization (§3.5 Phase 1). Disabled only
+    /// by the ABL-CURSOR ablation; dequeues then scan from `head.next`.
+    pub use_scan_cursor: bool,
+    /// Use the original M&S helping mechanism instead of the paper's
+    /// retry-with-fresh-state (§3.4 ablation ABL-HELP).
+    pub helping: bool,
+    /// Record detailed statistics (relaxed atomic counters).
+    pub track_stats: bool,
+}
+
+/// Paper's `MIN_WINDOW` floor; also comfortably exceeds any thread count
+/// we run, preserving the tail-boundary margin (DESIGN.md §6).
+pub const MIN_WINDOW: u64 = 1024;
+
+impl Default for CmpConfig {
+    fn default() -> Self {
+        Self {
+            window: 4096,
+            reclaim_period: 1024,
+            trigger: ReclaimTrigger::Modulo,
+            min_reclaim_batch: 32,
+            max_nodes: None,
+            use_scan_cursor: true,
+            helping: false,
+            track_stats: true,
+        }
+    }
+}
+
+impl CmpConfig {
+    /// Paper's sizing rule: `W = max(MIN_WINDOW, OPS × R)` where `OPS`
+    /// is the expected dequeue rate (ops/s) and `R` the resilience
+    /// window in seconds (§3.1).
+    pub fn window_for(ops_per_sec: u64, resilience_secs: f64) -> u64 {
+        let w = (ops_per_sec as f64 * resilience_secs).ceil() as u64;
+        w.max(MIN_WINDOW)
+    }
+
+    /// Builder-style window override.
+    pub fn with_window(mut self, w: u64) -> Self {
+        self.window = w.max(1);
+        self
+    }
+
+    pub fn with_reclaim_period(mut self, n: u64) -> Self {
+        self.reclaim_period = n.max(1);
+        self
+    }
+
+    pub fn with_trigger(mut self, t: ReclaimTrigger) -> Self {
+        self.trigger = t;
+        self
+    }
+
+    pub fn with_min_batch(mut self, b: usize) -> Self {
+        self.min_reclaim_batch = b.max(1);
+        self
+    }
+
+    pub fn with_max_nodes(mut self, cap: usize) -> Self {
+        self.max_nodes = Some(cap);
+        self
+    }
+
+    pub fn without_scan_cursor(mut self) -> Self {
+        self.use_scan_cursor = false;
+        self
+    }
+
+    pub fn with_helping(mut self) -> Self {
+        self.helping = true;
+        self
+    }
+
+    pub fn without_stats(mut self) -> Self {
+        self.track_stats = false;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sane() {
+        let c = CmpConfig::default();
+        assert!(c.window >= MIN_WINDOW);
+        assert!(c.reclaim_period > 0);
+        assert!(c.min_reclaim_batch > 0);
+        assert!(c.use_scan_cursor);
+        assert!(!c.helping);
+        assert!(c.max_nodes.is_none());
+    }
+
+    #[test]
+    fn window_sizing_rule() {
+        // Low-rate queue floors at MIN_WINDOW.
+        assert_eq!(CmpConfig::window_for(100, 0.001), MIN_WINDOW);
+        // 1M ops/s with 100ms resilience → 100k cycles.
+        assert_eq!(CmpConfig::window_for(1_000_000, 0.1), 100_000);
+    }
+
+    #[test]
+    fn builders_apply() {
+        let c = CmpConfig::default()
+            .with_window(9999)
+            .with_reclaim_period(17)
+            .with_trigger(ReclaimTrigger::Bernoulli)
+            .with_min_batch(5)
+            .with_max_nodes(1 << 20)
+            .without_scan_cursor()
+            .with_helping()
+            .without_stats();
+        assert_eq!(c.window, 9999);
+        assert_eq!(c.reclaim_period, 17);
+        assert_eq!(c.trigger, ReclaimTrigger::Bernoulli);
+        assert_eq!(c.min_reclaim_batch, 5);
+        assert_eq!(c.max_nodes, Some(1 << 20));
+        assert!(!c.use_scan_cursor);
+        assert!(c.helping);
+        assert!(!c.track_stats);
+    }
+
+    #[test]
+    fn window_floor_is_one() {
+        let c = CmpConfig::default().with_window(0);
+        assert_eq!(c.window, 1);
+    }
+}

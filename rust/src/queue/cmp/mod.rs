@@ -1,0 +1,28 @@
+//! Cyclic Memory Protection (CMP) — the paper's contribution (§3).
+//!
+//! A lock-free, strict-FIFO, unbounded MPMC queue whose memory safety
+//! comes from two coordination-free mechanisms instead of hazard
+//! pointers or epochs:
+//!
+//! 1. **State protection** — nodes transition `AVAILABLE → CLAIMED`; an
+//!    `AVAILABLE` node is never reclaimed.
+//! 2. **Cycle-based sliding window** — every node carries an immutable
+//!    monotonically increasing *cycle*; dequeues publish the highest
+//!    claimed cycle (`deque_cycle`) and reclamation only frees `CLAIMED`
+//!    nodes with `cycle < deque_cycle − W`.
+//!
+//! Nodes live in a type-stable pool ([`pool`]) and are recycled, never
+//! freed to the OS while the queue lives, so stale pointers always
+//! reference a valid `Node` — the property §3.2.1 relies on.
+
+mod config;
+mod node;
+mod pool;
+mod queue;
+mod reclaim;
+mod stats;
+
+pub use config::{CmpConfig, ReclaimTrigger};
+pub use node::{NodeState, DUMMY_CYCLE};
+pub use queue::CmpQueue;
+pub use stats::CmpStatsSnapshot;

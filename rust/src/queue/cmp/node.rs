@@ -1,0 +1,191 @@
+//! CMP queue node layout (§3.2.1).
+//!
+//! Four protection-relevant fields (`state`, `cycle`, `next`, payload)
+//! plus pool bookkeeping. Nodes are **type-stable**: they live inside
+//! pool segments that are never freed while the queue exists, so any
+//! stale pointer still references a valid `Node` and its `cycle`/`state`
+//! fields can always be read safely (possibly observing a recycled
+//! incarnation — which the cycle check detects).
+
+use std::cell::UnsafeCell;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, Ordering};
+
+/// Node lifecycle states (§3.1). `Free` is pool-internal: the paper's
+/// two-state lifecycle (`AVAILABLE → CLAIMED`) plus the recycled state a
+/// type-stable pool needs so stale claim CASes on freelist nodes fail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u32)]
+pub enum NodeState {
+    /// In the pool freelist (or the permanent dummy).
+    Free = 0,
+    /// Linked and waiting to be dequeued; absolutely protected.
+    Available = 1,
+    /// Claimed by a dequeuer; reclaimable once outside the window.
+    Claimed = 2,
+}
+
+pub const STATE_FREE: u32 = NodeState::Free as u32;
+pub const STATE_AVAILABLE: u32 = NodeState::Available as u32;
+pub const STATE_CLAIMED: u32 = NodeState::Claimed as u32;
+
+/// Payload slot states (data claim, §3.5 Phase 3).
+pub const DATA_EMPTY: u32 = 0;
+pub const DATA_PRESENT: u32 = 1;
+
+/// Cycle value of the permanent dummy node.
+pub const DUMMY_CYCLE: u64 = 0;
+
+/// A queue node. `#[repr(C)]` keeps the hot atomic fields at the front
+/// of the allocation; payload storage sits last.
+#[repr(C)]
+pub struct Node<T> {
+    /// `AVAILABLE → CLAIMED` lifecycle (state-based protection).
+    pub state: AtomicU32,
+    /// Payload presence flag; the data-claim CAS (`PRESENT → EMPTY`)
+    /// guarantees single extraction (the paper's `CAS(data, data, NULL)`
+    /// without a per-payload allocation — DESIGN.md §6).
+    pub data_state: AtomicU32,
+    /// Immutable temporal identity for this incarnation; written before
+    /// the link CAS publishes the node, re-written on recycle.
+    pub cycle: AtomicU64,
+    /// FIFO list link; `null` on the tail node and on recycled nodes
+    /// (reclamation nulls it so stale traversals terminate, §3.6 Ph. 5).
+    pub next: AtomicPtr<Node<T>>,
+    /// Pool freelist link: index+1 of the next free node, 0 = none.
+    pub free_next: AtomicU32,
+    /// This node's own pool index (immutable after pool construction).
+    pub pool_idx: u32,
+    /// Inline payload storage, valid iff `data_state == DATA_PRESENT`.
+    pub data: UnsafeCell<MaybeUninit<T>>,
+}
+
+impl<T> Node<T> {
+    /// A blank node in `Free` state with the given pool index.
+    pub fn blank(pool_idx: u32) -> Self {
+        Node {
+            state: AtomicU32::new(STATE_FREE),
+            data_state: AtomicU32::new(DATA_EMPTY),
+            cycle: AtomicU64::new(DUMMY_CYCLE),
+            next: AtomicPtr::new(std::ptr::null_mut()),
+            free_next: AtomicU32::new(0),
+            pool_idx,
+            data: UnsafeCell::new(MaybeUninit::uninit()),
+        }
+    }
+
+    /// Write the payload and mark it present. Caller must have exclusive
+    /// ownership (fresh from the pool, pre-publication).
+    ///
+    /// # Safety
+    /// The slot must not currently hold a payload.
+    pub unsafe fn put_data(&self, value: T) {
+        debug_assert_eq!(self.data_state.load(Ordering::Relaxed), DATA_EMPTY);
+        (*self.data.get()).write(value);
+        self.data_state.store(DATA_PRESENT, Ordering::Relaxed);
+    }
+
+    /// Atomically claim the payload (single winner). Returns the value
+    /// if this caller won the `PRESENT → EMPTY` race.
+    ///
+    /// # Safety
+    /// Caller must hold the node's `CLAIMED` state or otherwise know the
+    /// incarnation it is claiming from wrote a payload (type stability
+    /// makes the CAS itself always memory-safe).
+    pub unsafe fn take_data(&self) -> Option<T> {
+        if self
+            .data_state
+            .compare_exchange(DATA_PRESENT, DATA_EMPTY, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            Some((*self.data.get()).assume_init_read())
+        } else {
+            None
+        }
+    }
+
+    /// Drop the payload in place if present (reclamation of nodes whose
+    /// claimer stalled past the window, and queue teardown). Returns
+    /// whether a payload was actually dropped.
+    ///
+    /// # Safety
+    /// Caller must have exclusive reclamation rights to the node.
+    pub unsafe fn drop_data_if_present(&self) -> bool {
+        if self
+            .data_state
+            .compare_exchange(DATA_PRESENT, DATA_EMPTY, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            (*self.data.get()).assume_init_drop();
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Current state (test/diagnostic helper).
+    #[cfg(test)]
+    pub fn load_state(&self, order: Ordering) -> u32 {
+        self.state.load(order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blank_node_is_free_and_empty() {
+        let n: Node<u64> = Node::blank(3);
+        assert_eq!(n.load_state(Ordering::Relaxed), STATE_FREE);
+        assert_eq!(n.data_state.load(Ordering::Relaxed), DATA_EMPTY);
+        assert_eq!(n.pool_idx, 3);
+        assert!(n.next.load(Ordering::Relaxed).is_null());
+    }
+
+    #[test]
+    fn put_take_roundtrip() {
+        let n: Node<String> = Node::blank(0);
+        unsafe {
+            n.put_data("hello".to_string());
+            assert_eq!(n.take_data(), Some("hello".to_string()));
+            assert_eq!(n.take_data(), None, "second take must lose the CAS");
+        }
+    }
+
+    #[test]
+    fn drop_if_present_drops_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        let n: Node<D> = Node::blank(0);
+        unsafe {
+            n.put_data(D);
+            assert!(n.drop_data_if_present());
+            assert!(!n.drop_data_if_present()); // no-op
+        }
+        assert_eq!(DROPS.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn take_after_drop_is_none() {
+        let n: Node<u32> = Node::blank(0);
+        unsafe {
+            n.put_data(9);
+            n.drop_data_if_present();
+            assert_eq!(n.take_data(), None);
+        }
+    }
+
+    #[test]
+    fn state_constants_match_enum() {
+        assert_eq!(NodeState::Free as u32, STATE_FREE);
+        assert_eq!(NodeState::Available as u32, STATE_AVAILABLE);
+        assert_eq!(NodeState::Claimed as u32, STATE_CLAIMED);
+    }
+}

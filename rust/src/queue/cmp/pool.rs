@@ -1,0 +1,356 @@
+//! Type-stable node pool (§3.2.1).
+//!
+//! "All linked-list nodes are allocated and recycled from a type-stable
+//! memory pool — nodes reside in a persistent pool, recycled exclusively
+//! as Node objects, and never freed to the OS." Segments are installed
+//! on demand into a fixed directory and released only when the whole
+//! pool (i.e. the owning queue) is dropped, so any pointer obtained from
+//! this pool stays dereferenceable for the queue's lifetime.
+//!
+//! The internal freelist is a Treiber stack over node *indices* with a
+//! 32-bit ABA tag packed beside the index in one `AtomicU64`. (This tag
+//! protects only the pool-internal freelist; the queue-level ABA defense
+//! is the paper's cycle window.)
+
+use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+
+use super::node::{Node, STATE_FREE};
+
+/// log2 of nodes per segment.
+pub const SEG_SHIFT: usize = 10;
+/// Nodes per segment.
+pub const SEG_SIZE: usize = 1 << SEG_SHIFT;
+/// Maximum installable segments (directory capacity). 16 Ki segments ×
+/// 1 Ki nodes = 16.7M nodes per queue — far beyond any experiment here.
+pub const MAX_SEGS: usize = 1 << 14;
+
+/// Pack a freelist head: low 32 bits = node index + 1 (0 = empty list),
+/// high 32 bits = ABA tag.
+#[inline]
+fn pack(tag: u32, idx_plus1: u32) -> u64 {
+    ((tag as u64) << 32) | idx_plus1 as u64
+}
+
+#[inline]
+fn unpack(word: u64) -> (u32, u32) {
+    ((word >> 32) as u32, word as u32)
+}
+
+/// Type-stable segmented node pool.
+pub struct NodePool<T> {
+    /// Segment directory: fixed capacity, entries installed by CAS.
+    segments: Box<[AtomicPtr<Node<T>>]>,
+    /// Next never-used node index.
+    next_fresh: AtomicU64,
+    /// Packed freelist head (tag | idx+1).
+    free_head: AtomicU64,
+    /// Approximate freelist length (relaxed counter, for accounting).
+    free_len: AtomicU64,
+    /// Maintain `free_len` (one extra RMW per alloc/free). Disabled by
+    /// perf configurations (`CmpConfig::without_stats`); accounting
+    /// methods then report 0 recycled.
+    count_free: bool,
+    /// Optional cap on total fresh allocations.
+    max_nodes: Option<usize>,
+}
+
+unsafe impl<T: Send> Send for NodePool<T> {}
+unsafe impl<T: Send> Sync for NodePool<T> {}
+
+impl<T> NodePool<T> {
+    pub fn new(max_nodes: Option<usize>) -> Self {
+        Self::with_accounting(max_nodes, true)
+    }
+
+    pub fn with_accounting(max_nodes: Option<usize>, count_free: bool) -> Self {
+        let mut dir = Vec::with_capacity(MAX_SEGS);
+        dir.resize_with(MAX_SEGS, || AtomicPtr::new(std::ptr::null_mut()));
+        Self {
+            segments: dir.into_boxed_slice(),
+            next_fresh: AtomicU64::new(0),
+            free_head: AtomicU64::new(pack(0, 0)),
+            free_len: AtomicU64::new(0),
+            count_free,
+            max_nodes,
+        }
+    }
+
+    /// Resolve a node index to its (stable) address. The segment must
+    /// already be installed — guaranteed for any index handed out by
+    /// [`Self::alloc`].
+    #[inline]
+    pub fn node_at(&self, idx: u32) -> *mut Node<T> {
+        let seg = (idx as usize) >> SEG_SHIFT;
+        let off = (idx as usize) & (SEG_SIZE - 1);
+        let base = self.segments[seg].load(Ordering::Acquire);
+        debug_assert!(!base.is_null(), "index {idx} resolved before segment install");
+        unsafe { base.add(off) }
+    }
+
+    /// Allocate a node: freelist first (recycle), fresh segment space
+    /// otherwise. `None` when the configured cap is exhausted — the
+    /// caller (enqueue) then triggers reclamation and retries (§3.3).
+    /// Returns `(ptr, reused)`.
+    pub fn alloc(&self) -> Option<(*mut Node<T>, bool)> {
+        // Freelist pop (tagged to defeat pool-internal ABA).
+        let mut head = self.free_head.load(Ordering::Acquire);
+        loop {
+            let (tag, idx_plus1) = unpack(head);
+            if idx_plus1 == 0 {
+                break;
+            }
+            let node = self.node_at(idx_plus1 - 1);
+            let next = unsafe { (*node).free_next.load(Ordering::Acquire) };
+            let new = pack(tag.wrapping_add(1), next);
+            match self.free_head.compare_exchange_weak(
+                head,
+                new,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    if self.count_free {
+                        self.free_len.fetch_sub(1, Ordering::Relaxed);
+                    }
+                    debug_assert_eq!(
+                        unsafe { (*node).state.load(Ordering::Relaxed) },
+                        STATE_FREE
+                    );
+                    return Some((node, true));
+                }
+                Err(cur) => head = cur,
+            }
+        }
+
+        // Fresh allocation.
+        loop {
+            let idx = self.next_fresh.load(Ordering::Relaxed);
+            if let Some(cap) = self.max_nodes {
+                if idx as usize >= cap {
+                    return None;
+                }
+            }
+            assert!(
+                (idx as usize) < MAX_SEGS * SEG_SIZE,
+                "node pool directory exhausted ({} nodes)",
+                MAX_SEGS * SEG_SIZE
+            );
+            if self
+                .next_fresh
+                .compare_exchange_weak(idx, idx + 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_err()
+            {
+                continue;
+            }
+            let idx = idx as u32;
+            self.ensure_segment((idx as usize) >> SEG_SHIFT);
+            return Some((self.node_at(idx), false));
+        }
+    }
+
+    /// Push a node back on the freelist. Caller must already have reset
+    /// the node (state = FREE, next = null, payload dropped) — the
+    /// reclaimer does this (Algorithm 4 Phase 5).
+    pub fn free(&self, node: *mut Node<T>) {
+        let idx = unsafe { (*node).pool_idx };
+        let mut head = self.free_head.load(Ordering::Acquire);
+        loop {
+            let (tag, idx_plus1) = unpack(head);
+            unsafe { (*node).free_next.store(idx_plus1, Ordering::Release) };
+            let new = pack(tag.wrapping_add(1), idx + 1);
+            match self.free_head.compare_exchange_weak(
+                head,
+                new,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    if self.count_free {
+                        self.free_len.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return;
+                }
+                Err(cur) => head = cur,
+            }
+        }
+    }
+
+    /// Install segment `seg` if absent (idempotent, lock-free).
+    fn ensure_segment(&self, seg: usize) {
+        if !self.segments[seg].load(Ordering::Acquire).is_null() {
+            return;
+        }
+        let base_idx = (seg << SEG_SHIFT) as u32;
+        let mut nodes: Vec<Node<T>> = Vec::with_capacity(SEG_SIZE);
+        for i in 0..SEG_SIZE {
+            nodes.push(Node::blank(base_idx + i as u32));
+        }
+        let boxed: Box<[Node<T>]> = nodes.into_boxed_slice();
+        let ptr = Box::into_raw(boxed) as *mut Node<T>;
+        if self.segments[seg]
+            .compare_exchange(
+                std::ptr::null_mut(),
+                ptr,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_err()
+        {
+            // Another thread installed first; drop our unpublished copy.
+            unsafe {
+                drop(Box::from_raw(std::slice::from_raw_parts_mut(ptr, SEG_SIZE)));
+            }
+        }
+    }
+
+    /// Total nodes ever drawn from fresh segment space — the pool's OS
+    /// memory footprint in nodes (never shrinks: type stability).
+    pub fn fresh_allocated(&self) -> u64 {
+        self.next_fresh.load(Ordering::Relaxed)
+    }
+
+    /// Approximate current freelist length.
+    pub fn freelist_len(&self) -> u64 {
+        self.free_len.load(Ordering::Relaxed)
+    }
+
+    /// Nodes currently outside the freelist (live in the queue or held
+    /// by the dummy): footprint − recycled.
+    pub fn in_use(&self) -> u64 {
+        self.fresh_allocated().saturating_sub(self.freelist_len())
+    }
+}
+
+impl<T> Drop for NodePool<T> {
+    fn drop(&mut self) {
+        // The owning queue has already dropped any live payloads. Here we
+        // only release segment memory (the one place nodes return to the
+        // OS — after the data structure itself is gone).
+        for slot in self.segments.iter() {
+            let ptr = slot.load(Ordering::Acquire);
+            if !ptr.is_null() {
+                unsafe {
+                    drop(Box::from_raw(std::slice::from_raw_parts_mut(ptr, SEG_SIZE)));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for (tag, idx) in [(0u32, 0u32), (1, 1), (u32::MAX, u32::MAX), (7, 1 << 20)] {
+            assert_eq!(unpack(pack(tag, idx)), (tag, idx));
+        }
+    }
+
+    #[test]
+    fn fresh_alloc_assigns_sequential_indices() {
+        let pool: NodePool<u32> = NodePool::new(None);
+        for expect in 0..2500u32 {
+            // crosses a segment boundary
+            let (n, reused) = pool.alloc().unwrap();
+            assert!(!reused);
+            assert_eq!(unsafe { (*n).pool_idx }, expect);
+        }
+        assert_eq!(pool.fresh_allocated(), 2500);
+    }
+
+    #[test]
+    fn free_then_alloc_recycles() {
+        let pool: NodePool<u32> = NodePool::new(None);
+        let (a, _) = pool.alloc().unwrap();
+        let idx_a = unsafe { (*a).pool_idx };
+        pool.free(a);
+        assert_eq!(pool.freelist_len(), 1);
+        let (b, reused) = pool.alloc().unwrap();
+        assert!(reused);
+        assert_eq!(unsafe { (*b).pool_idx }, idx_a, "LIFO recycle of same node");
+        assert_eq!(pool.freelist_len(), 0);
+    }
+
+    #[test]
+    fn cap_limits_fresh_allocations() {
+        let pool: NodePool<u32> = NodePool::new(Some(3));
+        let n1 = pool.alloc().unwrap().0;
+        let _n2 = pool.alloc().unwrap().0;
+        let _n3 = pool.alloc().unwrap().0;
+        assert!(pool.alloc().is_none(), "cap reached");
+        pool.free(n1);
+        assert!(pool.alloc().is_some(), "recycle still works past cap");
+    }
+
+    #[test]
+    fn node_at_is_stable_across_growth() {
+        let pool: NodePool<u64> = NodePool::new(None);
+        let (first, _) = pool.alloc().unwrap();
+        let addr = first as usize;
+        // Force several segment installs.
+        for _ in 0..(3 * SEG_SIZE) {
+            pool.alloc().unwrap();
+        }
+        assert_eq!(pool.node_at(0) as usize, addr, "type stability");
+    }
+
+    #[test]
+    fn in_use_accounting() {
+        let pool: NodePool<u8> = NodePool::new(None);
+        let (a, _) = pool.alloc().unwrap();
+        let (_b, _) = pool.alloc().unwrap();
+        assert_eq!(pool.in_use(), 2);
+        pool.free(a);
+        assert_eq!(pool.in_use(), 1);
+    }
+
+    #[test]
+    fn concurrent_alloc_free_is_consistent() {
+        let pool: Arc<NodePool<u64>> = Arc::new(NodePool::new(None));
+        let threads = 8;
+        let per = 2000;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let p = pool.clone();
+                std::thread::spawn(move || {
+                    let mut held = Vec::new();
+                    for i in 0..per {
+                        let (n, _) = p.alloc().unwrap();
+                        held.push(n as usize);
+                        if i % 3 == 0 {
+                            let ptr = held.pop().unwrap() as *mut Node<u64>;
+                            p.free(ptr);
+                        }
+                    }
+                    // Distinctness of concurrently held nodes.
+                    let mut sorted = held.clone();
+                    sorted.sort_unstable();
+                    sorted.dedup();
+                    assert_eq!(sorted.len(), held.len(), "no double allocation");
+                    for ptr in held {
+                        p.free(ptr as *mut Node<u64>);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(pool.in_use(), 0, "everything returned");
+    }
+
+    #[test]
+    fn freelist_survives_tag_wraparound_pressure() {
+        // Hammer a single slot to move the tag; correctness = no dup.
+        let pool: NodePool<u32> = NodePool::new(Some(1));
+        for _ in 0..10_000 {
+            let (n, _) = pool.alloc().unwrap();
+            assert!(pool.alloc().is_none());
+            pool.free(n);
+        }
+        assert_eq!(pool.in_use(), 0);
+    }
+}

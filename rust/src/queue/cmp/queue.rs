@@ -1,0 +1,695 @@
+//! The CMP queue: lock-free enqueue (Algorithm 1) and dequeue
+//! (Algorithm 3). Reclamation (Algorithm 4) lives in `reclaim.rs`.
+//!
+//! Memory-ordering convention follows the paper's footnote 1: acquire
+//! loads where prior writes must be visible, release stores for
+//! publication, acq-rel CAS, relaxed stats.
+
+use std::cell::RefCell;
+use std::ptr;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
+
+use crossbeam_utils::CachePadded;
+
+use super::config::{CmpConfig, ReclaimTrigger};
+use super::node::{Node, STATE_AVAILABLE, STATE_CLAIMED, STATE_FREE};
+use super::pool::NodePool;
+use super::stats::{CmpStats, CmpStatsSnapshot};
+use crate::queue::ConcurrentQueue;
+use crate::util::{Backoff, XorShift64};
+
+thread_local! {
+    /// Per-thread PRNG for the Bernoulli reclamation trigger.
+    static TRIGGER_RNG: RefCell<XorShift64> = RefCell::new(XorShift64::new(
+        // Spread by thread identity so producers don't fire in lockstep.
+        {
+            use std::hash::{Hash, Hasher};
+            let mut h = std::collections::hash_map::DefaultHasher::new();
+            std::thread::current().id().hash(&mut h);
+            h.finish()
+        },
+    ));
+}
+
+/// Lock-free, strict-FIFO, unbounded MPMC queue with Cyclic Memory
+/// Protection (the paper's contribution, §3).
+///
+/// ```
+/// use cmpq::{CmpQueue, ConcurrentQueue};
+/// let q: CmpQueue<u64> = CmpQueue::new();
+/// q.enqueue(1);
+/// q.enqueue(2);
+/// assert_eq!(q.try_dequeue(), Some(1));
+/// assert_eq!(q.try_dequeue(), Some(2));
+/// assert_eq!(q.try_dequeue(), None);
+/// ```
+pub struct CmpQueue<T> {
+    /// Always points at the permanent dummy node (§3.2.1); reclamation
+    /// advances `head.next`, never `head` itself.
+    pub(super) head: CachePadded<AtomicPtr<Node<T>>>,
+    /// Enqueue-side hint; within one link of the physical tail (§3.4).
+    pub(super) tail: CachePadded<AtomicPtr<Node<T>>>,
+    /// Dequeue optimization: first likely-AVAILABLE node (§3.5 Phase 1).
+    scan_cursor: CachePadded<AtomicPtr<Node<T>>>,
+    /// Global enqueue cycle counter (§3.2.2).
+    cycle: CachePadded<AtomicU64>,
+    /// Highest cycle claimed by any dequeue — the protection frontier.
+    deque_cycle: CachePadded<AtomicU64>,
+    /// Single-reclaimer try-lock ("reclamation is non-blocking; if
+    /// another thread is already reclaiming, enqueue proceeds", §3.3).
+    pub(super) reclaim_busy: CachePadded<AtomicBool>,
+    pub(super) pool: NodePool<T>,
+    pub(super) config: CmpConfig,
+    pub(super) stats: CmpStats,
+}
+
+unsafe impl<T: Send> Send for CmpQueue<T> {}
+unsafe impl<T: Send> Sync for CmpQueue<T> {}
+
+impl<T: Send> Default for CmpQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T: Send> CmpQueue<T> {
+    /// Queue with the default configuration (`W = 4096`, `N = 1024`).
+    pub fn new() -> Self {
+        Self::with_config(CmpConfig::default())
+    }
+
+    /// Queue with an explicit configuration (window sizing per §3.1).
+    pub fn with_config(config: CmpConfig) -> Self {
+        // `track_stats` also gates the pool's freelist accounting RMW
+        // (§Perf experiment 2: one fewer atomic per alloc/free pair).
+        let pool = NodePool::with_accounting(config.max_nodes, config.track_stats);
+        let (dummy, _) = pool
+            .alloc()
+            .expect("pool must fit at least the dummy node");
+        // The dummy stays in `Free` state forever: claim CASes
+        // (AVAILABLE → CLAIMED) can never succeed on it.
+        unsafe {
+            (*dummy).next.store(ptr::null_mut(), Ordering::Relaxed);
+            (*dummy).cycle.store(super::node::DUMMY_CYCLE, Ordering::Relaxed);
+        }
+        Self {
+            head: CachePadded::new(AtomicPtr::new(dummy)),
+            tail: CachePadded::new(AtomicPtr::new(dummy)),
+            scan_cursor: CachePadded::new(AtomicPtr::new(dummy)),
+            cycle: CachePadded::new(AtomicU64::new(0)),
+            deque_cycle: CachePadded::new(AtomicU64::new(0)),
+            reclaim_busy: CachePadded::new(AtomicBool::new(false)),
+            pool,
+            config,
+            stats: CmpStats::default(),
+        }
+    }
+
+    /// Active configuration.
+    pub fn config(&self) -> &CmpConfig {
+        &self.config
+    }
+
+    /// Statistics snapshot (all zeros when `track_stats` is off).
+    pub fn stats(&self) -> CmpStatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Total nodes drawn from the OS (pool footprint; never shrinks —
+    /// type stability, §3.2.1).
+    pub fn footprint_nodes(&self) -> u64 {
+        self.pool.fresh_allocated()
+    }
+
+    /// Nodes currently outside the pool freelist (dummy + linked list).
+    pub fn nodes_in_use(&self) -> u64 {
+        self.pool.in_use()
+    }
+
+    /// Current global enqueue cycle.
+    pub fn enqueue_cycle(&self) -> u64 {
+        self.cycle.load(Ordering::Acquire)
+    }
+
+    /// Current dequeue frontier (`deque_cycle`, §3.2.2).
+    pub fn dequeue_cycle(&self) -> u64 {
+        self.deque_cycle.load(Ordering::Acquire)
+    }
+
+    // ------------------------------------------------------------------
+    // Algorithm 1 — Lock-Free Enqueue
+    // ------------------------------------------------------------------
+
+    /// Enqueue `item`. Fails only when a `max_nodes` cap is configured
+    /// and reclamation cannot relieve the pressure (§3.3 Phase 1).
+    pub fn push(&self, item: T) -> Result<(), T> {
+        // Phase 1: node allocation and cycle assignment.
+        let node = match self.alloc_node() {
+            Some(n) => n,
+            None => return Err(item),
+        };
+        unsafe {
+            (*node).next.store(ptr::null_mut(), Ordering::Relaxed);
+            (*node).put_data(item);
+            let cycle = self.cycle.fetch_add(1, Ordering::AcqRel) + 1;
+            (*node).cycle.store(cycle, Ordering::Relaxed);
+            // Publish AVAILABLE before the link CAS releases the node.
+            (*node).state.store(STATE_AVAILABLE, Ordering::Release);
+
+            // Phase 2: lock-free insertion (M&S without helping, §3.4).
+            let mut retries = 0u32;
+            let mut backoff = Backoff::new();
+            loop {
+                let tail = self.tail.load(Ordering::Acquire);
+                let next = (*tail).next.load(Ordering::Acquire);
+                if !next.is_null() {
+                    // Tail is stale.
+                    CmpStats::bump(&self.stats.enq_retries, self.config.track_stats);
+                    if self.config.helping {
+                        // §3.4 ablation: original M&S helping — advance
+                        // tail using the (possibly stale) next pointer.
+                        let _ = self.tail.compare_exchange(
+                            tail,
+                            next,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        );
+                    } else {
+                        // Paper's design: retry with fresh state; pause
+                        // when necessary (Algorithm 1 lines 15–21).
+                        retries += 1;
+                        if retries > 3 {
+                            backoff.spin();
+                        }
+                    }
+                    continue;
+                }
+                // Attempt to link the new node.
+                if (*tail)
+                    .next
+                    .compare_exchange(
+                        ptr::null_mut(),
+                        node,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    // Optional tail advancement (failure is benign: the
+                    // next enqueuer observes next ≠ null and waits for
+                    // us — see DESIGN.md §6 tail-lag argument).
+                    let _ = self.tail.compare_exchange(
+                        tail,
+                        node,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    );
+                    break;
+                }
+                CmpStats::bump(&self.stats.enq_retries, self.config.track_stats);
+                retries += 1;
+                if retries > 3 {
+                    backoff.spin();
+                }
+            }
+
+            // Phase 3: conditional reclamation.
+            if self.should_trigger_reclaim(cycle) {
+                self.reclaim();
+            }
+        }
+        Ok(())
+    }
+
+    /// Allocate a node, applying the §3.3 pressure-relief loop: on pool
+    /// exhaustion trigger reclamation and retry a bounded number of
+    /// times before reporting failure.
+    fn alloc_node(&self) -> Option<*mut Node<T>> {
+        for attempt in 0..8 {
+            if let Some((node, _reused)) = self.pool.alloc() {
+                debug_assert_eq!(
+                    unsafe { (*node).state.load(Ordering::Relaxed) },
+                    STATE_FREE
+                );
+                return Some(node);
+            }
+            // Memory pressure: reclaim immediately and retry.
+            let freed = self.reclaim();
+            if freed == 0 && attempt > 2 {
+                // Nothing reclaimable; let other threads progress.
+                std::thread::yield_now();
+            }
+        }
+        None
+    }
+
+    #[inline]
+    fn should_trigger_reclaim(&self, cycle: u64) -> bool {
+        match self.config.trigger {
+            ReclaimTrigger::Modulo => cycle % self.config.reclaim_period == 0,
+            ReclaimTrigger::Bernoulli => {
+                let p = 1.0 / self.config.reclaim_period as f64;
+                TRIGGER_RNG.with(|r| r.borrow_mut().chance(p))
+            }
+            ReclaimTrigger::Manual => false,
+        }
+    }
+
+    /// Fault injection (FAULT experiment, §3.6): perform dequeue
+    /// Phases 1–2 — claim the earliest AVAILABLE node — then *abandon*
+    /// it, simulating a consumer that crashed immediately after its
+    /// claim CAS. The abandoned payload is recovered (dropped) by
+    /// reclamation once the node leaves the protection window; no other
+    /// thread is blocked. Returns whether a node was claimed.
+    pub fn inject_stalled_claim(&self) -> bool {
+        unsafe {
+            let mut cur = self.head.load(Ordering::Acquire);
+            while !cur.is_null() {
+                if (*cur)
+                    .state
+                    .compare_exchange(
+                        STATE_AVAILABLE,
+                        STATE_CLAIMED,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    return true;
+                }
+                cur = (*cur).next.load(Ordering::Acquire);
+            }
+        }
+        false
+    }
+
+    // ------------------------------------------------------------------
+    // Algorithm 3 — Lock-Free Dequeue
+    // ------------------------------------------------------------------
+
+    /// Dequeue the earliest available item, or `None` when the queue is
+    /// empty at the linearization point.
+    pub fn pop(&self) -> Option<T> {
+        unsafe {
+            let mut current = self.head.load(Ordering::Acquire); // dummy, non-null
+            let mut last_deque_cycle = 0u64;
+            let mut last_cursor: *mut Node<T> = ptr::null_mut();
+            let mut cursor_cycle = 0u64;
+            let mut first_probe = true;
+
+            // Phases 1–2: cursor-guided scan and atomic claim.
+            loop {
+                if current.is_null() {
+                    return None; // reached the end: empty at this point
+                }
+                if self.config.use_scan_cursor {
+                    let deque_cycle = self.deque_cycle.load(Ordering::Acquire);
+                    if deque_cycle != last_deque_cycle {
+                        // Other threads progressed: restart from the
+                        // advertised cursor (§3.5 Phase 1).
+                        last_deque_cycle = deque_cycle;
+                        current = self.scan_cursor.load(Ordering::Acquire);
+                        last_cursor = current;
+                        cursor_cycle = (*current).cycle.load(Ordering::Acquire);
+                    }
+                }
+                // Phase 2: atomic node claiming (single winner).
+                if (*current)
+                    .state
+                    .compare_exchange(
+                        STATE_AVAILABLE,
+                        STATE_CLAIMED,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    break;
+                }
+                if !first_probe {
+                    CmpStats::bump(&self.stats.deq_extra_scans, self.config.track_stats);
+                }
+                first_probe = false;
+                current = (*current).next.load(Ordering::Acquire);
+            }
+
+            // Phase 3: claim the payload (detect reincarnation / stall
+            // -past-window reclamation, §3.5 Phase 3).
+            if (*current).state.load(Ordering::Acquire) == STATE_AVAILABLE {
+                CmpStats::bump(&self.stats.lost_claims, self.config.track_stats);
+                return None;
+            }
+            let data = match (*current).take_data() {
+                Some(d) => d,
+                None => {
+                    CmpStats::bump(&self.stats.lost_claims, self.config.track_stats);
+                    return None;
+                }
+            };
+
+            // Phase 4: opportunistic scan-cursor advance. The dual
+            // (pointer, cycle) condition is the mathematical ABA guard:
+            // a recycled cursor node carries a different cycle.
+            let mut advance_boundary = true;
+            if self.config.use_scan_cursor && !last_cursor.is_null() {
+                let sc = self.scan_cursor.load(Ordering::Acquire);
+                if sc == last_cursor
+                    && (*sc).cycle.load(Ordering::Acquire) == cursor_cycle
+                {
+                    let next = (*current).next.load(Ordering::Acquire);
+                    advance_boundary = false;
+                    if next.is_null() {
+                        // We claimed the last linked node. Algorithm 3 as
+                        // printed leaves the cursor untouched here, but
+                        // that lets it stagnate arbitrarily far behind
+                        // `deque_cycle` under alternating push/pop —
+                        // breaking the §3.5/§3.6 invariant
+                        // `scan_cursor.cycle ≥ deque_cycle` the reclaimer
+                        // depends on (a stagnant cursor node can then be
+                        // recycled and a claim on its new incarnation
+                        // violates FIFO). Advance to the claimed node
+                        // itself, which restores the invariant
+                        // (DESIGN.md §6).
+                        if current != last_cursor {
+                            let _ = self.scan_cursor.compare_exchange(
+                                last_cursor,
+                                current,
+                                Ordering::AcqRel,
+                                Ordering::Acquire,
+                            );
+                        }
+                        advance_boundary = true;
+                    } else if self
+                        .scan_cursor
+                        .compare_exchange(
+                            last_cursor,
+                            next,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        )
+                        .is_ok()
+                    {
+                        CmpStats::bump(&self.stats.cursor_advances, self.config.track_stats);
+                        advance_boundary = true;
+                    } else {
+                        CmpStats::bump(&self.stats.cursor_misses, self.config.track_stats);
+                    }
+                }
+            }
+
+            // Phase 5: protection boundary update — publish the highest
+            // claimed cycle (monotonic max via CAS loop).
+            if advance_boundary {
+                let my_cycle = (*current).cycle.load(Ordering::Acquire);
+                let mut cur = self.deque_cycle.load(Ordering::Acquire);
+                while cur < my_cycle {
+                    match self.deque_cycle.compare_exchange_weak(
+                        cur,
+                        my_cycle,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    ) {
+                        Ok(_) => break,
+                        Err(now) => cur = now,
+                    }
+                }
+            }
+
+            Some(data)
+        }
+    }
+}
+
+impl<T: Send> ConcurrentQueue<T> for CmpQueue<T> {
+    fn try_enqueue(&self, item: T) -> Result<(), T> {
+        self.push(item)
+    }
+
+    fn try_dequeue(&self) -> Option<T> {
+        self.pop()
+    }
+
+    fn name(&self) -> &'static str {
+        "cmp"
+    }
+
+    fn is_strict_fifo(&self) -> bool {
+        true
+    }
+
+    fn is_lock_free(&self) -> bool {
+        true
+    }
+}
+
+impl<T> Drop for CmpQueue<T> {
+    fn drop(&mut self) {
+        // Drop any live payloads; segment memory is released by the
+        // pool's Drop afterwards.
+        unsafe {
+            let mut cur = self.head.load(Ordering::Acquire);
+            while !cur.is_null() {
+                (*cur).drop_data_if_present();
+                cur = (*cur).next.load(Ordering::Acquire);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::config::ReclaimTrigger;
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn spsc_fifo_order() {
+        let q: CmpQueue<u32> = CmpQueue::new();
+        for i in 0..1000 {
+            q.push(i).unwrap();
+        }
+        for i in 0..1000 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn empty_queue_pops_none() {
+        let q: CmpQueue<u8> = CmpQueue::new();
+        assert_eq!(q.pop(), None);
+        q.push(1).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let q: CmpQueue<u64> = CmpQueue::new();
+        let mut expect = 0u64;
+        let mut next = 0u64;
+        for round in 0..500 {
+            for _ in 0..(round % 5 + 1) {
+                q.push(next).unwrap();
+                next += 1;
+            }
+            for _ in 0..(round % 3 + 1) {
+                if let Some(v) = q.pop() {
+                    assert_eq!(v, expect);
+                    expect += 1;
+                }
+            }
+        }
+        while let Some(v) = q.pop() {
+            assert_eq!(v, expect);
+            expect += 1;
+        }
+        assert_eq!(expect, next, "all items dequeued in order");
+    }
+
+    #[test]
+    fn cycles_are_monotonic() {
+        let q: CmpQueue<u32> = CmpQueue::new();
+        assert_eq!(q.enqueue_cycle(), 0);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.enqueue_cycle(), 2);
+        q.pop();
+        assert!(q.dequeue_cycle() >= 1);
+        q.pop();
+        assert_eq!(q.dequeue_cycle(), 2);
+    }
+
+    #[test]
+    fn drop_releases_payloads() {
+        use std::sync::atomic::AtomicUsize;
+        static DROPS: AtomicUsize = AtomicUsize::new(0);
+        #[derive(Debug)]
+        struct D;
+        impl Drop for D {
+            fn drop(&mut self) {
+                DROPS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        DROPS.store(0, Ordering::Relaxed);
+        {
+            let q: CmpQueue<D> = CmpQueue::new();
+            for _ in 0..10 {
+                q.push(D).unwrap();
+            }
+            drop(q.pop()); // one dequeued and dropped here
+        }
+        assert_eq!(DROPS.load(Ordering::Relaxed), 10, "9 in queue + 1 popped");
+    }
+
+    #[test]
+    fn bounded_pool_relieves_pressure_via_reclaim() {
+        // Cap small; with Manual trigger + explicit reclaim, push/pop
+        // cycles must keep working because nodes recycle.
+        let cfg = CmpConfig::default()
+            .with_max_nodes(4096)
+            .with_window(16)
+            .with_min_batch(1)
+            .with_trigger(ReclaimTrigger::Modulo)
+            .with_reclaim_period(64);
+        let q: CmpQueue<u64> = CmpQueue::with_config(cfg);
+        for i in 0..20_000u64 {
+            q.push(i).unwrap();
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert!(q.footprint_nodes() <= 4096, "stayed within cap");
+    }
+
+    #[test]
+    fn mpmc_no_loss_no_dup() {
+        let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+        let producers = 4;
+        let consumers = 4;
+        let per = 5_000u64;
+        let total = producers as u64 * per;
+        let done = Arc::new(AtomicBool::new(false));
+
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    q.push(p as u64 * per + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers_h = Vec::new();
+        for _ in 0..consumers {
+            let q = q.clone();
+            let done = done.clone();
+            consumers_h.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    match q.pop() {
+                        Some(v) => got.push(v),
+                        None => {
+                            if done.load(Ordering::Acquire) && q.pop().is_none() {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Release);
+        let mut all: Vec<u64> = Vec::new();
+        for h in consumers_h {
+            all.extend(h.join().unwrap());
+        }
+        assert_eq!(all.len() as u64, total, "no loss");
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, total, "no duplicates");
+    }
+
+    #[test]
+    fn per_producer_order_is_preserved() {
+        let q: Arc<CmpQueue<(u8, u64)>> = Arc::new(CmpQueue::new());
+        let per = 4_000u64;
+        let producers: Vec<_> = (0..3u8)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        q.push((p, i)).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+        let mut last = [-1i64; 3];
+        while let Some((p, i)) = q.pop() {
+            assert!(last[p as usize] < i as i64, "producer {p} out of order");
+            last[p as usize] = i as i64;
+        }
+        for p in 0..3 {
+            assert_eq!(last[p], per as i64 - 1);
+        }
+    }
+
+    #[test]
+    fn scan_cursor_disabled_still_correct() {
+        let q: CmpQueue<u32> =
+            CmpQueue::with_config(CmpConfig::default().without_scan_cursor());
+        for i in 0..500 {
+            q.push(i).unwrap();
+        }
+        for i in 0..500 {
+            assert_eq!(q.pop(), Some(i));
+        }
+        assert_eq!(q.stats().cursor_advances, 0, "cursor disabled");
+    }
+
+    #[test]
+    fn helping_variant_still_correct() {
+        let q: CmpQueue<u32> = CmpQueue::with_config(CmpConfig::default().with_helping());
+        for i in 0..500 {
+            q.push(i).unwrap();
+        }
+        for i in 0..500 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn bernoulli_trigger_reclaims_eventually() {
+        let cfg = CmpConfig::default()
+            .with_window(8)
+            .with_min_batch(1)
+            .with_trigger(ReclaimTrigger::Bernoulli)
+            .with_reclaim_period(16);
+        let q: CmpQueue<u64> = CmpQueue::with_config(cfg);
+        for i in 0..20_000u64 {
+            q.push(i).unwrap();
+            q.pop();
+        }
+        assert!(
+            q.stats().reclaim_passes > 0,
+            "Bernoulli trigger should fire over 20k enqueues"
+        );
+    }
+
+    #[test]
+    fn stats_disabled_stays_zero() {
+        let q: CmpQueue<u32> =
+            CmpQueue::with_config(CmpConfig::default().without_stats());
+        for i in 0..100 {
+            q.push(i).unwrap();
+            q.pop();
+        }
+        assert_eq!(q.stats(), CmpStatsSnapshot::default());
+    }
+}

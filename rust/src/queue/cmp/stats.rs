@@ -1,0 +1,141 @@
+//! Operation statistics for the CMP queue — used by the tests (to see
+//! lost claims, reclamation counts, cursor behavior) and the ablation
+//! benches. All counters are relaxed; recording is gated by
+//! `CmpConfig::track_stats` so the perf configuration can shed them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crossbeam_utils::CachePadded;
+
+/// Internal counters (cache-padded to keep stats traffic off the queue's
+/// hot cache lines).
+#[derive(Default)]
+pub(crate) struct CmpStats {
+    /// Enqueue link-CAS retries (stale tail observations).
+    pub enq_retries: CachePadded<AtomicU64>,
+    /// Dequeue scan steps beyond the first probed node.
+    pub deq_extra_scans: CachePadded<AtomicU64>,
+    /// Dequeue claim CASes lost to another consumer.
+    pub deq_claim_fails: CachePadded<AtomicU64>,
+    /// Successful scan-cursor advances.
+    pub cursor_advances: CachePadded<AtomicU64>,
+    /// Cursor advances skipped/lost (another thread already moved it).
+    pub cursor_misses: CachePadded<AtomicU64>,
+    /// Phase-3 aborts: claim succeeded but the payload was gone
+    /// (stall-past-window semantics) or state was reincarnated.
+    pub lost_claims: CachePadded<AtomicU64>,
+    /// Completed reclamation passes.
+    pub reclaim_passes: CachePadded<AtomicU64>,
+    /// Reclamation entries skipped because another pass was running.
+    pub reclaim_contended: CachePadded<AtomicU64>,
+    /// Nodes recycled to the pool.
+    pub nodes_reclaimed: CachePadded<AtomicU64>,
+    /// Payloads dropped by the reclaimer (claimer stalled past window).
+    pub payloads_reclaimed: CachePadded<AtomicU64>,
+}
+
+impl CmpStats {
+    #[inline]
+    pub fn bump(counter: &CachePadded<AtomicU64>, on: bool) {
+        if on {
+            counter.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn add(counter: &CachePadded<AtomicU64>, n: u64, on: bool) {
+        if on && n > 0 {
+            counter.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> CmpStatsSnapshot {
+        CmpStatsSnapshot {
+            enq_retries: self.enq_retries.load(Ordering::Relaxed),
+            deq_extra_scans: self.deq_extra_scans.load(Ordering::Relaxed),
+            deq_claim_fails: self.deq_claim_fails.load(Ordering::Relaxed),
+            cursor_advances: self.cursor_advances.load(Ordering::Relaxed),
+            cursor_misses: self.cursor_misses.load(Ordering::Relaxed),
+            lost_claims: self.lost_claims.load(Ordering::Relaxed),
+            reclaim_passes: self.reclaim_passes.load(Ordering::Relaxed),
+            reclaim_contended: self.reclaim_contended.load(Ordering::Relaxed),
+            nodes_reclaimed: self.nodes_reclaimed.load(Ordering::Relaxed),
+            payloads_reclaimed: self.payloads_reclaimed.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Public point-in-time view of the queue's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CmpStatsSnapshot {
+    pub enq_retries: u64,
+    pub deq_extra_scans: u64,
+    pub deq_claim_fails: u64,
+    pub cursor_advances: u64,
+    pub cursor_misses: u64,
+    pub lost_claims: u64,
+    pub reclaim_passes: u64,
+    pub reclaim_contended: u64,
+    pub nodes_reclaimed: u64,
+    pub payloads_reclaimed: u64,
+}
+
+impl CmpStatsSnapshot {
+    /// Render as `key=value` pairs (bench reports).
+    pub fn summary(&self) -> String {
+        format!(
+            "enq_retries={} extra_scans={} claim_fails={} cursor_adv={} cursor_miss={} \
+             lost_claims={} reclaims={} reclaim_contended={} nodes_reclaimed={} payloads_reclaimed={}",
+            self.enq_retries,
+            self.deq_extra_scans,
+            self.deq_claim_fails,
+            self.cursor_advances,
+            self.cursor_misses,
+            self.lost_claims,
+            self.reclaim_passes,
+            self.reclaim_contended,
+            self.nodes_reclaimed,
+            self.payloads_reclaimed,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bump_respects_gate() {
+        let s = CmpStats::default();
+        CmpStats::bump(&s.enq_retries, false);
+        assert_eq!(s.snapshot().enq_retries, 0);
+        CmpStats::bump(&s.enq_retries, true);
+        assert_eq!(s.snapshot().enq_retries, 1);
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let s = CmpStats::default();
+        CmpStats::add(&s.nodes_reclaimed, 5, true);
+        CmpStats::add(&s.nodes_reclaimed, 0, true);
+        CmpStats::add(&s.nodes_reclaimed, 3, false);
+        assert_eq!(s.snapshot().nodes_reclaimed, 5);
+    }
+
+    #[test]
+    fn summary_contains_all_fields() {
+        let s = CmpStats::default().snapshot();
+        let txt = s.summary();
+        for key in [
+            "enq_retries",
+            "extra_scans",
+            "claim_fails",
+            "cursor_adv",
+            "lost_claims",
+            "reclaims",
+            "nodes_reclaimed",
+        ] {
+            assert!(txt.contains(key), "missing {key} in {txt}");
+        }
+    }
+}

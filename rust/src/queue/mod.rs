@@ -1,0 +1,196 @@
+//! Concurrent MPMC queue implementations: the paper's CMP queue plus
+//! every comparator its evaluation uses or its related-work section
+//! discusses, behind one [`ConcurrentQueue`] trait so the benchmark
+//! harness can sweep them uniformly.
+
+pub mod baselines;
+pub mod cmp;
+pub mod reclamation;
+
+use std::sync::Arc;
+
+use crate::util::Backoff;
+
+/// Common interface over all queue implementations.
+///
+/// All methods take `&self`; implementations are internally synchronized
+/// (lock-free except the explicitly blocking baselines).
+pub trait ConcurrentQueue<T: Send>: Send + Sync {
+    /// Attempt to enqueue. Bounded queues return `Err(item)` when full;
+    /// unbounded queues only fail on allocation exhaustion (never in the
+    /// default configurations).
+    fn try_enqueue(&self, item: T) -> Result<(), T>;
+
+    /// Attempt to dequeue. `None` means empty *at the linearization
+    /// point* (or, for CMP past its protection window, a lost claim —
+    /// see DESIGN.md §6).
+    fn try_dequeue(&self) -> Option<T>;
+
+    /// Enqueue, spinning with backoff until accepted.
+    fn enqueue(&self, mut item: T) {
+        let mut backoff = Backoff::new();
+        loop {
+            match self.try_enqueue(item) {
+                Ok(()) => return,
+                Err(it) => {
+                    item = it;
+                    backoff.spin();
+                }
+            }
+        }
+    }
+
+    /// Short static identifier used by the benchmark reports.
+    fn name(&self) -> &'static str;
+
+    /// Whether dequeue order is the global enqueue (link) order.
+    fn is_strict_fifo(&self) -> bool;
+
+    /// Whether all operations are lock-free.
+    fn is_lock_free(&self) -> bool;
+
+    /// Whether capacity is fixed at construction.
+    fn is_bounded(&self) -> bool {
+        false
+    }
+}
+
+/// Identifier for each queue implementation, used by the CLI and the
+/// benchmark harness to instantiate comparators uniformly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Impl {
+    /// The paper's contribution (Cyclic Memory Protection).
+    Cmp,
+    /// Michael & Scott + hazard pointers — the paper's "Boost" comparator.
+    MsHp,
+    /// Michael & Scott + epoch-based reclamation (§2.2 discussion).
+    MsEbr,
+    /// M&S *with* the original helping mechanism (§3.4 ablation).
+    MsHelping,
+    /// Per-producer segmented relaxed-FIFO — "moodycamel" stand-in.
+    Segmented,
+    /// Vyukov bounded MPMC ring (fixed capacity).
+    Vyukov,
+    /// Mutex-protected VecDeque — TBB/Folly-style blocking comparator.
+    Mutex,
+}
+
+impl Impl {
+    /// All implementations, in the order the paper's tables list them
+    /// (CMP, Moodycamel, Boost) followed by the extra comparators.
+    pub const ALL: [Impl; 7] = [
+        Impl::Cmp,
+        Impl::Segmented,
+        Impl::MsHp,
+        Impl::MsEbr,
+        Impl::MsHelping,
+        Impl::Vyukov,
+        Impl::Mutex,
+    ];
+
+    /// The paper's evaluation set (Figure 1, Tables 1–3, Figure 2).
+    pub const PAPER_SET: [Impl; 3] = [Impl::Cmp, Impl::Segmented, Impl::MsHp];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Impl::Cmp => "cmp",
+            Impl::MsHp => "ms-hp",
+            Impl::MsEbr => "ms-ebr",
+            Impl::MsHelping => "ms-helping",
+            Impl::Segmented => "segmented",
+            Impl::Vyukov => "vyukov",
+            Impl::Mutex => "mutex",
+        }
+    }
+
+    /// Display label matching the paper's tables where applicable.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Impl::Cmp => "CMP",
+            Impl::MsHp => "Boost-like (M&S+HP)",
+            Impl::MsEbr => "M&S+EBR",
+            Impl::MsHelping => "M&S (helping)",
+            Impl::Segmented => "Moodycamel-like (segmented)",
+            Impl::Vyukov => "Vyukov (bounded)",
+            Impl::Mutex => "Mutex (TBB/Folly-like)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Impl> {
+        Impl::ALL.iter().copied().find(|i| i.name() == s)
+    }
+
+    /// Instantiate. `capacity_hint` sizes the bounded Vyukov ring (other
+    /// implementations are unbounded and ignore it).
+    ///
+    /// Perf knob: setting `CMPQ_NO_STATS=1` builds the CMP queue with
+    /// statistics counters disabled (used by the §Perf experiments to
+    /// quantify the counters' cost; tests leave it unset).
+    pub fn make<T: Send + 'static>(&self, capacity_hint: usize) -> Arc<dyn ConcurrentQueue<T>> {
+        match self {
+            Impl::Cmp => {
+                let mut cfg = cmp::CmpConfig::default();
+                if std::env::var_os("CMPQ_NO_STATS").is_some() {
+                    cfg = cfg.without_stats();
+                }
+                Arc::new(cmp::CmpQueue::with_config(cfg))
+            }
+            Impl::MsHp => Arc::new(baselines::ms_hp::MsHpQueue::new()),
+            Impl::MsEbr => Arc::new(baselines::ms_ebr::MsEbrQueue::new()),
+            Impl::MsHelping => Arc::new(baselines::ms_helping::MsHelpingQueue::new()),
+            Impl::Segmented => Arc::new(baselines::segmented::SegmentedQueue::new()),
+            Impl::Vyukov => Arc::new(baselines::vyukov::VyukovQueue::new(capacity_hint.max(2))),
+            Impl::Mutex => Arc::new(baselines::mutex_queue::MutexQueue::new()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn impl_names_roundtrip() {
+        for i in Impl::ALL {
+            assert_eq!(Impl::parse(i.name()), Some(i));
+        }
+        assert_eq!(Impl::parse("nope"), None);
+    }
+
+    #[test]
+    fn paper_set_is_subset_of_all() {
+        for i in Impl::PAPER_SET {
+            assert!(Impl::ALL.contains(&i));
+        }
+    }
+
+    #[test]
+    fn make_and_smoke_every_impl() {
+        for i in Impl::ALL {
+            let q: Arc<dyn ConcurrentQueue<u64>> = i.make(1024);
+            assert_eq!(q.name(), i.name());
+            q.enqueue(7);
+            q.enqueue(8);
+            assert_eq!(q.try_dequeue(), Some(7));
+            assert_eq!(q.try_dequeue(), Some(8));
+            assert_eq!(q.try_dequeue(), None);
+        }
+    }
+
+    #[test]
+    fn trait_metadata_is_consistent() {
+        let cmp: Arc<dyn ConcurrentQueue<u32>> = Impl::Cmp.make(0);
+        assert!(cmp.is_strict_fifo());
+        assert!(cmp.is_lock_free());
+        assert!(!cmp.is_bounded());
+
+        let seg: Arc<dyn ConcurrentQueue<u32>> = Impl::Segmented.make(0);
+        assert!(!seg.is_strict_fifo(), "segmented queue relaxes FIFO");
+
+        let vy: Arc<dyn ConcurrentQueue<u32>> = Impl::Vyukov.make(64);
+        assert!(vy.is_bounded());
+
+        let mx: Arc<dyn ConcurrentQueue<u32>> = Impl::Mutex.make(0);
+        assert!(!mx.is_lock_free());
+    }
+}

@@ -1,0 +1,378 @@
+//! Epoch-based reclamation (EBR) domain (§2.2).
+//!
+//! A global epoch advances only when every *pinned* thread has observed
+//! it; retired objects are freed two epochs later. Coordination is
+//! amortized to O(P) per advance attempt, but reclamation progress
+//! depends on the slowest pinned thread — a stalled participant blocks
+//! frees forever ("unbounded retention", §2.2), which the FAULT
+//! experiment demonstrates against CMP's bounded window.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Maximum registered threads per domain.
+pub const MAX_THREADS: usize = 512;
+/// Retired-list length per thread that triggers an advance attempt.
+pub const ADVANCE_THRESHOLD: usize = 64;
+/// Sentinel: thread not currently pinned.
+const QUIESCENT: u64 = u64::MAX;
+
+struct Retired {
+    ptr: *mut u8,
+    drop_fn: unsafe fn(*mut u8),
+    epoch: u64,
+}
+
+unsafe impl Send for Retired {}
+
+struct Record {
+    active: AtomicBool,
+    /// Epoch this thread is pinned at, or [`QUIESCENT`].
+    epoch: AtomicU64,
+}
+
+pub struct DomainInner {
+    records: Box<[Record]>,
+    high: AtomicUsize,
+    global_epoch: AtomicU64,
+    orphans: Mutex<Vec<Retired>>,
+    freed: AtomicUsize,
+    pending: AtomicUsize,
+}
+
+/// An EBR domain handle (`Arc` inside; clone freely).
+#[derive(Clone)]
+pub struct EbrDomain {
+    inner: Arc<DomainInner>,
+}
+
+impl Default for EbrDomain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    static TLS: RefCell<Vec<(usize, ThreadReg)>> = const { RefCell::new(Vec::new()) };
+}
+
+struct ThreadReg {
+    domain: Arc<DomainInner>,
+    idx: usize,
+    retired: Vec<Retired>,
+    /// Pin nesting depth (guards may nest).
+    depth: usize,
+}
+
+impl Drop for ThreadReg {
+    fn drop(&mut self) {
+        let rec = &self.domain.records[self.idx];
+        rec.epoch.store(QUIESCENT, Ordering::Release);
+        rec.active.store(false, Ordering::Release);
+        if !self.retired.is_empty() {
+            self.domain
+                .orphans
+                .lock()
+                .unwrap()
+                .extend(self.retired.drain(..));
+        }
+    }
+}
+
+/// RAII pin guard: the thread participates in the epoch protocol while
+/// this is alive. Dropping unpins.
+pub struct EbrGuard {
+    domain: EbrDomain,
+}
+
+impl Drop for EbrGuard {
+    fn drop(&mut self) {
+        self.domain.unpin();
+    }
+}
+
+impl EbrDomain {
+    pub fn new() -> Self {
+        let records: Vec<Record> = (0..MAX_THREADS)
+            .map(|_| Record {
+                active: AtomicBool::new(false),
+                epoch: AtomicU64::new(QUIESCENT),
+            })
+            .collect();
+        EbrDomain {
+            inner: Arc::new(DomainInner {
+                records: records.into_boxed_slice(),
+                high: AtomicUsize::new(0),
+                global_epoch: AtomicU64::new(2), // frees need epoch ≥ 2 lag
+                orphans: Mutex::new(Vec::new()),
+                freed: AtomicUsize::new(0),
+                pending: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    fn key(&self) -> usize {
+        Arc::as_ptr(&self.inner) as usize
+    }
+
+    fn with_reg<R>(&self, f: impl FnOnce(&mut ThreadReg) -> R) -> R {
+        let key = self.key();
+        TLS.with(|tls| {
+            let mut tls = tls.borrow_mut();
+            if let Some(pos) = tls.iter().position(|(k, _)| *k == key) {
+                return f(&mut tls[pos].1);
+            }
+            let idx = self.acquire_record();
+            tls.push((
+                key,
+                ThreadReg {
+                    domain: self.inner.clone(),
+                    idx,
+                    retired: Vec::new(),
+                    depth: 0,
+                },
+            ));
+            let last = tls.len() - 1;
+            f(&mut tls[last].1)
+        })
+    }
+
+    fn acquire_record(&self) -> usize {
+        for i in 0..MAX_THREADS {
+            let rec = &self.inner.records[i];
+            if !rec.active.load(Ordering::Acquire)
+                && rec
+                    .active
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                self.inner.high.fetch_max(i + 1, Ordering::AcqRel);
+                return i;
+            }
+        }
+        panic!("ebr domain: more than {MAX_THREADS} concurrent threads");
+    }
+
+    /// Pin this thread at the current global epoch. Objects retired by
+    /// other threads at this epoch or later cannot be freed while the
+    /// guard lives.
+    pub fn pin(&self) -> EbrGuard {
+        self.with_reg(|reg| {
+            if reg.depth == 0 {
+                let g = reg.domain.global_epoch.load(Ordering::Acquire);
+                reg.domain.records[reg.idx].epoch.store(g, Ordering::Release);
+                std::sync::atomic::fence(Ordering::SeqCst);
+            }
+            reg.depth += 1;
+        });
+        EbrGuard {
+            domain: self.clone(),
+        }
+    }
+
+    fn unpin(&self) {
+        self.with_reg(|reg| {
+            reg.depth -= 1;
+            if reg.depth == 0 {
+                reg.domain.records[reg.idx]
+                    .epoch
+                    .store(QUIESCENT, Ordering::Release);
+            }
+        });
+    }
+
+    /// Retire an allocation at the current epoch (caller should be
+    /// pinned). Freed once the global epoch has advanced ≥ 2 past it.
+    ///
+    /// # Safety
+    /// `ptr` must be a valid allocation matching `drop_fn`, already
+    /// unlinked from shared structures.
+    pub unsafe fn retire<T>(&self, ptr: *mut T, drop_fn: unsafe fn(*mut u8)) {
+        self.inner.pending.fetch_add(1, Ordering::Relaxed);
+        let should_collect = self.with_reg(|reg| {
+            let e = reg.domain.global_epoch.load(Ordering::Acquire);
+            reg.retired.push(Retired {
+                ptr: ptr as *mut u8,
+                drop_fn,
+                epoch: e,
+            });
+            reg.retired.len() >= ADVANCE_THRESHOLD
+        });
+        if should_collect {
+            self.try_advance();
+            self.collect();
+        }
+    }
+
+    /// Attempt to advance the global epoch: succeeds only if every
+    /// pinned thread has observed the current epoch — the all-threads-
+    /// must-participate requirement that makes EBR fragile.
+    pub fn try_advance(&self) -> bool {
+        let g = self.inner.global_epoch.load(Ordering::Acquire);
+        let high = self.inner.high.load(Ordering::Acquire);
+        for rec in self.inner.records[..high].iter() {
+            let e = rec.epoch.load(Ordering::Acquire);
+            if e != QUIESCENT && e != g {
+                return false; // a pinned thread lags — cannot advance
+            }
+        }
+        self.inner
+            .global_epoch
+            .compare_exchange(g, g + 1, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Free this thread's retired objects that are ≥ 2 epochs old, plus
+    /// any orphans that qualify.
+    pub fn collect(&self) {
+        let g = self.inner.global_epoch.load(Ordering::Acquire);
+        let safe = g.saturating_sub(2);
+        let inner = self.inner.clone();
+        self.with_reg(|reg| {
+            let mut adopted: Vec<Retired> = {
+                let mut o = inner.orphans.lock().unwrap();
+                std::mem::take(&mut *o)
+            };
+            adopted.extend(reg.retired.drain(..));
+            for r in adopted.drain(..) {
+                if r.epoch <= safe {
+                    unsafe { (r.drop_fn)(r.ptr) };
+                    inner.freed.fetch_add(1, Ordering::Relaxed);
+                    inner.pending.fetch_sub(1, Ordering::Relaxed);
+                } else {
+                    reg.retired.push(r);
+                }
+            }
+        });
+    }
+
+    /// Retired-but-unfreed count (FAULT experiment metric).
+    pub fn pending(&self) -> usize {
+        self.inner.pending.load(Ordering::Relaxed)
+    }
+
+    pub fn freed(&self) -> usize {
+        self.inner.freed.load(Ordering::Relaxed)
+    }
+
+    pub fn global_epoch(&self) -> u64 {
+        self.inner.global_epoch.load(Ordering::Acquire)
+    }
+}
+
+impl Drop for DomainInner {
+    fn drop(&mut self) {
+        for r in self.orphans.lock().unwrap().drain(..) {
+            unsafe { (r.drop_fn)(r.ptr) };
+        }
+    }
+}
+
+/// Typed drop shim for `Box<T>` retirees.
+///
+/// # Safety
+/// `p` must have come from `Box::<T>::into_raw`.
+pub unsafe fn drop_box<T>(p: *mut u8) {
+    drop(Box::from_raw(p as *mut T));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unpinned_retires_free_after_advances() {
+        let d = EbrDomain::new();
+        {
+            let _g = d.pin();
+            let obj = Box::into_raw(Box::new(5u32));
+            unsafe { d.retire(obj, drop_box::<u32>) };
+        }
+        // Advance twice, then collect.
+        assert!(d.try_advance());
+        assert!(d.try_advance());
+        d.collect();
+        assert_eq!(d.freed(), 1);
+        assert_eq!(d.pending(), 0);
+    }
+
+    #[test]
+    fn pinned_thread_blocks_epoch_advance() {
+        let d = EbrDomain::new();
+        let d2 = d.clone();
+        let hold = Arc::new(AtomicBool::new(true));
+        let h2 = hold.clone();
+        let stalled = std::thread::spawn(move || {
+            let _g = d2.pin(); // pin and stall
+            while h2.load(Ordering::Acquire) {
+                std::thread::yield_now();
+            }
+        });
+        // Give the stalled thread time to pin.
+        while d.inner.high.load(Ordering::Acquire) == 0 {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let e0 = d.global_epoch();
+        assert!(d.try_advance(), "first advance can still succeed");
+        assert!(
+            !d.try_advance(),
+            "second advance must fail: stalled thread pinned at {e0}"
+        );
+        // Retired objects cannot be freed.
+        let obj = Box::into_raw(Box::new(1u64));
+        unsafe { d.retire(obj, drop_box::<u64>) };
+        d.collect();
+        assert_eq!(d.freed(), 0, "stall blocks reclamation (§2.3.1)");
+        hold.store(false, Ordering::Release);
+        stalled.join().unwrap();
+        // Stall resolved → reclamation resumes.
+        d.try_advance();
+        d.try_advance();
+        d.collect();
+        assert_eq!(d.freed(), 1);
+    }
+
+    #[test]
+    fn nested_pins_unpin_once() {
+        let d = EbrDomain::new();
+        let g1 = d.pin();
+        let g2 = d.pin();
+        drop(g1);
+        // Still pinned: advance should stall after one bump.
+        d.try_advance();
+        assert!(!d.try_advance());
+        drop(g2);
+        assert!(d.try_advance());
+    }
+
+    #[test]
+    fn thread_exit_orphans_recovered() {
+        let d = EbrDomain::new();
+        let d2 = d.clone();
+        std::thread::spawn(move || {
+            let _g = d2.pin();
+            let obj = Box::into_raw(Box::new(0u8));
+            unsafe { d2.retire(obj, drop_box::<u8>) };
+        })
+        .join()
+        .unwrap();
+        assert_eq!(d.pending(), 1);
+        d.try_advance();
+        d.try_advance();
+        d.collect();
+        assert_eq!(d.freed(), 1);
+    }
+
+    #[test]
+    fn threshold_triggers_collection() {
+        let d = EbrDomain::new();
+        for _ in 0..(ADVANCE_THRESHOLD * 3) {
+            let _g = d.pin();
+            let obj = Box::into_raw(Box::new(0u32));
+            unsafe { d.retire(obj, drop_box::<u32>) };
+        }
+        assert!(d.freed() > 0, "epochs advanced and frees happened");
+    }
+}

@@ -1,0 +1,405 @@
+//! Hazard-pointer reclamation domain (Michael 2004) — the coordination
+//! scheme behind the paper's "Boost" comparator (§2.2, §4).
+//!
+//! Threads publish the pointers they are about to dereference into
+//! shared per-thread slots; before freeing a retired object, the
+//! reclaimer scans *all* slots of *all* registered threads
+//! (`O(P × K)` comparisons — the coordination cost the paper measures
+//! against). A slot that is never cleared (stalled/crashed thread)
+//! blocks reclamation of whatever it protects forever — the fragility
+//! the FAULT experiment demonstrates.
+
+use std::cell::RefCell;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Hazard slots per thread. The M&S queue needs 2 (head/next).
+pub const SLOTS_PER_THREAD: usize = 2;
+/// Maximum registered threads per domain.
+pub const MAX_THREADS: usize = 512;
+/// Retired-list length that triggers a scan pass.
+pub const SCAN_THRESHOLD: usize = 64;
+
+/// A retired allocation awaiting a safe free.
+struct Retired {
+    ptr: *mut u8,
+    drop_fn: unsafe fn(*mut u8),
+}
+
+unsafe impl Send for Retired {}
+
+/// One thread's published hazard slots.
+struct Record {
+    active: AtomicBool,
+    slots: [AtomicPtr<u8>; SLOTS_PER_THREAD],
+}
+
+impl Record {
+    fn new() -> Self {
+        Record {
+            active: AtomicBool::new(false),
+            slots: std::array::from_fn(|_| AtomicPtr::new(std::ptr::null_mut())),
+        }
+    }
+}
+
+/// Shared domain state.
+pub struct DomainInner {
+    records: Box<[Record]>,
+    /// High-water mark of ever-activated records (bounds scan range).
+    high: AtomicUsize,
+    /// Retired objects orphaned by exited threads (freed on domain drop
+    /// or adopted by later scans).
+    orphans: Mutex<Vec<Retired>>,
+    /// Diagnostic: objects freed so far.
+    freed: AtomicUsize,
+    /// Diagnostic: currently retired-but-not-freed (approximate).
+    pending: AtomicUsize,
+}
+
+/// A hazard-pointer domain. Clone-able handle (`Arc` inside).
+#[derive(Clone)]
+pub struct HazardDomain {
+    inner: Arc<DomainInner>,
+}
+
+impl Default for HazardDomain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+thread_local! {
+    /// This thread's record registrations: (domain key, registration).
+    /// Holding the `Arc` keeps key addresses stable and unique.
+    static TLS: RefCell<Vec<(usize, ThreadReg)>> = const { RefCell::new(Vec::new()) };
+}
+
+/// A thread's registration in one domain.
+struct ThreadReg {
+    domain: Arc<DomainInner>,
+    idx: usize,
+    retired: Vec<Retired>,
+}
+
+impl Drop for ThreadReg {
+    fn drop(&mut self) {
+        // Release the record and orphan any still-retired objects so the
+        // domain can free them later (thread exit must not leak).
+        let rec = &self.domain.records[self.idx];
+        for s in rec.slots.iter() {
+            s.store(std::ptr::null_mut(), Ordering::Release);
+        }
+        rec.active.store(false, Ordering::Release);
+        if !self.retired.is_empty() {
+            let mut orphans = self.domain.orphans.lock().unwrap();
+            orphans.extend(self.retired.drain(..));
+        }
+    }
+}
+
+impl HazardDomain {
+    pub fn new() -> Self {
+        let records: Vec<Record> = (0..MAX_THREADS).map(|_| Record::new()).collect();
+        HazardDomain {
+            inner: Arc::new(DomainInner {
+                records: records.into_boxed_slice(),
+                high: AtomicUsize::new(0),
+                orphans: Mutex::new(Vec::new()),
+                freed: AtomicUsize::new(0),
+                pending: AtomicUsize::new(0),
+            }),
+        }
+    }
+
+    fn key(&self) -> usize {
+        Arc::as_ptr(&self.inner) as usize
+    }
+
+    /// Run `f` with this thread's registration (registering on first
+    /// use — the coordination setup cost hazard pointers impose).
+    fn with_reg<R>(&self, f: impl FnOnce(&mut ThreadReg) -> R) -> R {
+        let key = self.key();
+        TLS.with(|tls| {
+            let mut tls = tls.borrow_mut();
+            if let Some(pos) = tls.iter().position(|(k, _)| *k == key) {
+                return f(&mut tls[pos].1);
+            }
+            let idx = self.acquire_record();
+            tls.push((
+                key,
+                ThreadReg {
+                    domain: self.inner.clone(),
+                    idx,
+                    retired: Vec::new(),
+                },
+            ));
+            let last = tls.len() - 1;
+            f(&mut tls[last].1)
+        })
+    }
+
+    fn acquire_record(&self) -> usize {
+        for i in 0..MAX_THREADS {
+            let rec = &self.inner.records[i];
+            if !rec.active.load(Ordering::Acquire)
+                && rec
+                    .active
+                    .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                self.inner.high.fetch_max(i + 1, Ordering::AcqRel);
+                return i;
+            }
+        }
+        panic!("hazard domain: more than {MAX_THREADS} concurrent threads");
+    }
+
+    /// Publish `src`'s current value in hazard slot `slot` and return it
+    /// once the publication is validated (the classic load/publish/
+    /// revalidate loop — *reactive* protection, §3.1).
+    pub fn protect<T>(&self, slot: usize, src: &AtomicPtr<T>) -> *mut T {
+        debug_assert!(slot < SLOTS_PER_THREAD);
+        self.with_reg(|reg| {
+            let rec = &reg.domain.records[reg.idx];
+            let mut p = src.load(Ordering::Acquire);
+            loop {
+                rec.slots[slot].store(p as *mut u8, Ordering::Release);
+                // Full fence semantics come from the SeqCst pair below in
+                // scan(); on x86 the store above is already visible.
+                std::sync::atomic::fence(Ordering::SeqCst);
+                let q = src.load(Ordering::Acquire);
+                if q == p {
+                    return p;
+                }
+                p = q;
+            }
+        })
+    }
+
+    /// Clear one hazard slot.
+    pub fn clear(&self, slot: usize) {
+        self.with_reg(|reg| {
+            reg.domain.records[reg.idx].slots[slot]
+                .store(std::ptr::null_mut(), Ordering::Release);
+        });
+    }
+
+    /// Clear all of this thread's slots.
+    pub fn clear_all(&self) {
+        self.with_reg(|reg| {
+            for s in reg.domain.records[reg.idx].slots.iter() {
+                s.store(std::ptr::null_mut(), Ordering::Release);
+            }
+        });
+    }
+
+    /// Retire an allocation; it is freed by a later scan once no hazard
+    /// slot references it.
+    ///
+    /// # Safety
+    /// `ptr` must be a valid allocation matching `drop_fn`, and must be
+    /// unreachable to new readers (already unlinked).
+    pub unsafe fn retire<T>(&self, ptr: *mut T, drop_fn: unsafe fn(*mut u8)) {
+        self.inner.pending.fetch_add(1, Ordering::Relaxed);
+        let should_scan = self.with_reg(|reg| {
+            reg.retired.push(Retired {
+                ptr: ptr as *mut u8,
+                drop_fn,
+            });
+            reg.retired.len() >= SCAN_THRESHOLD
+        });
+        if should_scan {
+            self.scan();
+        }
+    }
+
+    /// Scan pass: gather all published hazards (O(P × K)), free every
+    /// retired object not in the set.
+    pub fn scan(&self) {
+        std::sync::atomic::fence(Ordering::SeqCst);
+        let high = self.inner.high.load(Ordering::Acquire);
+        let mut hazards: HashSet<usize> = HashSet::with_capacity(high * SLOTS_PER_THREAD);
+        for rec in self.inner.records[..high].iter() {
+            // Scan even inactive records: a slot may be mid-release.
+            for s in rec.slots.iter() {
+                let p = s.load(Ordering::Acquire) as usize;
+                if p != 0 {
+                    hazards.insert(p);
+                }
+            }
+        }
+        // Adopt orphans from exited threads.
+        let mut adopted: Vec<Retired> = {
+            let mut o = self.inner.orphans.lock().unwrap();
+            std::mem::take(&mut *o)
+        };
+        self.with_reg(|reg| {
+            adopted.extend(reg.retired.drain(..));
+            let mut kept = Vec::new();
+            for r in adopted.drain(..) {
+                if hazards.contains(&(r.ptr as usize)) {
+                    kept.push(r);
+                } else {
+                    unsafe { (r.drop_fn)(r.ptr) };
+                    self.inner.freed.fetch_add(1, Ordering::Relaxed);
+                    self.inner.pending.fetch_sub(1, Ordering::Relaxed);
+                }
+            }
+            reg.retired.extend(kept);
+        });
+    }
+
+    /// Approximate count of retired-but-unfreed objects (FAULT metric).
+    pub fn pending(&self) -> usize {
+        self.inner.pending.load(Ordering::Relaxed)
+    }
+
+    /// Objects freed so far.
+    pub fn freed(&self) -> usize {
+        self.inner.freed.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for DomainInner {
+    fn drop(&mut self) {
+        // Last reference: no thread can touch protected objects anymore;
+        // free all orphans.
+        for r in self.orphans.lock().unwrap().drain(..) {
+            unsafe { (r.drop_fn)(r.ptr) };
+        }
+    }
+}
+
+/// Typed drop shim for retiring `Box<T>` allocations.
+///
+/// # Safety
+/// `p` must have come from `Box::<T>::into_raw`.
+pub unsafe fn drop_box<T>(p: *mut u8) {
+    drop(Box::from_raw(p as *mut T));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn protect_returns_current_value() {
+        let d = HazardDomain::new();
+        let target = AtomicPtr::new(Box::into_raw(Box::new(42u32)));
+        let p = d.protect(0, &target);
+        assert_eq!(unsafe { *p }, 42);
+        d.clear(0);
+        unsafe { drop(Box::from_raw(target.load(Ordering::Relaxed))) };
+    }
+
+    #[test]
+    fn protected_object_survives_scan() {
+        let d = HazardDomain::new();
+        let obj = Box::into_raw(Box::new(7u64));
+        let slot = AtomicPtr::new(obj);
+        let p = d.protect(0, &slot);
+        assert_eq!(p, obj);
+        unsafe { d.retire(obj, drop_box::<u64>) };
+        d.scan();
+        assert_eq!(d.freed(), 0, "hazard-protected object must not be freed");
+        assert_eq!(d.pending(), 1);
+        // Release protection → next scan frees it.
+        d.clear(0);
+        d.scan();
+        assert_eq!(d.freed(), 1);
+        assert_eq!(d.pending(), 0);
+    }
+
+    #[test]
+    fn unprotected_objects_are_freed_on_scan() {
+        let d = HazardDomain::new();
+        for _ in 0..10 {
+            let obj = Box::into_raw(Box::new(1u32));
+            unsafe { d.retire(obj, drop_box::<u32>) };
+        }
+        d.scan();
+        assert_eq!(d.freed(), 10);
+    }
+
+    #[test]
+    fn threshold_triggers_automatic_scan() {
+        let d = HazardDomain::new();
+        for _ in 0..SCAN_THRESHOLD {
+            let obj = Box::into_raw(Box::new(0u8));
+            unsafe { d.retire(obj, drop_box::<u8>) };
+        }
+        assert!(d.freed() > 0, "threshold retire should have scanned");
+    }
+
+    #[test]
+    fn thread_exit_orphans_are_recovered() {
+        let d = HazardDomain::new();
+        let d2 = d.clone();
+        std::thread::spawn(move || {
+            // Retire a handful below the scan threshold, then exit.
+            for _ in 0..5 {
+                let obj = Box::into_raw(Box::new(0u64));
+                unsafe { d2.retire(obj, drop_box::<u64>) };
+            }
+        })
+        .join()
+        .unwrap();
+        assert_eq!(d.pending(), 5);
+        d.scan(); // adopting scan frees the orphans
+        assert_eq!(d.freed(), 5);
+    }
+
+    #[test]
+    fn stalled_hazard_blocks_reclamation_indefinitely() {
+        // The §2.3.1 fragility: a slot that is never cleared pins its
+        // object through any number of scans.
+        let d = HazardDomain::new();
+        let obj = Box::into_raw(Box::new(3u32));
+        let slot = AtomicPtr::new(obj);
+        let _ = d.protect(0, &slot); // never cleared — "stalled thread"
+        unsafe { d.retire(obj, drop_box::<u32>) };
+        for _ in 0..100 {
+            d.scan();
+        }
+        assert_eq!(d.freed(), 0);
+        assert_eq!(d.pending(), 1, "pinned forever");
+        d.clear_all();
+        d.scan();
+        assert_eq!(d.freed(), 1);
+    }
+
+    #[test]
+    fn multithreaded_protect_retire_is_safe() {
+        let d = HazardDomain::new();
+        let shared = Arc::new(AtomicPtr::new(Box::into_raw(Box::new(0u64))));
+        let threads: Vec<_> = (0..4)
+            .map(|t| {
+                let d = d.clone();
+                let shared = shared.clone();
+                std::thread::spawn(move || {
+                    for i in 0..500u64 {
+                        let p = d.protect(0, &shared);
+                        // Read through the protected pointer.
+                        let _v = unsafe { *p };
+                        // Occasionally swap in a new object and retire
+                        // the old one.
+                        if i % 7 == t {
+                            let fresh = Box::into_raw(Box::new(i));
+                            let old = shared.swap(fresh, Ordering::AcqRel);
+                            unsafe { d.retire(old, drop_box::<u64>) };
+                        }
+                        d.clear(0);
+                    }
+                })
+            })
+            .collect();
+        for th in threads {
+            th.join().unwrap();
+        }
+        d.scan();
+        // Final object still installed; free it manually.
+        unsafe { drop(Box::from_raw(shared.load(Ordering::Relaxed))) };
+    }
+}

@@ -1,0 +1,13 @@
+//! Coordination-*ful* memory reclamation substrates (§2.2) — the
+//! schemes CMP is evaluated against. Built from scratch (no external
+//! comparator libraries are usable offline):
+//!
+//! * [`hazard`] — Michael's hazard pointers (2004): per-thread published
+//!   pointer slots, `O(P × K)` scans before any free.
+//! * [`ebr`] — epoch-based reclamation: global epoch, per-thread pinned
+//!   epochs, frees lag two epochs; a stalled pinned thread blocks
+//!   reclamation (the fragility §2.3.1 describes — demonstrated by the
+//!   FAULT experiment).
+
+pub mod ebr;
+pub mod hazard;

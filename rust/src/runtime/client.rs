@@ -1,0 +1,241 @@
+//! PJRT model runtime: load an AOT HLO-text artifact, compile it once
+//! on the CPU PJRT client, execute batches from the Rust hot path.
+//!
+//! `PjRtLoadedExecutable` is not `Send` (raw PJRT handles), so each
+//! worker thread constructs its own `ModelRuntime` (see
+//! [`crate::coordinator::worker`]'s engine factory). Compilation cost
+//! is paid once per worker at startup, never per request.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// A compiled model artifact ready for execution.
+pub struct ModelRuntime {
+    exe: xla::PjRtLoadedExecutable,
+    input_shape: Vec<usize>,
+    output_shape: Vec<usize>,
+}
+
+impl ModelRuntime {
+    /// Load an HLO-text artifact with explicit shapes.
+    pub fn load(hlo_path: &Path, input_shape: Vec<usize>, output_shape: Vec<usize>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(hlo_path)
+            .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("PJRT compile")?;
+        Ok(ModelRuntime {
+            exe,
+            input_shape,
+            output_shape,
+        })
+    }
+
+    /// Load the serving model described by `artifacts/meta.json`.
+    pub fn load_from_artifacts(dir: &Path) -> Result<Self> {
+        let meta = Meta::load(dir)?;
+        Self::load(
+            &meta.model_path,
+            meta.model_input_shape,
+            meta.model_output_shape,
+        )
+    }
+
+    /// Elements per input batch.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Elements per output batch.
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    /// Model batch size (leading input dimension).
+    pub fn batch_size(&self) -> usize {
+        self.input_shape[0]
+    }
+
+    /// Per-row feature width.
+    pub fn features_per_row(&self) -> usize {
+        self.input_len() / self.batch_size()
+    }
+
+    /// Per-row output width.
+    pub fn outputs_per_row(&self) -> usize {
+        self.output_len() / self.batch_size()
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn output_shape(&self) -> &[usize] {
+        &self.output_shape
+    }
+
+    /// Execute one batch: `input.len()` must equal [`Self::input_len`].
+    /// Returns the flattened output tensor.
+    pub fn infer(&self, input: &[f32]) -> Result<Vec<f32>> {
+        if input.len() != self.input_len() {
+            bail!(
+                "input length {} != expected {} (shape {:?})",
+                input.len(),
+                self.input_len(),
+                self.input_shape
+            );
+        }
+        let dims: Vec<i64> = self.input_shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input)
+            .reshape(&dims)
+            .context("reshaping input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit]).context("PJRT execute")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetching output buffer")?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = out.to_tuple1().context("untupling output")?;
+        let v = out.to_vec::<f32>().context("reading output literal")?;
+        if v.len() != self.output_len() {
+            bail!(
+                "output length {} != expected {} (shape {:?})",
+                v.len(),
+                self.output_len(),
+                self.output_shape
+            );
+        }
+        Ok(v)
+    }
+}
+
+/// Parsed `artifacts/meta.json`.
+pub struct Meta {
+    pub model_path: PathBuf,
+    pub model_input_shape: Vec<usize>,
+    pub model_output_shape: Vec<usize>,
+    pub synthload_path: PathBuf,
+    pub synthload_shape: Vec<usize>,
+}
+
+impl Meta {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let raw = std::fs::read_to_string(dir.join("meta.json"))
+            .with_context(|| format!("reading {}/meta.json", dir.display()))?;
+        let j = Json::parse(&raw).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?;
+        let model = j.get("model").context("meta.json missing `model`")?;
+        let synth = j.get("synthload").context("meta.json missing `synthload`")?;
+        let field = |o: &Json, k: &str| -> Result<Vec<usize>> {
+            o.get(k)
+                .and_then(|v| v.as_usize_vec())
+                .with_context(|| format!("meta.json missing {k}"))
+        };
+        Ok(Meta {
+            model_path: dir.join(
+                model
+                    .get("path")
+                    .and_then(|p| p.as_str())
+                    .context("model.path")?,
+            ),
+            model_input_shape: field(model, "input_shape")?,
+            model_output_shape: field(model, "output_shape")?,
+            synthload_path: dir.join(
+                synth
+                    .get("path")
+                    .and_then(|p| p.as_str())
+                    .context("synthload.path")?,
+            ),
+            synthload_shape: field(synth, "input_shape")?,
+        })
+    }
+}
+
+/// Parsed `artifacts/testvec.json` — seeded input + expected output for
+/// the Rust-side end-to-end numerics check.
+pub struct TestVectors {
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub input: Vec<f32>,
+    pub expected: Vec<f32>,
+    pub rtol: f64,
+}
+
+impl TestVectors {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let raw = std::fs::read_to_string(dir.join("testvec.json"))
+            .with_context(|| format!("reading {}/testvec.json", dir.display()))?;
+        let j = Json::parse(&raw).map_err(|e| anyhow::anyhow!("testvec.json: {e}"))?;
+        let vecf = |k: &str| -> Result<Vec<f32>> {
+            j.get(k)
+                .and_then(|v| v.as_f32_vec())
+                .with_context(|| format!("testvec.json missing {k}"))
+        };
+        let vecu = |k: &str| -> Result<Vec<usize>> {
+            j.get(k)
+                .and_then(|v| v.as_usize_vec())
+                .with_context(|| format!("testvec.json missing {k}"))
+        };
+        Ok(TestVectors {
+            input_shape: vecu("input_shape")?,
+            output_shape: vecu("output_shape")?,
+            input: vecf("input")?,
+            expected: vecf("expected")?,
+            rtol: j.get("rtol").and_then(|v| v.as_f64()).unwrap_or(1e-4),
+        })
+    }
+
+    /// Relative-tolerance comparison against `actual`.
+    pub fn check(&self, actual: &[f32]) -> Result<()> {
+        if actual.len() != self.expected.len() {
+            bail!("length mismatch: {} vs {}", actual.len(), self.expected.len());
+        }
+        for (i, (&a, &e)) in actual.iter().zip(self.expected.iter()).enumerate() {
+            let tol = self.rtol * e.abs().max(1.0) as f64;
+            if ((a - e).abs() as f64) > tol {
+                bail!("mismatch at {i}: got {a}, expected {e} (tol {tol})");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Default artifacts directory: `$CMPQ_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("CMPQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Runtime integration tests that need the artifacts live in
+    // rust/tests/runtime_integration.rs (they require `make artifacts`).
+    // Here: pure parsing logic.
+
+    #[test]
+    fn testvec_check_passes_within_tol() {
+        let tv = TestVectors {
+            input_shape: vec![1, 2],
+            output_shape: vec![1, 2],
+            input: vec![0.0, 0.0],
+            expected: vec![1.0, -2.0],
+            rtol: 1e-3,
+        };
+        tv.check(&[1.0005, -2.001]).unwrap();
+        assert!(tv.check(&[1.1, -2.0]).is_err());
+        assert!(tv.check(&[1.0]).is_err(), "length mismatch");
+    }
+
+    #[test]
+    fn artifacts_dir_env_override() {
+        // Note: set/remove env var carefully (process-global).
+        std::env::set_var("CMPQ_ARTIFACTS", "/tmp/xyz");
+        assert_eq!(artifacts_dir(), PathBuf::from("/tmp/xyz"));
+        std::env::remove_var("CMPQ_ARTIFACTS");
+        assert_eq!(artifacts_dir(), PathBuf::from("artifacts"));
+    }
+}

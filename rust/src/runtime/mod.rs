@@ -1,0 +1,8 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`, HLO text —
+//! see DESIGN.md §1 and /opt/xla-example/README.md for why text, not
+//! serialized protos), compile once on the CPU PJRT client, execute
+//! from the Rust hot path.
+
+pub mod client;
+
+pub use client::{ModelRuntime, TestVectors};

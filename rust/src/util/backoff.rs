@@ -1,0 +1,95 @@
+//! CPU-pause based exponential backoff, matching the paper's
+//! `CPU_PAUSE()` usage (Algorithm 1, line 18): spin a few times on fresh
+//! state, then start yielding the timeslice. On this 1-core testbed the
+//! yield escalation matters — a pure spin loop would burn the whole
+//! quantum while the thread that must make progress is descheduled.
+
+use std::hint;
+use std::thread;
+
+/// Exponential backoff helper for CAS retry loops.
+#[derive(Default)]
+pub struct Backoff {
+    step: u32,
+}
+
+/// Below this step we spin with `spin_loop` (PAUSE); at or above, yield.
+const SPIN_LIMIT: u32 = 6;
+/// Cap on the exponent so the spin count stays bounded.
+const YIELD_LIMIT: u32 = 10;
+
+impl Backoff {
+    pub fn new() -> Self {
+        Self { step: 0 }
+    }
+
+    /// Reset after successful progress.
+    #[inline]
+    pub fn reset(&mut self) {
+        self.step = 0;
+    }
+
+    /// Back off once: `2^step` PAUSEs while below [`SPIN_LIMIT`], a
+    /// `thread::yield_now` afterwards.
+    #[inline]
+    pub fn spin(&mut self) {
+        if self.step <= SPIN_LIMIT {
+            for _ in 0..(1u32 << self.step) {
+                hint::spin_loop();
+            }
+        } else {
+            thread::yield_now();
+        }
+        if self.step <= YIELD_LIMIT {
+            self.step += 1;
+        }
+    }
+
+    /// True once the backoff has escalated past pure spinning; callers can
+    /// use this to switch strategies (e.g. park, or give up a quantum).
+    #[inline]
+    pub fn is_yielding(&self) -> bool {
+        self.step > SPIN_LIMIT
+    }
+}
+
+/// Single CPU pause — the paper's `CPU_PAUSE()` primitive.
+#[inline(always)]
+pub fn cpu_pause() {
+    hint::spin_loop();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn escalates_to_yielding() {
+        let mut b = Backoff::new();
+        assert!(!b.is_yielding());
+        for _ in 0..=SPIN_LIMIT {
+            b.spin();
+        }
+        assert!(b.is_yielding());
+    }
+
+    #[test]
+    fn reset_restores_spinning() {
+        let mut b = Backoff::new();
+        for _ in 0..20 {
+            b.spin();
+        }
+        assert!(b.is_yielding());
+        b.reset();
+        assert!(!b.is_yielding());
+    }
+
+    #[test]
+    fn step_is_capped() {
+        let mut b = Backoff::new();
+        for _ in 0..1000 {
+            b.spin(); // must not overflow the shift
+        }
+        assert!(b.is_yielding());
+    }
+}

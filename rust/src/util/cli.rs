@@ -1,0 +1,150 @@
+//! Minimal std-only CLI argument parser (clap is not vendored in this
+//! image). Supports `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, which is all the `repro` binary needs.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else {
+                    // `--key value` unless the next token is another option
+                    // or missing → boolean flag.
+                    let takes_value = iter
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        let v = iter.next().unwrap();
+                        out.options.insert(stripped.to_string(), v);
+                    } else {
+                        out.options.insert(stripped.to_string(), String::from("true"));
+                    }
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.options.get(name).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option lookup, falling back to `default` when absent.
+    /// Panics with a readable message on malformed values (CLI surface).
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name}: cannot parse {s:?}")),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--threads 1,2,4` → `[1,2,4]`.
+    pub fn get_list<T: std::str::FromStr>(&self, name: &str) -> Option<Vec<T>> {
+        self.get(name).map(|s| {
+            s.split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{name}: cannot parse element {p:?}"))
+                })
+                .collect()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|w| w.to_string()))
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("bench fig1 --json");
+        assert_eq!(a.positional, vec!["bench", "fig1"]);
+        assert!(a.flag("json"));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("--ops 5000 --window=1024");
+        assert_eq!(a.get("ops"), Some("5000"));
+        assert_eq!(a.get("window"), Some("1024"));
+    }
+
+    #[test]
+    fn typed_parse_with_default() {
+        let a = parse("--ops 5000");
+        assert_eq!(a.get_parse::<u64>("ops", 1), 5000);
+        assert_eq!(a.get_parse::<u64>("missing", 7), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn typed_parse_rejects_garbage() {
+        let a = parse("--ops banana");
+        let _ = a.get_parse::<u64>("ops", 1);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse("--threads 1,2,4,8");
+        assert_eq!(a.get_list::<usize>("threads"), Some(vec![1, 2, 4, 8]));
+        assert_eq!(a.get_list::<usize>("absent"), None);
+    }
+
+    #[test]
+    fn trailing_flag_is_boolean() {
+        let a = parse("run --fast");
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("--fast --ops 10");
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("ops"), Some("10"));
+    }
+
+    #[test]
+    fn get_or_default() {
+        let a = parse("--impl cmp");
+        assert_eq!(a.get_or("impl", "all"), "cmp");
+        assert_eq!(a.get_or("mode", "baseline"), "baseline");
+    }
+}

@@ -1,0 +1,11 @@
+//! Small substrates the offline image forces us to own: PRNG, backoff,
+//! CLI parsing, and timing helpers.
+
+pub mod backoff;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod time;
+
+pub use backoff::Backoff;
+pub use rng::XorShift64;

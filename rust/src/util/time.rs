@@ -1,0 +1,87 @@
+//! Timing helpers for the benchmark harness.
+
+use std::time::{Duration, Instant};
+
+/// Monotonic nanosecond timestamp relative to an anchor. Cheaper to pass
+/// around than `Instant` in per-op latency recording.
+#[derive(Clone, Copy)]
+pub struct Anchor(Instant);
+
+impl Anchor {
+    pub fn now() -> Self {
+        Self(Instant::now())
+    }
+
+    /// Nanoseconds elapsed since the anchor.
+    #[inline]
+    pub fn ns(&self) -> u64 {
+        self.0.elapsed().as_nanos() as u64
+    }
+}
+
+/// Measure the wall-clock duration of `f`, returning `(result, duration)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let start = Instant::now();
+    let out = f();
+    (out, start.elapsed())
+}
+
+/// Throughput in items/second given a count and a duration.
+pub fn items_per_sec(items: u64, dur: Duration) -> f64 {
+    if dur.is_zero() {
+        return f64::INFINITY;
+    }
+    items as f64 / dur.as_secs_f64()
+}
+
+/// Human-readable rate, e.g. "6.49M items/s".
+pub fn fmt_rate(items_per_s: f64) -> String {
+    if items_per_s >= 1e9 {
+        format!("{:.2}G/s", items_per_s / 1e9)
+    } else if items_per_s >= 1e6 {
+        format!("{:.2}M/s", items_per_s / 1e6)
+    } else if items_per_s >= 1e3 {
+        format!("{:.2}K/s", items_per_s / 1e3)
+    } else {
+        format!("{:.1}/s", items_per_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchor_monotonic() {
+        let a = Anchor::now();
+        let t1 = a.ns();
+        let t2 = a.ns();
+        assert!(t2 >= t1);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, d) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn rate_math() {
+        let r = items_per_sec(1_000_000, Duration::from_secs(1));
+        assert!((r - 1e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(fmt_rate(6.49e6), "6.49M/s");
+        assert_eq!(fmt_rate(1.19e3), "1.19K/s");
+        assert_eq!(fmt_rate(2.5e9), "2.50G/s");
+        assert_eq!(fmt_rate(12.0), "12.0/s");
+    }
+
+    #[test]
+    fn zero_duration_is_infinite() {
+        assert!(items_per_sec(1, Duration::ZERO).is_infinite());
+    }
+}

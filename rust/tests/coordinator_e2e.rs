@@ -1,0 +1,149 @@
+//! Coordinator end-to-end: the full serving pipeline over CMP queues,
+//! with the echo engine (always) and the real AOT model (when
+//! artifacts exist).
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use cmpq::coordinator::batcher::BatchPolicy;
+use cmpq::coordinator::router::RoutePolicy;
+use cmpq::coordinator::server::{Server, ServerConfig};
+use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+use cmpq::runtime::ModelRuntime;
+
+fn echo_factory(batch: usize, features: usize, outputs: usize) -> EngineFactory {
+    Arc::new(move || {
+        Ok(Box::new(EchoEngine {
+            batch,
+            features,
+            outputs,
+            scale: 3.0,
+        }) as Box<dyn InferenceEngine>)
+    })
+}
+
+#[test]
+fn pipeline_under_concurrent_clients() {
+    let server = Arc::new(Server::start(
+        ServerConfig {
+            shards: 2,
+            workers: 2,
+            route_policy: RoutePolicy::RoundRobin,
+            batch_policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServerConfig::default()
+        },
+        echo_factory(4, 2, 1),
+    ));
+    let clients: Vec<_> = (0..6)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                for i in 0..40u32 {
+                    let v = (c * 100 + i) as f32;
+                    let out = server
+                        .submit(vec![v, v])
+                        .wait_timeout(Duration::from_secs(60))
+                        .expect("response");
+                    assert_eq!(out.output, vec![v * 3.0], "echo engine math");
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let server = Arc::try_unwrap(server).ok().expect("clients joined");
+    let m = server.shutdown();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 240);
+    assert_eq!(m.failures.load(Ordering::Relaxed), 0);
+    let lat = m.latency_summary();
+    assert!(lat.count == 240 && lat.p99_ns > 0);
+}
+
+#[test]
+fn pipeline_routing_policies_all_complete() {
+    for policy in [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastLoaded,
+        RoutePolicy::HashId,
+    ] {
+        let server = Server::start(
+            ServerConfig {
+                shards: 3,
+                workers: 1,
+                route_policy: policy,
+                batch_policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(1),
+                },
+                ..ServerConfig::default()
+            },
+            echo_factory(8, 1, 1),
+        );
+        let slots: Vec<_> = (0..60).map(|i| server.submit(vec![i as f32])).collect();
+        for (i, s) in slots.iter().enumerate() {
+            let out = s.wait_timeout(Duration::from_secs(60)).expect("response");
+            assert_eq!(out.output, vec![i as f32 * 3.0], "{policy:?}");
+        }
+        let m = server.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 60, "{policy:?}");
+    }
+}
+
+#[test]
+fn pipeline_with_real_model_when_artifacts_exist() {
+    let dir = std::env::var_os("CMPQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    if !dir.join("model.hlo.txt").exists() {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        return;
+    }
+    let factory: EngineFactory = {
+        let dir = dir.clone();
+        Arc::new(move || {
+            Ok(Box::new(ModelRuntime::load_from_artifacts(&dir)?) as Box<dyn InferenceEngine>)
+        })
+    };
+    let server = Arc::new(Server::start(
+        ServerConfig {
+            shards: 2,
+            workers: 1, // keep PJRT compile cost down in tests
+            batch_policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+            },
+            ..ServerConfig::default()
+        },
+        factory,
+    ));
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                for i in 0..8u32 {
+                    let features: Vec<f32> =
+                        (0..128).map(|k| ((c * 31 + i + k) as f32 * 0.01).sin()).collect();
+                    let out = server
+                        .submit(features)
+                        .wait_timeout(Duration::from_secs(120))
+                        .expect("model response");
+                    assert_eq!(out.output.len(), 16, "one logit row");
+                    assert!(out.output.iter().all(|x| x.is_finite()));
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let server = Arc::try_unwrap(server).ok().expect("clients joined");
+    let m = server.shutdown();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 32);
+    assert_eq!(m.failures.load(Ordering::Relaxed), 0);
+}

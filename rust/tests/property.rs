@@ -1,0 +1,299 @@
+//! Property-based tests (xorshift harness — proptest is not vendored,
+//! DESIGN.md §3): randomized operation schedules checked against a
+//! sequential `VecDeque` oracle across CMP configurations, plus
+//! randomized concurrent schedules checked for conservation and
+//! per-producer order.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use cmpq::queue::cmp::{CmpConfig, CmpQueue, ReclaimTrigger};
+use cmpq::queue::{ConcurrentQueue, Impl};
+use cmpq::util::XorShift64;
+
+/// Random single-threaded schedule vs oracle: any sequential execution
+/// of a linearizable FIFO queue must exactly match VecDeque.
+fn check_sequential_oracle(cfg: CmpConfig, seed: u64, ops: usize) {
+    let q = CmpQueue::<u64>::with_config(cfg);
+    let mut oracle: VecDeque<u64> = VecDeque::new();
+    let mut rng = XorShift64::new(seed);
+    let mut next = 0u64;
+    for step in 0..ops {
+        // Mix phases: sometimes enqueue-heavy, sometimes dequeue-heavy.
+        let p_enq = match (step / 500) % 3 {
+            0 => 0.7,
+            1 => 0.3,
+            _ => 0.5,
+        };
+        if rng.chance(p_enq) {
+            q.push(next).unwrap();
+            oracle.push_back(next);
+            next += 1;
+        } else {
+            assert_eq!(q.pop(), oracle.pop_front(), "seed={seed} step={step}");
+        }
+        if rng.chance(0.002) {
+            q.reclaim(); // interleave explicit reclamation
+        }
+    }
+    // Drain and compare the tail.
+    loop {
+        let (a, b) = (q.pop(), oracle.pop_front());
+        assert_eq!(a, b, "seed={seed} drain");
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn sequential_oracle_default_config() {
+    for seed in 0..8 {
+        check_sequential_oracle(CmpConfig::default(), seed, 5_000);
+    }
+}
+
+/// Regression (cursor stagnation): alternating push/pop keeps every
+/// claim at the tail (`next == NULL`); Algorithm 3 as printed never
+/// advances the cursor there, so with a tiny window the cursor node is
+/// recycled and a claim on its new incarnation breaks FIFO. Our Phase 4
+/// extension (advance to the claimed node) restores the §3.5 invariant.
+#[test]
+fn cursor_stagnation_alternating_push_pop_tiny_window() {
+    let q = CmpQueue::<u64>::with_config(
+        CmpConfig::default()
+            .with_window(4)
+            .with_min_batch(1)
+            .with_reclaim_period(8),
+    );
+    for i in 0..50_000u64 {
+        q.push(i).unwrap();
+        assert_eq!(q.pop(), Some(i), "FIFO broken at {i}");
+    }
+    assert_eq!(q.pop(), None);
+}
+
+#[test]
+fn sequential_oracle_tiny_window_aggressive_reclaim() {
+    for seed in 100..106 {
+        check_sequential_oracle(
+            CmpConfig::default()
+                .with_window(4)
+                .with_min_batch(1)
+                .with_reclaim_period(8),
+            seed,
+            5_000,
+        );
+    }
+}
+
+#[test]
+fn sequential_oracle_no_cursor() {
+    for seed in 200..204 {
+        check_sequential_oracle(CmpConfig::default().without_scan_cursor(), seed, 4_000);
+    }
+}
+
+#[test]
+fn sequential_oracle_helping_variant() {
+    for seed in 300..304 {
+        check_sequential_oracle(CmpConfig::default().with_helping(), seed, 4_000);
+    }
+}
+
+#[test]
+fn sequential_oracle_bernoulli_trigger() {
+    for seed in 400..404 {
+        check_sequential_oracle(
+            CmpConfig::default()
+                .with_trigger(ReclaimTrigger::Bernoulli)
+                .with_reclaim_period(32)
+                .with_window(16)
+                .with_min_batch(1),
+            seed,
+            4_000,
+        );
+    }
+}
+
+#[test]
+fn sequential_oracle_bounded_pool() {
+    for seed in 500..504 {
+        check_sequential_oracle(
+            CmpConfig::default()
+                .with_max_nodes(2048)
+                .with_window(64)
+                .with_min_batch(1)
+                .with_reclaim_period(32),
+            seed,
+            6_000,
+        );
+    }
+}
+
+/// Randomized concurrent schedule: random thread counts and op mixes;
+/// assert conservation + per-producer order for strict queues.
+fn check_concurrent_random(imp: Impl, seed: u64) {
+    let mut rng = XorShift64::new(seed);
+    let producers = 1 + rng.next_usize(4);
+    let consumers = 1 + rng.next_usize(4);
+    let per = 1_000 + rng.next_below(3_000);
+
+    let q: Arc<dyn ConcurrentQueue<(u8, u64)>> = imp.make(1 << 14);
+    let done = Arc::new(AtomicBool::new(false));
+    let prod: Vec<_> = (0..producers as u8)
+        .map(|p| {
+            let q = q.clone();
+            let mut prng = XorShift64::new(seed ^ (p as u64) << 32);
+            std::thread::spawn(move || {
+                for i in 0..per {
+                    q.enqueue((p, i));
+                    // Random jitter to vary interleavings.
+                    if prng.chance(0.01) {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+    let cons: Vec<_> = (0..consumers)
+        .map(|c| {
+            let q = q.clone();
+            let done = done.clone();
+            let mut crng = XorShift64::new(seed ^ 0xC0FFEE ^ (c as u64) << 24);
+            std::thread::spawn(move || {
+                let mut got: Vec<(u8, u64)> = Vec::new();
+                loop {
+                    match q.try_dequeue() {
+                        Some(v) => got.push(v),
+                        None => {
+                            if done.load(Ordering::Acquire) && q.try_dequeue().is_none() {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                    if crng.chance(0.01) {
+                        std::thread::yield_now();
+                    }
+                }
+                got
+            })
+        })
+        .collect();
+    for h in prod {
+        h.join().unwrap();
+    }
+    done.store(true, Ordering::Release);
+
+    let mut all: Vec<(u8, u64)> = Vec::new();
+    for h in cons {
+        let got = h.join().unwrap();
+        // Per-consumer, per-producer monotonicity (valid for ALL queue
+        // types here: per-producer order is the weakest contract).
+        let mut last = vec![-1i64; producers];
+        for &(p, i) in &got {
+            assert!(
+                last[p as usize] < i as i64,
+                "{} seed={seed}: consumer-local producer order violated",
+                imp.name()
+            );
+            last[p as usize] = i as i64;
+        }
+        all.extend(got);
+    }
+    assert_eq!(all.len() as u64, producers as u64 * per, "{} seed={seed}", imp.name());
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len() as u64, producers as u64 * per, "{} seed={seed} dup", imp.name());
+}
+
+#[test]
+fn concurrent_random_cmp() {
+    for seed in 0..6 {
+        check_concurrent_random(Impl::Cmp, seed);
+    }
+}
+
+#[test]
+fn concurrent_random_ms_hp() {
+    for seed in 10..13 {
+        check_concurrent_random(Impl::MsHp, seed);
+    }
+}
+
+#[test]
+fn concurrent_random_ms_ebr() {
+    for seed in 20..23 {
+        check_concurrent_random(Impl::MsEbr, seed);
+    }
+}
+
+#[test]
+fn concurrent_random_segmented() {
+    for seed in 30..33 {
+        check_concurrent_random(Impl::Segmented, seed);
+    }
+}
+
+#[test]
+fn concurrent_random_vyukov() {
+    for seed in 40..43 {
+        check_concurrent_random(Impl::Vyukov, seed);
+    }
+}
+
+#[test]
+fn concurrent_random_cmp_stress_configs() {
+    // CMP with adversarial configs under concurrency.
+    for (i, cfg) in [
+        CmpConfig::default().with_window(8).with_min_batch(1).with_reclaim_period(4),
+        CmpConfig::default().without_scan_cursor(),
+        CmpConfig::default().with_helping(),
+        CmpConfig::default().with_max_nodes(4096).with_window(256).with_min_batch(1),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let q: Arc<dyn ConcurrentQueue<(u8, u64)>> =
+            Arc::new(CmpQueue::<(u8, u64)>::with_config(cfg));
+        let done = Arc::new(AtomicBool::new(false));
+        let prod: Vec<_> = (0..2u8)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for j in 0..3000 {
+                        q.enqueue((p, j));
+                    }
+                })
+            })
+            .collect();
+        let cons: Vec<_> = (0..2)
+            .map(|_| {
+                let q = q.clone();
+                let done = done.clone();
+                std::thread::spawn(move || {
+                    let mut n = 0u64;
+                    loop {
+                        match q.try_dequeue() {
+                            Some(_) => n += 1,
+                            None => {
+                                if done.load(Ordering::Acquire) && q.try_dequeue().is_none() {
+                                    return n;
+                                }
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in prod {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Release);
+        let total: u64 = cons.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, 6000, "config #{i}");
+    }
+}

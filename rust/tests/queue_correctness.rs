@@ -1,0 +1,205 @@
+//! Cross-implementation MPMC correctness: conservation (no loss, no
+//! duplication), termination, and payload lifecycle, for every queue in
+//! the registry under real thread interleavings.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use cmpq::queue::{ConcurrentQueue, Impl};
+
+/// Run `producers`×`consumers` threads moving `per_producer` items
+/// each; return everything the consumers saw.
+fn run_mpmc(
+    q: Arc<dyn ConcurrentQueue<u64>>,
+    producers: usize,
+    consumers: usize,
+    per_producer: u64,
+) -> Vec<u64> {
+    let total = producers as u64 * per_producer;
+    let done = Arc::new(AtomicBool::new(false));
+    let prod: Vec<_> = (0..producers as u64)
+        .map(|p| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                for i in 0..per_producer {
+                    q.enqueue(p * per_producer + i);
+                }
+            })
+        })
+        .collect();
+    let cons: Vec<_> = (0..consumers)
+        .map(|_| {
+            let q = q.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    match q.try_dequeue() {
+                        Some(v) => got.push(v),
+                        None => {
+                            if done.load(Ordering::Acquire) && q.try_dequeue().is_none() {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+                got
+            })
+        })
+        .collect();
+    for h in prod {
+        h.join().unwrap();
+    }
+    done.store(true, Ordering::Release);
+    let mut all = Vec::with_capacity(total as usize);
+    for h in cons {
+        all.extend(h.join().unwrap());
+    }
+    all
+}
+
+fn check_conservation(imp: Impl, producers: usize, consumers: usize, per: u64) {
+    let q: Arc<dyn ConcurrentQueue<u64>> = imp.make(1 << 15);
+    let got = run_mpmc(q, producers, consumers, per);
+    let total = producers as u64 * per;
+    assert_eq!(got.len() as u64, total, "{}: item loss", imp.name());
+    let set: HashSet<u64> = got.iter().copied().collect();
+    assert_eq!(set.len() as u64, total, "{}: duplicated items", imp.name());
+    for v in &set {
+        assert!(*v < total, "{}: fabricated item {v}", imp.name());
+    }
+}
+
+#[test]
+fn conservation_2p2c_all_impls() {
+    for imp in Impl::ALL {
+        check_conservation(imp, 2, 2, 4_000);
+    }
+}
+
+#[test]
+fn conservation_4p4c_all_impls() {
+    for imp in Impl::ALL {
+        check_conservation(imp, 4, 4, 2_500);
+    }
+}
+
+#[test]
+fn conservation_asymmetric_8p2c() {
+    for imp in [Impl::Cmp, Impl::MsHp, Impl::Segmented] {
+        check_conservation(imp, 8, 2, 1_500);
+    }
+}
+
+#[test]
+fn conservation_asymmetric_2p8c() {
+    for imp in [Impl::Cmp, Impl::MsEbr, Impl::Vyukov] {
+        check_conservation(imp, 2, 8, 5_000);
+    }
+}
+
+#[test]
+fn conservation_high_contention_16p16c_cmp() {
+    check_conservation(Impl::Cmp, 16, 16, 800);
+}
+
+#[test]
+fn empty_dequeue_is_none_everywhere() {
+    for imp in Impl::ALL {
+        let q: Arc<dyn ConcurrentQueue<u64>> = imp.make(64);
+        assert_eq!(q.try_dequeue(), None, "{}", imp.name());
+        q.enqueue(1);
+        assert_eq!(q.try_dequeue(), Some(1), "{}", imp.name());
+        assert_eq!(q.try_dequeue(), None, "{}", imp.name());
+    }
+}
+
+#[test]
+fn payload_drop_exactly_once_under_concurrency() {
+    static LIVE: AtomicUsize = AtomicUsize::new(0);
+    #[derive(Debug)]
+    struct Tracked;
+    impl Tracked {
+        fn new() -> Self {
+            LIVE.fetch_add(1, Ordering::Relaxed);
+            Tracked
+        }
+    }
+    impl Drop for Tracked {
+        fn drop(&mut self) {
+            let prev = LIVE.fetch_sub(1, Ordering::Relaxed);
+            assert!(prev > 0, "double drop detected");
+        }
+    }
+
+    for imp in [Impl::Cmp, Impl::MsHp, Impl::MsEbr, Impl::Segmented] {
+        LIVE.store(0, Ordering::Relaxed);
+        {
+            let q: Arc<dyn ConcurrentQueue<Tracked>> = imp.make(1 << 12);
+            let done = Arc::new(AtomicBool::new(false));
+            let prod: Vec<_> = (0..2)
+                .map(|_| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        for _ in 0..2000 {
+                            q.enqueue(Tracked::new());
+                        }
+                    })
+                })
+                .collect();
+            let cons: Vec<_> = (0..2)
+                .map(|_| {
+                    let q = q.clone();
+                    let done = done.clone();
+                    std::thread::spawn(move || loop {
+                        match q.try_dequeue() {
+                            Some(t) => drop(t),
+                            None => {
+                                if done.load(Ordering::Acquire) && q.try_dequeue().is_none() {
+                                    return;
+                                }
+                                std::thread::yield_now();
+                            }
+                        }
+                    })
+                })
+                .collect();
+            for h in prod {
+                h.join().unwrap();
+            }
+            done.store(true, Ordering::Release);
+            for h in cons {
+                h.join().unwrap();
+            }
+            drop(q);
+        }
+        assert_eq!(
+            LIVE.load(Ordering::Relaxed),
+            0,
+            "{}: leaked or double-dropped payloads",
+            imp.name()
+        );
+    }
+}
+
+#[test]
+fn large_payloads_roundtrip() {
+    let q: Arc<dyn ConcurrentQueue<Vec<u8>>> = Impl::Cmp.make(0);
+    for i in 0..100u8 {
+        q.enqueue(vec![i; 4096]);
+    }
+    for i in 0..100u8 {
+        let v = q.try_dequeue().unwrap();
+        assert_eq!(v.len(), 4096);
+        assert!(v.iter().all(|&b| b == i));
+    }
+}
+
+#[test]
+fn bounded_vyukov_backpressure_roundtrip() {
+    let q: Arc<dyn ConcurrentQueue<u64>> = Impl::Vyukov.make(128);
+    let got = run_mpmc(q, 4, 4, 2_000);
+    assert_eq!(got.len(), 8_000);
+}

@@ -1,0 +1,85 @@
+//! Runtime integration: load the AOT artifacts, execute through PJRT,
+//! and verify numerics against the JAX-produced test vectors.
+//!
+//! These tests require `make artifacts`; they skip (with a loud
+//! message) when the artifacts are absent so `cargo test` stays green
+//! on a fresh checkout.
+
+use std::path::PathBuf;
+
+use cmpq::runtime::{ModelRuntime, TestVectors};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = std::env::var_os("CMPQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"));
+    if dir.join("model.hlo.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn model_matches_jax_testvec() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load_from_artifacts(&dir).expect("load model");
+    let tv = TestVectors::load(&dir).expect("load testvec");
+    assert_eq!(rt.input_shape(), &tv.input_shape[..]);
+    assert_eq!(rt.output_shape(), &tv.output_shape[..]);
+    let out = rt.infer(&tv.input).expect("inference");
+    tv.check(&out).expect("numerics must match JAX");
+}
+
+#[test]
+fn model_rejects_wrong_input_length() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load_from_artifacts(&dir).expect("load model");
+    let bad = vec![0.0f32; rt.input_len() - 1];
+    assert!(rt.infer(&bad).is_err());
+}
+
+#[test]
+fn model_is_deterministic_across_calls() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load_from_artifacts(&dir).expect("load model");
+    let input = vec![0.25f32; rt.input_len()];
+    let a = rt.infer(&input).unwrap();
+    let b = rt.infer(&input).unwrap();
+    assert_eq!(a, b, "same input, same executable, same output");
+}
+
+#[test]
+fn model_output_depends_on_input() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load_from_artifacts(&dir).expect("load model");
+    let a = rt.infer(&vec![0.1f32; rt.input_len()]).unwrap();
+    let b = rt.infer(&vec![-0.4f32; rt.input_len()]).unwrap();
+    assert_ne!(a, b, "model must be input-sensitive");
+    assert!(a.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn synthload_artifact_executes() {
+    let Some(dir) = artifacts() else { return };
+    let rt = ModelRuntime::load(&dir.join("synthload.hlo.txt"), vec![64, 64], vec![64, 64])
+        .expect("load synthload");
+    let input: Vec<f32> = (0..64 * 64).map(|i| (i as f32 * 0.001).sin() * 0.1).collect();
+    let out = rt.infer(&input).expect("execute synthload");
+    assert_eq!(out.len(), 64 * 64);
+    assert!(out.iter().all(|x| x.is_finite()));
+    assert!(out.iter().any(|&x| x != 0.0), "compute-burn must produce signal");
+}
+
+#[test]
+fn multiple_runtimes_coexist() {
+    // Workers each own a runtime; two instances must not interfere.
+    let Some(dir) = artifacts() else { return };
+    let a = ModelRuntime::load_from_artifacts(&dir).expect("runtime A");
+    let b = ModelRuntime::load_from_artifacts(&dir).expect("runtime B");
+    let tv = TestVectors::load(&dir).expect("testvec");
+    let oa = a.infer(&tv.input).unwrap();
+    let ob = b.infer(&tv.input).unwrap();
+    assert_eq!(oa, ob);
+}
