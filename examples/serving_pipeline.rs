@@ -28,7 +28,8 @@ use cmpq::util::XorShift64;
 
 fn main() {
     let dir = artifacts_dir();
-    let have_model = dir.join("model.hlo.txt").exists();
+    // The stub ModelRuntime (no `pjrt` feature) cannot serve artifacts.
+    let have_model = cfg!(feature = "pjrt") && dir.join("model.hlo.txt").exists();
 
     // --- Stage 0: prove the artifact's numerics before serving it.
     if have_model {

@@ -4,6 +4,8 @@
 //! * ABL-WIN    — §3.1: protection window W sweep (throughput + memory).
 //! * ABL-RECL   — §3.3: reclaim period N sweep + trigger policy.
 //! * ABL-CURSOR — §3.5: scan-cursor on/off.
+//! * ABL-BATCH  — DESIGN.md §7: operation batch-size sweep (1/8/64).
+//! * ABL-MAG    — DESIGN.md §7: per-thread node magazines on/off.
 //! * FAULT      — §3.6: stall/crash tolerance vs HP/EBR.
 //!
 //! `cargo bench --bench ablations` (env: `BENCH_OPS`, `BENCH_ROUNDS`).
@@ -24,12 +26,24 @@ fn env_u64(k: &str, d: u64) -> u64 {
 
 /// Mean throughput of `rounds` trials of a fresh queue per trial.
 fn bench_config(make: &dyn Fn() -> CmpConfig, pair: PairConfig, ops: u64, rounds: usize) -> f64 {
+    bench_config_batched(make, pair, ops, rounds, 1)
+}
+
+/// As [`bench_config`], with an explicit operation batch size.
+fn bench_config_batched(
+    make: &dyn Fn() -> CmpConfig,
+    pair: PairConfig,
+    ops: u64,
+    rounds: usize,
+    batch: usize,
+) -> f64 {
     let mut samples = Vec::with_capacity(rounds);
     for _ in 0..rounds {
         let q: Arc<dyn ConcurrentQueue<u64>> =
             Arc::new(CmpQueue::<u64>::with_config(make()));
         let cfg = TrialConfig {
             total_ops: ops,
+            batch_size: batch,
             ..TrialConfig::default()
         };
         samples.push(run_throughput_on(q, pair, &cfg).items_per_sec);
@@ -120,6 +134,48 @@ fn main() {
             with,
             without,
             with / without
+        );
+    }
+
+    // ---------------- ABL-BATCH ----------------
+    println!("\n# ABL-BATCH — DESIGN.md §7 operation batch size (items/s)");
+    println!(
+        "{:<10}{:>14}{:>14}{:>14}{:>10}",
+        "config", "batch-1", "batch-8", "batch-64", "64 vs 1"
+    );
+    for n in [1usize, 4, 8, 16] {
+        let pair = PairConfig::symmetric(n);
+        let b1 = bench_config_batched(&CmpConfig::default, pair, ops, rounds, 1);
+        let b8 = bench_config_batched(&CmpConfig::default, pair, ops, rounds, 8);
+        let b64 = bench_config_batched(&CmpConfig::default, pair, ops, rounds, 64);
+        println!(
+            "{:<10}{:>14.0}{:>14.0}{:>14.0}{:>9.2}x",
+            pair.label(),
+            b1,
+            b8,
+            b64,
+            if b1 > 0.0 { b64 / b1 } else { 0.0 }
+        );
+    }
+
+    // ---------------- ABL-MAG ----------------
+    println!("\n# ABL-MAG — DESIGN.md §7 per-thread node magazines (items/s)");
+    println!("{:<10}{:>14}{:>14}{:>10}", "config", "magazines", "global-only", "speedup");
+    for n in [1usize, 4, 16] {
+        let pair = PairConfig::symmetric(n);
+        let with = bench_config(&CmpConfig::default, pair, ops, rounds);
+        let without = bench_config(
+            &|| CmpConfig::default().without_magazines(),
+            pair,
+            ops,
+            rounds,
+        );
+        println!(
+            "{:<10}{:>14.0}{:>14.0}{:>9.2}x",
+            pair.label(),
+            with,
+            without,
+            if without > 0.0 { with / without } else { 0.0 }
         );
     }
 

@@ -1,12 +1,21 @@
 //! FIG1 — Figure 1 + the §4.1 throughput narrative: items/sec across
 //! 1P1C…64P64C for CMP vs the paper's comparator set (plus the extra
-//! baselines), with round-robin sequencing and 3-sigma filtering.
+//! baselines), with round-robin sequencing and 3-sigma filtering —
+//! swept across an operation batch-size axis (1/8/64) so the
+//! batch-amortization win (DESIGN.md §7) is measured, not asserted.
 //!
 //! `cargo bench --bench throughput` — or `repro bench fig1` for the
 //! CLI-configurable version. Env knobs: `BENCH_OPS`, `BENCH_ROUNDS`,
-//! `BENCH_FULL=1` to include every implementation.
+//! `BENCH_BATCHES` (comma-separated, default `1,8,64`), `BENCH_FULL=1`
+//! to include every implementation.
+//!
+//! Outputs:
+//! * `bench_results/fig1_throughput.json` — the batch-1 Figure 1 cells
+//!   (unchanged schema).
+//! * `BENCH_throughput.json` — impl × threads × batch-size → ops/s,
+//!   the machine-readable perf trajectory tracked across PRs.
 
-use cmpq::bench::report;
+use cmpq::bench::report::{self, BatchThroughputRow};
 use cmpq::bench::runner::{throughput_suite, SuiteOptions};
 use cmpq::bench::workload::PairConfig;
 use cmpq::queue::Impl;
@@ -15,8 +24,37 @@ fn env_u64(k: &str, d: u64) -> u64 {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
 }
 
+fn env_batches() -> Vec<usize> {
+    let mut batches: Vec<usize> = std::env::var("BENCH_BATCHES")
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .filter_map(|s| s.trim().parse().ok())
+                .filter(|&b| b > 0)
+                .collect()
+        })
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .unwrap_or_else(|| vec![1, 8, 64]);
+    // Batch 1 is the amortization baseline and feeds the Figure-1
+    // outputs; always include it, and drop duplicates so no batch size
+    // is swept (or reported) twice.
+    if !batches.contains(&1) {
+        batches.insert(0, 1);
+    }
+    let mut seen = Vec::new();
+    batches.retain(|b| {
+        if seen.contains(b) {
+            false
+        } else {
+            seen.push(*b);
+            true
+        }
+    });
+    batches
+}
+
 fn main() {
-    let opts = SuiteOptions {
+    let base_opts = SuiteOptions {
         total_ops: env_u64("BENCH_OPS", 60_000),
         rounds: env_u64("BENCH_ROUNDS", 3) as usize,
         warmup_rounds: 1,
@@ -30,28 +68,77 @@ fn main() {
         vec![Impl::Cmp, Impl::Segmented, Impl::MsHp, Impl::Mutex]
     };
     let pairs = PairConfig::paper_sweep();
+    let batches = env_batches();
 
     eprintln!(
-        "FIG1: {} impls × {} pairs × {} rounds, {} ops/trial",
+        "FIG1: {} impls × {} pairs × {} batch sizes × {} rounds, {} ops/trial",
         impls.len(),
         pairs.len(),
-        opts.rounds,
-        opts.total_ops
+        batches.len(),
+        base_opts.rounds,
+        base_opts.total_ops
     );
-    let cells = throughput_suite(&impls, &pairs, &opts);
-    println!("{}", report::fig1_table(&cells));
 
-    let series: Vec<(String, f64)> = cells
-        .iter()
-        .map(|c| (format!("{} {}", c.pair.label(), c.imp.name()), c.mean_ips))
-        .collect();
-    println!("{}", report::bar_chart("Figure 1 (items/sec)", &series, 48));
+    let mut rows: Vec<BatchThroughputRow> = Vec::new();
+    for &batch in &batches {
+        let opts = SuiteOptions {
+            batch_size: batch,
+            ..base_opts.clone()
+        };
+        eprintln!("-- batch size {batch} --");
+        let cells = throughput_suite(&impls, &pairs, &opts);
 
-    std::fs::create_dir_all("bench_results").ok();
-    std::fs::write(
-        "bench_results/fig1_throughput.json",
-        report::throughput_json(&cells),
-    )
-    .ok();
-    eprintln!("wrote bench_results/fig1_throughput.json");
+        if batch == 1 {
+            println!("{}", report::fig1_table(&cells));
+            let series: Vec<(String, f64)> = cells
+                .iter()
+                .map(|c| (format!("{} {}", c.pair.label(), c.imp.name()), c.mean_ips))
+                .collect();
+            println!("{}", report::bar_chart("Figure 1 (items/sec)", &series, 48));
+            std::fs::create_dir_all("bench_results").ok();
+            std::fs::write(
+                "bench_results/fig1_throughput.json",
+                report::throughput_json(&cells),
+            )
+            .ok();
+            eprintln!("wrote bench_results/fig1_throughput.json");
+        }
+
+        rows.extend(cells.into_iter().map(|cell| BatchThroughputRow { cell, batch }));
+    }
+
+    // Batch-amortization summary: CMP speedup of each batch size over
+    // batch-1 at the same thread count.
+    if batches.len() > 1 {
+        println!("# Batch amortization — CMP items/s vs batch-1");
+        print!("{:<10}", "config");
+        for b in &batches {
+            print!("{:>14}", format!("batch-{b}"));
+        }
+        println!();
+        for p in &pairs {
+            let base = rows
+                .iter()
+                .find(|r| r.cell.imp == Impl::Cmp && r.cell.pair == *p && r.batch == 1)
+                .map(|r| r.cell.mean_ips)
+                .unwrap_or(0.0);
+            print!("{:<10}", p.label());
+            for &b in &batches {
+                let ips = rows
+                    .iter()
+                    .find(|r| r.cell.imp == Impl::Cmp && r.cell.pair == *p && r.batch == b)
+                    .map(|r| r.cell.mean_ips)
+                    .unwrap_or(0.0);
+                if base > 0.0 {
+                    print!("{:>13.2}x", ips / base);
+                } else {
+                    print!("{:>14}", "-");
+                }
+            }
+            println!();
+        }
+    }
+
+    std::fs::write("BENCH_throughput.json", report::batch_throughput_json(&rows)).ok();
+    eprintln!("wrote BENCH_throughput.json ({} rows)", rows.len());
 }

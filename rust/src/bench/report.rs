@@ -168,6 +168,39 @@ pub fn throughput_json(cells: &[ThroughputCell]) -> String {
     s
 }
 
+/// One row of the `BENCH_throughput.json` perf-trajectory dump:
+/// a [`ThroughputCell`] tagged with the operation batch size it ran at.
+#[derive(Debug, Clone)]
+pub struct BatchThroughputRow {
+    pub cell: ThroughputCell,
+    pub batch: usize,
+}
+
+/// `impl × threads × batch-size → ops/s`, written to
+/// `BENCH_throughput.json` so the amortization win is tracked across
+/// PRs rather than asserted.
+pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
+    let mut s = String::from("[");
+    for (i, r) in rows.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let _ = write!(
+            s,
+            "{{\"impl\":\"{}\",\"pair\":\"{}\",\"threads\":{},\"batch\":{},\"mean_ips\":{:.3},\"std_ips\":{:.3},\"samples\":{:?}}}",
+            r.cell.imp.name(),
+            r.cell.pair.label(),
+            r.cell.pair.producers + r.cell.pair.consumers,
+            r.batch,
+            r.cell.mean_ips,
+            r.cell.std_ips,
+            r.cell.samples
+        );
+    }
+    s.push(']');
+    s
+}
+
 pub fn latency_json(cells: &[LatencyCell]) -> String {
     let mut s = String::from("[");
     for (i, c) in cells.iter().enumerate() {
@@ -298,6 +331,29 @@ mod tests {
     #[test]
     fn json_escape_specials() {
         assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn batch_throughput_json_shape() {
+        let rows = vec![
+            BatchThroughputRow {
+                cell: tcell(Impl::Cmp, 8, 5.0e6),
+                batch: 64,
+            },
+            BatchThroughputRow {
+                cell: tcell(Impl::Cmp, 8, 2.0e6),
+                batch: 1,
+            },
+        ];
+        let j = batch_throughput_json(&rows);
+        let parsed = crate::util::json::Json::parse(&j).expect("valid JSON");
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("impl").unwrap().as_str(), Some("cmp"));
+        assert_eq!(arr[0].get("batch").unwrap().as_usize(), Some(64));
+        assert_eq!(arr[0].get("threads").unwrap().as_usize(), Some(16));
+        assert_eq!(arr[1].get("pair").unwrap().as_str(), Some("8P8C"));
+        assert!(arr[0].get("mean_ips").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -23,6 +23,8 @@ pub struct SuiteOptions {
     pub load: LoadProfile,
     /// Bounded-queue capacity hint.
     pub capacity_hint: usize,
+    /// Operation batch size for throughput trials (1 = single-op API).
+    pub batch_size: usize,
     /// Print progress lines to stderr.
     pub verbose: bool,
 }
@@ -35,6 +37,7 @@ impl Default for SuiteOptions {
             warmup_rounds: 1,
             load: LoadProfile::None,
             capacity_hint: 1 << 16,
+            batch_size: 1,
             verbose: false,
         }
     }
@@ -52,6 +55,7 @@ impl SuiteOptions {
             load: self.load,
             capacity_hint: self.capacity_hint,
             max_samples_per_thread: 200_000,
+            batch_size: self.batch_size,
         }
     }
 }

@@ -52,6 +52,12 @@ pub struct TrialConfig {
     pub capacity_hint: usize,
     /// Cap on recorded latency samples per thread (memory bound).
     pub max_samples_per_thread: usize,
+    /// Operation batch size (the amortization axis, DESIGN.md §7):
+    /// producers enqueue chunks of this many items via
+    /// `try_enqueue_batch` and consumers claim up to this many per
+    /// `try_dequeue_batch`. `1` (the default) uses the single-op API,
+    /// exactly as before. Latency trials always run single-op.
+    pub batch_size: usize,
 }
 
 impl Default for TrialConfig {
@@ -61,6 +67,7 @@ impl Default for TrialConfig {
             load: LoadProfile::None,
             capacity_hint: 1 << 16,
             max_samples_per_thread: 200_000,
+            batch_size: 1,
         }
     }
 }
@@ -124,6 +131,8 @@ pub fn run_throughput_on(
         let _ = s.compare_exchange(0, now, Ordering::AcqRel, Ordering::Acquire);
     }
 
+    let batch = cfg.batch_size.max(1);
+
     let mut handles = Vec::with_capacity(pair.producers + pair.consumers);
     for p in 0..pair.producers {
         let queue = queue.clone();
@@ -133,9 +142,22 @@ pub fn run_throughput_on(
         handles.push(std::thread::spawn(move || {
             barrier.wait();
             stamp_start(anchor, &start_ns);
-            for i in 0..per_producer {
-                load.run(i ^ (p as u64) << 32);
-                queue.enqueue(p as u64 * per_producer + i);
+            let base = p as u64 * per_producer;
+            if batch <= 1 {
+                for i in 0..per_producer {
+                    load.run(i ^ (p as u64) << 32);
+                    queue.enqueue(base + i);
+                }
+            } else {
+                let mut i = 0u64;
+                while i < per_producer {
+                    let k = (batch as u64).min(per_producer - i);
+                    for j in 0..k {
+                        load.run((i + j) ^ (p as u64) << 32);
+                    }
+                    queue.enqueue_batch((base + i..base + i + k).collect());
+                    i += k;
+                }
             }
             producers_done.fetch_add(1, Ordering::AcqRel);
             end_ns.fetch_max(anchor.ns(), Ordering::AcqRel);
@@ -153,30 +175,44 @@ pub fn run_throughput_on(
             stamp_start(anchor, &start_ns);
             let mut salt = c as u64;
             let mut empty_streak = 0u32;
+            let mut buf: Vec<u64> = Vec::with_capacity(batch);
             loop {
-                load.run(salt);
-                salt = salt.wrapping_add(0x9E37_79B9);
-                match queue.try_dequeue() {
-                    Some(_) => {
-                        consumed.fetch_add(1, Ordering::AcqRel);
-                        empty_streak = 0;
+                let got = if batch <= 1 {
+                    load.run(salt);
+                    salt = salt.wrapping_add(0x9E37_79B9);
+                    match queue.try_dequeue() {
+                        Some(_) => 1,
+                        None => 0,
                     }
-                    None => {
-                        if consumed.load(Ordering::Acquire) >= total {
+                } else {
+                    let n = queue.try_dequeue_batch(batch, &mut buf);
+                    buf.clear();
+                    // Run the inter-op load once per received item so
+                    // synthetic-load regimes stay comparable per item.
+                    for _ in 0..n.max(1) {
+                        load.run(salt);
+                        salt = salt.wrapping_add(0x9E37_79B9);
+                    }
+                    n
+                };
+                if got > 0 {
+                    consumed.fetch_add(got as u64, Ordering::AcqRel);
+                    empty_streak = 0;
+                } else {
+                    if consumed.load(Ordering::Acquire) >= total {
+                        break;
+                    }
+                    // Termination must not depend on `consumed`
+                    // alone: CMP may *recover* a payload whose
+                    // claimer was preempted past the window (§3.6),
+                    // so `consumed` can stall below `total`.
+                    if producers_done.load(Ordering::Acquire) == n_producers {
+                        empty_streak += 1;
+                        if empty_streak >= EMPTY_STREAK_EXIT {
                             break;
                         }
-                        // Termination must not depend on `consumed`
-                        // alone: CMP may *recover* a payload whose
-                        // claimer was preempted past the window (§3.6),
-                        // so `consumed` can stall below `total`.
-                        if producers_done.load(Ordering::Acquire) == n_producers {
-                            empty_streak += 1;
-                            if empty_streak >= EMPTY_STREAK_EXIT {
-                                break;
-                            }
-                        }
-                        std::thread::yield_now();
                     }
+                    std::thread::yield_now();
                 }
             }
             end_ns.fetch_max(anchor.ns(), Ordering::AcqRel);
@@ -342,6 +378,34 @@ mod tests {
         assert_eq!(t.items, 4000);
         assert!(t.items_per_sec > 0.0);
         assert!(t.elapsed > Duration::ZERO);
+    }
+
+    #[test]
+    fn batched_throughput_trial_conserves_items() {
+        for batch in [8usize, 64] {
+            let cfg = TrialConfig {
+                total_ops: 4000,
+                batch_size: batch,
+                ..TrialConfig::default()
+            };
+            let t = throughput_trial(Impl::Cmp, PairConfig::symmetric(2), &cfg);
+            assert_eq!(t.items, 4000, "batch={batch}");
+            assert_eq!(t.lost, 0, "batch={batch}");
+        }
+    }
+
+    #[test]
+    fn batched_trial_works_for_default_impls_too() {
+        // Baselines ride the trait's default batch methods.
+        let cfg = TrialConfig {
+            total_ops: 4000,
+            batch_size: 8,
+            ..TrialConfig::default()
+        };
+        for imp in [Impl::Mutex, Impl::Segmented, Impl::Vyukov] {
+            let t = throughput_trial(imp, PairConfig::symmetric(2), &cfg);
+            assert_eq!(t.items, 4000, "{}", imp.name());
+        }
     }
 
     #[test]

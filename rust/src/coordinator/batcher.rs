@@ -45,6 +45,11 @@ pub fn new_work_queue() -> WorkQueue {
 
 /// Run one batcher loop over `shard` of `router`, publishing batches to
 /// `work`. Returns when `stop` is set *and* the shard is drained.
+///
+/// Requests are pulled with [`Router::drain_many`] — one amortized CMP
+/// batch claim fills as much of the pending model batch as the shard
+/// can supply, instead of one dequeue (and one pair of global RMWs) per
+/// request.
 pub fn batcher_loop(
     router: Arc<Router>,
     shard: usize,
@@ -55,35 +60,34 @@ pub fn batcher_loop(
     let mut pending: Vec<InferRequest> = Vec::with_capacity(policy.max_batch);
     let mut window_start: Option<Instant> = None;
     loop {
-        match router.drain_one(shard) {
-            Some(req) => {
-                if pending.is_empty() {
-                    window_start = Some(Instant::now());
-                }
-                pending.push(req);
-                if pending.len() >= policy.max_batch {
-                    flush(&mut pending, &work);
-                    window_start = None;
-                }
+        // `pending` is always below max_batch here (flushed on fill).
+        let room = policy.max_batch - pending.len();
+        let got = router.drain_many(shard, room, &mut pending);
+        if got > 0 {
+            if window_start.is_none() {
+                window_start = Some(Instant::now());
             }
-            None => {
-                let expired = window_start
-                    .map(|t| t.elapsed() >= policy.max_wait)
-                    .unwrap_or(false);
-                if !pending.is_empty() && expired {
-                    flush(&mut pending, &work);
-                    window_start = None;
-                } else if stop.load(Ordering::Acquire) {
-                    // Drain-then-exit: flush whatever is left.
-                    if router.inflight(shard) == 0 {
-                        if !pending.is_empty() {
-                            flush(&mut pending, &work);
-                        }
-                        return;
+            if pending.len() >= policy.max_batch {
+                flush(&mut pending, &work);
+                window_start = None;
+            }
+        } else {
+            let expired = window_start
+                .map(|t| t.elapsed() >= policy.max_wait)
+                .unwrap_or(false);
+            if !pending.is_empty() && expired {
+                flush(&mut pending, &work);
+                window_start = None;
+            } else if stop.load(Ordering::Acquire) {
+                // Drain-then-exit: flush whatever is left.
+                if router.inflight(shard) == 0 {
+                    if !pending.is_empty() {
+                        flush(&mut pending, &work);
                     }
-                } else {
-                    std::thread::yield_now();
+                    return;
                 }
+            } else {
+                std::thread::yield_now();
             }
         }
     }

@@ -96,6 +96,32 @@ impl Router {
         shard
     }
 
+    /// Route a whole batch of requests: pick a shard per request, group
+    /// the batch by shard, and publish each group with one
+    /// [`CmpQueue::push_batch`] — one cycle RMW and one tail CAS per
+    /// shard instead of per request (batch fan-in, DESIGN.md §7).
+    /// Relative order of requests that land on the same shard is
+    /// preserved.
+    pub fn route_many(&self, reqs: Vec<InferRequest>) {
+        let n = reqs.len() as u64;
+        let mut groups: Vec<Vec<InferRequest>> = Vec::new();
+        groups.resize_with(self.shards.len(), Vec::new);
+        for req in reqs {
+            let shard = self.pick(&req);
+            self.inflight[shard].fetch_add(1, Ordering::Relaxed);
+            groups[shard].push(req);
+        }
+        self.routed.fetch_add(n, Ordering::Relaxed);
+        for (shard, group) in groups.into_iter().enumerate() {
+            if group.is_empty() {
+                continue;
+            }
+            self.shards[shard]
+                .push_batch(group)
+                .unwrap_or_else(|_| panic!("unbounded CMP shard rejected a batch"));
+        }
+    }
+
     /// Dequeue from shard `i` (batcher side). Decrements the in-flight
     /// gauge on success.
     pub fn drain_one(&self, i: usize) -> Option<InferRequest> {
@@ -104,6 +130,17 @@ impl Router {
             self.inflight[i].fetch_sub(1, Ordering::Relaxed);
         }
         r
+    }
+
+    /// Dequeue up to `max` requests from shard `i` with one amortized
+    /// batch claim, appending to `out`; returns the count (batch
+    /// fan-out for the dynamic batcher).
+    pub fn drain_many(&self, i: usize, max: usize, out: &mut Vec<InferRequest>) -> usize {
+        let n = self.shards[i].pop_batch_into(max, out);
+        if n > 0 {
+            self.inflight[i].fetch_sub(n as u64, Ordering::Relaxed);
+        }
+        n
     }
 }
 
@@ -164,5 +201,36 @@ mod tests {
         }
         assert!(r.drain_one(0).is_none());
         assert_eq!(r.inflight(0), 0);
+    }
+
+    #[test]
+    fn drain_many_claims_a_fifo_run() {
+        let r = Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default());
+        for i in 0..10 {
+            r.route(req(i));
+        }
+        let mut out = Vec::new();
+        assert_eq!(r.drain_many(0, 4, &mut out), 4);
+        assert_eq!(r.inflight(0), 6);
+        assert_eq!(r.drain_many(0, 100, &mut out), 6);
+        assert_eq!(r.inflight(0), 0);
+        let ids: Vec<u64> = out.iter().map(|q| q.id).collect();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert_eq!(r.drain_many(0, 4, &mut out), 0);
+    }
+
+    #[test]
+    fn route_many_groups_by_shard_and_preserves_order() {
+        let r = Router::new(3, RoutePolicy::HashId, CmpConfig::default());
+        r.route_many((0..30).map(req).collect());
+        assert_eq!(r.routed(), 30);
+        for shard in 0..3u64 {
+            assert_eq!(r.inflight(shard as usize), 10);
+            let mut out = Vec::new();
+            r.drain_many(shard as usize, 64, &mut out);
+            let ids: Vec<u64> = out.iter().map(|q| q.id).collect();
+            let expect: Vec<u64> = (0..30).filter(|i| i % 3 == shard).collect();
+            assert_eq!(ids, expect, "per-shard FIFO through batch fan-in");
+        }
     }
 }

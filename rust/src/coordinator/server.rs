@@ -111,6 +111,28 @@ impl Server {
         slot
     }
 
+    /// Submit a whole batch of requests through the router's batch
+    /// fan-in ([`Router::route_many`]): one CMP cycle RMW and one tail
+    /// CAS per shard touched, instead of per request. Returns the slots
+    /// in submission order.
+    pub fn submit_batch(&self, features_list: Vec<Vec<f32>>) -> Vec<Arc<ResponseSlot>> {
+        let mut slots = Vec::with_capacity(features_list.len());
+        let mut reqs = Vec::with_capacity(features_list.len());
+        for features in features_list {
+            let slot = ResponseSlot::new();
+            reqs.push(InferRequest {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                features,
+                submitted_at: std::time::Instant::now(),
+                slot: slot.clone(),
+            });
+            self.metrics.record_submit();
+            slots.push(slot);
+        }
+        self.router.route_many(reqs);
+        slots
+    }
+
     /// Convenience: submit and block for the response.
     pub fn infer_blocking(&self, features: Vec<f32>, timeout: Duration) -> Option<Vec<f32>> {
         self.submit(features).wait_timeout(timeout).map(|r| r.output)
@@ -207,6 +229,31 @@ mod tests {
             assert!(s.try_take().is_some(), "drained at shutdown");
         }
         assert_eq!(metrics.completed.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn batch_submit_end_to_end() {
+        let server = Server::start(
+            ServerConfig {
+                shards: 2,
+                workers: 2,
+                batch_policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                ..ServerConfig::default()
+            },
+            echo_factory(),
+        );
+        let feats: Vec<Vec<f32>> = (0..40u32).map(|i| vec![i as f32, i as f32]).collect();
+        let slots = server.submit_batch(feats);
+        assert_eq!(slots.len(), 40);
+        for (i, s) in slots.iter().enumerate() {
+            let r = s.wait_timeout(Duration::from_secs(20)).expect("response");
+            assert_eq!(r.output, vec![i as f32 * 2.0]);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 40);
     }
 
     #[test]

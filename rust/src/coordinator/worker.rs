@@ -83,9 +83,15 @@ impl InferenceEngine for EchoEngine {
     }
 }
 
+/// How many queued batches a worker claims per amortized work-queue
+/// dequeue (one cursor/frontier RMW pair for the whole run).
+const WORK_POP_BATCH: usize = 4;
+
 /// Worker loop: consume batches until `stop` is set and the queue is
 /// empty. Oversized batches (more requests than the model batch) are
 /// split into multiple invocations; undersized ones are zero-padded.
+/// Queued batches are claimed [`WORK_POP_BATCH`] at a time through the
+/// CMP batch-dequeue path.
 pub fn worker_loop(
     work: WorkQueue,
     factory: EngineFactory,
@@ -93,15 +99,23 @@ pub fn worker_loop(
     stop: Arc<AtomicBool>,
 ) {
     let engine = factory().expect("engine construction failed");
+    let mut inbox: Vec<Batch> = Vec::with_capacity(WORK_POP_BATCH);
     loop {
-        match work.pop() {
-            Some(batch) => run_batch(&*engine, batch, &metrics),
-            None => {
-                if stop.load(Ordering::Acquire) && work.pop().is_none() {
-                    return;
-                }
-                std::thread::yield_now();
+        if work.pop_batch_into(WORK_POP_BATCH, &mut inbox) > 0 {
+            for batch in inbox.drain(..) {
+                run_batch(&*engine, batch, &metrics);
             }
+        } else if stop.load(Ordering::Acquire) {
+            // Re-probe once after observing `stop`: anything claimed
+            // here must still be processed before exiting.
+            if work.pop_batch_into(1, &mut inbox) == 0 {
+                return;
+            }
+            for batch in inbox.drain(..) {
+                run_batch(&*engine, batch, &metrics);
+            }
+        } else {
+            std::thread::yield_now();
         }
     }
 }

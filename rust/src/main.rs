@@ -53,7 +53,7 @@ fn main() {
 
 const HELP: &str = "repro — CMP queue reproduction (see README.md)\n\
 commands:\n  \
-bench <fig1|tables|fig2|faults|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--verbose]\n  \
+bench <fig1|tables|fig2|faults|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--batch K] [--verbose]\n  \
 serve [--requests N] [--clients C] [--shards S] [--workers W] [--echo]\n  \
 selftest [--artifacts DIR]\n  \
 demo";
@@ -65,6 +65,7 @@ fn suite_options(args: &Args) -> SuiteOptions {
         warmup_rounds: args.get_parse("warmup", 1usize),
         load: LoadProfile::None,
         capacity_hint: args.get_parse("capacity", 1usize << 16),
+        batch_size: args.get_parse("batch", 1usize),
         verbose: args.flag("verbose"),
     }
 }
@@ -211,7 +212,9 @@ fn echo_factory() -> EngineFactory {
 
 fn cmd_serve(args: &Args) -> i32 {
     let dir = artifacts_dir();
-    let use_echo = args.flag("echo") || !dir.join("model.hlo.txt").exists();
+    let use_echo = args.flag("echo")
+        || !cfg!(feature = "pjrt")
+        || !dir.join("model.hlo.txt").exists();
     let factory = if use_echo {
         eprintln!("serve: using echo engine (build artifacts for the real model)");
         echo_factory()

@@ -44,11 +44,26 @@ pub struct CmpConfig {
     pub helping: bool,
     /// Record detailed statistics (relaxed atomic counters).
     pub track_stats: bool,
+    /// Per-thread node-magazine capacity (DESIGN.md §7). Each thread
+    /// keeps up to this many pool nodes in a private cache, refilled
+    /// from / flushed to the global freelist in one CAS per chunk.
+    /// `0` disables magazines (every alloc hits the global freelist).
+    pub magazine_capacity: usize,
+    /// Precomputed `1 / reclaim_period` for the Bernoulli trigger —
+    /// hoisted out of the per-enqueue hot path. Derived: kept in sync
+    /// by [`CmpConfig::with_reclaim_period`], and re-normalized
+    /// unconditionally when a queue is constructed, so a manual field
+    /// write to `reclaim_period` cannot leave it stale.
+    pub bernoulli_p: f64,
 }
 
 /// Paper's `MIN_WINDOW` floor; also comfortably exceeds any thread count
 /// we run, preserving the tail-boundary margin (DESIGN.md §6).
 pub const MIN_WINDOW: u64 = 1024;
+
+/// Default per-thread magazine capacity (DESIGN.md §7): one global
+/// freelist CAS per this many allocations in steady state.
+pub const DEFAULT_MAGAZINE_CAPACITY: usize = 32;
 
 impl Default for CmpConfig {
     fn default() -> Self {
@@ -61,6 +76,8 @@ impl Default for CmpConfig {
             use_scan_cursor: true,
             helping: false,
             track_stats: true,
+            magazine_capacity: DEFAULT_MAGAZINE_CAPACITY,
+            bernoulli_p: 1.0 / 1024.0,
         }
     }
 }
@@ -82,6 +99,7 @@ impl CmpConfig {
 
     pub fn with_reclaim_period(mut self, n: u64) -> Self {
         self.reclaim_period = n.max(1);
+        self.bernoulli_p = 1.0 / self.reclaim_period as f64;
         self
     }
 
@@ -114,6 +132,18 @@ impl CmpConfig {
         self.track_stats = false;
         self
     }
+
+    /// Per-thread magazine capacity; `0` disables thread-local caching
+    /// (ABL-MAG ablation / debugging).
+    pub fn with_magazine_capacity(mut self, cap: usize) -> Self {
+        self.magazine_capacity = cap;
+        self
+    }
+
+    pub fn without_magazines(mut self) -> Self {
+        self.magazine_capacity = 0;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +159,25 @@ mod tests {
         assert!(c.use_scan_cursor);
         assert!(!c.helping);
         assert!(c.max_nodes.is_none());
+        assert_eq!(c.magazine_capacity, DEFAULT_MAGAZINE_CAPACITY);
+        assert!((c.bernoulli_p - 1.0 / c.reclaim_period as f64).abs() < 1e-15);
+    }
+
+    #[test]
+    fn bernoulli_p_tracks_reclaim_period() {
+        let c = CmpConfig::default().with_reclaim_period(17);
+        assert!((c.bernoulli_p - 1.0 / 17.0).abs() < 1e-15);
+        let c = c.with_reclaim_period(0); // floors at 1
+        assert_eq!(c.reclaim_period, 1);
+        assert!((c.bernoulli_p - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn magazine_builders_apply() {
+        let c = CmpConfig::default().with_magazine_capacity(7);
+        assert_eq!(c.magazine_capacity, 7);
+        let c = c.without_magazines();
+        assert_eq!(c.magazine_capacity, 0);
     }
 
     #[test]

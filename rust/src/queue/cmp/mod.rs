@@ -14,6 +14,16 @@
 //! Nodes live in a type-stable pool ([`pool`]) and are recycled, never
 //! freed to the OS while the queue lives, so stale pointers always
 //! reference a valid `Node` — the property §3.2.1 relies on.
+//!
+//! On top of the paper's algorithms sits a **batch/amortization layer**
+//! (DESIGN.md §7): [`CmpQueue::push_batch`] claims K contiguous cycles
+//! with one RMW and publishes a pre-linked K-node chain with one tail
+//! CAS; [`CmpQueue::pop_batch_into`] claims a run of consecutive nodes
+//! and pays the scan-cursor and `deque_cycle` RMWs once per run; and
+//! the pool keeps per-thread node *magazines* so the global freelist
+//! CAS is paid once per refill/flush chunk instead of once per
+//! operation. None of this relaxes strict FIFO — a batch occupies
+//! consecutive FIFO positions by construction.
 
 mod config;
 mod node;

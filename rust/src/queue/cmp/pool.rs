@@ -1,4 +1,5 @@
-//! Type-stable node pool (§3.2.1).
+//! Type-stable node pool (§3.2.1) with per-thread magazines (DESIGN.md
+//! §7).
 //!
 //! "All linked-list nodes are allocated and recycled from a type-stable
 //! memory pool — nodes reside in a persistent pool, recycled exclusively
@@ -11,8 +12,21 @@
 //! 32-bit ABA tag packed beside the index in one `AtomicU64`. (This tag
 //! protects only the pool-internal freelist; the queue-level ABA defense
 //! is the paper's cycle window.)
+//!
+//! On top of the shared freelist sits a **magazine layer**: each thread
+//! keeps a small private stack of free-node indices per pool. Allocation
+//! pops the magazine; an empty magazine refills with one chunked pop
+//! (single CAS for up to `magazine_capacity` nodes), so the contended
+//! `free_head` RMW is paid once per chunk instead of once per alloc.
+//! The reclaimer returns whole batches with one spliced-chain push
+//! ([`NodePool::free_chain`]). Magazines are flushed back to the global
+//! freelist when their thread exits (a thread-local destructor holds a
+//! `Weak` reference to the pool, so a dead pool simply skips the flush)
+//! or explicitly via [`NodePool::flush_local`].
 
+use std::cell::RefCell;
 use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::{Arc, Weak};
 
 use super::node::{Node, STATE_FREE};
 
@@ -36,8 +50,56 @@ fn unpack(word: u64) -> (u32, u32) {
     ((word >> 32) as u32, word as u32)
 }
 
-/// Type-stable segmented node pool.
-pub struct NodePool<T> {
+/// Erased flush target for thread-exit magazine draining. Implemented by
+/// [`PoolInner`]; object-safe so the thread-local registry can hold
+/// magazines for pools of different `T`.
+trait MagazineSink {
+    /// Splice `indices` back onto the global freelist (one CAS).
+    fn flush_indices(&self, indices: &[u32]);
+}
+
+/// One thread's private node cache for one pool.
+struct MagazineEntry {
+    pool_id: u64,
+    /// Weak so a magazine never keeps a dropped queue's pool alive by
+    /// itself; if the pool died first the indices die with its segments.
+    sink: Weak<dyn MagazineSink>,
+    slots: Vec<u32>,
+}
+
+/// Per-thread registry of magazines. The `Drop` impl is the
+/// flush-on-thread-exit guarantee (no nodes stranded in dead threads).
+struct LocalMagazines {
+    entries: Vec<MagazineEntry>,
+}
+
+impl Drop for LocalMagazines {
+    fn drop(&mut self) {
+        for e in &mut self.entries {
+            if e.slots.is_empty() {
+                continue;
+            }
+            if let Some(sink) = e.sink.upgrade() {
+                sink.flush_indices(&e.slots);
+            }
+            e.slots.clear();
+        }
+    }
+}
+
+thread_local! {
+    static MAGAZINES: RefCell<LocalMagazines> =
+        RefCell::new(LocalMagazines { entries: Vec::new() });
+}
+
+/// Pool identity for magazine routing (never reused).
+static NEXT_POOL_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Shared pool state. Lives behind an `Arc` so thread-exit flushes can
+/// race a queue drop safely: an in-flight flush holds a temporary strong
+/// reference and segment memory is released only after it completes.
+struct PoolInner<T> {
+    id: u64,
     /// Segment directory: fixed capacity, entries installed by CAS.
     segments: Box<[AtomicPtr<Node<T>>]>,
     /// Next never-used node index.
@@ -45,6 +107,7 @@ pub struct NodePool<T> {
     /// Packed freelist head (tag | idx+1).
     free_head: AtomicU64,
     /// Approximate freelist length (relaxed counter, for accounting).
+    /// Excludes magazine-cached nodes, which count as "in use".
     free_len: AtomicU64,
     /// Maintain `free_len` (one extra RMW per alloc/free). Disabled by
     /// perf configurations (`CmpConfig::without_stats`); accounting
@@ -52,6 +115,16 @@ pub struct NodePool<T> {
     count_free: bool,
     /// Optional cap on total fresh allocations.
     max_nodes: Option<usize>,
+    /// Per-thread magazine capacity; 0 disables the magazine layer.
+    magazine_capacity: usize,
+}
+
+unsafe impl<T: Send> Send for PoolInner<T> {}
+unsafe impl<T: Send> Sync for PoolInner<T> {}
+
+/// Type-stable segmented node pool with per-thread magazines.
+pub struct NodePool<T> {
+    inner: Arc<PoolInner<T>>,
 }
 
 unsafe impl<T: Send> Send for NodePool<T> {}
@@ -63,15 +136,31 @@ impl<T> NodePool<T> {
     }
 
     pub fn with_accounting(max_nodes: Option<usize>, count_free: bool) -> Self {
+        Self::with_magazines(
+            max_nodes,
+            count_free,
+            super::config::DEFAULT_MAGAZINE_CAPACITY,
+        )
+    }
+
+    pub fn with_magazines(
+        max_nodes: Option<usize>,
+        count_free: bool,
+        magazine_capacity: usize,
+    ) -> Self {
         let mut dir = Vec::with_capacity(MAX_SEGS);
         dir.resize_with(MAX_SEGS, || AtomicPtr::new(std::ptr::null_mut()));
         Self {
-            segments: dir.into_boxed_slice(),
-            next_fresh: AtomicU64::new(0),
-            free_head: AtomicU64::new(pack(0, 0)),
-            free_len: AtomicU64::new(0),
-            count_free,
-            max_nodes,
+            inner: Arc::new(PoolInner {
+                id: NEXT_POOL_ID.fetch_add(1, Ordering::Relaxed),
+                segments: dir.into_boxed_slice(),
+                next_fresh: AtomicU64::new(0),
+                free_head: AtomicU64::new(pack(0, 0)),
+                free_len: AtomicU64::new(0),
+                count_free,
+                max_nodes,
+                magazine_capacity,
+            }),
         }
     }
 
@@ -80,6 +169,146 @@ impl<T> NodePool<T> {
     /// [`Self::alloc`].
     #[inline]
     pub fn node_at(&self, idx: u32) -> *mut Node<T> {
+        self.inner.node_at(idx)
+    }
+
+    /// Push a node back on the freelist. Caller must already have reset
+    /// the node (state = FREE, next = null, payload dropped) — the
+    /// reclaimer does this (Algorithm 4 Phase 5).
+    pub fn free(&self, node: *mut Node<T>) {
+        let idx = unsafe { (*node).pool_idx };
+        self.inner.flush_indices(std::slice::from_ref(&idx));
+    }
+
+    /// Push an already-reset batch of nodes back on the freelist as one
+    /// spliced chain: a single `free_head` CAS regardless of batch size
+    /// (the reclamation release path, DESIGN.md §7).
+    pub fn free_chain(&self, nodes: &[*mut Node<T>]) {
+        if nodes.is_empty() {
+            return;
+        }
+        // Reuse the index-based splice; a reclamation batch is small and
+        // short-lived, so the temporary index vector is cheap.
+        let indices: Vec<u32> = nodes.iter().map(|&n| unsafe { (*n).pool_idx }).collect();
+        self.inner.flush_indices(&indices);
+    }
+
+    /// Total nodes ever drawn from fresh segment space — the pool's OS
+    /// memory footprint in nodes (never shrinks: type stability).
+    pub fn fresh_allocated(&self) -> u64 {
+        self.inner.next_fresh.load(Ordering::Relaxed)
+    }
+
+    /// Approximate current *global* freelist length. Nodes cached in
+    /// per-thread magazines are not counted here.
+    pub fn freelist_len(&self) -> u64 {
+        self.inner.free_len.load(Ordering::Relaxed)
+    }
+
+    /// Nodes currently outside the global freelist — live in the queue,
+    /// held by the dummy, or cached in a thread magazine:
+    /// footprint − recycled.
+    pub fn in_use(&self) -> u64 {
+        self.fresh_allocated().saturating_sub(self.freelist_len())
+    }
+
+    /// Configured per-thread magazine capacity.
+    pub fn magazine_capacity(&self) -> usize {
+        self.inner.magazine_capacity
+    }
+}
+
+impl<T: Send + 'static> NodePool<T> {
+    /// Allocate a node: this thread's magazine first, then a chunked
+    /// refill from the global freelist (one CAS per chunk), then fresh
+    /// segment space. `None` when the configured cap is exhausted — the
+    /// caller (enqueue) then triggers reclamation and retries (§3.3).
+    /// Returns `(ptr, reused)`.
+    pub fn alloc(&self) -> Option<(*mut Node<T>, bool)> {
+        if self.inner.magazine_capacity > 0 {
+            if let Ok(hit) = MAGAZINES.try_with(|m| self.alloc_cached(&mut m.borrow_mut())) {
+                return hit;
+            }
+            // TLS already torn down (thread-exit path): fall through to
+            // the uncached slow path below.
+        }
+        if let Some(node) = self.inner.pop_one() {
+            return Some((node, true));
+        }
+        self.inner.alloc_fresh()
+    }
+
+    fn alloc_cached(&self, local: &mut LocalMagazines) -> Option<(*mut Node<T>, bool)> {
+        let cap = self.inner.magazine_capacity;
+        let id = self.inner.id;
+        let i = match local.entries.iter().position(|e| e.pool_id == id) {
+            Some(i) => i,
+            None => {
+                // First touch of this pool from this thread (rare path):
+                // prune entries whose pool has died so the registry — and
+                // the linear scan above — stays bounded by the number of
+                // *live* pools, then register a weak flush handle.
+                local.entries.retain(|e| e.sink.strong_count() > 0);
+                let sink: Arc<dyn MagazineSink> = self.inner.clone();
+                local.entries.push(MagazineEntry {
+                    pool_id: id,
+                    sink: Arc::downgrade(&sink),
+                    slots: Vec::with_capacity(cap),
+                });
+                local.entries.len() - 1
+            }
+        };
+        let slots = &mut local.entries[i].slots;
+        if let Some(idx) = slots.pop() {
+            let node = self.inner.node_at(idx);
+            debug_assert_eq!(unsafe { (*node).state.load(Ordering::Relaxed) }, STATE_FREE);
+            return Some((node, true));
+        }
+        // Refill: one CAS moves up to `cap` nodes into the magazine.
+        if self.inner.pop_chunk(cap, slots) > 0 {
+            let idx = slots.pop().expect("pop_chunk > 0 implies non-empty");
+            let node = self.inner.node_at(idx);
+            debug_assert_eq!(unsafe { (*node).state.load(Ordering::Relaxed) }, STATE_FREE);
+            return Some((node, true));
+        }
+        self.inner.alloc_fresh()
+    }
+
+    /// Return this thread's magazine contents (for this pool) to the
+    /// global freelist. Used by tests and by callers that want exact
+    /// accounting from a long-lived thread; exiting threads flush
+    /// automatically.
+    pub fn flush_local(&self) {
+        let _ = MAGAZINES.try_with(|m| {
+            let mut m = m.borrow_mut();
+            if let Some(e) = m.entries.iter_mut().find(|e| e.pool_id == self.inner.id) {
+                if !e.slots.is_empty() {
+                    self.inner.flush_indices(&e.slots);
+                    e.slots.clear();
+                }
+            }
+        });
+    }
+
+    /// Number of nodes currently cached in this thread's magazine for
+    /// this pool (diagnostics / leak tests).
+    pub fn local_cached(&self) -> usize {
+        MAGAZINES
+            .try_with(|m| {
+                m.borrow()
+                    .entries
+                    .iter()
+                    .find(|e| e.pool_id == self.inner.id)
+                    .map(|e| e.slots.len())
+                    .unwrap_or(0)
+            })
+            .unwrap_or(0)
+    }
+}
+
+impl<T> PoolInner<T> {
+    #[inline]
+    fn node_at(&self, idx: u32) -> *mut Node<T> {
         let seg = (idx as usize) >> SEG_SHIFT;
         let off = (idx as usize) & (SEG_SIZE - 1);
         let base = self.segments[seg].load(Ordering::Acquire);
@@ -87,17 +316,14 @@ impl<T> NodePool<T> {
         unsafe { base.add(off) }
     }
 
-    /// Allocate a node: freelist first (recycle), fresh segment space
-    /// otherwise. `None` when the configured cap is exhausted — the
-    /// caller (enqueue) then triggers reclamation and retries (§3.3).
-    /// Returns `(ptr, reused)`.
-    pub fn alloc(&self) -> Option<(*mut Node<T>, bool)> {
-        // Freelist pop (tagged to defeat pool-internal ABA).
+    /// Pop a single node from the global freelist (tagged to defeat
+    /// pool-internal ABA). The magazine-less slow path.
+    fn pop_one(&self) -> Option<*mut Node<T>> {
         let mut head = self.free_head.load(Ordering::Acquire);
         loop {
             let (tag, idx_plus1) = unpack(head);
             if idx_plus1 == 0 {
-                break;
+                return None;
             }
             let node = self.node_at(idx_plus1 - 1);
             let next = unsafe { (*node).free_next.load(Ordering::Acquire) };
@@ -116,13 +342,63 @@ impl<T> NodePool<T> {
                         unsafe { (*node).state.load(Ordering::Relaxed) },
                         STATE_FREE
                     );
-                    return Some((node, true));
+                    return Some(node);
                 }
                 Err(cur) => head = cur,
             }
         }
+    }
 
-        // Fresh allocation.
+    /// Pop up to `max` nodes from the global freelist with one CAS,
+    /// **replacing** the contents of `out` with their indices (the
+    /// vector is cleared on every CAS attempt — callers must pass an
+    /// empty or disposable buffer). Returns the count (0 = empty).
+    ///
+    /// The walk reads `free_next` links of nodes still on the shared
+    /// stack; that is safe because nodes are type-stable and a link can
+    /// only change via a successful `free_head` CAS, which bumps the tag
+    /// and fails ours — any chain observed under an unchanged tag is
+    /// consistent.
+    fn pop_chunk(&self, max: usize, out: &mut Vec<u32>) -> usize {
+        debug_assert!(max > 0);
+        let mut head = self.free_head.load(Ordering::Acquire);
+        loop {
+            let (tag, first) = unpack(head);
+            if first == 0 {
+                return 0;
+            }
+            out.clear();
+            let mut cur = first;
+            let mut rest = 0u32;
+            for _ in 0..max {
+                let node = self.node_at(cur - 1);
+                out.push(cur - 1);
+                rest = unsafe { (*node).free_next.load(Ordering::Acquire) };
+                if rest == 0 {
+                    break;
+                }
+                cur = rest;
+            }
+            let new = pack(tag.wrapping_add(1), rest);
+            match self.free_head.compare_exchange_weak(
+                head,
+                new,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    if self.count_free {
+                        self.free_len.fetch_sub(out.len() as u64, Ordering::Relaxed);
+                    }
+                    return out.len();
+                }
+                Err(cur_head) => head = cur_head,
+            }
+        }
+    }
+
+    /// Fresh allocation from never-used segment space.
+    fn alloc_fresh(&self) -> Option<(*mut Node<T>, bool)> {
         loop {
             let idx = self.next_fresh.load(Ordering::Relaxed);
             if let Some(cap) = self.max_nodes {
@@ -145,33 +421,6 @@ impl<T> NodePool<T> {
             let idx = idx as u32;
             self.ensure_segment((idx as usize) >> SEG_SHIFT);
             return Some((self.node_at(idx), false));
-        }
-    }
-
-    /// Push a node back on the freelist. Caller must already have reset
-    /// the node (state = FREE, next = null, payload dropped) — the
-    /// reclaimer does this (Algorithm 4 Phase 5).
-    pub fn free(&self, node: *mut Node<T>) {
-        let idx = unsafe { (*node).pool_idx };
-        let mut head = self.free_head.load(Ordering::Acquire);
-        loop {
-            let (tag, idx_plus1) = unpack(head);
-            unsafe { (*node).free_next.store(idx_plus1, Ordering::Release) };
-            let new = pack(tag.wrapping_add(1), idx + 1);
-            match self.free_head.compare_exchange_weak(
-                head,
-                new,
-                Ordering::AcqRel,
-                Ordering::Acquire,
-            ) {
-                Ok(_) => {
-                    if self.count_free {
-                        self.free_len.fetch_add(1, Ordering::Relaxed);
-                    }
-                    return;
-                }
-                Err(cur) => head = cur,
-            }
         }
     }
 
@@ -202,30 +451,51 @@ impl<T> NodePool<T> {
             }
         }
     }
+}
 
-    /// Total nodes ever drawn from fresh segment space — the pool's OS
-    /// memory footprint in nodes (never shrinks: type stability).
-    pub fn fresh_allocated(&self) -> u64 {
-        self.next_fresh.load(Ordering::Relaxed)
-    }
-
-    /// Approximate current freelist length.
-    pub fn freelist_len(&self) -> u64 {
-        self.free_len.load(Ordering::Relaxed)
-    }
-
-    /// Nodes currently outside the freelist (live in the queue or held
-    /// by the dummy): footprint − recycled.
-    pub fn in_use(&self) -> u64 {
-        self.fresh_allocated().saturating_sub(self.freelist_len())
+impl<T> MagazineSink for PoolInner<T> {
+    /// Splice `indices` onto the freelist as one pre-linked chain:
+    /// `indices[0] → indices[1] → … → old head`, published with a
+    /// single CAS.
+    fn flush_indices(&self, indices: &[u32]) {
+        if indices.is_empty() {
+            return;
+        }
+        for w in indices.windows(2) {
+            let node = self.node_at(w[0]);
+            unsafe { (*node).free_next.store(w[1] + 1, Ordering::Relaxed) };
+        }
+        let first = indices[0];
+        let last = self.node_at(*indices.last().expect("non-empty"));
+        let mut head = self.free_head.load(Ordering::Acquire);
+        loop {
+            let (tag, old_first) = unpack(head);
+            unsafe { (*last).free_next.store(old_first, Ordering::Release) };
+            let new = pack(tag.wrapping_add(1), first + 1);
+            match self.free_head.compare_exchange_weak(
+                head,
+                new,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => {
+                    if self.count_free {
+                        self.free_len.fetch_add(indices.len() as u64, Ordering::Relaxed);
+                    }
+                    return;
+                }
+                Err(cur) => head = cur,
+            }
+        }
     }
 }
 
-impl<T> Drop for NodePool<T> {
+impl<T> Drop for PoolInner<T> {
     fn drop(&mut self) {
         // The owning queue has already dropped any live payloads. Here we
         // only release segment memory (the one place nodes return to the
-        // OS — after the data structure itself is gone).
+        // OS — after the data structure itself is gone, and after any
+        // in-flight thread-exit flush has dropped its temporary Arc).
         for slot in self.segments.iter() {
             let ptr = slot.load(Ordering::Acquire);
             if !ptr.is_null() {
@@ -339,6 +609,8 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+        // Worker magazines were flushed on thread exit; everything is
+        // back on the global freelist.
         assert_eq!(pool.in_use(), 0, "everything returned");
     }
 
@@ -352,5 +624,90 @@ mod tests {
             pool.free(n);
         }
         assert_eq!(pool.in_use(), 0);
+    }
+
+    #[test]
+    fn chunked_refill_fills_magazine() {
+        let pool: NodePool<u32> = NodePool::with_magazines(None, true, 8);
+        // Seed the global freelist with 20 recycled nodes.
+        let nodes: Vec<_> = (0..20).map(|_| pool.alloc().unwrap().0).collect();
+        pool.flush_local();
+        pool.free_chain(&nodes);
+        assert_eq!(pool.freelist_len(), 20);
+        // One alloc pulls a whole chunk: 1 returned + 7 cached.
+        let (_n, reused) = pool.alloc().unwrap();
+        assert!(reused);
+        assert_eq!(pool.local_cached(), 7);
+        assert_eq!(pool.freelist_len(), 12);
+        // Subsequent allocs drain the magazine without touching the
+        // global freelist.
+        for _ in 0..7 {
+            assert!(pool.alloc().unwrap().1);
+        }
+        assert_eq!(pool.local_cached(), 0);
+        assert_eq!(pool.freelist_len(), 12);
+    }
+
+    #[test]
+    fn flush_local_returns_cached_nodes() {
+        let pool: NodePool<u32> = NodePool::with_magazines(None, true, 8);
+        let nodes: Vec<_> = (0..8).map(|_| pool.alloc().unwrap().0).collect();
+        pool.free_chain(&nodes);
+        let _ = pool.alloc().unwrap(); // refill: 1 out, 7 cached
+        assert_eq!(pool.local_cached(), 7);
+        let held = pool.in_use();
+        pool.flush_local();
+        assert_eq!(pool.local_cached(), 0);
+        assert_eq!(pool.in_use(), held - 7, "cached nodes returned");
+    }
+
+    #[test]
+    fn magazine_flushes_on_thread_exit() {
+        let pool: Arc<NodePool<u64>> = Arc::new(NodePool::with_magazines(None, true, 16));
+        // Seed recycled nodes so the worker's allocs go through refill.
+        let nodes: Vec<_> = (0..32).map(|_| pool.alloc().unwrap().0).collect();
+        pool.flush_local();
+        pool.free_chain(&nodes);
+        let before = pool.in_use();
+        assert_eq!(before, 0);
+        let p = pool.clone();
+        std::thread::spawn(move || {
+            let (n, reused) = p.alloc().unwrap();
+            assert!(reused);
+            assert!(p.local_cached() > 0, "refill cached extra nodes");
+            p.free(n);
+            // Exit with a non-empty magazine: the TLS destructor must
+            // flush it.
+        })
+        .join()
+        .unwrap();
+        assert_eq!(pool.in_use(), 0, "no nodes stranded in the dead thread");
+    }
+
+    #[test]
+    fn free_chain_is_one_splice() {
+        let pool: NodePool<u32> = NodePool::with_magazines(None, true, 0);
+        let nodes: Vec<_> = (0..10).map(|_| pool.alloc().unwrap().0).collect();
+        pool.free_chain(&nodes);
+        assert_eq!(pool.freelist_len(), 10);
+        // All ten come back out, each exactly once.
+        let mut seen: Vec<u32> = (0..10)
+            .map(|_| unsafe { (*pool.alloc().unwrap().0).pool_idx })
+            .collect();
+        seen.sort_unstable();
+        seen.dedup();
+        assert_eq!(seen.len(), 10, "no duplicates from the spliced chain");
+        assert!(!pool.alloc().unwrap().1, "11th alloc is fresh again");
+    }
+
+    #[test]
+    fn zero_capacity_disables_magazines() {
+        let pool: NodePool<u32> = NodePool::with_magazines(None, true, 0);
+        let (a, _) = pool.alloc().unwrap();
+        pool.free(a);
+        assert_eq!(pool.freelist_len(), 1);
+        let (_b, reused) = pool.alloc().unwrap();
+        assert!(reused);
+        assert_eq!(pool.local_cached(), 0, "nothing cached when disabled");
     }
 }

@@ -31,6 +31,15 @@ thread_local! {
     ));
 }
 
+/// Outcome of the dequeue Phase 1–2 scan ([`CmpQueue::claim_first`]):
+/// the claimed node plus the cursor observation the later
+/// cursor-advance phase needs for its ABA-guarded CAS.
+struct ClaimedStart<T> {
+    node: *mut Node<T>,
+    last_cursor: *mut Node<T>,
+    cursor_cycle: u64,
+}
+
 /// Lock-free, strict-FIFO, unbounded MPMC queue with Cyclic Memory
 /// Protection (the paper's contribution, §3).
 ///
@@ -66,23 +75,43 @@ pub struct CmpQueue<T> {
 unsafe impl<T: Send> Send for CmpQueue<T> {}
 unsafe impl<T: Send> Sync for CmpQueue<T> {}
 
-impl<T: Send> Default for CmpQueue<T> {
+impl<T: Send + 'static> Default for CmpQueue<T> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<T: Send> CmpQueue<T> {
+impl<T: Send + 'static> CmpQueue<T> {
     /// Queue with the default configuration (`W = 4096`, `N = 1024`).
     pub fn new() -> Self {
         Self::with_config(CmpConfig::default())
     }
 
     /// Queue with an explicit configuration (window sizing per §3.1).
-    pub fn with_config(config: CmpConfig) -> Self {
+    pub fn with_config(mut config: CmpConfig) -> Self {
+        // Normalize here, where the config freezes: a caller that set
+        // `reclaim_period` by field access (bypassing the builders) can
+        // neither leave a stale `bernoulli_p` on the hot path nor a
+        // zero period for the Modulo trigger to divide by.
+        config.reclaim_period = config.reclaim_period.max(1);
+        config.bernoulli_p = 1.0 / config.reclaim_period as f64;
+        // Bounded pools: disable the per-thread magazines. With a
+        // `max_nodes` cap, idle threads' caches could strand the whole
+        // budget where no other allocator (nor reclamation's pressure
+        // relief) can reach it, breaking push's "fails only when
+        // reclamation cannot relieve the pressure" contract. Unbounded
+        // pools — the production default — keep the amortization
+        // (DESIGN.md §7).
+        if config.max_nodes.is_some() {
+            config.magazine_capacity = 0;
+        }
         // `track_stats` also gates the pool's freelist accounting RMW
         // (§Perf experiment 2: one fewer atomic per alloc/free pair).
-        let pool = NodePool::with_accounting(config.max_nodes, config.track_stats);
+        let pool = NodePool::with_magazines(
+            config.max_nodes,
+            config.track_stats,
+            config.magazine_capacity,
+        );
         let (dummy, _) = pool
             .alloc()
             .expect("pool must fit at least the dummy node");
@@ -157,64 +186,149 @@ impl<T: Send> CmpQueue<T> {
             (*node).state.store(STATE_AVAILABLE, Ordering::Release);
 
             // Phase 2: lock-free insertion (M&S without helping, §3.4).
-            let mut retries = 0u32;
-            let mut backoff = Backoff::new();
-            loop {
-                let tail = self.tail.load(Ordering::Acquire);
-                let next = (*tail).next.load(Ordering::Acquire);
-                if !next.is_null() {
-                    // Tail is stale.
-                    CmpStats::bump(&self.stats.enq_retries, self.config.track_stats);
-                    if self.config.helping {
-                        // §3.4 ablation: original M&S helping — advance
-                        // tail using the (possibly stale) next pointer.
-                        let _ = self.tail.compare_exchange(
-                            tail,
-                            next,
-                            Ordering::AcqRel,
-                            Ordering::Acquire,
-                        );
-                    } else {
-                        // Paper's design: retry with fresh state; pause
-                        // when necessary (Algorithm 1 lines 15–21).
-                        retries += 1;
-                        if retries > 3 {
-                            backoff.spin();
-                        }
-                    }
-                    continue;
-                }
-                // Attempt to link the new node.
-                if (*tail)
-                    .next
-                    .compare_exchange(
-                        ptr::null_mut(),
-                        node,
-                        Ordering::AcqRel,
-                        Ordering::Acquire,
-                    )
-                    .is_ok()
-                {
-                    // Optional tail advancement (failure is benign: the
-                    // next enqueuer observes next ≠ null and waits for
-                    // us — see DESIGN.md §6 tail-lag argument).
-                    let _ = self.tail.compare_exchange(
-                        tail,
-                        node,
-                        Ordering::AcqRel,
-                        Ordering::Acquire,
-                    );
-                    break;
-                }
-                CmpStats::bump(&self.stats.enq_retries, self.config.track_stats);
-                retries += 1;
-                if retries > 3 {
-                    backoff.spin();
-                }
-            }
+            self.link_chain(node, node);
 
             // Phase 3: conditional reclamation.
             if self.should_trigger_reclaim(cycle) {
+                self.reclaim();
+            }
+        }
+        Ok(())
+    }
+
+    /// Phase-2 insertion shared by `push` (a 1-node chain) and
+    /// `push_batch`: link the private chain `first..=last` after the
+    /// physical tail with one CAS, then opportunistically advance the
+    /// tail hint to `last` (M&S without helping by default, §3.4).
+    ///
+    /// # Safety
+    /// `first..=last` must be a valid, fully initialized chain that no
+    /// other thread can reach yet, with `(*last).next == null`.
+    unsafe fn link_chain(&self, first: *mut Node<T>, last: *mut Node<T>) {
+        let mut retries = 0u32;
+        let mut backoff = Backoff::new();
+        loop {
+            let tail = self.tail.load(Ordering::Acquire);
+            let next = (*tail).next.load(Ordering::Acquire);
+            if !next.is_null() {
+                // Tail is stale.
+                CmpStats::bump(&self.stats.enq_retries, self.config.track_stats);
+                if self.config.helping {
+                    // §3.4 ablation: original M&S helping — advance
+                    // tail using the (possibly stale) next pointer.
+                    let _ = self.tail.compare_exchange(
+                        tail,
+                        next,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    );
+                } else {
+                    // Paper's design: retry with fresh state; pause
+                    // when necessary (Algorithm 1 lines 15–21).
+                    retries += 1;
+                    if retries > 3 {
+                        backoff.spin();
+                    }
+                }
+                continue;
+            }
+            // Attempt to link the new chain.
+            if (*tail)
+                .next
+                .compare_exchange(
+                    ptr::null_mut(),
+                    first,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                // Optional tail advancement (failure is benign: the
+                // next enqueuer observes next ≠ null and waits for
+                // us — see DESIGN.md §6 tail-lag argument).
+                let _ = self.tail.compare_exchange(
+                    tail,
+                    last,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                );
+                return;
+            }
+            CmpStats::bump(&self.stats.enq_retries, self.config.track_stats);
+            retries += 1;
+            if retries > 3 {
+                backoff.spin();
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Batch enqueue (DESIGN.md §7) — amortized Algorithm 1
+    // ------------------------------------------------------------------
+
+    /// Enqueue `items` as one atomic batch: K nodes are pre-linked into
+    /// a private chain, K contiguous cycles are claimed with a single
+    /// `fetch_add(K)`, and the chain is published with a single
+    /// tail-link CAS — so the two global RMWs of the enqueue hot path
+    /// are paid once per batch instead of once per item. Because the
+    /// chain is linked before publication, the batch occupies
+    /// consecutive positions in the FIFO (no other enqueue can
+    /// interleave inside it).
+    ///
+    /// All-or-nothing: on pool exhaustion (bounded `max_nodes` that
+    /// reclamation cannot relieve) every item is handed back untouched.
+    /// An empty batch is a no-op.
+    pub fn push_batch(&self, items: Vec<T>) -> Result<(), Vec<T>> {
+        if items.is_empty() {
+            return Ok(());
+        }
+        let k = items.len();
+        // Phase 1: allocate all K nodes up front (§3.3 pressure relief
+        // applies per node). Nodes are still FREE; on failure they go
+        // straight back with one spliced push.
+        let mut nodes: Vec<*mut Node<T>> = Vec::with_capacity(k);
+        for _ in 0..k {
+            match self.alloc_node() {
+                Some(n) => nodes.push(n),
+                None => {
+                    self.pool.free_chain(&nodes);
+                    return Err(items);
+                }
+            }
+        }
+        unsafe {
+            // Phase 2: claim K contiguous cycles with one global RMW.
+            let base = self.cycle.fetch_add(k as u64, Ordering::AcqRel);
+            let last_cycle = base + k as u64;
+
+            // Phase 3: build the private chain in FIFO order. Nothing is
+            // visible to other threads until the link CAS below.
+            for (i, item) in items.into_iter().enumerate() {
+                let node = nodes[i];
+                let next = if i + 1 < k {
+                    nodes[i + 1]
+                } else {
+                    ptr::null_mut()
+                };
+                (*node).next.store(next, Ordering::Relaxed);
+                (*node).put_data(item);
+                (*node).cycle.store(base + 1 + i as u64, Ordering::Relaxed);
+                // Publish AVAILABLE before the link CAS releases the node.
+                (*node).state.store(STATE_AVAILABLE, Ordering::Release);
+            }
+            // Phase 4: single lock-free insertion of the whole chain
+            // (exactly `push`'s Phase 2 — shared in `link_chain`).
+            self.link_chain(nodes[0], nodes[k - 1]);
+
+            CmpStats::bump(&self.stats.batch_enqueues, self.config.track_stats);
+            CmpStats::add(
+                &self.stats.batch_enqueued_items,
+                k as u64,
+                self.config.track_stats,
+            );
+
+            // Phase 5: conditional reclamation, once per batch.
+            if self.should_trigger_reclaim_span(last_cycle, k as u64) {
                 self.reclaim();
             }
         }
@@ -245,10 +359,23 @@ impl<T: Send> CmpQueue<T> {
 
     #[inline]
     fn should_trigger_reclaim(&self, cycle: u64) -> bool {
+        self.should_trigger_reclaim_span(cycle, 1)
+    }
+
+    /// Trigger decision for an operation that claimed the cycle span
+    /// `(last_cycle − span, last_cycle]` (span = 1 for single enqueues,
+    /// K for `push_batch`). Modulo fires iff the span crossed a multiple
+    /// of the period; Bernoulli runs one trial with probability scaled
+    /// by the span, using the precomputed `1/N` from [`CmpConfig`].
+    #[inline]
+    fn should_trigger_reclaim_span(&self, last_cycle: u64, span: u64) -> bool {
         match self.config.trigger {
-            ReclaimTrigger::Modulo => cycle % self.config.reclaim_period == 0,
+            ReclaimTrigger::Modulo => {
+                let n = self.config.reclaim_period;
+                last_cycle / n != (last_cycle - span) / n
+            }
             ReclaimTrigger::Bernoulli => {
-                let p = 1.0 / self.config.reclaim_period as f64;
+                let p = (self.config.bernoulli_p * span as f64).min(1.0);
                 TRIGGER_RNG.with(|r| r.borrow_mut().chance(p))
             }
             ReclaimTrigger::Manual => false,
@@ -291,47 +418,9 @@ impl<T: Send> CmpQueue<T> {
     /// empty at the linearization point.
     pub fn pop(&self) -> Option<T> {
         unsafe {
-            let mut current = self.head.load(Ordering::Acquire); // dummy, non-null
-            let mut last_deque_cycle = 0u64;
-            let mut last_cursor: *mut Node<T> = ptr::null_mut();
-            let mut cursor_cycle = 0u64;
-            let mut first_probe = true;
-
             // Phases 1–2: cursor-guided scan and atomic claim.
-            loop {
-                if current.is_null() {
-                    return None; // reached the end: empty at this point
-                }
-                if self.config.use_scan_cursor {
-                    let deque_cycle = self.deque_cycle.load(Ordering::Acquire);
-                    if deque_cycle != last_deque_cycle {
-                        // Other threads progressed: restart from the
-                        // advertised cursor (§3.5 Phase 1).
-                        last_deque_cycle = deque_cycle;
-                        current = self.scan_cursor.load(Ordering::Acquire);
-                        last_cursor = current;
-                        cursor_cycle = (*current).cycle.load(Ordering::Acquire);
-                    }
-                }
-                // Phase 2: atomic node claiming (single winner).
-                if (*current)
-                    .state
-                    .compare_exchange(
-                        STATE_AVAILABLE,
-                        STATE_CLAIMED,
-                        Ordering::AcqRel,
-                        Ordering::Acquire,
-                    )
-                    .is_ok()
-                {
-                    break;
-                }
-                if !first_probe {
-                    CmpStats::bump(&self.stats.deq_extra_scans, self.config.track_stats);
-                }
-                first_probe = false;
-                current = (*current).next.load(Ordering::Acquire);
-            }
+            let start = self.claim_first()?;
+            let current = start.node;
 
             // Phase 3: claim the payload (detect reincarnation / stall
             // -past-window reclamation, §3.5 Phase 3).
@@ -347,86 +436,308 @@ impl<T: Send> CmpQueue<T> {
                 }
             };
 
-            // Phase 4: opportunistic scan-cursor advance. The dual
-            // (pointer, cycle) condition is the mathematical ABA guard:
-            // a recycled cursor node carries a different cycle.
-            let mut advance_boundary = true;
-            if self.config.use_scan_cursor && !last_cursor.is_null() {
-                let sc = self.scan_cursor.load(Ordering::Acquire);
-                if sc == last_cursor
-                    && (*sc).cycle.load(Ordering::Acquire) == cursor_cycle
-                {
-                    let next = (*current).next.load(Ordering::Acquire);
-                    advance_boundary = false;
-                    if next.is_null() {
-                        // We claimed the last linked node. Algorithm 3 as
-                        // printed leaves the cursor untouched here, but
-                        // that lets it stagnate arbitrarily far behind
-                        // `deque_cycle` under alternating push/pop —
-                        // breaking the §3.5/§3.6 invariant
-                        // `scan_cursor.cycle ≥ deque_cycle` the reclaimer
-                        // depends on (a stagnant cursor node can then be
-                        // recycled and a claim on its new incarnation
-                        // violates FIFO). Advance to the claimed node
-                        // itself, which restores the invariant
-                        // (DESIGN.md §6).
-                        if current != last_cursor {
-                            let _ = self.scan_cursor.compare_exchange(
-                                last_cursor,
-                                current,
-                                Ordering::AcqRel,
-                                Ordering::Acquire,
-                            );
-                        }
-                        advance_boundary = true;
-                    } else if self
-                        .scan_cursor
-                        .compare_exchange(
-                            last_cursor,
-                            next,
-                            Ordering::AcqRel,
-                            Ordering::Acquire,
-                        )
-                        .is_ok()
-                    {
-                        CmpStats::bump(&self.stats.cursor_advances, self.config.track_stats);
-                        advance_boundary = true;
-                    } else {
-                        CmpStats::bump(&self.stats.cursor_misses, self.config.track_stats);
-                    }
-                }
-            }
-
-            // Phase 5: protection boundary update — publish the highest
-            // claimed cycle (monotonic max via CAS loop).
-            if advance_boundary {
-                let my_cycle = (*current).cycle.load(Ordering::Acquire);
-                let mut cur = self.deque_cycle.load(Ordering::Acquire);
-                while cur < my_cycle {
-                    match self.deque_cycle.compare_exchange_weak(
-                        cur,
-                        my_cycle,
-                        Ordering::AcqRel,
-                        Ordering::Acquire,
-                    ) {
-                        Ok(_) => break,
-                        Err(now) => cur = now,
-                    }
-                }
-            }
+            // Phases 4–5: cursor advance + frontier publication.
+            let my_cycle = (*current).cycle.load(Ordering::Acquire);
+            self.finish_claim(current, &start, my_cycle);
 
             Some(data)
         }
     }
+
+    /// Phases 1–2 of Algorithm 3, shared by `pop` and `pop_batch_into`:
+    /// cursor-guided scan from head, claim the first AVAILABLE node
+    /// (single winner). `None` means the scan reached the end — empty
+    /// at that linearization point.
+    ///
+    /// # Safety
+    /// Standard CMP traversal: every pointer walked stays dereferenceable
+    /// because nodes are type-stable for the queue's lifetime.
+    unsafe fn claim_first(&self) -> Option<ClaimedStart<T>> {
+        let mut current = self.head.load(Ordering::Acquire); // dummy, non-null
+        let mut last_deque_cycle = 0u64;
+        let mut last_cursor: *mut Node<T> = ptr::null_mut();
+        let mut cursor_cycle = 0u64;
+        let mut first_probe = true;
+
+        loop {
+            if current.is_null() {
+                return None; // reached the end: empty at this point
+            }
+            if self.config.use_scan_cursor {
+                let deque_cycle = self.deque_cycle.load(Ordering::Acquire);
+                if deque_cycle != last_deque_cycle {
+                    // Other threads progressed: restart from the
+                    // advertised cursor (§3.5 Phase 1).
+                    last_deque_cycle = deque_cycle;
+                    current = self.scan_cursor.load(Ordering::Acquire);
+                    last_cursor = current;
+                    cursor_cycle = (*current).cycle.load(Ordering::Acquire);
+                }
+            }
+            // Phase 2: atomic node claiming (single winner).
+            if (*current)
+                .state
+                .compare_exchange(
+                    STATE_AVAILABLE,
+                    STATE_CLAIMED,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                )
+                .is_ok()
+            {
+                return Some(ClaimedStart {
+                    node: current,
+                    last_cursor,
+                    cursor_cycle,
+                });
+            }
+            if !first_probe {
+                CmpStats::bump(&self.stats.deq_extra_scans, self.config.track_stats);
+            }
+            first_probe = false;
+            current = (*current).next.load(Ordering::Acquire);
+        }
+    }
+
+    /// Phases 4–5 of Algorithm 3, shared by `pop` (run of one) and
+    /// `pop_batch_into` (run of many): one opportunistic scan-cursor
+    /// advance past `current` (the run's last claimed node) and, if the
+    /// cursor protocol permits, one monotonic CAS-max publication of
+    /// `claimed_cycle` (the run's highest claimed cycle) to the
+    /// protection frontier.
+    ///
+    /// The dual (pointer, cycle) cursor condition is the mathematical
+    /// ABA guard: a recycled cursor node carries a different cycle.
+    ///
+    /// # Safety
+    /// `current` must be a node this caller claimed in this operation;
+    /// `start` must come from the same [`Self::claim_first`] call.
+    unsafe fn finish_claim(
+        &self,
+        current: *mut Node<T>,
+        start: &ClaimedStart<T>,
+        claimed_cycle: u64,
+    ) {
+        // Phase 4: opportunistic scan-cursor advance.
+        let mut advance_boundary = true;
+        if self.config.use_scan_cursor && !start.last_cursor.is_null() {
+            let sc = self.scan_cursor.load(Ordering::Acquire);
+            if sc == start.last_cursor
+                && (*sc).cycle.load(Ordering::Acquire) == start.cursor_cycle
+            {
+                let next = (*current).next.load(Ordering::Acquire);
+                advance_boundary = false;
+                if next.is_null() {
+                    // We claimed the last linked node. Algorithm 3 as
+                    // printed leaves the cursor untouched here, but
+                    // that lets it stagnate arbitrarily far behind
+                    // `deque_cycle` under alternating push/pop —
+                    // breaking the §3.5/§3.6 invariant
+                    // `scan_cursor.cycle ≥ deque_cycle` the reclaimer
+                    // depends on (a stagnant cursor node can then be
+                    // recycled and a claim on its new incarnation
+                    // violates FIFO). Advance to the claimed node
+                    // itself, which restores the invariant
+                    // (DESIGN.md §6).
+                    if current != start.last_cursor {
+                        let _ = self.scan_cursor.compare_exchange(
+                            start.last_cursor,
+                            current,
+                            Ordering::AcqRel,
+                            Ordering::Acquire,
+                        );
+                    }
+                    advance_boundary = true;
+                } else if self
+                    .scan_cursor
+                    .compare_exchange(
+                        start.last_cursor,
+                        next,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_ok()
+                {
+                    CmpStats::bump(&self.stats.cursor_advances, self.config.track_stats);
+                    advance_boundary = true;
+                } else {
+                    CmpStats::bump(&self.stats.cursor_misses, self.config.track_stats);
+                }
+            }
+        }
+
+        // Phase 5: protection boundary update — publish the highest
+        // claimed cycle (monotonic max via CAS loop).
+        if advance_boundary {
+            let mut cur = self.deque_cycle.load(Ordering::Acquire);
+            while cur < claimed_cycle {
+                match self.deque_cycle.compare_exchange_weak(
+                    cur,
+                    claimed_cycle,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => break,
+                    Err(now) => cur = now,
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Batch dequeue (DESIGN.md §7) — amortized Algorithm 3
+    // ------------------------------------------------------------------
+
+    /// Dequeue up to `max` items, appending them to `out` in FIFO
+    /// order; returns the number claimed. A run of consecutive
+    /// AVAILABLE nodes is claimed node-by-node (the per-node claim CAS
+    /// is unavoidable — it is the single-winner point), but the two
+    /// *global* RMWs of the dequeue path — the scan-cursor CAS and the
+    /// `deque_cycle` frontier CAS — are paid once per run instead of
+    /// once per item.
+    pub fn pop_batch_into(&self, max: usize, out: &mut Vec<T>) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let before = out.len();
+        unsafe {
+            // Phases 1–2 (shared with `pop`): cursor-guided scan, claim
+            // the first AVAILABLE node.
+            let start = match self.claim_first() {
+                Some(s) => s,
+                None => return 0, // reached the end: empty at this point
+            };
+            let mut current = start.node;
+
+            // Phase 3, per node: extend the claimed run along the list,
+            // taking each payload (reincarnation guard as in `pop`).
+            // `last_taken` tracks the last node whose payload we
+            // actually took: a lost-claim break leaves `current` on a
+            // possibly *reincarnated* node, and advancing the cursor
+            // through its new `next` would skip live items — only
+            // nodes we verifiably own may steer Phase 4.
+            let mut last_taken: *mut Node<T> = ptr::null_mut();
+            let mut max_cycle = 0u64;
+            loop {
+                if (*current).state.load(Ordering::Acquire) == STATE_AVAILABLE {
+                    // Recycled + republished between claim and read.
+                    CmpStats::bump(&self.stats.lost_claims, self.config.track_stats);
+                    break;
+                }
+                match (*current).take_data() {
+                    Some(d) => {
+                        out.push(d);
+                        last_taken = current;
+                        let c = (*current).cycle.load(Ordering::Acquire);
+                        if c > max_cycle {
+                            max_cycle = c;
+                        }
+                    }
+                    None => {
+                        CmpStats::bump(&self.stats.lost_claims, self.config.track_stats);
+                        break;
+                    }
+                }
+                if out.len() - before >= max {
+                    break;
+                }
+                let next = (*current).next.load(Ordering::Acquire);
+                if next.is_null() {
+                    break; // claimed through the linked tail
+                }
+                if (*next)
+                    .state
+                    .compare_exchange(
+                        STATE_AVAILABLE,
+                        STATE_CLAIMED,
+                        Ordering::AcqRel,
+                        Ordering::Acquire,
+                    )
+                    .is_err()
+                {
+                    break; // another consumer owns the next node
+                }
+                current = next;
+            }
+
+            let got = out.len() - before;
+            if got > 0 {
+                // Phases 4–5 (shared with `pop`), once for the whole
+                // run: cursor advance past the run's last *taken* node,
+                // frontier CAS-max with the run's highest cycle. A run
+                // that yielded nothing (first claim lost to a
+                // reclamation race) skips both, exactly like `pop`'s
+                // early return.
+                self.finish_claim(last_taken, &start, max_cycle);
+                CmpStats::bump(&self.stats.batch_dequeues, self.config.track_stats);
+                CmpStats::add(
+                    &self.stats.batch_dequeued_items,
+                    got as u64,
+                    self.config.track_stats,
+                );
+            }
+            got
+        }
+    }
+
+    /// Convenience wrapper over [`Self::pop_batch_into`].
+    pub fn pop_batch(&self, max: usize) -> Vec<T> {
+        let mut out = Vec::with_capacity(max.min(64));
+        self.pop_batch_into(max, &mut out);
+        out
+    }
+
+    // ------------------------------------------------------------------
+    // Thread-cache management (DESIGN.md §7)
+    // ------------------------------------------------------------------
+
+    /// Return the calling thread's node-magazine contents to the global
+    /// freelist. Exiting threads flush automatically; long-lived
+    /// threads that stop using the queue can call this for exact
+    /// accounting (`nodes_in_use` counts magazine-cached nodes as in
+    /// use).
+    pub fn flush_thread_cache(&self) {
+        self.pool.flush_local();
+    }
+
+    /// Nodes currently cached in the calling thread's magazine.
+    pub fn thread_cached_nodes(&self) -> usize {
+        self.pool.local_cached()
+    }
+
+    /// Count nodes reachable from `head` (the dummy included). Only
+    /// meaningful while the queue is quiescent; used by leak tests to
+    /// prove `nodes_in_use() == linked nodes` (nothing stranded in a
+    /// magazine).
+    #[doc(hidden)]
+    pub fn debug_linked_nodes(&self) -> u64 {
+        let mut n = 0u64;
+        unsafe {
+            let mut cur = self.head.load(Ordering::Acquire);
+            while !cur.is_null() {
+                n += 1;
+                cur = (*cur).next.load(Ordering::Acquire);
+            }
+        }
+        n
+    }
 }
 
-impl<T: Send> ConcurrentQueue<T> for CmpQueue<T> {
+impl<T: Send + 'static> ConcurrentQueue<T> for CmpQueue<T> {
     fn try_enqueue(&self, item: T) -> Result<(), T> {
         self.push(item)
     }
 
     fn try_dequeue(&self) -> Option<T> {
         self.pop()
+    }
+
+    fn try_enqueue_batch(&self, items: Vec<T>) -> Result<(), Vec<T>> {
+        self.push_batch(items)
+    }
+
+    fn try_dequeue_batch(&self, max: usize, out: &mut Vec<T>) -> usize {
+        self.pop_batch_into(max, out)
     }
 
     fn name(&self) -> &'static str {
@@ -690,6 +1001,173 @@ mod tests {
             q.push(i).unwrap();
             q.pop();
         }
+        q.push_batch((0..8).collect::<Vec<_>>()).unwrap();
+        q.pop_batch(8);
         assert_eq!(q.stats(), CmpStatsSnapshot::default());
+    }
+
+    #[test]
+    fn push_batch_claims_contiguous_cycles_in_fifo_order() {
+        let q: CmpQueue<u64> = CmpQueue::new();
+        q.push_batch((0..8).collect::<Vec<_>>()).unwrap();
+        assert_eq!(q.enqueue_cycle(), 8, "one fetch_add(8)");
+        q.push(8).unwrap();
+        q.push_batch(vec![9, 10]).unwrap();
+        assert_eq!(q.enqueue_cycle(), 11);
+        for i in 0..11 {
+            assert_eq!(q.pop(), Some(i), "strict FIFO across batch/single mix");
+        }
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.stats().batch_enqueues, 2);
+        assert_eq!(q.stats().batch_enqueued_items, 10);
+    }
+
+    #[test]
+    fn push_batch_empty_is_noop() {
+        let q: CmpQueue<u64> = CmpQueue::new();
+        q.push_batch(Vec::new()).unwrap();
+        assert_eq!(q.enqueue_cycle(), 0);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_batch_respects_max_and_order() {
+        let q: CmpQueue<u64> = CmpQueue::new();
+        q.push_batch((0..10).collect::<Vec<_>>()).unwrap();
+        assert_eq!(q.pop_batch(4), vec![0, 1, 2, 3]);
+        assert_eq!(q.pop_batch(0), Vec::<u64>::new());
+        let mut out = vec![99]; // appends, never clears
+        assert_eq!(q.pop_batch_into(100, &mut out), 6);
+        assert_eq!(out, vec![99, 4, 5, 6, 7, 8, 9]);
+        assert_eq!(q.pop_batch(4), Vec::<u64>::new());
+        assert!(q.stats().batch_dequeues >= 2);
+        assert_eq!(q.stats().batch_dequeued_items, 10);
+    }
+
+    #[test]
+    fn pop_batch_advances_frontier_once() {
+        let q: CmpQueue<u64> = CmpQueue::new();
+        q.push_batch((0..16).collect::<Vec<_>>()).unwrap();
+        assert_eq!(q.pop_batch(16).len(), 16);
+        assert_eq!(q.dequeue_cycle(), 16, "frontier covers the whole run");
+    }
+
+    #[test]
+    fn push_batch_all_or_nothing_on_exhausted_pool() {
+        // Cap of 4 (dummy + 3): a batch of 8 cannot fit even after
+        // reclamation, so every item must come back.
+        let cfg = CmpConfig::default()
+            .with_max_nodes(4)
+            .with_trigger(ReclaimTrigger::Manual);
+        let q: CmpQueue<u64> = CmpQueue::with_config(cfg);
+        let items: Vec<u64> = (0..8).collect();
+        let back = q.push_batch(items).unwrap_err();
+        assert_eq!(back, (0..8).collect::<Vec<_>>(), "items returned intact");
+        assert_eq!(q.pop(), None, "nothing was published");
+        // The pool can still serve batches that fit.
+        q.push_batch(vec![1, 2, 3]).unwrap();
+        assert_eq!(q.pop_batch(8), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn batch_ops_with_tiny_window_and_reclaim() {
+        let cfg = CmpConfig::default()
+            .with_window(4)
+            .with_min_batch(1)
+            .with_reclaim_period(8);
+        let q: CmpQueue<u64> = CmpQueue::with_config(cfg);
+        let mut next = 0u64;
+        let mut expect = 0u64;
+        for round in 0..2_000u64 {
+            let k = round % 7 + 1;
+            q.push_batch((next..next + k).collect::<Vec<_>>()).unwrap();
+            next += k;
+            for v in q.pop_batch(k as usize) {
+                assert_eq!(v, expect, "FIFO under batch churn + reclaim");
+                expect += 1;
+            }
+        }
+        while let Some(v) = q.pop() {
+            assert_eq!(v, expect);
+            expect += 1;
+        }
+        assert_eq!(expect, next);
+    }
+
+    #[test]
+    fn mixed_batch_and_single_mpmc_no_loss_no_dup() {
+        let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+        let producers = 4usize;
+        let per = 4_000u64; // must be divisible by the batch cadence below
+        let total = producers as u64 * per;
+        let done = Arc::new(AtomicBool::new(false));
+
+        let mut handles = Vec::new();
+        for p in 0..producers {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                let base = p as u64 * per;
+                let mut i = 0u64;
+                while i < per {
+                    if i % 3 == 0 {
+                        // Batch of 8.
+                        let k = 8.min(per - i);
+                        q.push_batch((base + i..base + i + k).collect::<Vec<_>>())
+                            .unwrap();
+                        i += k;
+                    } else {
+                        q.push(base + i).unwrap();
+                        i += 1;
+                    }
+                }
+            }));
+        }
+        let consumers: Vec<_> = (0..4)
+            .map(|c| {
+                let q = q.clone();
+                let done = done.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    let mut buf = Vec::new();
+                    loop {
+                        let n = if c % 2 == 0 {
+                            q.pop_batch_into(16, &mut buf)
+                        } else {
+                            match q.pop() {
+                                Some(v) => {
+                                    buf.push(v);
+                                    1
+                                }
+                                None => 0,
+                            }
+                        };
+                        if n > 0 {
+                            got.append(&mut buf);
+                        } else if done.load(Ordering::Acquire) {
+                            // Exit probe must not drop a claimed item.
+                            match q.pop() {
+                                Some(v) => got.push(v),
+                                None => break,
+                            }
+                        } else {
+                            std::thread::yield_now();
+                        }
+                    }
+                    got
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        done.store(true, Ordering::Release);
+        let mut all: Vec<u64> = Vec::new();
+        for h in consumers {
+            all.extend(h.join().unwrap());
+        }
+        assert_eq!(all.len() as u64, total, "no loss");
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len() as u64, total, "no duplicates");
     }
 }

@@ -20,7 +20,7 @@ use super::node::{Node, STATE_AVAILABLE, STATE_FREE};
 use super::queue::CmpQueue;
 use super::stats::CmpStats;
 
-impl<T: Send> CmpQueue<T> {
+impl<T: Send + 'static> CmpQueue<T> {
     /// Run one reclamation pass (non-blocking: returns immediately if
     /// another thread holds the reclaimer slot). Returns the number of
     /// nodes recycled.
@@ -93,8 +93,12 @@ impl<T: Send> CmpQueue<T> {
                 break;
             }
             for &node in &batch {
-                self.recycle_node(node);
+                self.reset_node(node);
             }
+            // Return the whole reclaimed batch with a single spliced
+            // push — one freelist CAS per pass instead of one per node
+            // (DESIGN.md §7).
+            self.pool.free_chain(&batch);
             total += batch.len() as u64;
             if current.is_null() || current == tail_guard {
                 break;
@@ -103,10 +107,11 @@ impl<T: Send> CmpQueue<T> {
         total
     }
 
-    /// Reset a detached node and return it to the pool (§3.6 Phase 5:
-    /// "next and data pointers set to NULL before returning the free
-    /// node", so stale traversals terminate safely).
-    unsafe fn recycle_node(&self, node: *mut Node<T>) {
+    /// Reset a detached node for recycling (§3.6 Phase 5: "next and
+    /// data pointers set to NULL before returning the free node", so
+    /// stale traversals terminate safely). The caller batches the
+    /// actual freelist return via [`NodePool::free_chain`].
+    unsafe fn reset_node(&self, node: *mut Node<T>) {
         // FREE first: any in-flight claim CAS (AVAILABLE→CLAIMED) on a
         // stale pointer now fails fast.
         (*node).state.store(STATE_FREE, Ordering::Release);
@@ -116,7 +121,6 @@ impl<T: Send> CmpQueue<T> {
             CmpStats::bump(&self.stats.payloads_reclaimed, self.config.track_stats);
         }
         (*node).next.store(std::ptr::null_mut(), Ordering::Release);
-        self.pool.free(node);
     }
 
     pub(super) fn head_ptr(&self) -> *mut Node<T> {

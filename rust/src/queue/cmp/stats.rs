@@ -32,6 +32,14 @@ pub(crate) struct CmpStats {
     pub nodes_reclaimed: CachePadded<AtomicU64>,
     /// Payloads dropped by the reclaimer (claimer stalled past window).
     pub payloads_reclaimed: CachePadded<AtomicU64>,
+    /// `push_batch` calls (each pays one cycle RMW + one link CAS).
+    pub batch_enqueues: CachePadded<AtomicU64>,
+    /// Items enqueued through `push_batch`.
+    pub batch_enqueued_items: CachePadded<AtomicU64>,
+    /// `pop_batch` calls that claimed at least one node.
+    pub batch_dequeues: CachePadded<AtomicU64>,
+    /// Items dequeued through `pop_batch`.
+    pub batch_dequeued_items: CachePadded<AtomicU64>,
 }
 
 impl CmpStats {
@@ -61,6 +69,10 @@ impl CmpStats {
             reclaim_contended: self.reclaim_contended.load(Ordering::Relaxed),
             nodes_reclaimed: self.nodes_reclaimed.load(Ordering::Relaxed),
             payloads_reclaimed: self.payloads_reclaimed.load(Ordering::Relaxed),
+            batch_enqueues: self.batch_enqueues.load(Ordering::Relaxed),
+            batch_enqueued_items: self.batch_enqueued_items.load(Ordering::Relaxed),
+            batch_dequeues: self.batch_dequeues.load(Ordering::Relaxed),
+            batch_dequeued_items: self.batch_dequeued_items.load(Ordering::Relaxed),
         }
     }
 }
@@ -78,6 +90,10 @@ pub struct CmpStatsSnapshot {
     pub reclaim_contended: u64,
     pub nodes_reclaimed: u64,
     pub payloads_reclaimed: u64,
+    pub batch_enqueues: u64,
+    pub batch_enqueued_items: u64,
+    pub batch_dequeues: u64,
+    pub batch_dequeued_items: u64,
 }
 
 impl CmpStatsSnapshot {
@@ -85,7 +101,8 @@ impl CmpStatsSnapshot {
     pub fn summary(&self) -> String {
         format!(
             "enq_retries={} extra_scans={} claim_fails={} cursor_adv={} cursor_miss={} \
-             lost_claims={} reclaims={} reclaim_contended={} nodes_reclaimed={} payloads_reclaimed={}",
+             lost_claims={} reclaims={} reclaim_contended={} nodes_reclaimed={} payloads_reclaimed={} \
+             batch_enq={}/{} batch_deq={}/{}",
             self.enq_retries,
             self.deq_extra_scans,
             self.deq_claim_fails,
@@ -96,6 +113,10 @@ impl CmpStatsSnapshot {
             self.reclaim_contended,
             self.nodes_reclaimed,
             self.payloads_reclaimed,
+            self.batch_enqueues,
+            self.batch_enqueued_items,
+            self.batch_dequeues,
+            self.batch_dequeued_items,
         )
     }
 }

@@ -40,6 +40,74 @@ pub trait ConcurrentQueue<T: Send>: Send + Sync {
         }
     }
 
+    /// Attempt to enqueue a batch. The default is a best-effort prefix:
+    /// items are enqueued one by one and `Err` returns the suffix that
+    /// was *not* accepted (first element = the item that failed).
+    /// Implementations with a native batch path (CMP) override this
+    /// with an all-or-nothing amortized insert; either way `Ok(())`
+    /// means every item was enqueued, in order.
+    fn try_enqueue_batch(&self, items: Vec<T>) -> Result<(), Vec<T>> {
+        let mut it = items.into_iter();
+        while let Some(item) = it.next() {
+            if let Err(item) = self.try_enqueue(item) {
+                let mut rest = Vec::with_capacity(it.len() + 1);
+                rest.push(item);
+                rest.extend(it);
+                return Err(rest);
+            }
+        }
+        Ok(())
+    }
+
+    /// Dequeue up to `max` items, appending to `out` in queue order;
+    /// returns the number dequeued (0 = empty at the linearization
+    /// point of the last probe). The default loops `try_dequeue`; CMP
+    /// overrides it with a claimed-run dequeue that amortizes its
+    /// global RMWs across the batch.
+    fn try_dequeue_batch(&self, max: usize, out: &mut Vec<T>) -> usize {
+        let mut n = 0;
+        while n < max {
+            match self.try_dequeue() {
+                Some(v) => {
+                    out.push(v);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
+
+    /// Enqueue a whole batch, spinning with backoff until every item is
+    /// accepted (mirrors [`ConcurrentQueue::enqueue`] for batches).
+    ///
+    /// When an attempt makes no progress at all (the implementation is
+    /// all-or-nothing, like CMP, and the full batch can never fit a
+    /// bounded pool at once), the batch is split in half so completion
+    /// degrades gracefully to single-item `enqueue` semantics instead
+    /// of retrying an unsatisfiable batch forever.
+    fn enqueue_batch(&self, mut items: Vec<T>) {
+        let mut backoff = Backoff::new();
+        loop {
+            let attempted = items.len();
+            match self.try_enqueue_batch(items) {
+                Ok(()) => return,
+                Err(rest) => {
+                    items = rest;
+                    if items.len() == attempted && attempted > 1 {
+                        // Zero progress: halve. The front half keeps
+                        // FIFO order by completing before the back half
+                        // is retried.
+                        let back = items.split_off(attempted / 2);
+                        self.enqueue_batch(items);
+                        items = back;
+                    }
+                    backoff.spin();
+                }
+            }
+        }
+    }
+
     /// Short static identifier used by the benchmark reports.
     fn name(&self) -> &'static str;
 
@@ -175,6 +243,42 @@ mod tests {
             assert_eq!(q.try_dequeue(), Some(8));
             assert_eq!(q.try_dequeue(), None);
         }
+    }
+
+    #[test]
+    fn batch_roundtrip_every_impl() {
+        // The default trait impls make the batch API uniform across all
+        // comparators; CMP exercises its native override.
+        for i in Impl::ALL {
+            let q: Arc<dyn ConcurrentQueue<u64>> = i.make(1024);
+            q.try_enqueue_batch((0..20).collect::<Vec<_>>())
+                .unwrap_or_else(|_| panic!("{} rejected a small batch", i.name()));
+            let mut out = Vec::new();
+            assert_eq!(q.try_dequeue_batch(7, &mut out), 7, "{}", i.name());
+            assert_eq!(q.try_dequeue_batch(100, &mut out), 13, "{}", i.name());
+            assert_eq!(q.try_dequeue_batch(1, &mut out), 0, "{}", i.name());
+            if q.is_strict_fifo() {
+                assert_eq!(out, (0..20).collect::<Vec<_>>(), "{}", i.name());
+            } else {
+                let mut sorted = out.clone();
+                sorted.sort_unstable();
+                assert_eq!(sorted, (0..20).collect::<Vec<_>>(), "{}", i.name());
+            }
+        }
+    }
+
+    #[test]
+    fn default_try_enqueue_batch_returns_rejected_suffix() {
+        // Vyukov with capacity 4: a batch of 6 must hand back the last
+        // two items (default prefix semantics).
+        let q: Arc<dyn ConcurrentQueue<u64>> = Impl::Vyukov.make(4);
+        let rest = q
+            .try_enqueue_batch((0..6).collect::<Vec<_>>())
+            .unwrap_err();
+        assert_eq!(rest, vec![4, 5]);
+        let mut out = Vec::new();
+        assert_eq!(q.try_dequeue_batch(10, &mut out), 4);
+        assert_eq!(out, vec![0, 1, 2, 3]);
     }
 
     #[test]

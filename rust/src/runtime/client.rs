@@ -13,12 +13,20 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 
 /// A compiled model artifact ready for execution.
+///
+/// Only available with the `pjrt` cargo feature (which expects a
+/// vendored `xla` crate); without it a stub with the same API is
+/// compiled whose `load*` constructors report the feature as missing,
+/// so the serving pipeline, CLI, and tests build everywhere and the
+/// artifact-gated tests skip exactly as they do on a fresh checkout.
+#[cfg(feature = "pjrt")]
 pub struct ModelRuntime {
     exe: xla::PjRtLoadedExecutable,
     input_shape: Vec<usize>,
     output_shape: Vec<usize>,
 }
 
+#[cfg(feature = "pjrt")]
 impl ModelRuntime {
     /// Load an HLO-text artifact with explicit shapes.
     pub fn load(hlo_path: &Path, input_shape: Vec<usize>, output_shape: Vec<usize>) -> Result<Self> {
@@ -108,6 +116,66 @@ impl ModelRuntime {
             );
         }
         Ok(v)
+    }
+}
+
+/// Stub runtime for builds without the `pjrt` feature: identical
+/// surface, but construction always fails. Never instantiated, so the
+/// execution methods are unreachable by construction.
+#[cfg(not(feature = "pjrt"))]
+pub struct ModelRuntime {
+    input_shape: Vec<usize>,
+    output_shape: Vec<usize>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl ModelRuntime {
+    /// Always fails: the crate was built without the `pjrt` feature.
+    pub fn load(
+        _hlo_path: &Path,
+        _input_shape: Vec<usize>,
+        _output_shape: Vec<usize>,
+    ) -> Result<Self> {
+        bail!("cmpq was built without the `pjrt` feature; the PJRT runtime is unavailable")
+    }
+
+    /// Always fails (after validating that `meta.json` parses, so
+    /// configuration errors surface first).
+    pub fn load_from_artifacts(dir: &Path) -> Result<Self> {
+        let _ = Meta::load(dir)?;
+        bail!("cmpq was built without the `pjrt` feature; the PJRT runtime is unavailable")
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product()
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.input_shape[0]
+    }
+
+    pub fn features_per_row(&self) -> usize {
+        self.input_len() / self.batch_size()
+    }
+
+    pub fn outputs_per_row(&self) -> usize {
+        self.output_len() / self.batch_size()
+    }
+
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    pub fn output_shape(&self) -> &[usize] {
+        &self.output_shape
+    }
+
+    pub fn infer(&self, _input: &[f32]) -> Result<Vec<f32>> {
+        bail!("cmpq was built without the `pjrt` feature; the PJRT runtime is unavailable")
     }
 }
 

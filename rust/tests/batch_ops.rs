@@ -1,0 +1,374 @@
+//! Batch-operation and per-thread-magazine coverage (DESIGN.md §7):
+//!
+//! * FIFO-order property tests interleaving `push_batch` / `pop_batch`
+//!   with single ops, sequentially (vs a `VecDeque` oracle) and across
+//!   threads (conservation + per-producer order).
+//! * Magazine lifecycle: flush-on-thread-exit leaves no nodes stranded
+//!   in dead threads' caches (`nodes_in_use` is fully accounted by the
+//!   linked list after drain + join + flush).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use cmpq::queue::cmp::{CmpConfig, CmpQueue, ReclaimTrigger};
+use cmpq::queue::ConcurrentQueue;
+use cmpq::util::XorShift64;
+
+/// Random schedule of single and batch ops vs a sequential oracle.
+fn check_batch_oracle(cfg: CmpConfig, seed: u64, steps: usize) {
+    let q = CmpQueue::<u64>::with_config(cfg);
+    let mut oracle: VecDeque<u64> = VecDeque::new();
+    let mut rng = XorShift64::new(seed);
+    let mut next = 0u64;
+    for step in 0..steps {
+        match rng.next_below(4) {
+            0 => {
+                q.push(next).unwrap();
+                oracle.push_back(next);
+                next += 1;
+            }
+            1 => {
+                let k = 1 + rng.next_below(16);
+                q.push_batch((next..next + k).collect()).unwrap();
+                oracle.extend(next..next + k);
+                next += k;
+            }
+            2 => {
+                assert_eq!(q.pop(), oracle.pop_front(), "seed={seed} step={step}");
+            }
+            _ => {
+                let k = 1 + rng.next_usize(16);
+                let got = q.pop_batch(k);
+                let want: Vec<u64> =
+                    (0..k).filter_map(|_| oracle.pop_front()).collect();
+                assert_eq!(got, want, "seed={seed} step={step}");
+            }
+        }
+        if rng.chance(0.002) {
+            q.reclaim();
+        }
+    }
+    // Drain both and compare the tails.
+    loop {
+        let (a, b) = (q.pop(), oracle.pop_front());
+        assert_eq!(a, b, "seed={seed} drain");
+        if a.is_none() {
+            break;
+        }
+    }
+}
+
+#[test]
+fn batch_oracle_default_config() {
+    for seed in 0..6 {
+        check_batch_oracle(CmpConfig::default(), seed, 3_000);
+    }
+}
+
+#[test]
+fn batch_oracle_tiny_window_aggressive_reclaim() {
+    for seed in 100..104 {
+        check_batch_oracle(
+            CmpConfig::default()
+                .with_window(4)
+                .with_min_batch(1)
+                .with_reclaim_period(8),
+            seed,
+            3_000,
+        );
+    }
+}
+
+#[test]
+fn batch_oracle_without_magazines() {
+    for seed in 200..203 {
+        check_batch_oracle(CmpConfig::default().without_magazines(), seed, 3_000);
+    }
+}
+
+#[test]
+fn batch_oracle_without_cursor_bernoulli_trigger() {
+    for seed in 300..303 {
+        check_batch_oracle(
+            CmpConfig::default()
+                .without_scan_cursor()
+                .with_trigger(ReclaimTrigger::Bernoulli)
+                .with_reclaim_period(32)
+                .with_window(64)
+                .with_min_batch(1),
+            seed,
+            3_000,
+        );
+    }
+}
+
+/// Concurrent FIFO property: producers mix `push` and `push_batch`,
+/// consumers mix `pop` and `pop_batch`. Checks conservation (no loss,
+/// no duplication) and per-producer monotonic order — the observable
+/// strict-FIFO contract under MPMC.
+fn check_concurrent_batch_fifo(cfg: CmpConfig, seed: u64) {
+    let producers = 3usize;
+    let consumers = 3usize;
+    let per = 6_000u64;
+    let q: Arc<CmpQueue<(u8, u64)>> = Arc::new(CmpQueue::with_config(cfg));
+    let done = Arc::new(AtomicBool::new(false));
+
+    let prod: Vec<_> = (0..producers as u8)
+        .map(|p| {
+            let q = q.clone();
+            let mut rng = XorShift64::new(seed ^ ((p as u64) << 32));
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while i < per {
+                    if rng.chance(0.5) {
+                        let k = (1 + rng.next_below(12)).min(per - i);
+                        q.push_batch((i..i + k).map(|j| (p, j)).collect())
+                            .unwrap();
+                        i += k;
+                    } else {
+                        q.push((p, i)).unwrap();
+                        i += 1;
+                    }
+                }
+            })
+        })
+        .collect();
+    let cons: Vec<_> = (0..consumers)
+        .map(|c| {
+            let q = q.clone();
+            let done = done.clone();
+            let mut rng = XorShift64::new(seed ^ 0xBA7C4 ^ ((c as u64) << 24));
+            std::thread::spawn(move || {
+                let mut got: Vec<(u8, u64)> = Vec::new();
+                let mut buf: Vec<(u8, u64)> = Vec::new();
+                loop {
+                    let n = if rng.chance(0.5) {
+                        q.pop_batch_into(1 + rng.next_usize(12), &mut buf)
+                    } else {
+                        match q.pop() {
+                            Some(v) => {
+                                buf.push(v);
+                                1
+                            }
+                            None => 0,
+                        }
+                    };
+                    if n > 0 {
+                        got.append(&mut buf);
+                    } else if done.load(Ordering::Acquire) {
+                        // Exit probe must not drop a claimed item.
+                        match q.pop() {
+                            Some(v) => got.push(v),
+                            None => break,
+                        }
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+                got
+            })
+        })
+        .collect();
+
+    for h in prod {
+        h.join().unwrap();
+    }
+    done.store(true, Ordering::Release);
+    let mut all: Vec<(u8, u64)> = Vec::new();
+    for h in cons {
+        let got = h.join().unwrap();
+        // Per-consumer, per-producer monotonicity: a strict-FIFO queue
+        // can never show one consumer producer-p items out of order,
+        // whether they were claimed singly or in runs.
+        let mut last = vec![-1i64; producers];
+        for &(p, i) in &got {
+            assert!(
+                last[p as usize] < i as i64,
+                "seed={seed}: consumer-local producer order violated"
+            );
+            last[p as usize] = i as i64;
+        }
+        all.extend(got);
+    }
+    let total = producers as u64 * per;
+    assert_eq!(all.len() as u64, total, "seed={seed}: no loss");
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len() as u64, total, "seed={seed}: no duplicates");
+}
+
+#[test]
+fn concurrent_batch_fifo_default() {
+    for seed in 0..3 {
+        check_concurrent_batch_fifo(CmpConfig::default(), seed);
+    }
+}
+
+#[test]
+fn concurrent_batch_fifo_small_window() {
+    for seed in 10..12 {
+        check_concurrent_batch_fifo(
+            CmpConfig::default()
+                .with_window(256)
+                .with_min_batch(1)
+                .with_reclaim_period(64),
+            seed,
+        );
+    }
+}
+
+#[test]
+fn concurrent_batch_fifo_without_magazines() {
+    for seed in 20..22 {
+        check_concurrent_batch_fifo(CmpConfig::default().without_magazines(), seed);
+    }
+}
+
+/// SPSC with batches: the one setting where *global* FIFO order is
+/// directly observable end to end.
+#[test]
+fn spsc_batch_global_order() {
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    let total = 50_000u64;
+    let producer = {
+        let q = q.clone();
+        std::thread::spawn(move || {
+            let mut i = 0u64;
+            let mut rng = XorShift64::new(7);
+            while i < total {
+                let k = (1 + rng.next_below(32)).min(total - i);
+                q.push_batch((i..i + k).collect()).unwrap();
+                i += k;
+            }
+        })
+    };
+    let mut expect = 0u64;
+    let mut buf = Vec::new();
+    let mut rng = XorShift64::new(11);
+    while expect < total {
+        let n = q.pop_batch_into(1 + rng.next_usize(32), &mut buf);
+        for v in buf.drain(..) {
+            assert_eq!(v, expect, "global FIFO order");
+            expect += 1;
+        }
+        if n == 0 {
+            std::thread::yield_now();
+        }
+    }
+    producer.join().unwrap();
+    assert_eq!(q.pop(), None);
+}
+
+/// Magazine-flush-on-thread-exit leak test (ISSUE acceptance): after
+/// worker threads churn the queue and exit, every pool node must be
+/// accounted for by the linked list + global freelist — nothing
+/// stranded in dead threads' magazines.
+#[test]
+fn magazine_flush_on_thread_exit_leaves_no_stranded_nodes() {
+    let window = 64u64;
+    let cfg = CmpConfig::default()
+        .with_window(window)
+        .with_min_batch(1)
+        .with_reclaim_period(32);
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::with_config(cfg));
+
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                let mut rng = XorShift64::new(0x5EED ^ t as u64);
+                let mut i = 0u64;
+                while i < 20_000 {
+                    if rng.chance(0.4) {
+                        let k = 1 + rng.next_below(8);
+                        q.push_batch((i..i + k).collect()).unwrap();
+                        i += k;
+                    } else {
+                        q.push(i).unwrap();
+                        i += 1;
+                    }
+                    q.pop_batch(4);
+                }
+                // Exit with whatever the magazine holds: the TLS
+                // destructor must hand it back.
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Drain leftovers and settle reclamation from the main thread.
+    while q.pop().is_some() {}
+    loop {
+        if q.reclaim() == 0 {
+            break;
+        }
+    }
+    q.flush_thread_cache();
+    assert_eq!(q.thread_cached_nodes(), 0, "main-thread magazine flushed");
+
+    // Exact accounting: every node outside the global freelist is
+    // reachable from head. If a dead thread's magazine had leaked,
+    // in_use would exceed the linked count permanently.
+    assert_eq!(
+        q.nodes_in_use(),
+        q.debug_linked_nodes(),
+        "nodes stranded outside the list (magazine leak)"
+    );
+    // And the linked remainder is bounded by the protection window plus
+    // the unreclaimable boundary nodes (tail + dummy) plus a small
+    // slack for cycle disorder left by concurrent batch links (the
+    // reclaimer stops at the first in-window cycle it sees) — dummy +
+    // window, not a growing leak.
+    assert!(
+        q.debug_linked_nodes() <= window + 40,
+        "linked remainder {} exceeds window bound",
+        q.debug_linked_nodes()
+    );
+}
+
+/// Magazine caching is observable (nodes cached locally) and bounded by
+/// the configured capacity.
+#[test]
+fn magazine_cache_is_bounded_by_capacity() {
+    let cap = 16usize;
+    let cfg = CmpConfig::default()
+        .with_magazine_capacity(cap)
+        .with_min_batch(1)
+        .with_window(1)
+        .with_trigger(ReclaimTrigger::Manual);
+    let q: CmpQueue<u64> = CmpQueue::with_config(cfg);
+    // Build up a recycled population, then churn so allocs refill from
+    // the freelist through the magazine.
+    for i in 0..1_000u64 {
+        q.push(i).unwrap();
+        q.pop();
+        if i % 64 == 0 {
+            q.reclaim();
+        }
+    }
+    q.reclaim();
+    for i in 0..64u64 {
+        q.push(i).unwrap();
+        q.pop();
+    }
+    assert!(
+        q.thread_cached_nodes() <= cap,
+        "magazine {} exceeds capacity {cap}",
+        q.thread_cached_nodes()
+    );
+    q.flush_thread_cache();
+    assert_eq!(q.thread_cached_nodes(), 0);
+}
+
+/// The batch API surfaces through the `ConcurrentQueue` trait object.
+#[test]
+fn cmp_batch_api_via_trait_object() {
+    let q: Arc<dyn ConcurrentQueue<u64>> = Arc::new(CmpQueue::<u64>::new());
+    q.try_enqueue_batch((0..100).collect()).unwrap();
+    let mut out = Vec::new();
+    assert_eq!(q.try_dequeue_batch(100, &mut out), 100);
+    assert_eq!(out, (0..100).collect::<Vec<_>>());
+}

@@ -97,6 +97,10 @@ fn pipeline_routing_policies_all_complete() {
 
 #[test]
 fn pipeline_with_real_model_when_artifacts_exist() {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature (stub runtime)");
+        return;
+    }
     let dir = std::env::var_os("CMPQ_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"));

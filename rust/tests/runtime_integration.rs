@@ -10,6 +10,10 @@ use std::path::PathBuf;
 use cmpq::runtime::{ModelRuntime, TestVectors};
 
 fn artifacts() -> Option<PathBuf> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("SKIP: built without the `pjrt` feature (stub runtime)");
+        return None;
+    }
     let dir = std::env::var_os("CMPQ_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|| PathBuf::from("artifacts"));
