@@ -2,22 +2,30 @@
 //! 1P1C…64P64C for CMP vs the paper's comparator set (plus the extra
 //! baselines), with round-robin sequencing and 3-sigma filtering —
 //! swept across an operation batch-size axis (1/8/64) so the
-//! batch-amortization win (DESIGN.md §7) is measured, not asserted.
+//! batch-amortization win (DESIGN.md §7) is measured, not asserted,
+//! plus an offered-load scenario axis (bursty arrival bursts with idle
+//! gaps, and a zero-load idle floor) whose parking consumers report
+//! ops per CPU-second (DESIGN.md §8).
 //!
 //! `cargo bench --bench throughput` — or `repro bench fig1` for the
 //! CLI-configurable version. Env knobs: `BENCH_OPS`, `BENCH_ROUNDS`,
-//! `BENCH_BATCHES` (comma-separated, default `1,8,64`), `BENCH_FULL=1`
-//! to include every implementation.
+//! `BENCH_BATCHES` (comma-separated, default `1,8,64`),
+//! `BENCH_SCENARIOS` (comma-separated extra scenarios, default
+//! `bursty,idle`; empty string disables), `BENCH_FULL=1` to include
+//! every implementation.
 //!
 //! Outputs:
 //! * `bench_results/fig1_throughput.json` — the batch-1 Figure 1 cells
 //!   (unchanged schema).
-//! * `BENCH_throughput.json` — impl × threads × batch-size → ops/s,
-//!   the machine-readable perf trajectory tracked across PRs.
+//! * `BENCH_throughput.json` — impl × threads × batch × scenario →
+//!   ops/s + ops per CPU-second + CPU utilization, the machine-readable
+//!   perf trajectory tracked across PRs.
+
+use std::time::Duration;
 
 use cmpq::bench::report::{self, BatchThroughputRow};
 use cmpq::bench::runner::{throughput_suite, SuiteOptions};
-use cmpq::bench::workload::PairConfig;
+use cmpq::bench::workload::{PairConfig, Scenario};
 use cmpq::queue::Impl;
 
 fn env_u64(k: &str, d: u64) -> u64 {
@@ -104,7 +112,11 @@ fn main() {
             eprintln!("wrote bench_results/fig1_throughput.json");
         }
 
-        rows.extend(cells.into_iter().map(|cell| BatchThroughputRow { cell, batch }));
+        rows.extend(cells.into_iter().map(|cell| BatchThroughputRow {
+            cell,
+            batch,
+            scenario: "closed",
+        }));
     }
 
     // Batch-amortization summary: CMP speedup of each batch size over
@@ -137,6 +149,76 @@ fn main() {
             }
             println!();
         }
+    }
+
+    // Offered-load scenario axis (DESIGN.md §8): bursty open-loop
+    // arrivals and the zero-load idle floor, both with parking
+    // consumers — measuring ops per CPU-second, not just wall clock.
+    let scenarios: Vec<String> = std::env::var("BENCH_SCENARIOS")
+        .map(|v| {
+            v.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect()
+        })
+        .unwrap_or_else(|_| vec!["bursty".to_string(), "idle".to_string()]);
+    for name in &scenarios {
+        let (scenario, scen_pairs, rounds) = match name.as_str() {
+            "bursty" => (
+                Scenario::Bursty {
+                    burst: 512,
+                    gap: Duration::from_millis(2),
+                },
+                vec![
+                    PairConfig::symmetric(1),
+                    PairConfig::symmetric(4),
+                    PairConfig::symmetric(16),
+                ],
+                2usize,
+            ),
+            "idle" => (
+                Scenario::Idle {
+                    hold: Duration::from_millis(400),
+                },
+                vec![PairConfig::symmetric(4)],
+                1usize,
+            ),
+            other => {
+                eprintln!("unknown scenario {other:?} (bursty|idle), skipping");
+                continue;
+            }
+        };
+        eprintln!("-- scenario {} --", scenario.label());
+        let opts = SuiteOptions {
+            scenario,
+            rounds,
+            warmup_rounds: 0,
+            ..base_opts.clone()
+        };
+        let cells = throughput_suite(&impls, &scen_pairs, &opts);
+        println!(
+            "# Scenario {} — items/s, ops per CPU-second, CPU util per thread",
+            scenario.label()
+        );
+        println!(
+            "{:<10}{:<12}{:>14}{:>18}{:>10}",
+            "config", "impl", "items/s", "ops/cpu-s", "util"
+        );
+        for c in &cells {
+            println!(
+                "{:<10}{:<12}{:>14.0}{:>18.0}{:>10.4}",
+                c.pair.label(),
+                c.imp.name(),
+                c.mean_ips,
+                c.mean_ops_per_cpu,
+                c.mean_cpu_util
+            );
+        }
+        rows.extend(cells.into_iter().map(|cell| BatchThroughputRow {
+            cell,
+            batch: 1,
+            scenario: scenario.label(),
+        }));
     }
 
     std::fs::write("BENCH_throughput.json", report::batch_throughput_json(&rows)).ok();

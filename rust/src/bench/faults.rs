@@ -21,6 +21,7 @@ use crate::queue::cmp::{CmpConfig, CmpQueue, ReclaimTrigger};
 /// Outcome of a fault experiment.
 #[derive(Debug, Clone)]
 pub struct FaultOutcome {
+    /// Reclamation scheme under test (`cmp`, `ms-hp`, `ms-ebr`).
     pub scheme: &'static str,
     /// Items churned through the queue after the fault.
     pub churn_ops: u64,

@@ -24,6 +24,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Histogram {
             counts: vec![0; BUCKETS],
@@ -54,6 +55,7 @@ impl Histogram {
         (1u64 << major) | (minor << (major - 4))
     }
 
+    /// Record one sample (nanoseconds).
     #[inline]
     pub fn record(&mut self, v: u64) {
         self.counts[Self::bucket_of(v)] += 1;
@@ -63,6 +65,7 @@ impl Histogram {
         self.min = self.min.min(v);
     }
 
+    /// Fold `other`'s samples into this histogram.
     pub fn merge(&mut self, other: &Histogram) {
         for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
             *a += b;
@@ -73,10 +76,12 @@ impl Histogram {
         self.min = self.min.min(other.min);
     }
 
+    /// Total recorded samples.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Exact mean of all recorded samples (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             return 0.0;
@@ -84,6 +89,7 @@ impl Histogram {
         self.sum as f64 / self.total as f64
     }
 
+    /// Smallest recorded sample (0 when empty).
     pub fn min(&self) -> u64 {
         if self.total == 0 {
             0
@@ -92,6 +98,7 @@ impl Histogram {
         }
     }
 
+    /// Largest recorded sample (0 when empty).
     pub fn max(&self) -> u64 {
         self.max
     }
@@ -113,10 +120,12 @@ impl Histogram {
         self.max
     }
 
+    /// Median ([`Histogram::quantile`] at 0.50).
     pub fn p50(&self) -> u64 {
         self.quantile(0.50)
     }
 
+    /// 99th percentile ([`Histogram::quantile`] at 0.99).
     pub fn p99(&self) -> u64 {
         self.quantile(0.99)
     }
@@ -125,15 +134,22 @@ impl Histogram {
 /// Summary statistics the paper's tables report (avg + P99, ns).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct LatencySummary {
+    /// Samples summarized.
     pub count: u64,
+    /// Mean latency in nanoseconds.
     pub avg_ns: f64,
+    /// Median latency in nanoseconds.
     pub p50_ns: u64,
+    /// 99th-percentile latency in nanoseconds.
     pub p99_ns: u64,
+    /// Minimum latency in nanoseconds.
     pub min_ns: u64,
+    /// Maximum latency in nanoseconds.
     pub max_ns: u64,
 }
 
 impl LatencySummary {
+    /// Summarize a histogram.
     pub fn from_histogram(h: &Histogram) -> Self {
         LatencySummary {
             count: h.count(),

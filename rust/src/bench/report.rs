@@ -147,6 +147,7 @@ pub fn json_escape(s: &str) -> String {
         .collect()
 }
 
+/// Figure-1 cells as a JSON array (`bench_results/fig1_throughput.json`).
 pub fn throughput_json(cells: &[ThroughputCell]) -> String {
     let mut s = String::from("[");
     for (i, c) in cells.iter().enumerate() {
@@ -169,16 +170,24 @@ pub fn throughput_json(cells: &[ThroughputCell]) -> String {
 }
 
 /// One row of the `BENCH_throughput.json` perf-trajectory dump:
-/// a [`ThroughputCell`] tagged with the operation batch size it ran at.
+/// a [`ThroughputCell`] tagged with the operation batch size and the
+/// offered-load scenario it ran under.
 #[derive(Debug, Clone)]
 pub struct BatchThroughputRow {
+    /// The measured cell.
     pub cell: ThroughputCell,
+    /// Operation batch size the cell ran at.
     pub batch: usize,
+    /// Offered-load scenario label (`closed` / `bursty` / `idle`),
+    /// from [`crate::bench::workload::Scenario::label`].
+    pub scenario: &'static str,
 }
 
-/// `impl × threads × batch-size → ops/s`, written to
-/// `BENCH_throughput.json` so the amortization win is tracked across
-/// PRs rather than asserted.
+/// `impl × threads × batch-size × scenario → ops/s + CPU efficiency`,
+/// written to `BENCH_throughput.json` so the amortization win *and* the
+/// spin-vs-park trade-off are tracked across PRs rather than asserted.
+/// `ops_per_cpu_sec` and `cpu_util` are 0 when CPU time was
+/// unmeasurable (no procfs / below clock resolution).
 pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
     let mut s = String::from("[");
     for (i, r) in rows.iter().enumerate() {
@@ -187,13 +196,16 @@ pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
         }
         let _ = write!(
             s,
-            "{{\"impl\":\"{}\",\"pair\":\"{}\",\"threads\":{},\"batch\":{},\"mean_ips\":{:.3},\"std_ips\":{:.3},\"samples\":{:?}}}",
+            "{{\"impl\":\"{}\",\"pair\":\"{}\",\"threads\":{},\"batch\":{},\"scenario\":\"{}\",\"mean_ips\":{:.3},\"std_ips\":{:.3},\"ops_per_cpu_sec\":{:.3},\"cpu_util\":{:.5},\"samples\":{:?}}}",
             r.cell.imp.name(),
             r.cell.pair.label(),
             r.cell.pair.producers + r.cell.pair.consumers,
             r.batch,
+            r.scenario,
             r.cell.mean_ips,
             r.cell.std_ips,
+            r.cell.mean_ops_per_cpu,
+            r.cell.mean_cpu_util,
             r.cell.samples
         );
     }
@@ -201,6 +213,7 @@ pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
     s
 }
 
+/// Latency cells as a JSON array (`bench_results/tables_latency.json`).
 pub fn latency_json(cells: &[LatencyCell]) -> String {
     let mut s = String::from("[");
     for (i, c) in cells.iter().enumerate() {
@@ -222,6 +235,7 @@ pub fn latency_json(cells: &[LatencyCell]) -> String {
     s
 }
 
+/// Retention cells as a JSON array (`bench_results/fig2_retention.json`).
 pub fn retention_json(cells: &[RetentionCell]) -> String {
     let mut s = String::from("[");
     for (i, c) in cells.iter().enumerate() {
@@ -256,6 +270,8 @@ mod tests {
             mean_ips: ips,
             std_ips: 0.0,
             discarded: 0,
+            mean_ops_per_cpu: ips * 2.0,
+            mean_cpu_util: 0.25,
         }
     }
 
@@ -339,10 +355,12 @@ mod tests {
             BatchThroughputRow {
                 cell: tcell(Impl::Cmp, 8, 5.0e6),
                 batch: 64,
+                scenario: "closed",
             },
             BatchThroughputRow {
                 cell: tcell(Impl::Cmp, 8, 2.0e6),
                 batch: 1,
+                scenario: "bursty",
             },
         ];
         let j = batch_throughput_json(&rows);
@@ -352,8 +370,13 @@ mod tests {
         assert_eq!(arr[0].get("impl").unwrap().as_str(), Some("cmp"));
         assert_eq!(arr[0].get("batch").unwrap().as_usize(), Some(64));
         assert_eq!(arr[0].get("threads").unwrap().as_usize(), Some(16));
+        assert_eq!(arr[0].get("scenario").unwrap().as_str(), Some("closed"));
         assert_eq!(arr[1].get("pair").unwrap().as_str(), Some("8P8C"));
+        assert_eq!(arr[1].get("scenario").unwrap().as_str(), Some("bursty"));
         assert!(arr[0].get("mean_ips").unwrap().as_f64().unwrap() > 0.0);
+        assert!(arr[0].get("ops_per_cpu_sec").unwrap().as_f64().unwrap() > 0.0);
+        let util = arr[0].get("cpu_util").unwrap().as_f64().unwrap();
+        assert!((util - 0.25).abs() < 1e-9);
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use super::latency::LatencySummary;
 use super::sigma;
 use super::synthetic::LoadProfile;
-use super::workload::{latency_trial, throughput_trial, PairConfig, TrialConfig};
+use super::workload::{latency_trial, throughput_trial, PairConfig, Scenario, TrialConfig};
 use crate::queue::Impl;
 
 /// Suite-level options.
@@ -25,6 +25,9 @@ pub struct SuiteOptions {
     pub capacity_hint: usize,
     /// Operation batch size for throughput trials (1 = single-op API).
     pub batch_size: usize,
+    /// Offered-load scenario for throughput trials (DESIGN.md §8);
+    /// latency suites always run closed-loop.
+    pub scenario: Scenario,
     /// Print progress lines to stderr.
     pub verbose: bool,
 }
@@ -38,6 +41,7 @@ impl Default for SuiteOptions {
             load: LoadProfile::None,
             capacity_hint: 1 << 16,
             batch_size: 1,
+            scenario: Scenario::ClosedLoop,
             verbose: false,
         }
     }
@@ -56,6 +60,7 @@ impl SuiteOptions {
             capacity_hint: self.capacity_hint,
             max_samples_per_thread: 200_000,
             batch_size: self.batch_size,
+            scenario: self.scenario,
         }
     }
 }
@@ -63,14 +68,24 @@ impl SuiteOptions {
 /// One cell of the Figure-1 style throughput matrix.
 #[derive(Debug, Clone)]
 pub struct ThroughputCell {
+    /// Queue implementation this cell measured.
     pub imp: Impl,
+    /// Producer/consumer configuration.
     pub pair: PairConfig,
     /// Per-round samples (items/sec), pre-filter.
     pub samples: Vec<f64>,
     /// 3-sigma filtered mean.
     pub mean_ips: f64,
+    /// Standard deviation of the filtered samples.
     pub std_ips: f64,
+    /// Samples removed by the 3-sigma filter.
     pub discarded: usize,
+    /// Mean items per CPU-second across rounds (3-sigma filtered); 0
+    /// when CPU time was unavailable or below clock resolution.
+    pub mean_ops_per_cpu: f64,
+    /// Mean CPU utilization across rounds (CPU-seconds per wall-second
+    /// per thread, ~1.0 = all cores busy); 0 when unmeasured.
+    pub mean_cpu_util: f64,
 }
 
 /// Round-robin throughput suite over `impls × pairs`.
@@ -79,7 +94,10 @@ pub fn throughput_suite(
     pairs: &[PairConfig],
     opts: &SuiteOptions,
 ) -> Vec<ThroughputCell> {
-    let mut samples: Vec<Vec<f64>> = vec![Vec::new(); impls.len() * pairs.len()];
+    let cells = impls.len() * pairs.len();
+    let mut samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
+    let mut cpu_samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
+    let mut util_samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
     for round in 0..(opts.rounds + opts.warmup_rounds) {
         let measured = round >= opts.warmup_rounds;
         // Round-robin: every impl runs once per round before any impl
@@ -99,6 +117,12 @@ pub fn throughput_suite(
                 }
                 if measured {
                     samples[pi * impls.len() + ii].push(t.items_per_sec);
+                    if let Some(v) = t.ops_per_cpu_sec {
+                        cpu_samples[pi * impls.len() + ii].push(v);
+                    }
+                    if let Some(u) = t.cpu_util {
+                        util_samples[pi * impls.len() + ii].push(u);
+                    }
                 }
             }
         }
@@ -106,9 +130,14 @@ pub fn throughput_suite(
     let mut out = Vec::new();
     for (pi, &pair) in pairs.iter().enumerate() {
         for (ii, &imp) in impls.iter().enumerate() {
-            let raw = &samples[pi * impls.len() + ii];
+            let idx = pi * impls.len() + ii;
+            let raw = &samples[idx];
             let (kept, discarded) = sigma::three_sigma(raw);
             let (mean, std) = sigma::mean_std(&kept);
+            let (cpu_kept, _) = sigma::three_sigma(&cpu_samples[idx]);
+            let (mean_ops_per_cpu, _) = sigma::mean_std(&cpu_kept);
+            let (util_kept, _) = sigma::three_sigma(&util_samples[idx]);
+            let (mean_cpu_util, _) = sigma::mean_std(&util_kept);
             out.push(ThroughputCell {
                 imp,
                 pair,
@@ -116,6 +145,8 @@ pub fn throughput_suite(
                 mean_ips: mean,
                 std_ips: std,
                 discarded,
+                mean_ops_per_cpu,
+                mean_cpu_util,
             });
         }
     }
@@ -125,11 +156,17 @@ pub fn throughput_suite(
 /// One cell of the Tables 1–3 style latency matrix.
 #[derive(Debug, Clone)]
 pub struct LatencyCell {
+    /// Queue implementation this cell measured.
     pub imp: Impl,
+    /// Producer/consumer configuration.
     pub pair: PairConfig,
+    /// Enqueue-side latency summary (post-filter).
     pub enqueue: LatencySummary,
+    /// Dequeue-side latency summary (post-filter).
     pub dequeue: LatencySummary,
+    /// Enqueue samples removed by the 3-sigma filter.
     pub enq_discarded: usize,
+    /// Dequeue samples removed by the 3-sigma filter.
     pub deq_discarded: usize,
 }
 
@@ -187,9 +224,13 @@ pub fn latency_suite(
 /// One cell of the Figure-2 retention matrix.
 #[derive(Debug, Clone)]
 pub struct RetentionCell {
+    /// Queue implementation this cell measured.
     pub imp: Impl,
+    /// Producer/consumer configuration.
     pub pair: PairConfig,
+    /// Throughput without inter-op load (items/sec).
     pub baseline_ips: f64,
+    /// Throughput under synthetic load (items/sec).
     pub loaded_ips: f64,
     /// `loaded / baseline` as a percentage (the paper's retention).
     pub retention_pct: f64,
@@ -282,6 +323,26 @@ mod tests {
             "loaded should not beat baseline by much: {}",
             c.retention_pct
         );
+    }
+
+    #[test]
+    fn bursty_scenario_suite_runs() {
+        let opts = SuiteOptions {
+            total_ops: 1000,
+            rounds: 1,
+            warmup_rounds: 0,
+            scenario: Scenario::Bursty {
+                burst: 128,
+                gap: std::time::Duration::from_millis(1),
+            },
+            ..SuiteOptions::default()
+        };
+        let cells = throughput_suite(&[Impl::Cmp], &[PairConfig::symmetric(1)], &opts);
+        assert_eq!(cells.len(), 1);
+        assert!(cells[0].mean_ips > 0.0);
+        // CPU metrics are best-effort (procfs); utilization, when
+        // measured, is a sane fraction.
+        assert!(cells[0].mean_cpu_util >= 0.0);
     }
 
     #[test]

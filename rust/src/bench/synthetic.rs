@@ -65,6 +65,7 @@ impl LoadProfile {
         }
     }
 
+    /// Report label: `baseline` or `synthetic(xN)`.
     pub fn label(&self) -> String {
         match self {
             LoadProfile::None => "baseline".to_string(),

@@ -8,13 +8,16 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::queue::cmp::{CmpConfig, CmpQueue};
+use crate::util::Backoff;
 
 use super::request::InferRequest;
 use super::router::Router;
 
 /// A batch headed to a worker.
 pub struct Batch {
+    /// The requests riding in this batch, in arrival order.
     pub requests: Vec<InferRequest>,
+    /// When the batch was sealed (queueing-delay telemetry).
     pub formed_at: Instant,
 }
 
@@ -39,9 +42,15 @@ impl Default for BatchPolicy {
 /// The work queue between batchers and workers.
 pub type WorkQueue = Arc<CmpQueue<Batch>>;
 
+/// A fresh work queue with the default CMP configuration.
 pub fn new_work_queue() -> WorkQueue {
     Arc::new(CmpQueue::with_config(CmpConfig::default()))
 }
+
+/// Longest single park on an idle shard with no partial batch pending.
+/// A routed request (or `Server::shutdown`'s wake) ends the park
+/// immediately; the slice only bounds stop-latency.
+const BATCHER_PARK: Duration = Duration::from_millis(50);
 
 /// Run one batcher loop over `shard` of `router`, publishing batches to
 /// `work`. Returns when `stop` is set *and* the shard is drained.
@@ -50,6 +59,13 @@ pub fn new_work_queue() -> WorkQueue {
 /// batch claim fills as much of the pending model batch as the shard
 /// can supply, instead of one dequeue (and one pair of global RMWs) per
 /// request.
+///
+/// When the shard runs dry the loop escalates through [`Backoff`] and
+/// then parks on the shard queue's eventcount
+/// ([`Router::drain_deadline`]): with a partial batch pending it sleeps
+/// only until that batch's flush deadline, otherwise for a bounded
+/// slice. Arriving requests wake it immediately either way, so tail
+/// latency is unchanged while idle shards cost no CPU (DESIGN.md §8).
 pub fn batcher_loop(
     router: Arc<Router>,
     shard: usize,
@@ -59,11 +75,26 @@ pub fn batcher_loop(
 ) {
     let mut pending: Vec<InferRequest> = Vec::with_capacity(policy.max_batch);
     let mut window_start: Option<Instant> = None;
+    let mut idle = Backoff::new();
     loop {
         // `pending` is always below max_batch here (flushed on fill).
         let room = policy.max_batch - pending.len();
-        let got = router.drain_many(shard, room, &mut pending);
+        let got = if idle.is_yielding() {
+            // Spin budget spent: park until requests arrive, the flush
+            // deadline of the pending partial batch, or the backstop
+            // slice — whichever comes first (the backstop also bounds
+            // how stale a `stop` observation can get).
+            let backstop = Instant::now() + BATCHER_PARK;
+            let deadline = match window_start {
+                Some(t) => (t + policy.max_wait).min(backstop),
+                None => backstop,
+            };
+            router.drain_deadline(shard, room, &mut pending, deadline)
+        } else {
+            router.drain_many(shard, room, &mut pending)
+        };
         if got > 0 {
+            idle.reset();
             if window_start.is_none() {
                 window_start = Some(Instant::now());
             }
@@ -87,7 +118,7 @@ pub fn batcher_loop(
                     return;
                 }
             } else {
-                std::thread::yield_now();
+                idle.spin();
             }
         }
     }

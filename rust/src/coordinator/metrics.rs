@@ -10,8 +10,11 @@ use crate::bench::latency::{Histogram, LatencySummary};
 /// recorded once per *batch*, not per queue op).
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests accepted by the server.
     pub submitted: AtomicU64,
+    /// Responses delivered (including failures).
     pub completed: AtomicU64,
+    /// Model invocations executed.
     pub batches: AtomicU64,
     /// Sum of padded rows (batch capacity − real requests).
     pub padding_rows: AtomicU64,
@@ -21,20 +24,25 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fresh all-zero metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count one accepted request.
     pub fn record_submit(&self) {
         self.submitted.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one model invocation carrying `real` requests out of
+    /// `capacity` rows.
     pub fn record_batch(&self, real: usize, capacity: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.padding_rows
             .fetch_add((capacity - real) as u64, Ordering::Relaxed);
     }
 
+    /// Count one delivered response and record its end-to-end latency.
     pub fn record_complete(&self, latency: Duration, ok: bool) {
         self.completed.fetch_add(1, Ordering::Relaxed);
         if !ok {
@@ -46,6 +54,7 @@ impl Metrics {
             .record(latency.as_nanos() as u64);
     }
 
+    /// Summary of the end-to-end latency histogram.
     pub fn latency_summary(&self) -> LatencySummary {
         LatencySummary::from_histogram(&self.latency.lock().unwrap())
     }
@@ -61,6 +70,7 @@ impl Metrics {
         }
     }
 
+    /// One-line human-readable summary of every counter.
     pub fn report(&self) -> String {
         let s = self.latency_summary();
         format!(

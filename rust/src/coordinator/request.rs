@@ -5,9 +5,11 @@ use std::time::{Duration, Instant};
 
 /// An inference request flowing through the CMP fabric.
 pub struct InferRequest {
+    /// Server-assigned request id.
     pub id: u64,
     /// Flattened feature row (`features_per_row` elements).
     pub features: Vec<f32>,
+    /// When the client submitted (end-to-end latency anchor).
     pub submitted_at: Instant,
     /// Completion slot the client blocks on.
     pub slot: Arc<ResponseSlot>,
@@ -16,6 +18,7 @@ pub struct InferRequest {
 /// An inference result.
 #[derive(Debug, Clone)]
 pub struct InferResponse {
+    /// The request this responds to.
     pub id: u64,
     /// Flattened output row (logits).
     pub output: Vec<f32>,
@@ -33,6 +36,8 @@ pub struct ResponseSlot {
 }
 
 impl ResponseSlot {
+    /// An empty slot, shared between the submitting client and the
+    /// worker that will complete it.
     pub fn new() -> Arc<Self> {
         Arc::new(Self::default())
     }

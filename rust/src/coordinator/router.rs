@@ -5,6 +5,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::queue::cmp::{CmpConfig, CmpQueue};
 
@@ -33,6 +34,7 @@ pub struct Router {
 }
 
 impl Router {
+    /// A router over `shards` fresh CMP queues (panics on `shards == 0`).
     pub fn new(shards: usize, policy: RoutePolicy, cfg: CmpConfig) -> Self {
         assert!(shards > 0);
         Router {
@@ -46,10 +48,12 @@ impl Router {
         }
     }
 
+    /// Number of shard queues.
     pub fn shard_count(&self) -> usize {
         self.shards.len()
     }
 
+    /// Direct access to shard `i`'s queue (telemetry/tests).
     pub fn shard(&self, i: usize) -> &Arc<CmpQueue<InferRequest>> {
         &self.shards[i]
     }
@@ -142,6 +146,31 @@ impl Router {
         }
         n
     }
+
+    /// Like [`Router::drain_many`], but blocks — spin → yield →
+    /// epoch-guarded park on the shard queue (DESIGN.md §8) — until
+    /// requests arrive or `deadline` passes. Returns the number drained
+    /// (0 = deadline hit while empty).
+    pub fn drain_deadline(
+        &self,
+        i: usize,
+        max: usize,
+        out: &mut Vec<InferRequest>,
+        deadline: Instant,
+    ) -> usize {
+        let n = self.shards[i].pop_deadline_batch(max, out, deadline);
+        if n > 0 {
+            self.inflight[i].fetch_sub(n as u64, Ordering::Relaxed);
+        }
+        n
+    }
+
+    /// Wake every consumer parked on any shard queue (shutdown path).
+    pub fn wake_all(&self) {
+        for shard in &self.shards {
+            shard.wake_consumers();
+        }
+    }
 }
 
 #[cfg(test)]
@@ -217,6 +246,43 @@ mod tests {
         let ids: Vec<u64> = out.iter().map(|q| q.id).collect();
         assert_eq!(ids, (0..10).collect::<Vec<_>>());
         assert_eq!(r.drain_many(0, 4, &mut out), 0);
+    }
+
+    #[test]
+    fn drain_deadline_parks_until_route() {
+        let r = Arc::new(Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default()));
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            let deadline = Instant::now() + std::time::Duration::from_secs(20);
+            let n = r2.drain_deadline(0, 8, &mut out, deadline);
+            (n, out)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        r.route(req(7));
+        let (n, out) = h.join().unwrap();
+        assert_eq!(n, 1, "woken by the routed request");
+        assert_eq!(out[0].id, 7);
+        assert_eq!(r.inflight(0), 0, "gauge decremented on the parked drain");
+    }
+
+    #[test]
+    fn wake_all_unparks_empty_shards() {
+        let r = Arc::new(Router::new(2, RoutePolicy::RoundRobin, CmpConfig::default()));
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            let deadline = Instant::now() + std::time::Duration::from_millis(300);
+            r2.drain_deadline(1, 8, &mut out, deadline)
+        });
+        // Bounded observation: the drain may time out on its own on a
+        // loaded box — the join assertion holds either way.
+        let until = Instant::now() + std::time::Duration::from_secs(5);
+        while r.shard(1).parked_consumers() == 0 && Instant::now() < until {
+            std::thread::yield_now();
+        }
+        r.wake_all();
+        assert_eq!(h.join().unwrap(), 0, "woken onto an empty shard");
     }
 
     #[test]

@@ -19,10 +19,15 @@ use super::worker::{worker_loop, EngineFactory};
 /// Pipeline configuration.
 #[derive(Clone)]
 pub struct ServerConfig {
+    /// Router shards (one batcher thread per shard).
     pub shards: usize,
+    /// Model worker threads.
     pub workers: usize,
+    /// How the router spreads requests across shards.
     pub route_policy: RoutePolicy,
+    /// Dynamic-batching knobs (size/deadline flush).
     pub batch_policy: BatchPolicy,
+    /// CMP configuration for every queue in the pipeline.
     pub queue_config: CmpConfig,
 }
 
@@ -53,6 +58,26 @@ pub struct Server {
 
 impl Server {
     /// Start batcher and worker threads.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use std::time::Duration;
+    /// use cmpq::coordinator::server::{Server, ServerConfig};
+    /// use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+    ///
+    /// let factory: EngineFactory = Arc::new(|| {
+    ///     Ok(Box::new(EchoEngine { batch: 4, features: 2, outputs: 1, scale: 2.0 })
+    ///         as Box<dyn InferenceEngine>)
+    /// });
+    /// let server = Server::start(ServerConfig::default(), factory);
+    /// let out = server
+    ///     .infer_blocking(vec![1.0, 3.0], Duration::from_secs(20))
+    ///     .expect("response");
+    /// assert_eq!(out, vec![4.0]); // mean 2 × scale 2
+    /// server.shutdown();
+    /// ```
     pub fn start(cfg: ServerConfig, engine_factory: EngineFactory) -> Self {
         let router = Arc::new(Router::new(
             cfg.shards,
@@ -98,6 +123,25 @@ impl Server {
     }
 
     /// Submit a request; returns the slot to wait on.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use std::time::Duration;
+    /// use cmpq::coordinator::server::{Server, ServerConfig};
+    /// use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+    ///
+    /// let factory: EngineFactory = Arc::new(|| {
+    ///     Ok(Box::new(EchoEngine { batch: 4, features: 2, outputs: 1, scale: 1.0 })
+    ///         as Box<dyn InferenceEngine>)
+    /// });
+    /// let server = Server::start(ServerConfig::default(), factory);
+    /// let slot = server.submit(vec![2.0, 4.0]);
+    /// let resp = slot.wait_timeout(Duration::from_secs(20)).expect("response");
+    /// assert_eq!(resp.output, vec![3.0]); // mean of [2, 4]
+    /// server.shutdown();
+    /// ```
     pub fn submit(&self, features: Vec<f32>) -> Arc<ResponseSlot> {
         let slot = ResponseSlot::new();
         let req = InferRequest {
@@ -138,10 +182,12 @@ impl Server {
         self.submit(features).wait_timeout(timeout).map(|r| r.output)
     }
 
+    /// Pipeline metrics (counters + end-to-end latency histogram).
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
 
+    /// The request router (telemetry/tests).
     pub fn router(&self) -> &Router {
         &self.router
     }
@@ -151,14 +197,18 @@ impl Server {
         self.work.footprint_nodes()
     }
 
-    /// Drain everything and join all threads. Batchers stop first (they
-    /// flush remaining requests), then workers.
+    /// Drain-then-park shutdown: batchers stop first (flushing whatever
+    /// is pending), then workers — each stage's parked threads are woken
+    /// explicitly so shutdown never waits out a park slice. All queues
+    /// are fully drained before the corresponding threads exit.
     pub fn shutdown(mut self) -> Arc<Metrics> {
         self.stop_batchers.store(true, Ordering::Release);
+        self.router.wake_all();
         for b in self.batchers.drain(..) {
             b.join().expect("batcher panicked");
         }
         self.stop_workers.store(true, Ordering::Release);
+        self.work.wake_consumers();
         for w in self.workers.drain(..) {
             w.join().expect("worker panicked");
         }

@@ -8,12 +8,14 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::batcher::{Batch, WorkQueue};
 use super::metrics::Metrics;
 use super::request::InferResponse;
+use crate::util::Backoff;
 
 /// Something that can run a fixed-shape batched inference.
 pub trait InferenceEngine {
@@ -52,9 +54,13 @@ impl InferenceEngine for crate::runtime::ModelRuntime {
 /// A trivial engine for tests and the no-artifacts demo path: output
 /// row = `scale ×` mean of the input row, replicated.
 pub struct EchoEngine {
+    /// Rows per model invocation.
     pub batch: usize,
+    /// Features per input row.
     pub features: usize,
+    /// Outputs per row (the mean is replicated across them).
     pub outputs: usize,
+    /// Multiplier applied to each row's mean.
     pub scale: f32,
 }
 
@@ -87,11 +93,21 @@ impl InferenceEngine for EchoEngine {
 /// dequeue (one cursor/frontier RMW pair for the whole run).
 const WORK_POP_BATCH: usize = 4;
 
+/// Longest single park on the empty work queue. A push (or
+/// `Server::shutdown`'s explicit wake) ends the park immediately; the
+/// slice only bounds stop-latency if a wake were ever missed.
+const WORKER_PARK: Duration = Duration::from_millis(100);
+
 /// Worker loop: consume batches until `stop` is set and the queue is
 /// empty. Oversized batches (more requests than the model batch) are
 /// split into multiple invocations; undersized ones are zero-padded.
 /// Queued batches are claimed [`WORK_POP_BATCH`] at a time through the
 /// CMP batch-dequeue path.
+///
+/// The empty-queue path escalates through [`Backoff`] (spin → yield)
+/// and, once [`Backoff::is_yielding`] reports the spin budget spent,
+/// parks on the work queue's eventcount (DESIGN.md §8) — an idle worker
+/// fleet sleeps in the kernel instead of burning cores.
 pub fn worker_loop(
     work: WorkQueue,
     factory: EngineFactory,
@@ -100,8 +116,10 @@ pub fn worker_loop(
 ) {
     let engine = factory().expect("engine construction failed");
     let mut inbox: Vec<Batch> = Vec::with_capacity(WORK_POP_BATCH);
+    let mut idle = Backoff::new();
     loop {
         if work.pop_batch_into(WORK_POP_BATCH, &mut inbox) > 0 {
+            idle.reset();
             for batch in inbox.drain(..) {
                 run_batch(&*engine, batch, &metrics);
             }
@@ -114,8 +132,18 @@ pub fn worker_loop(
             for batch in inbox.drain(..) {
                 run_batch(&*engine, batch, &metrics);
             }
+        } else if idle.is_yielding() {
+            // Park (lost-wakeup-safe): a push wakes us at once; the
+            // deadline keeps `stop` observed within WORKER_PARK.
+            let deadline = Instant::now() + WORKER_PARK;
+            if work.pop_deadline_batch(WORK_POP_BATCH, &mut inbox, deadline) > 0 {
+                idle.reset();
+                for batch in inbox.drain(..) {
+                    run_batch(&*engine, batch, &metrics);
+                }
+            }
         } else {
-            std::thread::yield_now();
+            idle.spin();
         }
     }
 }

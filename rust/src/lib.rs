@@ -23,8 +23,21 @@
 //!   batcher → model workers) whose request fabric is CMP queues; workers
 //!   execute an AOT-compiled JAX/Pallas model through [`runtime`].
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
+//! * [`util`] — owned substrates (PRNG, backoff, eventcount parking,
+//!   CPU accounting, CLI/JSON helpers) the offline image forces on us.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! Consumers never busy-wait on an empty queue: every implementation
+//! offers blocking/deadline dequeues
+//! ([`ConcurrentQueue::pop_blocking`], [`ConcurrentQueue::pop_deadline`]
+//! and their batch variants), and [`CmpQueue`] backs them with a
+//! lost-wakeup-safe eventcount ([`util::WaitStrategy`], DESIGN.md §8)
+//! so idle consumers sleep in the kernel while the lock-free fast
+//! paths stay untouched.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index,
+//! and the top-level `README.md` for a quickstart.
+
+#![warn(missing_docs)]
 
 pub mod bench;
 pub mod coordinator;

@@ -54,7 +54,7 @@ fn main() {
 const HELP: &str = "repro — CMP queue reproduction (see README.md)\n\
 commands:\n  \
 bench <fig1|tables|fig2|faults|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--batch K] [--verbose]\n  \
-serve [--requests N] [--clients C] [--shards S] [--workers W] [--echo]\n  \
+serve [--requests N] [--clients C] [--shards S] [--workers W] [--idle-ms N] [--echo]\n  \
 selftest [--artifacts DIR]\n  \
 demo";
 
@@ -261,6 +261,27 @@ fn cmd_serve(args: &Args) -> i32 {
         "served {total} requests in {elapsed:.2?} -> {:.1} req/s",
         total as f64 / elapsed.as_secs_f64()
     );
+
+    // Optional idle window: demonstrates the spin-to-sleep layer
+    // (DESIGN.md §8) — with zero offered load every batcher and worker
+    // parks, so the whole pipeline should sit near 0% CPU.
+    let idle_ms: u64 = args.get_parse("idle-ms", 0u64);
+    if idle_ms > 0 {
+        eprintln!("serve: idling the pipeline for {idle_ms}ms (threads park)");
+        let cpu0 = cmpq::util::cpu::process_cpu_seconds();
+        std::thread::sleep(Duration::from_millis(idle_ms));
+        if let (Some(a), Some(b)) = (cpu0, cmpq::util::cpu::process_cpu_seconds()) {
+            let wall = idle_ms as f64 / 1000.0;
+            println!(
+                "idle window: {:.3} cpu-s over {wall:.3} wall-s ({:.1}% of one core)",
+                b - a,
+                100.0 * (b - a) / wall
+            );
+        } else {
+            println!("idle window: CPU accounting unavailable on this platform");
+        }
+    }
+
     let server = Arc::try_unwrap(server).ok().expect("all clients joined");
     let metrics = server.shutdown();
     println!("{}", metrics.report());

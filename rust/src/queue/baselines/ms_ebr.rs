@@ -52,6 +52,7 @@ impl<T: Send> Default for MsEbrQueue<T> {
 }
 
 impl<T: Send> MsEbrQueue<T> {
+    /// An empty queue with its own epoch domain.
     pub fn new() -> Self {
         let dummy = MsNode::<T>::dummy();
         MsEbrQueue {
@@ -66,6 +67,7 @@ impl<T: Send> MsEbrQueue<T> {
         &self.domain
     }
 
+    /// Enqueue (always succeeds; the list is unbounded).
     pub fn push(&self, item: T) {
         let node = MsNode::with_data(item);
         let _guard = self.domain.pin();
@@ -98,6 +100,7 @@ impl<T: Send> MsEbrQueue<T> {
         }
     }
 
+    /// Dequeue; `None` when empty at the linearization point.
     pub fn pop(&self) -> Option<T> {
         let _guard = self.domain.pin();
         loop {

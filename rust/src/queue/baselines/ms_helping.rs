@@ -19,6 +19,7 @@ impl<T: Send> Default for MsHelpingQueue<T> {
 }
 
 impl<T: Send> MsHelpingQueue<T> {
+    /// An empty queue with the default CMP configuration plus helping.
     pub fn new() -> Self {
         Self::with_config(CmpConfig::default())
     }
@@ -30,10 +31,12 @@ impl<T: Send> MsHelpingQueue<T> {
         }
     }
 
+    /// Enqueue through the helping-enabled CMP core.
     pub fn push(&self, item: T) -> Result<(), T> {
         self.inner.push(item)
     }
 
+    /// Dequeue; `None` when empty at the linearization point.
     pub fn pop(&self) -> Option<T> {
         self.inner.pop()
     }

@@ -55,6 +55,7 @@ impl<T: Send> Default for MsHpQueue<T> {
 }
 
 impl<T: Send> MsHpQueue<T> {
+    /// An empty queue with its own hazard-pointer domain.
     pub fn new() -> Self {
         let dummy = MsNode::<T>::dummy();
         MsHpQueue {
@@ -69,6 +70,7 @@ impl<T: Send> MsHpQueue<T> {
         &self.domain
     }
 
+    /// Enqueue (always succeeds; the list is unbounded).
     pub fn push(&self, item: T) {
         let node = MsNode::with_data(item);
         loop {
@@ -106,6 +108,7 @@ impl<T: Send> MsHpQueue<T> {
         }
     }
 
+    /// Dequeue; `None` when empty at the linearization point.
     pub fn pop(&self) -> Option<T> {
         loop {
             let head = self.domain.protect(0, &self.head);

@@ -20,24 +20,29 @@ impl<T: Send> Default for MutexQueue<T> {
 }
 
 impl<T: Send> MutexQueue<T> {
+    /// An empty queue.
     pub fn new() -> Self {
         MutexQueue {
             inner: Mutex::new(VecDeque::new()),
         }
     }
 
+    /// Enqueue under the lock (always succeeds).
     pub fn push(&self, item: T) {
         self.inner.lock().unwrap().push_back(item);
     }
 
+    /// Dequeue under the lock; `None` when empty.
     pub fn pop(&self) -> Option<T> {
         self.inner.lock().unwrap().pop_front()
     }
 
+    /// Current queue depth.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().len()
     }
 
+    /// Whether the queue is currently empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

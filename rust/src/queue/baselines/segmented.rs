@@ -196,6 +196,7 @@ impl<T: Send> Default for SegmentedQueue<T> {
 }
 
 impl<T: Send> SegmentedQueue<T> {
+    /// An empty queue (producers self-register on first push).
     pub fn new() -> Self {
         let mut reg = Vec::with_capacity(MAX_PRODUCERS);
         reg.resize_with(MAX_PRODUCERS, || AtomicPtr::new(ptr::null_mut()));
@@ -227,10 +228,13 @@ impl<T: Send> SegmentedQueue<T> {
         })
     }
 
+    /// Enqueue onto this thread's sub-queue (always succeeds).
     pub fn push(&self, item: T) {
         unsafe { (*self.my_subqueue()).push(item) }
     }
 
+    /// Dequeue from the rotating sub-queue scan; `None` when every
+    /// sub-queue looked empty (relaxed FIFO).
     pub fn pop(&self) -> Option<T> {
         let n = self.count.load(Ordering::Acquire);
         if n == 0 {

@@ -48,10 +48,12 @@ impl<T: Send> VyukovQueue<T> {
         }
     }
 
+    /// Ring capacity (rounded up to a power of two at construction).
     pub fn capacity(&self) -> usize {
         self.slots.len()
     }
 
+    /// Enqueue; `Err(item)` when the ring is full.
     pub fn push(&self, item: T) -> Result<(), T> {
         let mut pos = self.enqueue_pos.load(Ordering::Relaxed);
         loop {
@@ -80,6 +82,7 @@ impl<T: Send> VyukovQueue<T> {
         }
     }
 
+    /// Dequeue; `None` when the ring is empty.
     pub fn pop(&self) -> Option<T> {
         let mut pos = self.dequeue_pos.load(Ordering::Relaxed);
         loop {

@@ -97,37 +97,45 @@ impl CmpConfig {
         self
     }
 
+    /// Builder-style reclamation period `N` (floored at 1); keeps the
+    /// precomputed Bernoulli `1/N` in sync.
     pub fn with_reclaim_period(mut self, n: u64) -> Self {
         self.reclaim_period = n.max(1);
         self.bernoulli_p = 1.0 / self.reclaim_period as f64;
         self
     }
 
+    /// Builder-style trigger policy override.
     pub fn with_trigger(mut self, t: ReclaimTrigger) -> Self {
         self.trigger = t;
         self
     }
 
+    /// Builder-style minimum reclamation batch (floored at 1).
     pub fn with_min_batch(mut self, b: usize) -> Self {
         self.min_reclaim_batch = b.max(1);
         self
     }
 
+    /// Builder-style pool cap (bounded-queue configurations).
     pub fn with_max_nodes(mut self, cap: usize) -> Self {
         self.max_nodes = Some(cap);
         self
     }
 
+    /// Disable the scan cursor (ABL-CURSOR ablation).
     pub fn without_scan_cursor(mut self) -> Self {
         self.use_scan_cursor = false;
         self
     }
 
+    /// Enable the original M&S helping mechanism (ABL-HELP ablation).
     pub fn with_helping(mut self) -> Self {
         self.helping = true;
         self
     }
 
+    /// Disable statistics counters (perf configurations).
     pub fn without_stats(mut self) -> Self {
         self.track_stats = false;
         self
@@ -140,6 +148,7 @@ impl CmpConfig {
         self
     }
 
+    /// Disable per-thread node magazines (ABL-MAG ablation).
     pub fn without_magazines(mut self) -> Self {
         self.magazine_capacity = 0;
         self

@@ -25,12 +25,16 @@ pub enum NodeState {
     Claimed = 2,
 }
 
+/// Raw value of [`NodeState::Free`] (atomic CAS operand).
 pub const STATE_FREE: u32 = NodeState::Free as u32;
+/// Raw value of [`NodeState::Available`] (atomic CAS operand).
 pub const STATE_AVAILABLE: u32 = NodeState::Available as u32;
+/// Raw value of [`NodeState::Claimed`] (atomic CAS operand).
 pub const STATE_CLAIMED: u32 = NodeState::Claimed as u32;
 
-/// Payload slot states (data claim, §3.5 Phase 3).
+/// Payload slot state: no payload (data claim, §3.5 Phase 3).
 pub const DATA_EMPTY: u32 = 0;
+/// Payload slot state: payload present (data claim, §3.5 Phase 3).
 pub const DATA_PRESENT: u32 = 1;
 
 /// Cycle value of the permanent dummy node.

@@ -131,10 +131,13 @@ unsafe impl<T: Send> Send for NodePool<T> {}
 unsafe impl<T: Send> Sync for NodePool<T> {}
 
 impl<T> NodePool<T> {
+    /// Pool with freelist accounting on and default magazine capacity.
     pub fn new(max_nodes: Option<usize>) -> Self {
         Self::with_accounting(max_nodes, true)
     }
 
+    /// Pool with explicit freelist-accounting choice (perf configs
+    /// disable the extra RMW) and default magazine capacity.
     pub fn with_accounting(max_nodes: Option<usize>, count_free: bool) -> Self {
         Self::with_magazines(
             max_nodes,
@@ -143,6 +146,8 @@ impl<T> NodePool<T> {
         )
     }
 
+    /// Fully explicit constructor (`magazine_capacity == 0` disables
+    /// the per-thread magazine layer).
     pub fn with_magazines(
         max_nodes: Option<usize>,
         count_free: bool,

@@ -43,6 +43,7 @@ pub(crate) struct CmpStats {
 }
 
 impl CmpStats {
+    /// Increment `counter` by one iff recording is `on`.
     #[inline]
     pub fn bump(counter: &CachePadded<AtomicU64>, on: bool) {
         if on {
@@ -50,6 +51,7 @@ impl CmpStats {
         }
     }
 
+    /// Increment `counter` by `n` iff recording is `on`.
     #[inline]
     pub fn add(counter: &CachePadded<AtomicU64>, n: u64, on: bool) {
         if on && n > 0 {
@@ -57,6 +59,7 @@ impl CmpStats {
         }
     }
 
+    /// Read every counter into a plain snapshot.
     pub fn snapshot(&self) -> CmpStatsSnapshot {
         CmpStatsSnapshot {
             enq_retries: self.enq_retries.load(Ordering::Relaxed),
@@ -80,19 +83,33 @@ impl CmpStats {
 /// Public point-in-time view of the queue's counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CmpStatsSnapshot {
+    /// Enqueue link-CAS retries (stale tail observations).
     pub enq_retries: u64,
+    /// Dequeue scan steps beyond the first probed node.
     pub deq_extra_scans: u64,
+    /// Dequeue claim CASes lost to another consumer.
     pub deq_claim_fails: u64,
+    /// Successful scan-cursor advances.
     pub cursor_advances: u64,
+    /// Cursor advances skipped/lost (another thread already moved it).
     pub cursor_misses: u64,
+    /// Claims whose payload was gone (stall-past-window semantics).
     pub lost_claims: u64,
+    /// Completed reclamation passes.
     pub reclaim_passes: u64,
+    /// Reclamation entries skipped because another pass was running.
     pub reclaim_contended: u64,
+    /// Nodes recycled to the pool.
     pub nodes_reclaimed: u64,
+    /// Payloads dropped by the reclaimer (claimer stalled past window).
     pub payloads_reclaimed: u64,
+    /// `push_batch` calls (each pays one cycle RMW + one link CAS).
     pub batch_enqueues: u64,
+    /// Items enqueued through `push_batch`.
     pub batch_enqueued_items: u64,
+    /// `pop_batch` calls that claimed at least one node.
     pub batch_dequeues: u64,
+    /// Items dequeued through `pop_batch`.
     pub batch_dequeued_items: u64,
 }
 

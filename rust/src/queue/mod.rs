@@ -8,8 +8,49 @@ pub mod cmp;
 pub mod reclamation;
 
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use crate::util::Backoff;
+
+/// Longest single sleep of the default (polling) blocking-dequeue
+/// implementations: bounds both wake latency and idle CPU burn for
+/// implementations without a native parking path.
+const POLL_SLEEP_CAP_US: u64 = 1000;
+/// Shortest sleep once the default blocking dequeues escalate past
+/// spinning.
+const POLL_SLEEP_FLOOR_US: u64 = 50;
+
+/// Shared escalation loop of the default blocking dequeues: run
+/// `attempt` until it yields a value, spinning → yielding → sleeping in
+/// bounded exponential steps (50 µs … 1 ms), truncated to the remaining
+/// time when a deadline is set. `None` means the deadline passed with
+/// every attempt empty.
+fn poll_escalate<R>(
+    mut attempt: impl FnMut() -> Option<R>,
+    deadline: Option<Instant>,
+) -> Option<R> {
+    let mut backoff = Backoff::new();
+    let mut sleep_us = 0u64;
+    loop {
+        if let Some(r) = attempt() {
+            return Some(r);
+        }
+        let mut sleep_cap = Duration::from_micros(POLL_SLEEP_CAP_US);
+        if let Some(d) = deadline {
+            let now = Instant::now();
+            if now >= d {
+                return None;
+            }
+            sleep_cap = sleep_cap.min(d - now);
+        }
+        if backoff.is_yielding() {
+            sleep_us = (sleep_us * 2).clamp(POLL_SLEEP_FLOOR_US, POLL_SLEEP_CAP_US);
+            std::thread::sleep(Duration::from_micros(sleep_us).min(sleep_cap));
+        } else {
+            backoff.spin();
+        }
+    }
+}
 
 /// Common interface over all queue implementations.
 ///
@@ -108,6 +149,72 @@ pub trait ConcurrentQueue<T: Send>: Send + Sync {
         }
     }
 
+    /// Dequeue, blocking until an item is available.
+    ///
+    /// The default escalates spin → yield → bounded exponential sleep
+    /// (50 µs … 1 ms), so an idle consumer costs well under 5% of a
+    /// core at the price of up to ~1 ms wake latency. Implementations
+    /// with a real parking path (CMP's epoch-guarded eventcount,
+    /// [`crate::util::WaitStrategy`]) override this with a
+    /// lost-wakeup-safe sleep that producers end immediately.
+    fn pop_blocking(&self) -> T {
+        poll_escalate(|| self.try_dequeue(), None)
+            .expect("poll_escalate without a deadline cannot time out")
+    }
+
+    /// Dequeue, blocking until an item is available or `deadline`
+    /// passes; `None` means the queue was empty through the deadline.
+    ///
+    /// Same default escalation (and the same parking override contract)
+    /// as [`ConcurrentQueue::pop_blocking`]; sleeps are truncated to
+    /// the remaining time so expiry is detected promptly.
+    fn pop_deadline(&self, deadline: Instant) -> Option<T> {
+        poll_escalate(|| self.try_dequeue(), Some(deadline))
+    }
+
+    /// Batch variant of [`ConcurrentQueue::pop_blocking`]: block until
+    /// at least one item is claimed, then claim up to `max`, appending
+    /// to `out` in queue order. Returns the number claimed (≥ 1, except
+    /// `max == 0`, which returns 0 immediately).
+    fn pop_blocking_batch(&self, max: usize, out: &mut Vec<T>) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        poll_escalate(
+            || match self.try_dequeue_batch(max, out) {
+                0 => None,
+                n => Some(n),
+            },
+            None,
+        )
+        .expect("poll_escalate without a deadline cannot time out")
+    }
+
+    /// Batch variant of [`ConcurrentQueue::pop_deadline`]: claim up to
+    /// `max` items (appending to `out`), blocking until at least one is
+    /// available or `deadline` passes. Returns the number claimed
+    /// (0 = empty through the deadline). `max == 0` returns 0 at once.
+    fn pop_deadline_batch(&self, max: usize, out: &mut Vec<T>, deadline: Instant) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        poll_escalate(
+            || match self.try_dequeue_batch(max, out) {
+                0 => None,
+                n => Some(n),
+            },
+            Some(deadline),
+        )
+        .unwrap_or(0)
+    }
+
+    /// Wake every consumer blocked in a `pop_blocking*`/`pop_deadline*`
+    /// call (shutdown/drain paths). The default is a no-op because the
+    /// default blocking dequeues poll with bounded sleeps and never park
+    /// indefinitely; parking implementations override it to kick their
+    /// waiters immediately.
+    fn wake_all(&self) {}
+
     /// Short static identifier used by the benchmark reports.
     fn name(&self) -> &'static str;
 
@@ -159,6 +266,8 @@ impl Impl {
     /// The paper's evaluation set (Figure 1, Tables 1–3, Figure 2).
     pub const PAPER_SET: [Impl; 3] = [Impl::Cmp, Impl::Segmented, Impl::MsHp];
 
+    /// Short machine-readable identifier (CLI `--impls` values, report
+    /// keys).
     pub fn name(&self) -> &'static str {
         match self {
             Impl::Cmp => "cmp",
@@ -184,6 +293,7 @@ impl Impl {
         }
     }
 
+    /// Inverse of [`Impl::name`]; `None` for unknown identifiers.
     pub fn parse(s: &str) -> Option<Impl> {
         Impl::ALL.iter().copied().find(|i| i.name() == s)
     }
@@ -279,6 +389,49 @@ mod tests {
         let mut out = Vec::new();
         assert_eq!(q.try_dequeue_batch(10, &mut out), 4);
         assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn default_blocking_pops_poll_through() {
+        // Every implementation (CMP overrides, baselines use the polling
+        // defaults) must deliver via the blocking/deadline paths.
+        for i in Impl::ALL {
+            let q: Arc<dyn ConcurrentQueue<u64>> = i.make(1024);
+            q.enqueue(5);
+            assert_eq!(q.pop_blocking(), 5, "{}", i.name());
+            q.enqueue(6);
+            let d = Instant::now() + Duration::from_secs(5);
+            assert_eq!(q.pop_deadline(d), Some(6), "{}", i.name());
+            q.try_enqueue_batch(vec![1, 2, 3]).unwrap();
+            let mut out = Vec::new();
+            assert_eq!(q.pop_blocking_batch(8, &mut out), 3, "{}", i.name());
+            q.try_enqueue_batch(vec![7, 8]).unwrap();
+            let d = Instant::now() + Duration::from_secs(5);
+            assert_eq!(q.pop_deadline_batch(8, &mut out, d), 2, "{}", i.name());
+        }
+    }
+
+    #[test]
+    fn default_pop_deadline_times_out_empty() {
+        let q: Arc<dyn ConcurrentQueue<u64>> = Impl::Mutex.make(16);
+        let t0 = Instant::now();
+        assert_eq!(q.pop_deadline(t0 + Duration::from_millis(20)), None);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        let mut out = Vec::new();
+        let t0 = Instant::now();
+        assert_eq!(
+            q.pop_deadline_batch(4, &mut out, t0 + Duration::from_millis(20)),
+            0
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        // max == 0 returns immediately, even with a far deadline.
+        let t0 = Instant::now();
+        assert_eq!(
+            q.pop_deadline_batch(0, &mut out, t0 + Duration::from_secs(30)),
+            0
+        );
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        q.wake_all(); // default no-op must exist for every impl
     }
 
     #[test]

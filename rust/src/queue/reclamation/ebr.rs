@@ -32,6 +32,8 @@ struct Record {
     epoch: AtomicU64,
 }
 
+/// Shared state behind an [`EbrDomain`] handle (thread records, global
+/// epoch, orphaned retirees).
 pub struct DomainInner {
     records: Box<[Record]>,
     high: AtomicUsize,
@@ -93,6 +95,7 @@ impl Drop for EbrGuard {
 }
 
 impl EbrDomain {
+    /// A fresh domain with no registered threads.
     pub fn new() -> Self {
         let records: Vec<Record> = (0..MAX_THREADS)
             .map(|_| Record {
@@ -252,10 +255,12 @@ impl EbrDomain {
         self.inner.pending.load(Ordering::Relaxed)
     }
 
+    /// Objects actually freed so far (FAULT experiment metric).
     pub fn freed(&self) -> usize {
         self.inner.freed.load(Ordering::Relaxed)
     }
 
+    /// Current global epoch (diagnostics).
     pub fn global_epoch(&self) -> u64 {
         self.inner.global_epoch.load(Ordering::Acquire)
     }

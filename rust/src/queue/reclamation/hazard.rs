@@ -100,6 +100,7 @@ impl Drop for ThreadReg {
 }
 
 impl HazardDomain {
+    /// A fresh domain with all hazard records unclaimed.
     pub fn new() -> Self {
         let records: Vec<Record> = (0..MAX_THREADS).map(|_| Record::new()).collect();
         HazardDomain {

@@ -77,10 +77,12 @@ impl ModelRuntime {
         self.output_len() / self.batch_size()
     }
 
+    /// Input tensor shape (leading dimension = batch).
     pub fn input_shape(&self) -> &[usize] {
         &self.input_shape
     }
 
+    /// Output tensor shape (leading dimension = batch).
     pub fn output_shape(&self) -> &[usize] {
         &self.output_shape
     }
@@ -146,34 +148,42 @@ impl ModelRuntime {
         bail!("cmpq was built without the `pjrt` feature; the PJRT runtime is unavailable")
     }
 
+    /// Elements per input batch.
     pub fn input_len(&self) -> usize {
         self.input_shape.iter().product()
     }
 
+    /// Elements per output batch.
     pub fn output_len(&self) -> usize {
         self.output_shape.iter().product()
     }
 
+    /// Model batch size (leading input dimension).
     pub fn batch_size(&self) -> usize {
         self.input_shape[0]
     }
 
+    /// Per-row feature width.
     pub fn features_per_row(&self) -> usize {
         self.input_len() / self.batch_size()
     }
 
+    /// Per-row output width.
     pub fn outputs_per_row(&self) -> usize {
         self.output_len() / self.batch_size()
     }
 
+    /// Input tensor shape (leading dimension = batch).
     pub fn input_shape(&self) -> &[usize] {
         &self.input_shape
     }
 
+    /// Output tensor shape (leading dimension = batch).
     pub fn output_shape(&self) -> &[usize] {
         &self.output_shape
     }
 
+    /// Always fails: the crate was built without the `pjrt` feature.
     pub fn infer(&self, _input: &[f32]) -> Result<Vec<f32>> {
         bail!("cmpq was built without the `pjrt` feature; the PJRT runtime is unavailable")
     }
@@ -181,14 +191,20 @@ impl ModelRuntime {
 
 /// Parsed `artifacts/meta.json`.
 pub struct Meta {
+    /// Path to the serving model's HLO-text artifact.
     pub model_path: PathBuf,
+    /// Serving model input shape.
     pub model_input_shape: Vec<usize>,
+    /// Serving model output shape.
     pub model_output_shape: Vec<usize>,
+    /// Path to the synthetic-load kernel's HLO-text artifact.
     pub synthload_path: PathBuf,
+    /// Synthetic-load kernel input shape.
     pub synthload_shape: Vec<usize>,
 }
 
 impl Meta {
+    /// Parse `<dir>/meta.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let raw = std::fs::read_to_string(dir.join("meta.json"))
             .with_context(|| format!("reading {}/meta.json", dir.display()))?;
@@ -223,14 +239,20 @@ impl Meta {
 /// Parsed `artifacts/testvec.json` — seeded input + expected output for
 /// the Rust-side end-to-end numerics check.
 pub struct TestVectors {
+    /// Input tensor shape.
     pub input_shape: Vec<usize>,
+    /// Expected output tensor shape.
     pub output_shape: Vec<usize>,
+    /// Flattened seeded input.
     pub input: Vec<f32>,
+    /// Flattened expected output (from JAX).
     pub expected: Vec<f32>,
+    /// Relative tolerance for [`TestVectors::check`].
     pub rtol: f64,
 }
 
 impl TestVectors {
+    /// Parse `<dir>/testvec.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let raw = std::fs::read_to_string(dir.join("testvec.json"))
             .with_context(|| format!("reading {}/testvec.json", dir.display()))?;

@@ -19,6 +19,7 @@ const SPIN_LIMIT: u32 = 6;
 const YIELD_LIMIT: u32 = 10;
 
 impl Backoff {
+    /// A fresh backoff at the spinning stage.
     pub fn new() -> Self {
         Self { step: 0 }
     }

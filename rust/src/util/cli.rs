@@ -7,7 +7,9 @@ use std::collections::BTreeMap;
 /// Parsed command line: positionals plus `--key [value]` options.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (flags store `"true"`).
     pub options: BTreeMap<String, String>,
 }
 
@@ -46,14 +48,17 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Whether boolean option `name` was passed (`--name`, `--name=1`).
     pub fn flag(&self, name: &str) -> bool {
         matches!(self.options.get(name).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// Raw value of option `name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Raw value of option `name`, or `default` when absent.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }

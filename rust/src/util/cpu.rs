@@ -1,0 +1,67 @@
+//! Process CPU-time accounting for the ops-per-CPU-second benchmark
+//! metric (DESIGN.md §8).
+//!
+//! Wall-clock throughput cannot distinguish a consumer that parks
+//! through idle gaps from one that burns a core spinning; CPU time can.
+//! Linux exposes the process totals in `/proc/self/stat` as `utime` /
+//! `stime` in USER_HZ ticks; the USER_HZ userspace ABI is fixed at 100
+//! regardless of the kernel's internal tick rate. On platforms without
+//! procfs the probe returns `None` and callers report the metric as
+//! unavailable instead of guessing.
+
+/// Linux USER_HZ: the `/proc` clock-tick ABI, fixed at 100 ticks/s.
+const USER_HZ: f64 = 100.0;
+
+/// CPU seconds (user + system) consumed by this process so far, or
+/// `None` when `/proc/self/stat` is unavailable or unparseable.
+///
+/// Resolution is one tick (10 ms); take differences across work that
+/// runs long enough to amortize it.
+pub fn process_cpu_seconds() -> Option<f64> {
+    parse_stat_cpu_ticks(&std::fs::read_to_string("/proc/self/stat").ok()?)
+        .map(|ticks| ticks as f64 / USER_HZ)
+}
+
+/// `utime + stime` ticks out of a `/proc/<pid>/stat` line. The comm
+/// field (field 2) may itself contain spaces or parentheses, so fields
+/// are counted from the *last* `)`: `state` is field 3, `utime` and
+/// `stime` are fields 14 and 15.
+fn parse_stat_cpu_ticks(stat: &str) -> Option<u64> {
+    let rest = stat.rsplit_once(')')?.1;
+    let mut fields = rest.split_whitespace();
+    let utime: u64 = fields.nth(11)?.parse().ok()?;
+    let stime: u64 = fields.next()?.parse().ok()?;
+    Some(utime + stime)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_stat_line_with_hostile_comm() {
+        // comm containing spaces and a ')' — fields must still line up.
+        let line = "1234 (a b) c) R 1 1 1 0 -1 4194304 100 0 0 0 \
+                    7 3 0 0 20 0 1 0 100 1000 10 18446744073709551615";
+        assert_eq!(parse_stat_cpu_ticks(line), Some(10));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert_eq!(parse_stat_cpu_ticks("no parens here"), None);
+        assert_eq!(parse_stat_cpu_ticks("1 (x) R 1"), None);
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn live_probe_is_monotonic() {
+        let a = process_cpu_seconds().expect("/proc/self/stat readable");
+        let mut acc = 0u64;
+        for i in 0..2_000_000u64 {
+            acc = acc.wrapping_add(i ^ (acc >> 3));
+        }
+        std::hint::black_box(acc);
+        let b = process_cpu_seconds().unwrap();
+        assert!(b >= a, "CPU time went backwards: {a} -> {b}");
+    }
+}

@@ -7,15 +7,22 @@ use std::collections::BTreeMap;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as `f64`).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted keys).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Parse a complete JSON document (rejects trailing data).
     pub fn parse(s: &str) -> Result<Json, String> {
         let mut p = Parser {
             bytes: s.as_bytes(),
@@ -30,6 +37,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -37,10 +45,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Borrowed string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -48,6 +58,7 @@ impl Json {
         }
     }
 
+    /// Borrowed elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -68,10 +79,12 @@ impl Json {
         self.as_arr()?.iter().map(|v| v.as_f64()).collect()
     }
 
+    /// Like [`Json::as_f64_vec`], narrowed to `f32`.
     pub fn as_f32_vec(&self) -> Option<Vec<f32>> {
         Some(self.as_f64_vec()?.into_iter().map(|x| x as f32).collect())
     }
 
+    /// Numeric array as `usize` elements (errors on non-numbers).
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }

@@ -1,11 +1,14 @@
 //! Small substrates the offline image forces us to own: PRNG, backoff,
-//! CLI parsing, and timing helpers.
+//! consumer parking, CPU accounting, CLI parsing, and timing helpers.
 
 pub mod backoff;
 pub mod cli;
+pub mod cpu;
 pub mod json;
 pub mod rng;
 pub mod time;
+pub mod wait;
 
 pub use backoff::Backoff;
 pub use rng::XorShift64;
+pub use wait::WaitStrategy;

@@ -8,6 +8,7 @@ use std::time::{Duration, Instant};
 pub struct Anchor(Instant);
 
 impl Anchor {
+    /// Anchor at the current instant.
     pub fn now() -> Self {
         Self(Instant::now())
     }

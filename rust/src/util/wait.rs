@@ -1,0 +1,240 @@
+//! Lost-wakeup-safe consumer parking (DESIGN.md §8): an eventcount.
+//!
+//! The empty-queue wait path is a first-class design surface at serving
+//! scale — a fleet that busy-spins through idle gaps burns whole cores
+//! doing nothing. [`WaitStrategy`] lets consumers escalate spin → yield
+//! → sleep *without* ever missing a wakeup, while producers that find
+//! no waiters pay a single relaxed load (plus one fence) per push.
+//!
+//! # Protocol
+//!
+//! A waiter that found the queue empty:
+//!
+//! 1. [`WaitStrategy::register`] — announce itself (`waiters += 1`) and
+//!    snapshot the current wakeup *epoch*.
+//! 2. Re-check the queue. If an item appeared, [`WaitStrategy::cancel`]
+//!    and take it — no sleep.
+//! 3. [`WaitStrategy::wait`] / [`WaitStrategy::wait_deadline`] — sleep
+//!    until the epoch moves past the snapshot.
+//!
+//! A producer, after publishing an item, calls
+//! [`WaitStrategy::notify_if_waiting`]: a sequentially-consistent fence
+//! followed by a relaxed load of the waiter count; only when waiters
+//! are present does it take the lock, bump the epoch, and notify.
+//!
+//! # Why no wakeup is ever lost
+//!
+//! The race to exclude: producer publishes, consumer decides to sleep,
+//! nobody ever wakes it. Both sides carry a seq-cst fence — the
+//! consumer between its `waiters += 1` and its queue re-check (inside
+//! [`WaitStrategy::register`]), the producer between its publication
+//! and its waiter-count load (inside
+//! [`WaitStrategy::notify_if_waiting`]) — so the two fences are
+//! ordered in the single SC total order. If the producer's fence comes
+//! first, the consumer's re-check (step 2) observes the publication:
+//! it cancels and never sleeps. Otherwise the consumer's increment is
+//! before the producer's fence, the producer's load reads
+//! `waiters ≥ 1`, and it bumps the epoch under the lock; the sleeper
+//! either observes the bump before blocking (the epoch check in step 3
+//! runs under the same lock) or is woken by the notification. Either
+//! way, progress.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Epoch snapshot returned by [`WaitStrategy::register`]; consumed by
+/// [`WaitStrategy::wait`] / [`WaitStrategy::wait_deadline`].
+#[derive(Debug, Clone, Copy)]
+pub struct WaitToken(u64);
+
+/// Eventcount-style parking primitive: spin-phase decisions happen at
+/// the call site (see [`crate::util::Backoff::is_yielding`]); this type
+/// owns the sleep phase and its lost-wakeup guarantee.
+#[derive(Default)]
+pub struct WaitStrategy {
+    /// Wakeup epoch: bumped (under `lock`) by every notification.
+    epoch: AtomicU64,
+    /// Registered (parked or about-to-park) waiters.
+    waiters: AtomicU64,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WaitStrategy {
+    /// A fresh strategy with no waiters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Announce this thread as a waiter and snapshot the wakeup epoch.
+    ///
+    /// The caller **must** re-check its wait condition (e.g. re-poll the
+    /// queue) after this call and before sleeping; that re-check is what
+    /// closes the lost-wakeup window (see the module docs). Every
+    /// `register` must be paired with exactly one [`Self::cancel`] or
+    /// one wait call.
+    pub fn register(&self) -> WaitToken {
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        // Fence-pair with `notify_if_waiting`'s fence: an SC RMW alone
+        // does not order the caller's *subsequent* (acquire) re-check
+        // against the producer's publication on weakly-ordered targets.
+        // With both fences, whichever comes first in the SC order,
+        // either the producer's load observes the increment (→ it
+        // notifies) or the re-check observes the publication.
+        fence(Ordering::SeqCst);
+        WaitToken(self.epoch.load(Ordering::SeqCst))
+    }
+
+    /// Deregister without sleeping (the re-check found the condition
+    /// satisfied).
+    pub fn cancel(&self) {
+        self.waiters.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Sleep until the epoch moves past `token`'s snapshot. Returns
+    /// immediately if it already has. Deregisters on return.
+    pub fn wait(&self, token: WaitToken) {
+        let mut guard = self.lock.lock().unwrap();
+        while self.epoch.load(Ordering::SeqCst) == token.0 {
+            guard = self.cv.wait(guard).unwrap();
+        }
+        drop(guard);
+        self.cancel();
+    }
+
+    /// Sleep until the epoch moves past `token`'s snapshot or `deadline`
+    /// passes. Returns `true` when woken by a notification, `false` on
+    /// deadline expiry. Deregisters on return.
+    pub fn wait_deadline(&self, token: WaitToken, deadline: Instant) -> bool {
+        let mut guard = self.lock.lock().unwrap();
+        let mut woken = true;
+        while self.epoch.load(Ordering::SeqCst) == token.0 {
+            let now = Instant::now();
+            if now >= deadline {
+                woken = false;
+                break;
+            }
+            let (g, _timeout) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+        drop(guard);
+        self.cancel();
+        woken
+    }
+
+    /// Producer-side fast path: wake all waiters iff any are registered.
+    ///
+    /// Call *after* publishing the state change waiters poll for. Costs
+    /// one seq-cst fence plus one relaxed load when nobody is waiting —
+    /// the common case for a busy queue — and only touches the lock and
+    /// condvar when a consumer is (about to be) parked.
+    pub fn notify_if_waiting(&self) {
+        fence(Ordering::SeqCst);
+        if self.waiters.load(Ordering::Relaxed) == 0 {
+            return;
+        }
+        self.notify_all();
+    }
+
+    /// Unconditionally bump the epoch and wake every waiter (shutdown /
+    /// drain paths, where "no waiters registered *yet*" must still
+    /// prevent a later sleeper from stranding: the sleeper's epoch
+    /// snapshot happens after this bump, so its own re-check covers it).
+    pub fn notify_all(&self) {
+        let guard = self.lock.lock().unwrap();
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        drop(guard);
+        self.cv.notify_all();
+    }
+
+    /// Currently registered waiters (diagnostics; racy by nature).
+    pub fn waiters(&self) -> u64 {
+        self.waiters.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn register_cancel_balances_waiters() {
+        let ws = WaitStrategy::new();
+        assert_eq!(ws.waiters(), 0);
+        let _t = ws.register();
+        assert_eq!(ws.waiters(), 1);
+        ws.cancel();
+        assert_eq!(ws.waiters(), 0);
+    }
+
+    #[test]
+    fn notify_if_waiting_skips_lock_when_idle() {
+        let ws = WaitStrategy::new();
+        // No waiters: must not bump the epoch (fast path taken).
+        ws.notify_if_waiting();
+        let t = ws.register();
+        ws.cancel();
+        // Epoch unchanged → a wait on the stale token would block, so
+        // check it via the atomic instead.
+        assert_eq!(ws.epoch.load(Ordering::SeqCst), t.0);
+    }
+
+    #[test]
+    fn wait_returns_immediately_after_missed_epoch() {
+        let ws = WaitStrategy::new();
+        let t = ws.register();
+        ws.notify_all(); // epoch moves while we are "re-checking"
+        ws.wait(t); // must not block
+        assert_eq!(ws.waiters(), 0);
+    }
+
+    #[test]
+    fn parked_thread_is_woken_by_notify() {
+        let ws = Arc::new(WaitStrategy::new());
+        let ready = Arc::new(AtomicBool::new(false));
+        let (ws2, ready2) = (ws.clone(), ready.clone());
+        let h = std::thread::spawn(move || {
+            let t = ws2.register();
+            ready2.store(true, Ordering::Release);
+            ws2.wait(t);
+        });
+        while !ready.load(Ordering::Acquire) {
+            std::thread::yield_now();
+        }
+        // The waiter is registered; notify_if_waiting must take the
+        // slow path and wake it.
+        ws.notify_if_waiting();
+        h.join().unwrap();
+        assert_eq!(ws.waiters(), 0);
+    }
+
+    #[test]
+    fn wait_deadline_times_out() {
+        let ws = WaitStrategy::new();
+        let t = ws.register();
+        let t0 = Instant::now();
+        let woken = ws.wait_deadline(t, t0 + Duration::from_millis(30));
+        assert!(!woken, "nobody notified");
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        assert_eq!(ws.waiters(), 0);
+    }
+
+    #[test]
+    fn wait_deadline_wakes_early_on_notify() {
+        let ws = Arc::new(WaitStrategy::new());
+        let ws2 = ws.clone();
+        let h = std::thread::spawn(move || {
+            let t = ws2.register();
+            ws2.wait_deadline(t, Instant::now() + Duration::from_secs(30))
+        });
+        while ws.waiters() == 0 {
+            std::thread::yield_now();
+        }
+        ws.notify_all();
+        assert!(h.join().unwrap(), "woken, not timed out");
+    }
+}

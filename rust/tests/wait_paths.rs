@@ -1,0 +1,196 @@
+//! Wait-path integration tests (DESIGN.md §8): lost-wakeup stress with
+//! pausing/resuming producers, `pop_deadline` timeout semantics across
+//! implementations, blocking batch claims, and shutdown-while-parked
+//! through the full serving pipeline.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cmpq::coordinator::server::{Server, ServerConfig};
+use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+use cmpq::queue::{ConcurrentQueue, Impl};
+use cmpq::CmpQueue;
+
+fn echo_factory() -> EngineFactory {
+    Arc::new(|| {
+        Ok(Box::new(EchoEngine {
+            batch: 4,
+            features: 2,
+            outputs: 1,
+            scale: 1.0,
+        }) as Box<dyn InferenceEngine>)
+    })
+}
+
+#[test]
+fn lost_wakeup_stress_with_pausing_producers() {
+    // Producers pause and resume so consumers repeatedly drain the
+    // queue, park, and must be woken by the next push. A lost wakeup
+    // either hangs the receive loop (caught by the 30s budget) or
+    // loses items (caught by the conservation check).
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    let producers = 2usize;
+    let consumers = 3usize;
+    let per = 2_000u64;
+    let total = producers as u64 * per;
+    let received = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+
+    let mut cons = Vec::new();
+    for _ in 0..consumers {
+        let q = q.clone();
+        let received = received.clone();
+        let stop = stop.clone();
+        cons.push(std::thread::spawn(move || {
+            let mut got = Vec::new();
+            loop {
+                match q.pop_deadline(Instant::now() + Duration::from_millis(100)) {
+                    Some(v) => {
+                        got.push(v);
+                        received.fetch_add(1, Ordering::AcqRel);
+                    }
+                    None => {
+                        if stop.load(Ordering::Acquire) {
+                            break;
+                        }
+                    }
+                }
+            }
+            got
+        }));
+    }
+    let mut prods = Vec::new();
+    for p in 0..producers {
+        let q = q.clone();
+        prods.push(std::thread::spawn(move || {
+            let base = p as u64 * per;
+            for i in 0..per {
+                q.push(base + i).unwrap();
+                // Pause often enough that consumers drain and park
+                // between pushes — the window the epoch protocol must
+                // cover.
+                if i % 64 == 0 {
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+            }
+        }));
+    }
+    for h in prods {
+        h.join().unwrap();
+    }
+    let budget = Instant::now() + Duration::from_secs(30);
+    while received.load(Ordering::Acquire) < total {
+        assert!(
+            Instant::now() < budget,
+            "lost wakeup suspected: {}/{} received",
+            received.load(Ordering::Acquire),
+            total
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stop.store(true, Ordering::Release);
+    let mut all: Vec<u64> = Vec::new();
+    for h in cons {
+        all.extend(h.join().unwrap());
+    }
+    assert_eq!(all.len() as u64, total, "no loss");
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len() as u64, total, "no duplicates");
+}
+
+#[test]
+fn pop_deadline_times_out_across_impls() {
+    // CMP parks; baselines poll with bounded sleeps. Both must honor
+    // the deadline on an empty queue — not return early, not oversleep.
+    for imp in [Impl::Cmp, Impl::Mutex, Impl::Segmented] {
+        let q: Arc<dyn ConcurrentQueue<u64>> = imp.make(64);
+        let t0 = Instant::now();
+        let r = q.pop_deadline(t0 + Duration::from_millis(60));
+        let waited = t0.elapsed();
+        assert_eq!(r, None, "{}", imp.name());
+        assert!(
+            waited >= Duration::from_millis(60),
+            "{} returned early after {waited:?}",
+            imp.name()
+        );
+        assert!(
+            waited < Duration::from_secs(10),
+            "{} overslept: {waited:?}",
+            imp.name()
+        );
+    }
+}
+
+#[test]
+fn deadline_pop_returns_item_pushed_while_parked() {
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    let q2 = q.clone();
+    let h = std::thread::spawn(move || {
+        let t0 = Instant::now();
+        let r = q2.pop_deadline(t0 + Duration::from_secs(20));
+        (r, t0.elapsed())
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    q.push(42).unwrap();
+    let (r, waited) = h.join().unwrap();
+    assert_eq!(r, Some(42));
+    assert!(
+        waited < Duration::from_secs(10),
+        "woken promptly, not at the deadline ({waited:?})"
+    );
+}
+
+#[test]
+fn pop_blocking_batch_claims_run_after_park() {
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    let q2 = q.clone();
+    let h = std::thread::spawn(move || {
+        let mut out = Vec::new();
+        let n = q2.pop_blocking_batch(16, &mut out);
+        (n, out)
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    q.push_batch((0..8).collect::<Vec<_>>()).unwrap();
+    let (n, out) = h.join().unwrap();
+    assert!(n >= 1, "blocking batch claim woke and claimed");
+    assert_eq!(out[0], 0, "FIFO preserved through the parked claim");
+}
+
+#[test]
+fn shutdown_while_pipeline_parked() {
+    // No traffic at all: batchers and workers escalate to parked within
+    // a few ms. Shutdown must wake them and join promptly.
+    let server = Server::start(
+        ServerConfig {
+            shards: 2,
+            workers: 2,
+            ..ServerConfig::default()
+        },
+        echo_factory(),
+    );
+    std::thread::sleep(Duration::from_millis(60));
+    let t0 = Instant::now();
+    let metrics = server.shutdown();
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "shutdown hung on parked threads: {:?}",
+        t0.elapsed()
+    );
+    assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn requests_complete_after_pipeline_parks() {
+    // The pipeline idles (everyone parked), then a request arrives: the
+    // push must wake the parked batcher, whose flush must wake the
+    // parked worker — end to end through the eventcount layer.
+    let server = Server::start(ServerConfig::default(), echo_factory());
+    std::thread::sleep(Duration::from_millis(80));
+    let out = server
+        .infer_blocking(vec![2.0, 4.0], Duration::from_secs(20))
+        .expect("response after idle park");
+    assert_eq!(out, vec![3.0]); // mean of [2, 4] × scale 1
+    server.shutdown();
+}
