@@ -117,30 +117,30 @@ pub fn worker_loop(
     let engine = factory().expect("engine construction failed");
     let mut inbox: Vec<Batch> = Vec::with_capacity(WORK_POP_BATCH);
     let mut idle = Backoff::new();
+    // Single drain point for every claim branch below, so per-batch
+    // policy (metrics, error handling) lives in one place.
+    let drain = |inbox: &mut Vec<Batch>, idle: &mut Backoff| {
+        idle.reset();
+        for batch in inbox.drain(..) {
+            run_batch(&*engine, batch, &metrics);
+        }
+    };
     loop {
         if work.pop_batch_into(WORK_POP_BATCH, &mut inbox) > 0 {
-            idle.reset();
-            for batch in inbox.drain(..) {
-                run_batch(&*engine, batch, &metrics);
-            }
+            drain(&mut inbox, &mut idle);
         } else if stop.load(Ordering::Acquire) {
             // Re-probe once after observing `stop`: anything claimed
             // here must still be processed before exiting.
             if work.pop_batch_into(1, &mut inbox) == 0 {
                 return;
             }
-            for batch in inbox.drain(..) {
-                run_batch(&*engine, batch, &metrics);
-            }
+            drain(&mut inbox, &mut idle);
         } else if idle.is_yielding() {
             // Park (lost-wakeup-safe): a push wakes us at once; the
             // deadline keeps `stop` observed within WORKER_PARK.
             let deadline = Instant::now() + WORKER_PARK;
             if work.pop_deadline_batch(WORK_POP_BATCH, &mut inbox, deadline) > 0 {
-                idle.reset();
-                for batch in inbox.drain(..) {
-                    run_batch(&*engine, batch, &metrics);
-                }
+                drain(&mut inbox, &mut idle);
             }
         } else {
             idle.spin();

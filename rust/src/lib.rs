@@ -25,6 +25,10 @@
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
 //! * [`util`] — owned substrates (PRNG, backoff, eventcount parking,
 //!   CPU accounting, CLI/JSON helpers) the offline image forces on us.
+//! * [`model`] — a hand-rolled concurrency model checker (virtual
+//!   atomics + cooperative scheduler + exhaustive/fuzz schedule
+//!   explorers). With the `model-check` feature the wait/claim core
+//!   runs unmodified under it; without the feature it costs nothing.
 //!
 //! Consumers never busy-wait on an empty queue: every implementation
 //! offers blocking/deadline dequeues
@@ -41,6 +45,7 @@
 
 pub mod bench;
 pub mod coordinator;
+pub mod model;
 pub mod queue;
 pub mod runtime;
 pub mod util;

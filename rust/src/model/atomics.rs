@@ -1,0 +1,276 @@
+//! Virtual atomics: drop-in stand-ins for `std::sync::atomic` types
+//! that yield to the model scheduler before every operation.
+//!
+//! Each type wraps the corresponding `std` atomic. On an ordinary
+//! thread every method is a plain passthrough (one TLS lookup of
+//! overhead), so code built with the `model-check` feature still
+//! behaves normally outside the checker. On a model virtual thread
+//! every operation first takes a scheduling decision, making the
+//! operation's placement in the global interleaving an explicit choice
+//! the explorers can enumerate.
+//!
+//! The model executes operations under **sequential consistency**: the
+//! caller's `Ordering` argument is accepted (so production code
+//! compiles unchanged) but the underlying operation always runs
+//! `SeqCst`. The checker therefore explores all SC interleavings; it
+//! does not model weaker-than-SC reorderings (see DESIGN.md §9 for the
+//! scope argument).
+
+use std::sync::atomic::Ordering;
+
+use super::sched::yield_point;
+
+/// Model stand-in for [`std::sync::atomic::AtomicU64`].
+#[derive(Debug, Default)]
+pub struct MAtomicU64 {
+    inner: std::sync::atomic::AtomicU64,
+}
+
+impl MAtomicU64 {
+    /// A new atomic with the given initial value.
+    pub const fn new(v: u64) -> Self {
+        Self {
+            inner: std::sync::atomic::AtomicU64::new(v),
+        }
+    }
+
+    /// Load (a scheduling point under the model).
+    pub fn load(&self, _order: Ordering) -> u64 {
+        yield_point();
+        self.inner.load(Ordering::SeqCst)
+    }
+
+    /// Store (a scheduling point under the model).
+    pub fn store(&self, v: u64, _order: Ordering) {
+        yield_point();
+        self.inner.store(v, Ordering::SeqCst);
+    }
+
+    /// Swap (a scheduling point under the model).
+    pub fn swap(&self, v: u64, _order: Ordering) -> u64 {
+        yield_point();
+        self.inner.swap(v, Ordering::SeqCst)
+    }
+
+    /// Fetch-add (a scheduling point under the model).
+    pub fn fetch_add(&self, v: u64, _order: Ordering) -> u64 {
+        yield_point();
+        self.inner.fetch_add(v, Ordering::SeqCst)
+    }
+
+    /// Fetch-sub (a scheduling point under the model).
+    pub fn fetch_sub(&self, v: u64, _order: Ordering) -> u64 {
+        yield_point();
+        self.inner.fetch_sub(v, Ordering::SeqCst)
+    }
+
+    /// Compare-exchange (a scheduling point under the model).
+    pub fn compare_exchange(
+        &self,
+        current: u64,
+        new: u64,
+        _success: Ordering,
+        _failure: Ordering,
+    ) -> Result<u64, u64> {
+        yield_point();
+        self.inner
+            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+
+    /// Weak compare-exchange. The model deliberately runs the *strong*
+    /// variant so spurious failures do not inflate the schedule space.
+    pub fn compare_exchange_weak(
+        &self,
+        current: u64,
+        new: u64,
+        _success: Ordering,
+        _failure: Ordering,
+    ) -> Result<u64, u64> {
+        yield_point();
+        self.inner
+            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+}
+
+/// Model stand-in for [`std::sync::atomic::AtomicU32`].
+#[derive(Debug, Default)]
+pub struct MAtomicU32 {
+    inner: std::sync::atomic::AtomicU32,
+}
+
+impl MAtomicU32 {
+    /// A new atomic with the given initial value.
+    pub const fn new(v: u32) -> Self {
+        Self {
+            inner: std::sync::atomic::AtomicU32::new(v),
+        }
+    }
+
+    /// Load (a scheduling point under the model).
+    pub fn load(&self, _order: Ordering) -> u32 {
+        yield_point();
+        self.inner.load(Ordering::SeqCst)
+    }
+
+    /// Store (a scheduling point under the model).
+    pub fn store(&self, v: u32, _order: Ordering) {
+        yield_point();
+        self.inner.store(v, Ordering::SeqCst);
+    }
+
+    /// Swap (a scheduling point under the model).
+    pub fn swap(&self, v: u32, _order: Ordering) -> u32 {
+        yield_point();
+        self.inner.swap(v, Ordering::SeqCst)
+    }
+
+    /// Compare-exchange (a scheduling point under the model).
+    pub fn compare_exchange(
+        &self,
+        current: u32,
+        new: u32,
+        _success: Ordering,
+        _failure: Ordering,
+    ) -> Result<u32, u32> {
+        yield_point();
+        self.inner
+            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+
+    /// Weak compare-exchange; strong under the model (see
+    /// [`MAtomicU64::compare_exchange_weak`]).
+    pub fn compare_exchange_weak(
+        &self,
+        current: u32,
+        new: u32,
+        _success: Ordering,
+        _failure: Ordering,
+    ) -> Result<u32, u32> {
+        yield_point();
+        self.inner
+            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+}
+
+/// Model stand-in for [`std::sync::atomic::AtomicBool`].
+#[derive(Debug, Default)]
+pub struct MAtomicBool {
+    inner: std::sync::atomic::AtomicBool,
+}
+
+impl MAtomicBool {
+    /// A new atomic with the given initial value.
+    pub const fn new(v: bool) -> Self {
+        Self {
+            inner: std::sync::atomic::AtomicBool::new(v),
+        }
+    }
+
+    /// Load (a scheduling point under the model).
+    pub fn load(&self, _order: Ordering) -> bool {
+        yield_point();
+        self.inner.load(Ordering::SeqCst)
+    }
+
+    /// Store (a scheduling point under the model).
+    pub fn store(&self, v: bool, _order: Ordering) {
+        yield_point();
+        self.inner.store(v, Ordering::SeqCst);
+    }
+
+    /// Swap (a scheduling point under the model).
+    pub fn swap(&self, v: bool, _order: Ordering) -> bool {
+        yield_point();
+        self.inner.swap(v, Ordering::SeqCst)
+    }
+
+    /// Compare-exchange (a scheduling point under the model).
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        _success: Ordering,
+        _failure: Ordering,
+    ) -> Result<bool, bool> {
+        yield_point();
+        self.inner
+            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+}
+
+/// Model stand-in for [`std::sync::atomic::AtomicPtr`].
+#[derive(Debug)]
+pub struct MAtomicPtr<T> {
+    inner: std::sync::atomic::AtomicPtr<T>,
+}
+
+impl<T> Default for MAtomicPtr<T> {
+    /// A null pointer, matching `std`'s `AtomicPtr::default()`.
+    fn default() -> Self {
+        Self::new(std::ptr::null_mut())
+    }
+}
+
+impl<T> MAtomicPtr<T> {
+    /// A new atomic holding `p`.
+    pub const fn new(p: *mut T) -> Self {
+        Self {
+            inner: std::sync::atomic::AtomicPtr::new(p),
+        }
+    }
+
+    /// Load (a scheduling point under the model).
+    pub fn load(&self, _order: Ordering) -> *mut T {
+        yield_point();
+        self.inner.load(Ordering::SeqCst)
+    }
+
+    /// Store (a scheduling point under the model).
+    pub fn store(&self, p: *mut T, _order: Ordering) {
+        yield_point();
+        self.inner.store(p, Ordering::SeqCst);
+    }
+
+    /// Swap (a scheduling point under the model).
+    pub fn swap(&self, p: *mut T, _order: Ordering) -> *mut T {
+        yield_point();
+        self.inner.swap(p, Ordering::SeqCst)
+    }
+
+    /// Compare-exchange (a scheduling point under the model).
+    pub fn compare_exchange(
+        &self,
+        current: *mut T,
+        new: *mut T,
+        _success: Ordering,
+        _failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        yield_point();
+        self.inner
+            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+
+    /// Weak compare-exchange; strong under the model (see
+    /// [`MAtomicU64::compare_exchange_weak`]).
+    pub fn compare_exchange_weak(
+        &self,
+        current: *mut T,
+        new: *mut T,
+        _success: Ordering,
+        _failure: Ordering,
+    ) -> Result<*mut T, *mut T> {
+        yield_point();
+        self.inner
+            .compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+}
+
+/// Model stand-in for [`std::sync::atomic::fence`]: a scheduling point
+/// followed by the real fence. Under the model's SC execution the
+/// fence's ordering role is played by the interleaving itself; the
+/// scheduling point preserves the fence's position as an explorable
+/// event (the §8 eventcount race is four accesses *and two fences*).
+pub fn fence(order: Ordering) {
+    yield_point();
+    std::sync::atomic::fence(order);
+}

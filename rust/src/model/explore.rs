@@ -1,0 +1,612 @@
+//! Schedule explorers: bounded-exhaustive DFS, seeded random fuzzing,
+//! and deterministic replay of pinned schedules.
+//!
+//! A [`Scenario`] is a fresh set of virtual-thread bodies plus a
+//! post-condition check, built by a factory closure once per
+//! execution. The explorers drive the cooperative scheduler with
+//! different choosers:
+//!
+//! * [`explore_dfs`] — depth-first search over *schedule prefixes*: the
+//!   first [`ExploreConfig::max_depth`] scheduling decisions are
+//!   enumerated exhaustively; deeper decisions fall back to a fixed
+//!   deterministic rule (first enabled thread). With `max_depth` at or
+//!   above the longest execution this is a complete enumeration of all
+//!   sequentially consistent interleavings.
+//! * [`fuzz`] — seeded uniform-random schedules, for states deeper
+//!   than the DFS bound. Deterministic given the seed.
+//! * [`replay`] — run one pinned schedule (a counterexample or a
+//!   hand-built adversarial interleaving) as a regression test.
+//!
+//! Every counterexample carries its full schedule, so it can be
+//! replayed exactly.
+
+use crate::util::XorShift64;
+
+use super::sched::{self, RawOutcome};
+
+/// One virtual-thread body.
+pub type ThreadBody = Box<dyn FnOnce() + Send + 'static>;
+
+/// Post-execution property check; `Err` is a counterexample.
+pub type Check = Box<dyn FnOnce() -> Result<(), String>>;
+
+/// A fresh instance of the system under test: thread bodies sharing
+/// whatever state the factory captured, plus a final-state check run by
+/// the controller after all threads finish.
+pub struct Scenario {
+    /// Virtual-thread bodies; thread ids in schedules index this list.
+    pub threads: Vec<ThreadBody>,
+    /// Post-condition over the shared state.
+    pub check: Check,
+}
+
+/// Verdict of one execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Outcome {
+    /// All threads finished and the post-condition held.
+    Pass,
+    /// No runnable thread remained — e.g. a lost wakeup left a
+    /// consumer parked forever.
+    Deadlock {
+        /// Human-readable `thread N blocked on ...` descriptions.
+        blocked: Vec<String>,
+    },
+    /// A virtual thread panicked (failed in-thread assertion).
+    Panicked {
+        /// Index of the panicking thread.
+        thread: usize,
+        /// The panic message.
+        message: String,
+    },
+    /// The execution exceeded the per-execution step budget
+    /// (livelock, or a budget set too low).
+    StepLimit {
+        /// Steps taken when the budget ran out.
+        steps: u64,
+    },
+    /// All threads finished but the post-condition failed.
+    CheckFailed {
+        /// The check's error message.
+        message: String,
+    },
+}
+
+impl Outcome {
+    /// True for [`Outcome::Pass`].
+    pub fn is_pass(&self) -> bool {
+        matches!(self, Outcome::Pass)
+    }
+}
+
+/// Result of one execution: the verdict plus the schedule that
+/// produced it (replayable via [`replay`]).
+#[derive(Debug, Clone)]
+pub struct ExecResult {
+    /// The verdict.
+    pub outcome: Outcome,
+    /// Absolute thread id granted at each scheduling step.
+    pub schedule: Vec<usize>,
+    /// Total scheduling steps taken.
+    pub steps: u64,
+}
+
+/// Exploration budgets.
+#[derive(Debug, Clone, Copy)]
+pub struct ExploreConfig {
+    /// Scheduling decisions enumerated exhaustively per execution;
+    /// deeper decisions use the deterministic first-enabled completion.
+    pub max_depth: usize,
+    /// Per-execution step budget (livelock backstop).
+    pub max_steps: usize,
+    /// Total executions the DFS may run before giving up
+    /// (`complete = false`).
+    pub max_executions: u64,
+}
+
+impl Default for ExploreConfig {
+    fn default() -> Self {
+        Self {
+            max_depth: 10,
+            max_steps: 5_000,
+            max_executions: 500_000,
+        }
+    }
+}
+
+impl ExploreConfig {
+    /// Config with the given exhaustive depth and default budgets.
+    pub fn with_depth(depth: usize) -> Self {
+        Self {
+            max_depth: depth,
+            ..Self::default()
+        }
+    }
+}
+
+/// Result of a [`explore_dfs`] pass.
+#[derive(Debug, Clone)]
+pub struct DfsReport {
+    /// Executions run.
+    pub executions: u64,
+    /// First failing execution, if any.
+    pub counterexample: Option<ExecResult>,
+    /// True when every schedule prefix within `max_depth` was explored
+    /// (exhaustive at the bound). False when `max_executions` ran out
+    /// first or a counterexample stopped the search.
+    pub complete: bool,
+    /// True when at least one execution had scheduling decisions beyond
+    /// `max_depth` (coverage is exhaustive *at the bound*, not total).
+    pub depth_truncated: bool,
+    /// Longest execution observed, in scheduling steps.
+    pub max_steps_seen: u64,
+}
+
+fn run_one(
+    scenario: Scenario,
+    chooser: impl FnMut(usize, &[usize]) -> usize,
+    max_steps: usize,
+) -> ExecResult {
+    let Scenario { threads, check } = scenario;
+    let out = sched::run_execution(threads, chooser, max_steps);
+    let outcome = match out.outcome {
+        RawOutcome::AllFinished => match check() {
+            Ok(()) => Outcome::Pass,
+            Err(message) => Outcome::CheckFailed { message },
+        },
+        RawOutcome::Deadlock(blocked) => Outcome::Deadlock {
+            // Deliberately address-free (BlockReason carries the
+            // primitive's address): outcomes must compare equal across
+            // a counterexample run and its replay, which allocate
+            // fresh scenario state.
+            blocked: blocked
+                .into_iter()
+                .map(|(i, r)| {
+                    let what = match r {
+                        sched::BlockReason::Mutex(_) => "a model mutex",
+                        sched::BlockReason::Condvar(_) => "a model condvar",
+                    };
+                    format!("thread {i} blocked on {what}")
+                })
+                .collect(),
+        },
+        RawOutcome::Panicked(thread, message) => Outcome::Panicked { thread, message },
+        RawOutcome::StepLimit => Outcome::StepLimit { steps: out.steps },
+    };
+    ExecResult {
+        outcome,
+        schedule: out.schedule,
+        steps: out.steps,
+    }
+}
+
+/// Bounded-exhaustive DFS over schedule prefixes. Stops at the first
+/// counterexample (its schedule is in the report), or when all
+/// prefixes within [`ExploreConfig::max_depth`] are explored, or when
+/// [`ExploreConfig::max_executions`] runs out.
+pub fn explore_dfs<F: Fn() -> Scenario>(factory: F, cfg: ExploreConfig) -> DfsReport {
+    // Each entry is (choice index into the enabled set, enabled-set
+    // size, granted absolute thread id) for one scheduling step of the
+    // current prefix. The id is redundant for exploration but is the
+    // replay-determinism witness: cardinality alone could mask a
+    // nondeterministic enabled set of the same size.
+    let mut prefix: Vec<(usize, usize, usize)> = Vec::new();
+    let mut report = DfsReport {
+        executions: 0,
+        counterexample: None,
+        complete: false,
+        depth_truncated: false,
+        max_steps_seen: 0,
+    };
+    loop {
+        let scenario = factory();
+        let mut decisions: Vec<(usize, usize, usize)> = Vec::new();
+        let mut truncated = false;
+        let result = {
+            let prefix_ref = &prefix;
+            let decisions_ref = &mut decisions;
+            let truncated_ref = &mut truncated;
+            run_one(
+                scenario,
+                move |step, enabled| {
+                    if let Some(&(choice, len, id)) = prefix_ref.get(step) {
+                        // Hard asserts (not debug_assert): the whole
+                        // "exhaustive at the bound" guarantee rests on
+                        // prefix replay being deterministic, and CI
+                        // runs this in --release. Checking the granted
+                        // id (not just the set size) catches
+                        // same-cardinality nondeterminism too.
+                        assert_eq!(
+                            len,
+                            enabled.len(),
+                            "nondeterministic replay at step {step}: enabled-set size changed"
+                        );
+                        // `usize::MAX` marks the one entry whose id is
+                        // not yet known: the choice the backtracker
+                        // just incremented (it is learned right here).
+                        if id != usize::MAX {
+                            assert_eq!(
+                                enabled[choice], id,
+                                "nondeterministic replay at step {step}: enabled set changed"
+                            );
+                        }
+                        decisions_ref.push((choice, enabled.len(), enabled[choice]));
+                        enabled[choice]
+                    } else if decisions_ref.len() < cfg.max_depth {
+                        decisions_ref.push((0, enabled.len(), enabled[0]));
+                        enabled[0]
+                    } else {
+                        *truncated_ref = true;
+                        enabled[0]
+                    }
+                },
+                cfg.max_steps,
+            )
+        };
+        report.executions += 1;
+        report.max_steps_seen = report.max_steps_seen.max(result.steps);
+        report.depth_truncated |= truncated;
+        if !result.outcome.is_pass() {
+            report.counterexample = Some(result);
+            return report;
+        }
+        prefix = decisions;
+        // Backtrack to the deepest step with an unexplored alternative.
+        loop {
+            match prefix.pop() {
+                None => {
+                    report.complete = true;
+                    return report;
+                }
+                Some((choice, len, _id)) => {
+                    if choice + 1 < len {
+                        // The granted id for the new choice is learned
+                        // on the next run (sentinel skips the check).
+                        prefix.push((choice + 1, len, usize::MAX));
+                        break;
+                    }
+                }
+            }
+        }
+        if report.executions >= cfg.max_executions {
+            return report;
+        }
+    }
+}
+
+/// Report of a [`fuzz`] pass.
+#[derive(Debug, Clone)]
+pub struct FuzzReport {
+    /// Executions run.
+    pub executions: u64,
+    /// First failing execution, if any.
+    pub counterexample: Option<ExecResult>,
+}
+
+/// Seeded random-schedule fuzzing: `iterations` executions, each
+/// picking uniformly among enabled threads at every step.
+/// Deterministic given `seed`.
+pub fn fuzz<F: Fn() -> Scenario>(
+    factory: F,
+    cfg: ExploreConfig,
+    seed: u64,
+    iterations: u64,
+) -> FuzzReport {
+    let mut rng = XorShift64::new(seed);
+    for i in 0..iterations {
+        let result = run_one(
+            factory(),
+            |_, enabled| enabled[rng.next_usize(enabled.len())],
+            cfg.max_steps,
+        );
+        if !result.outcome.is_pass() {
+            return FuzzReport {
+                executions: i + 1,
+                counterexample: Some(result),
+            };
+        }
+    }
+    FuzzReport {
+        executions: iterations,
+        counterexample: None,
+    }
+}
+
+/// Replay a pinned schedule. Steps past the end of `schedule` — or
+/// entries naming a thread that is not currently enabled (it finished
+/// or blocked earlier than when the schedule was recorded) — fall back
+/// to the first enabled thread, so approximate hand-written schedules
+/// are still fully deterministic.
+pub fn replay<F: FnOnce() -> Scenario>(
+    factory: F,
+    schedule: &[usize],
+    max_steps: usize,
+) -> ExecResult {
+    run_one(
+        factory(),
+        |step, enabled| match schedule.get(step) {
+            Some(&id) if enabled.contains(&id) => id,
+            _ => enabled[0],
+        },
+        max_steps,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::atomics::{fence, MAtomicU64};
+    use crate::model::sync::{MCondvar, MMutex};
+    use std::sync::atomic::Ordering::SeqCst;
+    use std::sync::Arc;
+
+    /// Two threads doing a non-atomic increment (load; store) — the
+    /// canonical lost update. The checker must find the interleaving
+    /// where one increment vanishes.
+    #[test]
+    fn dfs_finds_lost_update() {
+        let factory = || {
+            let c = Arc::new(MAtomicU64::new(0));
+            let mut threads: Vec<ThreadBody> = Vec::new();
+            for _ in 0..2 {
+                let c = c.clone();
+                threads.push(Box::new(move || {
+                    let v = c.load(SeqCst);
+                    c.store(v + 1, SeqCst);
+                }));
+            }
+            let c2 = c.clone();
+            Scenario {
+                threads,
+                check: Box::new(move || {
+                    let v = c2.load(SeqCst);
+                    if v == 2 {
+                        Ok(())
+                    } else {
+                        Err(format!("lost update: counter = {v}"))
+                    }
+                }),
+            }
+        };
+        let report = explore_dfs(factory, ExploreConfig::with_depth(8));
+        let cx = report.counterexample.expect("lost update must be found");
+        assert!(matches!(cx.outcome, Outcome::CheckFailed { .. }), "{cx:?}");
+        // The counterexample replays to the same verdict.
+        let again = replay(factory, &cx.schedule, 1000);
+        assert_eq!(again.outcome, cx.outcome, "replay must be deterministic");
+    }
+
+    /// The same program with a proper atomic RMW has no bad schedule.
+    #[test]
+    fn dfs_passes_atomic_increment() {
+        let factory = || {
+            let c = Arc::new(MAtomicU64::new(0));
+            let mut threads: Vec<ThreadBody> = Vec::new();
+            for _ in 0..2 {
+                let c = c.clone();
+                threads.push(Box::new(move || {
+                    c.fetch_add(1, SeqCst);
+                }));
+            }
+            let c2 = c.clone();
+            Scenario {
+                threads,
+                check: Box::new(move || {
+                    if c2.load(SeqCst) == 2 {
+                        Ok(())
+                    } else {
+                        Err("lost update".into())
+                    }
+                }),
+            }
+        };
+        let report = explore_dfs(factory, ExploreConfig::with_depth(8));
+        assert!(report.counterexample.is_none(), "{report:?}");
+        assert!(report.complete, "tiny state space must be exhausted");
+        assert!(!report.depth_truncated);
+    }
+
+    /// Classic lock-ordering deadlock: the checker must report it with
+    /// both threads blocked on a mutex.
+    #[test]
+    fn dfs_finds_lock_order_deadlock() {
+        let factory = || {
+            let a = Arc::new(MMutex::new(()));
+            let b = Arc::new(MMutex::new(()));
+            let (a1, b1) = (a.clone(), b.clone());
+            let (a2, b2) = (a.clone(), b.clone());
+            let threads: Vec<ThreadBody> = vec![
+                Box::new(move || {
+                    let _ga = a1.lock().unwrap();
+                    let _gb = b1.lock().unwrap();
+                }),
+                Box::new(move || {
+                    let _gb = b2.lock().unwrap();
+                    let _ga = a2.lock().unwrap();
+                }),
+            ];
+            Scenario {
+                threads,
+                check: Box::new(|| Ok(())),
+            }
+        };
+        let report = explore_dfs(factory, ExploreConfig::with_depth(8));
+        let cx = report.counterexample.expect("deadlock must be found");
+        assert!(matches!(cx.outcome, Outcome::Deadlock { .. }), "{cx:?}");
+    }
+
+    /// A runaway thread trips the step budget instead of hanging the
+    /// test suite.
+    #[test]
+    fn step_limit_catches_livelock() {
+        let factory = || {
+            let c = Arc::new(MAtomicU64::new(0));
+            let c1 = c.clone();
+            let threads: Vec<ThreadBody> = vec![Box::new(move || loop {
+                if c1.load(SeqCst) == u64::MAX {
+                    break; // unreachable: spins forever
+                }
+            })];
+            Scenario {
+                threads,
+                check: Box::new(|| Ok(())),
+            }
+        };
+        let result = replay(factory, &[], 64);
+        assert!(matches!(result.outcome, Outcome::StepLimit { .. }));
+    }
+
+    /// In-thread assertion failures surface as `Panicked`
+    /// counterexamples with the offending thread id.
+    #[test]
+    fn vthread_panic_is_reported() {
+        let factory = || {
+            let threads: Vec<ThreadBody> =
+                vec![Box::new(|| {}), Box::new(|| panic!("boom from vthread"))];
+            Scenario {
+                threads,
+                check: Box::new(|| Ok(())),
+            }
+        };
+        let report = explore_dfs(factory, ExploreConfig::with_depth(4));
+        let cx = report.counterexample.expect("panic must surface");
+        match cx.outcome {
+            Outcome::Panicked { thread, message } => {
+                assert_eq!(thread, 1);
+                assert!(message.contains("boom"), "{message}");
+            }
+            other => panic!("expected Panicked, got {other:?}"),
+        }
+    }
+
+    /// Miniature eventcount over the model primitives. `repoll = false`
+    /// drops the re-check between register and sleep — the §8
+    /// 4-access lost-wakeup bug — and the checker must exhibit it as a
+    /// deadlock. `repoll = true` is the correct protocol and must
+    /// survive the same exhaustive pass.
+    struct MiniEc {
+        items: MAtomicU64,
+        waiters: MAtomicU64,
+        epoch: MAtomicU64,
+        lock: MMutex<()>,
+        cv: MCondvar,
+    }
+
+    impl MiniEc {
+        fn new() -> Self {
+            Self {
+                items: MAtomicU64::new(0),
+                waiters: MAtomicU64::new(0),
+                epoch: MAtomicU64::new(0),
+                lock: MMutex::new(()),
+                cv: MCondvar::new(),
+            }
+        }
+
+        fn try_take(&self) -> bool {
+            let mut cur = self.items.load(SeqCst);
+            while cur > 0 {
+                match self.items.compare_exchange(cur, cur - 1, SeqCst, SeqCst) {
+                    Ok(_) => return true,
+                    Err(now) => cur = now,
+                }
+            }
+            false
+        }
+
+        fn produce(&self) {
+            self.items.fetch_add(1, SeqCst);
+            fence(SeqCst);
+            if self.waiters.load(SeqCst) == 0 {
+                return;
+            }
+            {
+                let _g = self.lock.lock().unwrap();
+                self.epoch.fetch_add(1, SeqCst);
+            }
+            self.cv.notify_all();
+        }
+
+        fn consume(&self, repoll: bool) {
+            loop {
+                if self.try_take() {
+                    return;
+                }
+                self.waiters.fetch_add(1, SeqCst);
+                fence(SeqCst);
+                let token = self.epoch.load(SeqCst);
+                if repoll && self.try_take() {
+                    self.waiters.fetch_sub(1, SeqCst);
+                    return;
+                }
+                {
+                    let mut g = self.lock.lock().unwrap();
+                    while self.epoch.load(SeqCst) == token {
+                        g = self.cv.wait(g).unwrap();
+                    }
+                    drop(g);
+                }
+                self.waiters.fetch_sub(1, SeqCst);
+            }
+        }
+    }
+
+    fn mini_ec_scenario(repoll: bool) -> Scenario {
+        let ec = Arc::new(MiniEc::new());
+        let p = ec.clone();
+        let c = ec.clone();
+        let threads: Vec<ThreadBody> = vec![
+            Box::new(move || p.produce()),
+            Box::new(move || c.consume(repoll)),
+        ];
+        let ec2 = ec.clone();
+        Scenario {
+            threads,
+            check: Box::new(move || {
+                if ec2.items.load(SeqCst) == 0 {
+                    Ok(())
+                } else {
+                    Err("item left behind".into())
+                }
+            }),
+        }
+    }
+
+    #[test]
+    fn broken_eventcount_loses_a_wakeup() {
+        let report = explore_dfs(|| mini_ec_scenario(false), ExploreConfig::with_depth(12));
+        let cx = report
+            .counterexample
+            .expect("missing re-poll must lose a wakeup");
+        assert!(
+            matches!(cx.outcome, Outcome::Deadlock { .. }),
+            "lost wakeup should strand the consumer: {cx:?}"
+        );
+    }
+
+    #[test]
+    fn fixed_eventcount_is_exhaustively_clean() {
+        // Depth 12 keeps this tier-1 test under a couple of seconds;
+        // the unbounded pass over the real WaitStrategy runs in the CI
+        // model-check job (tests/model_wait.rs).
+        let report = explore_dfs(|| mini_ec_scenario(true), ExploreConfig::with_depth(12));
+        assert!(report.counterexample.is_none(), "{:?}", report.counterexample);
+        assert!(report.complete, "depth-12 prefix space must be exhausted");
+    }
+
+    #[test]
+    fn fuzz_is_deterministic_and_clean_on_fixed_eventcount() {
+        let a = fuzz(|| mini_ec_scenario(true), ExploreConfig::default(), 42, 50);
+        assert!(a.counterexample.is_none());
+        let b = fuzz(|| mini_ec_scenario(false), ExploreConfig::default(), 42, 400);
+        let c = fuzz(|| mini_ec_scenario(false), ExploreConfig::default(), 42, 400);
+        // Same seed → same verdict, including the schedule if one fails.
+        match (&b.counterexample, &c.counterexample) {
+            (Some(x), Some(y)) => {
+                assert_eq!(x.schedule, y.schedule);
+                assert_eq!(b.executions, c.executions);
+            }
+            (None, None) => {}
+            _ => panic!("fuzz nondeterminism: {b:?} vs {c:?}"),
+        }
+    }
+}

@@ -1,0 +1,58 @@
+//! Deterministic concurrency model checker for the wait/claim layer
+//! (DESIGN.md §9).
+//!
+//! The container vendors no `loom`, and the correctness arguments for
+//! the §8 eventcount (4-access lost-wakeup race) and the CMP
+//! claim/frontier core lived only in prose — exactly the kind of
+//! argument related queues get wrong. This module is a hand-rolled
+//! replacement: virtual atomics ([`atomics`]) and mutex/condvar shims
+//! ([`sync`]) that yield to a cooperative virtual-thread scheduler at
+//! every shared-memory operation, plus two explorers ([`explore`]):
+//! bounded-exhaustive DFS over schedule prefixes and seeded
+//! random-schedule fuzzing, both with full-schedule counterexample
+//! replay.
+//!
+//! The production code under test is *parameterized*, not forked: with
+//! the `model-check` cargo feature, `util/wait.rs` and the CMP
+//! claim/frontier core import their synchronization types through the
+//! crate-internal `shim` alias layer and run unmodified under the
+//! scheduler.
+//! Without the feature the aliases are the `std` types — release
+//! builds pay nothing.
+//!
+//! Scope: the checker enumerates **sequentially consistent**
+//! interleavings. The wait/claim fast paths pair their publication
+//! with `SeqCst` fences, whose correctness argument is an SC-order
+//! argument (wait.rs module docs), so SC enumeration covers the races
+//! these layers actually defend against; weaker-than-SC reordering of
+//! independent accesses is out of scope (see DESIGN.md §9).
+
+pub mod atomics;
+pub mod explore;
+mod sched;
+pub(crate) mod shim;
+pub mod sync;
+
+pub use atomics::{fence, MAtomicBool, MAtomicPtr, MAtomicU32, MAtomicU64};
+pub use explore::{
+    explore_dfs, fuzz, replay, Check, DfsReport, ExecResult, ExploreConfig, FuzzReport, Outcome,
+    Scenario, ThreadBody,
+};
+pub use sync::{MCondvar, MMutex, MMutexGuard, MWaitTimeoutResult};
+
+/// True when the calling thread is a model virtual thread **and** the
+/// `model-check` feature routed the production sync primitives through
+/// the shims. Without the feature this compiles to a constant `false`
+/// (no TLS lookup), so production hot paths can branch on it for free.
+///
+/// This is the gate production code uses for behavior that must only
+/// change while the code under test is actually being
+/// schedule-explored: `CmpQueue::park_wait` skips its perf-only spin
+/// phase and its wall-clock deadline expiry, `WaitStrategy`'s deadline
+/// sleep becomes wakeup-edge only, and the pool bypasses its
+/// thread-local magazines (whose thread-exit flush would run outside
+/// the schedule and break replay determinism).
+#[inline]
+pub fn shims_active() -> bool {
+    cfg!(feature = "model-check") && sched::in_model()
+}

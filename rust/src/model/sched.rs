@@ -1,0 +1,394 @@
+//! Cooperative virtual-thread scheduler — the execution engine under
+//! the model checker (DESIGN.md §9).
+//!
+//! An *execution* runs N closures ("virtual threads") as real OS
+//! threads, but strictly one at a time: every model-level shared-memory
+//! operation ([`crate::model::atomics`], [`crate::model::sync`]) first
+//! calls [`Ctx::schedule_point`], which parks the thread and hands
+//! control to the controller. The controller picks the next thread to
+//! run from the set of *enabled* (runnable, unblocked, unfinished)
+//! threads via a caller-supplied chooser — a DFS prefix, a replayed
+//! schedule, or a seeded RNG (see [`crate::model::explore`]).
+//!
+//! Because exactly one virtual thread runs between schedule points, an
+//! execution is a *sequentially consistent interleaving* of the
+//! threads' shared-memory operations, fully determined by the chooser's
+//! decisions. That makes executions replayable: the same schedule
+//! always produces the same outcome.
+//!
+//! Blocking is purely logical: a thread blocked on a model mutex or
+//! condvar is marked [`VState::Blocked`] and simply never granted a
+//! turn until another thread's unlock/notify flips it back to `Ready`.
+//! If no thread is enabled and not all have finished, the controller
+//! reports a deadlock — which is exactly how a lost wakeup manifests.
+//!
+//! Teardown: on deadlock, panic, or step-limit the controller sets an
+//! `abort` flag and wakes everyone; parked virtual threads unwind via a
+//! [`ModelAbort`] panic (caught by their wrapper), so no OS thread is
+//! ever leaked across the tens of thousands of executions an
+//! exhaustive pass runs.
+
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Why a virtual thread is not currently runnable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockReason {
+    /// Waiting to acquire the model mutex at this address.
+    Mutex(usize),
+    /// Parked on the model condvar at this address.
+    Condvar(usize),
+}
+
+/// Lifecycle of one virtual thread within an execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum VState {
+    /// Eligible for the next turn.
+    Ready,
+    /// Currently holding the turn (between grant and next yield).
+    Running,
+    /// Logically blocked; not schedulable until woken.
+    Blocked(BlockReason),
+    /// Body returned (or unwound).
+    Finished,
+}
+
+/// Sentinel panic payload used to unwind parked virtual threads at
+/// teardown. Never reported as a user panic.
+pub(crate) struct ModelAbort;
+
+struct SchedState {
+    /// Thread currently granted the right to run, if any.
+    turn: Option<usize>,
+    states: Vec<VState>,
+    /// Set on deadlock / panic / step-limit; parked threads unwind.
+    abort: bool,
+    /// First user panic observed (thread id, message).
+    panic: Option<(usize, String)>,
+}
+
+struct SchedShared {
+    m: Mutex<SchedState>,
+    cv: Condvar,
+}
+
+impl SchedShared {
+    fn lock(&self) -> std::sync::MutexGuard<'_, SchedState> {
+        // Poison-tolerant: a panicking virtual thread may have been
+        // holding this lock; the state itself stays consistent.
+        self.m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Per-thread handle into the running execution. Cloned into TLS by the
+/// virtual-thread wrapper; model atomics and sync shims look it up via
+/// [`current`].
+#[derive(Clone)]
+pub(crate) struct Ctx {
+    shared: Arc<SchedShared>,
+    id: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// The calling thread's model context, if it is a registered virtual
+/// thread of a running execution.
+pub(crate) fn current() -> Option<Ctx> {
+    CTX.with(|c| c.borrow().clone())
+}
+
+/// True when the calling thread is a model virtual thread.
+pub(crate) fn in_model() -> bool {
+    CTX.with(|c| c.borrow().is_some())
+}
+
+/// Yield at a shared-memory operation if (and only if) the calling
+/// thread is a virtual thread. No-op on ordinary threads and during
+/// unwinds, so Drop code can always run to completion. Borrows the TLS
+/// context in place — no per-operation `Arc` refcount traffic on the
+/// hot path (this runs before *every* model atomic op).
+pub(crate) fn yield_point() {
+    CTX.with(|c| {
+        if let Some(ctx) = c.borrow().as_ref() {
+            ctx.schedule_point();
+        }
+    });
+}
+
+impl Ctx {
+    /// Core wait: publish `entry` as this thread's state, surrender the
+    /// turn (when `yielding`), and sleep until the controller grants the
+    /// turn back. Panics with [`ModelAbort`] if the execution aborts.
+    fn enter_wait(&self, entry: VState, yielding: bool) {
+        let mut st = self.shared.lock();
+        if st.abort {
+            drop(st);
+            std::panic::panic_any(ModelAbort);
+        }
+        st.states[self.id] = entry;
+        if yielding && st.turn == Some(self.id) {
+            st.turn = None;
+        }
+        self.shared.cv.notify_all();
+        loop {
+            if st.turn == Some(self.id) {
+                break;
+            }
+            if st.abort {
+                drop(st);
+                std::panic::panic_any(ModelAbort);
+            }
+            st = self.shared.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        st.states[self.id] = VState::Running;
+    }
+
+    /// One scheduling decision: park, let the controller pick the next
+    /// thread (possibly us again), resume when granted. Call *before*
+    /// every model-level shared-memory operation. No-op while the
+    /// thread is unwinding, so guards dropped during teardown never
+    /// re-enter the scheduler.
+    pub(crate) fn schedule_point(&self) {
+        if std::thread::panicking() {
+            return;
+        }
+        self.enter_wait(VState::Ready, true);
+    }
+
+    /// Logically block this thread until another thread's
+    /// [`Ctx::wake_matching`] flips it back to `Ready` *and* the
+    /// controller grants it a turn.
+    pub(crate) fn block(&self, reason: BlockReason) {
+        if std::thread::panicking() {
+            return;
+        }
+        self.enter_wait(VState::Blocked(reason), true);
+    }
+
+    /// Flip every thread blocked for `reason` back to `Ready`. Runs
+    /// within the caller's turn (or during teardown unwinds); it never
+    /// waits.
+    pub(crate) fn wake_matching(&self, reason: BlockReason) {
+        let mut st = self.shared.lock();
+        for s in st.states.iter_mut() {
+            if *s == VState::Blocked(reason) {
+                *s = VState::Ready;
+            }
+        }
+    }
+}
+
+/// Outcome of one execution, before the scenario's post-condition check
+/// is applied.
+#[derive(Debug)]
+pub(crate) enum RawOutcome {
+    /// Every virtual thread ran to completion.
+    AllFinished,
+    /// No thread enabled, at least one unfinished: `(id, reason)` pairs.
+    Deadlock(Vec<(usize, BlockReason)>),
+    /// A virtual thread panicked: `(id, message)`.
+    Panicked(usize, String),
+    /// The controller hit the per-execution step budget.
+    StepLimit,
+}
+
+/// Raw result of [`run_execution`].
+#[derive(Debug)]
+pub(crate) struct ExecOutput {
+    pub outcome: RawOutcome,
+    /// Absolute thread id chosen at each scheduling step.
+    pub schedule: Vec<usize>,
+    pub steps: u64,
+}
+
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&'static str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+/// Unwind-proof execution teardown: aborts the execution and joins
+/// every virtual thread when dropped. The controller's normal exit
+/// path drops it explicitly; if the chooser (or an internal assert)
+/// panics mid-execution, the drop still runs — without it, parked
+/// virtual threads (512 KiB stack each, plus the scenario state they
+/// hold) would leak on every such failure.
+struct Teardown {
+    shared: Arc<SchedShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Drop for Teardown {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.lock();
+            st.abort = true;
+            self.shared.cv.notify_all();
+            drop(st);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Suppress panic-hook output from model virtual threads: user panics
+/// there are *expected counterexamples* (reported via
+/// [`RawOutcome::Panicked`]), and [`ModelAbort`] unwinds are routine
+/// teardown. Panics on every other thread keep the previous hook.
+fn install_quiet_panic_hook() {
+    static HOOK: std::sync::Once = std::sync::Once::new();
+    HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let in_vthread = std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("cmpq-vthread"));
+            if !in_vthread {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn vthread_main(ctx: Ctx, body: Box<dyn FnOnce() + Send>) {
+    CTX.with(|c| *c.borrow_mut() = Some(ctx.clone()));
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        // Wait for the controller's first grant so thread startup order
+        // cannot leak nondeterminism into the execution.
+        ctx.enter_wait(VState::Ready, false);
+        body();
+    }));
+    let user_panic = match result {
+        Ok(()) => None,
+        Err(p) => {
+            if p.downcast_ref::<ModelAbort>().is_some() {
+                None
+            } else {
+                Some(panic_message(p.as_ref()))
+            }
+        }
+    };
+    let mut st = ctx.shared.lock();
+    if let Some(msg) = user_panic {
+        if !st.abort && st.panic.is_none() {
+            st.panic = Some((ctx.id, msg));
+        }
+    }
+    st.states[ctx.id] = VState::Finished;
+    if st.turn == Some(ctx.id) {
+        st.turn = None;
+    }
+    ctx.shared.cv.notify_all();
+    drop(st);
+    CTX.with(|c| *c.borrow_mut() = None);
+}
+
+/// Run one execution of `bodies` under the scheduler. At every
+/// quiescent point the controller hands the enabled-thread set to
+/// `choose`, which returns the absolute id to grant next. Returns the
+/// outcome, the full schedule taken, and the step count.
+pub(crate) fn run_execution(
+    bodies: Vec<Box<dyn FnOnce() + Send + 'static>>,
+    mut choose: impl FnMut(usize, &[usize]) -> usize,
+    max_steps: usize,
+) -> ExecOutput {
+    install_quiet_panic_hook();
+    let n = bodies.len();
+    assert!(n > 0, "an execution needs at least one virtual thread");
+    let shared = Arc::new(SchedShared {
+        m: Mutex::new(SchedState {
+            turn: None,
+            states: vec![VState::Ready; n],
+            abort: false,
+            panic: None,
+        }),
+        cv: Condvar::new(),
+    });
+    let mut handles = Vec::with_capacity(n);
+    for (id, body) in bodies.into_iter().enumerate() {
+        let ctx = Ctx {
+            shared: shared.clone(),
+            id,
+        };
+        let h = std::thread::Builder::new()
+            .name(format!("cmpq-vthread-{id}"))
+            .stack_size(512 * 1024)
+            .spawn(move || vthread_main(ctx, body))
+            .expect("spawn model virtual thread");
+        handles.push(h);
+    }
+    // From here on, every exit path — including a panicking chooser or
+    // a tripped internal assert — aborts and joins the fleet.
+    let teardown = Teardown {
+        shared: shared.clone(),
+        handles,
+    };
+
+    let mut schedule: Vec<usize> = Vec::new();
+    let mut steps = 0usize;
+    let outcome = loop {
+        let mut st = shared.lock();
+        // Wait until the previous grant is fully consumed.
+        while st.turn.is_some() || st.states.iter().any(|s| *s == VState::Running) {
+            st = shared.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if let Some((tid, msg)) = st.panic.take() {
+            st.abort = true;
+            shared.cv.notify_all();
+            break RawOutcome::Panicked(tid, msg);
+        }
+        let enabled: Vec<usize> = st
+            .states
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == VState::Ready)
+            .map(|(i, _)| i)
+            .collect();
+        if enabled.is_empty() {
+            if st.states.iter().all(|s| *s == VState::Finished) {
+                break RawOutcome::AllFinished;
+            }
+            let blocked = st
+                .states
+                .iter()
+                .enumerate()
+                .filter_map(|(i, s)| match s {
+                    VState::Blocked(r) => Some((i, *r)),
+                    _ => None,
+                })
+                .collect();
+            st.abort = true;
+            shared.cv.notify_all();
+            break RawOutcome::Deadlock(blocked);
+        }
+        if steps >= max_steps {
+            st.abort = true;
+            shared.cv.notify_all();
+            break RawOutcome::StepLimit;
+        }
+        let pick = choose(steps, &enabled);
+        assert!(
+            enabled.contains(&pick),
+            "chooser picked thread {pick} outside enabled set {enabled:?}"
+        );
+        schedule.push(pick);
+        steps += 1;
+        st.turn = Some(pick);
+        shared.cv.notify_all();
+        drop(st);
+    };
+    drop(teardown); // abort (no-op when all finished) + join everyone
+    ExecOutput {
+        outcome,
+        schedule,
+        steps: steps as u64,
+    }
+}

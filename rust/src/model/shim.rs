@@ -1,0 +1,26 @@
+//! Type-alias layer selecting real vs. model synchronization primitives.
+//!
+//! The wait/claim core (`util/wait.rs`, `queue/cmp/{queue,node,pool}.rs`)
+//! imports its atomics, mutexes, and condvars from this module instead
+//! of `std::sync`. Without the `model-check` feature the aliases *are*
+//! the `std` types — a pure re-export, zero cost. With the feature they
+//! are the model stand-ins, which pass through to `std` on ordinary
+//! threads and yield to the schedule enumerator on model virtual
+//! threads (DESIGN.md §9).
+//!
+//! `Ordering` intentionally stays `std::sync::atomic::Ordering` in both
+//! configurations; the model accepts and records the requested ordering
+//! but executes sequentially consistently.
+
+#[cfg(not(feature = "model-check"))]
+pub(crate) use std::sync::atomic::{fence, AtomicBool, AtomicPtr, AtomicU32, AtomicU64};
+#[cfg(not(feature = "model-check"))]
+pub(crate) use std::sync::{Condvar, Mutex};
+
+#[cfg(feature = "model-check")]
+pub(crate) use super::atomics::{
+    fence, MAtomicBool as AtomicBool, MAtomicPtr as AtomicPtr, MAtomicU32 as AtomicU32,
+    MAtomicU64 as AtomicU64,
+};
+#[cfg(feature = "model-check")]
+pub(crate) use super::sync::{MCondvar as Condvar, MMutex as Mutex};

@@ -1,0 +1,284 @@
+//! Virtual `Mutex`/`Condvar`: cooperative, deadlock-detecting shims
+//! with the same call surface as `std::sync`.
+//!
+//! On ordinary threads every call passes straight through to the
+//! wrapped `std` primitive (including poison propagation, which the
+//! `WaitStrategy` unwind tests rely on). On a model virtual thread,
+//! blocking is *logical*: a contended [`MMutex::lock`] or an
+//! [`MCondvar::wait`] marks the thread blocked in the scheduler and
+//! simply never runs until another thread's unlock/notify re-enables
+//! it — so a lost wakeup shows up as a detected deadlock instead of a
+//! hung test.
+//!
+//! Model-mode fidelity notes (see DESIGN.md §9):
+//!
+//! * `wait` has **no spurious wakeups**. Spurious wakeups only add
+//!   wakeups, so they cannot hide a lost-wakeup bug; omitting them
+//!   keeps the schedule space tight.
+//! * `wait_timeout` never times out under the model (virtual time does
+//!   not advance). Deadline paths are checked by their wakeup edges,
+//!   not their expiry edges.
+//! * Unlock and the release half of `wait` are bookkeeping, not
+//!   scheduling points: they happen atomically with the caller's
+//!   current turn slice, which matches the condvar atomic
+//!   release-and-sleep contract.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::Ordering;
+use std::sync::{LockResult, PoisonError};
+use std::time::Duration;
+
+use super::sched::{self, BlockReason};
+
+/// Model stand-in for [`std::sync::Mutex`].
+pub struct MMutex<T> {
+    inner: std::sync::Mutex<T>,
+    /// Model-level ownership flag. Only mutated by the single running
+    /// virtual thread (or during abort teardown, when outcomes no
+    /// longer matter), so a plain SeqCst atomic suffices.
+    model_locked: std::sync::atomic::AtomicBool,
+}
+
+impl<T> MMutex<T> {
+    /// A new unlocked mutex holding `t`.
+    pub const fn new(t: T) -> Self {
+        Self {
+            inner: std::sync::Mutex::new(t),
+            model_locked: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    fn wrap<'a>(
+        &'a self,
+        res: LockResult<std::sync::MutexGuard<'a, T>>,
+        model_held: bool,
+    ) -> LockResult<MMutexGuard<'a, T>> {
+        match res {
+            Ok(g) => Ok(MMutexGuard {
+                owner: self,
+                inner: Some(g),
+                model_held,
+            }),
+            Err(p) => Err(PoisonError::new(MMutexGuard {
+                owner: self,
+                inner: Some(p.into_inner()),
+                model_held,
+            })),
+        }
+    }
+
+    /// Acquire the lock. On a virtual thread this is a scheduling point
+    /// and blocks logically while contended; otherwise it is the plain
+    /// `std` lock. Poisoning propagates exactly like `std` (the
+    /// returned guard still holds the lock either way).
+    ///
+    /// Invariant: a mutex used by model virtual threads must not also
+    /// be locked from ordinary threads (or from unwind-time `Drop`
+    /// code) while an execution is in flight. The passthrough arm
+    /// takes the OS lock directly; if a *parked* virtual thread held
+    /// the model lock across its yield, such a caller would OS-block
+    /// on an owner that is never scheduled, hanging the execution
+    /// instead of producing an outcome. Scenario checks run after all
+    /// virtual threads join, so the explorers never hit this; no code
+    /// in the shimmed layers locks from `Drop`.
+    pub fn lock(&self) -> LockResult<MMutexGuard<'_, T>> {
+        match sched::current() {
+            Some(ctx) if !std::thread::panicking() => {
+                loop {
+                    ctx.schedule_point();
+                    if !self.model_locked.swap(true, Ordering::SeqCst) {
+                        break;
+                    }
+                    ctx.block(BlockReason::Mutex(self.addr()));
+                }
+                // Uncontended among virtual threads: the model flag
+                // already serializes them.
+                self.wrap(self.inner.lock(), true)
+            }
+            _ => self.wrap(self.inner.lock(), false),
+        }
+    }
+}
+
+impl<T: Default> Default for MMutex<T> {
+    fn default() -> Self {
+        Self::new(T::default())
+    }
+}
+
+/// RAII guard for [`MMutex`]; releases the model-level lock (waking
+/// blocked virtual threads) and the OS lock on drop.
+pub struct MMutexGuard<'a, T> {
+    owner: &'a MMutex<T>,
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+    model_held: bool,
+}
+
+impl<T> Deref for MMutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_deref().expect("guard accessed after release")
+    }
+}
+
+impl<T> DerefMut for MMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner
+            .as_deref_mut()
+            .expect("guard accessed after release")
+    }
+}
+
+impl<T> Drop for MMutexGuard<'_, T> {
+    fn drop(&mut self) {
+        // OS lock first, then the model flag, then wake the queue —
+        // never a scheduling point, so drops during unwind are safe.
+        self.inner.take();
+        if self.model_held {
+            self.owner.model_locked.store(false, Ordering::SeqCst);
+            if let Some(ctx) = sched::current() {
+                ctx.wake_matching(BlockReason::Mutex(self.owner.addr()));
+            }
+        }
+    }
+}
+
+/// Result of [`MCondvar::wait_timeout`], mirroring
+/// [`std::sync::WaitTimeoutResult`] (which has no public constructor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MWaitTimeoutResult(bool);
+
+impl MWaitTimeoutResult {
+    /// Whether the wait ended by timeout rather than notification.
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Model stand-in for [`std::sync::Condvar`].
+#[derive(Default)]
+pub struct MCondvar {
+    inner: std::sync::Condvar,
+}
+
+impl MCondvar {
+    /// A new condition variable.
+    pub const fn new() -> Self {
+        Self {
+            inner: std::sync::Condvar::new(),
+        }
+    }
+
+    fn addr(&self) -> usize {
+        self as *const Self as *const () as usize
+    }
+
+    /// Release `guard` and sleep until notified. Under the model the
+    /// release and the park are atomic within the caller's turn slice
+    /// (no notify can slip between them), and the thread stays
+    /// logically blocked until an [`MCondvar::notify_all`] /
+    /// [`MCondvar::notify_one`] re-enables it.
+    pub fn wait<'a, T>(&self, mut guard: MMutexGuard<'a, T>) -> LockResult<MMutexGuard<'a, T>> {
+        match sched::current() {
+            Some(ctx) if guard.model_held => {
+                let owner = guard.owner;
+                drop(guard); // release OS + model lock, wake lock waiters
+                ctx.block(BlockReason::Condvar(self.addr()));
+                owner.lock() // woken: reacquire cooperatively
+            }
+            _ => {
+                let owner = guard.owner;
+                let inner = guard.inner.take().expect("guard accessed after release");
+                drop(guard); // inert: OS guard moved out, no model lock
+                match self.inner.wait(inner) {
+                    Ok(g) => Ok(MMutexGuard {
+                        owner,
+                        inner: Some(g),
+                        model_held: false,
+                    }),
+                    Err(p) => Err(PoisonError::new(MMutexGuard {
+                        owner,
+                        inner: Some(p.into_inner()),
+                        model_held: false,
+                    })),
+                }
+            }
+        }
+    }
+
+    /// Timed wait. Under the model this never times out (virtual time
+    /// does not advance); on ordinary threads it is the real
+    /// `wait_timeout`.
+    #[allow(clippy::type_complexity)]
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MMutexGuard<'a, T>,
+        dur: Duration,
+    ) -> Result<
+        (MMutexGuard<'a, T>, MWaitTimeoutResult),
+        PoisonError<(MMutexGuard<'a, T>, MWaitTimeoutResult)>,
+    > {
+        match sched::current() {
+            Some(ctx) if guard.model_held => {
+                let _ = (ctx, dur);
+                match self.wait(guard) {
+                    Ok(g) => Ok((g, MWaitTimeoutResult(false))),
+                    Err(p) => Err(PoisonError::new((p.into_inner(), MWaitTimeoutResult(false)))),
+                }
+            }
+            _ => {
+                let owner = guard.owner;
+                let mut guard = guard;
+                let inner = guard.inner.take().expect("guard accessed after release");
+                drop(guard);
+                match self.inner.wait_timeout(inner, dur) {
+                    Ok((g, t)) => Ok((
+                        MMutexGuard {
+                            owner,
+                            inner: Some(g),
+                            model_held: false,
+                        },
+                        MWaitTimeoutResult(t.timed_out()),
+                    )),
+                    Err(p) => {
+                        let (g, t) = p.into_inner();
+                        Err(PoisonError::new((
+                            MMutexGuard {
+                                owner,
+                                inner: Some(g),
+                                model_held: false,
+                            },
+                            MWaitTimeoutResult(t.timed_out()),
+                        )))
+                    }
+                }
+            }
+        }
+    }
+
+    /// Wake every virtual thread parked on this condvar (a scheduling
+    /// point), then the real `notify_all` for ordinary threads.
+    pub fn notify_all(&self) {
+        if let Some(ctx) = sched::current() {
+            ctx.schedule_point();
+            ctx.wake_matching(BlockReason::Condvar(self.addr()));
+        }
+        self.inner.notify_all();
+    }
+
+    /// Like [`MCondvar::notify_all`] under the model (waking all is a
+    /// conservative over-approximation the condvar contract permits as
+    /// spurious wakeups); the real `notify_one` on ordinary threads.
+    pub fn notify_one(&self) {
+        if let Some(ctx) = sched::current() {
+            ctx.schedule_point();
+            ctx.wake_matching(BlockReason::Condvar(self.addr()));
+        }
+        self.inner.notify_one();
+    }
+}

@@ -36,3 +36,15 @@ pub use config::{CmpConfig, ReclaimTrigger};
 pub use node::{NodeState, DUMMY_CYCLE};
 pub use queue::CmpQueue;
 pub use stats::CmpStatsSnapshot;
+
+// Exported only for the model-checking harness (tests/model_wait.rs
+// drives the pool's tagged freelist directly). Not part of the stable
+// API: `NodePool::free`/`free_chain` trust caller-supplied raw
+// pointers (safe-fn UB if misused), which is fine for the reclaimer
+// and the checker but must not be a generally public surface.
+#[cfg(feature = "model-check")]
+#[doc(hidden)]
+pub use node::Node;
+#[cfg(feature = "model-check")]
+#[doc(hidden)]
+pub use pool::NodePool;

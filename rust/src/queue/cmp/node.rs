@@ -9,7 +9,11 @@
 
 use std::cell::UnsafeCell;
 use std::mem::MaybeUninit;
-use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
+
+// Real std atomics normally; model-checker shims under the
+// `model-check` feature (DESIGN.md §9).
+use crate::model::shim::{AtomicPtr, AtomicU32, AtomicU64};
 
 /// Node lifecycle states (§3.1). `Free` is pool-internal: the paper's
 /// two-state lifecycle (`AVAILABLE → CLAIMED`) plus the recycled state a

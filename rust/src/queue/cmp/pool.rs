@@ -25,8 +25,13 @@
 //! or explicitly via [`NodePool::flush_local`].
 
 use std::cell::RefCell;
-use std::sync::atomic::{AtomicPtr, AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Weak};
+
+// Real std atomics normally; model-checker shims under the
+// `model-check` feature — the tagged freelist's ABA defense is one of
+// the exhaustively checked properties (DESIGN.md §9).
+use crate::model::shim::{AtomicPtr, AtomicU64};
 
 use super::node::{Node, STATE_FREE};
 
@@ -177,18 +182,26 @@ impl<T> NodePool<T> {
         self.inner.node_at(idx)
     }
 
-    /// Push a node back on the freelist. Caller must already have reset
-    /// the node (state = FREE, next = null, payload dropped) — the
-    /// reclaimer does this (Algorithm 4 Phase 5).
-    pub fn free(&self, node: *mut Node<T>) {
-        let idx = unsafe { (*node).pool_idx };
+    /// Push a node back on the freelist.
+    ///
+    /// # Safety
+    /// `node` must be a live node of **this** pool (obtained from
+    /// [`Self::alloc`] and not since freed), already reset for
+    /// recycling: state = FREE, `next` = null, payload dropped — the
+    /// reclaimer does this (Algorithm 4 Phase 5). A foreign, dangling,
+    /// or double-freed pointer corrupts the freelist.
+    pub unsafe fn free(&self, node: *mut Node<T>) {
+        let idx = (*node).pool_idx;
         self.inner.flush_indices(std::slice::from_ref(&idx));
     }
 
     /// Push an already-reset batch of nodes back on the freelist as one
     /// spliced chain: a single `free_head` CAS regardless of batch size
     /// (the reclamation release path, DESIGN.md §7).
-    pub fn free_chain(&self, nodes: &[*mut Node<T>]) {
+    ///
+    /// # Safety
+    /// Same contract as [`Self::free`], for every node in the slice.
+    pub unsafe fn free_chain(&self, nodes: &[*mut Node<T>]) {
         if nodes.is_empty() {
             return;
         }
@@ -230,7 +243,14 @@ impl<T: Send + 'static> NodePool<T> {
     /// caller (enqueue) then triggers reclamation and retries (§3.3).
     /// Returns `(ptr, reused)`.
     pub fn alloc(&self) -> Option<(*mut Node<T>, bool)> {
-        if self.inner.magazine_capacity > 0 {
+        // Under the model checker the magazine layer is bypassed: its
+        // thread-exit flush (`LocalMagazines::Drop`) runs after the
+        // virtual thread deregisters, i.e. *outside* the schedule —
+        // a wall-clock-timed freelist CAS that would make identical
+        // schedule prefixes diverge and break the enumerator's
+        // determinism guarantee. `shims_active()` is a constant
+        // `false` without the `model-check` feature.
+        if self.inner.magazine_capacity > 0 && !crate::model::shims_active() {
             if let Ok(hit) = MAGAZINES.try_with(|m| self.alloc_cached(&mut m.borrow_mut())) {
                 return hit;
             }
@@ -541,7 +561,7 @@ mod tests {
         let pool: NodePool<u32> = NodePool::new(None);
         let (a, _) = pool.alloc().unwrap();
         let idx_a = unsafe { (*a).pool_idx };
-        pool.free(a);
+        unsafe { pool.free(a) };
         assert_eq!(pool.freelist_len(), 1);
         let (b, reused) = pool.alloc().unwrap();
         assert!(reused);
@@ -556,7 +576,7 @@ mod tests {
         let _n2 = pool.alloc().unwrap().0;
         let _n3 = pool.alloc().unwrap().0;
         assert!(pool.alloc().is_none(), "cap reached");
-        pool.free(n1);
+        unsafe { pool.free(n1) };
         assert!(pool.alloc().is_some(), "recycle still works past cap");
     }
 
@@ -578,7 +598,7 @@ mod tests {
         let (a, _) = pool.alloc().unwrap();
         let (_b, _) = pool.alloc().unwrap();
         assert_eq!(pool.in_use(), 2);
-        pool.free(a);
+        unsafe { pool.free(a) };
         assert_eq!(pool.in_use(), 1);
     }
 
@@ -597,7 +617,7 @@ mod tests {
                         held.push(n as usize);
                         if i % 3 == 0 {
                             let ptr = held.pop().unwrap() as *mut Node<u64>;
-                            p.free(ptr);
+                            unsafe { p.free(ptr) };
                         }
                     }
                     // Distinctness of concurrently held nodes.
@@ -606,7 +626,7 @@ mod tests {
                     sorted.dedup();
                     assert_eq!(sorted.len(), held.len(), "no double allocation");
                     for ptr in held {
-                        p.free(ptr as *mut Node<u64>);
+                        unsafe { p.free(ptr as *mut Node<u64>) };
                     }
                 })
             })
@@ -626,7 +646,7 @@ mod tests {
         for _ in 0..10_000 {
             let (n, _) = pool.alloc().unwrap();
             assert!(pool.alloc().is_none());
-            pool.free(n);
+            unsafe { pool.free(n) };
         }
         assert_eq!(pool.in_use(), 0);
     }
@@ -637,7 +657,7 @@ mod tests {
         // Seed the global freelist with 20 recycled nodes.
         let nodes: Vec<_> = (0..20).map(|_| pool.alloc().unwrap().0).collect();
         pool.flush_local();
-        pool.free_chain(&nodes);
+        unsafe { pool.free_chain(&nodes) };
         assert_eq!(pool.freelist_len(), 20);
         // One alloc pulls a whole chunk: 1 returned + 7 cached.
         let (_n, reused) = pool.alloc().unwrap();
@@ -657,7 +677,7 @@ mod tests {
     fn flush_local_returns_cached_nodes() {
         let pool: NodePool<u32> = NodePool::with_magazines(None, true, 8);
         let nodes: Vec<_> = (0..8).map(|_| pool.alloc().unwrap().0).collect();
-        pool.free_chain(&nodes);
+        unsafe { pool.free_chain(&nodes) };
         let _ = pool.alloc().unwrap(); // refill: 1 out, 7 cached
         assert_eq!(pool.local_cached(), 7);
         let held = pool.in_use();
@@ -672,7 +692,7 @@ mod tests {
         // Seed recycled nodes so the worker's allocs go through refill.
         let nodes: Vec<_> = (0..32).map(|_| pool.alloc().unwrap().0).collect();
         pool.flush_local();
-        pool.free_chain(&nodes);
+        unsafe { pool.free_chain(&nodes) };
         let before = pool.in_use();
         assert_eq!(before, 0);
         let p = pool.clone();
@@ -680,7 +700,7 @@ mod tests {
             let (n, reused) = p.alloc().unwrap();
             assert!(reused);
             assert!(p.local_cached() > 0, "refill cached extra nodes");
-            p.free(n);
+            unsafe { p.free(n) };
             // Exit with a non-empty magazine: the TLS destructor must
             // flush it.
         })
@@ -693,7 +713,7 @@ mod tests {
     fn free_chain_is_one_splice() {
         let pool: NodePool<u32> = NodePool::with_magazines(None, true, 0);
         let nodes: Vec<_> = (0..10).map(|_| pool.alloc().unwrap().0).collect();
-        pool.free_chain(&nodes);
+        unsafe { pool.free_chain(&nodes) };
         assert_eq!(pool.freelist_len(), 10);
         // All ten come back out, each exactly once.
         let mut seen: Vec<u32> = (0..10)
@@ -709,7 +729,7 @@ mod tests {
     fn zero_capacity_disables_magazines() {
         let pool: NodePool<u32> = NodePool::with_magazines(None, true, 0);
         let (a, _) = pool.alloc().unwrap();
-        pool.free(a);
+        unsafe { pool.free(a) };
         assert_eq!(pool.freelist_len(), 1);
         let (_b, reused) = pool.alloc().unwrap();
         assert!(reused);

@@ -7,8 +7,13 @@
 
 use std::cell::RefCell;
 use std::ptr;
-use std::sync::atomic::{AtomicBool, AtomicPtr, AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::time::Instant;
+
+// Real std atomics normally; model-checker shims under the
+// `model-check` feature, so the claim CAS / frontier / parking core
+// runs unmodified under the schedule enumerator (DESIGN.md §9).
+use crate::model::shim::{AtomicBool, AtomicPtr, AtomicU64};
 
 use crossbeam_utils::CachePadded;
 
@@ -23,11 +28,16 @@ thread_local! {
     /// Per-thread PRNG for the Bernoulli reclamation trigger.
     static TRIGGER_RNG: RefCell<XorShift64> = RefCell::new(XorShift64::new(
         // Spread by thread identity so producers don't fire in lockstep.
+        // `| 1` only guarantees a nonzero *seed* (skipping the zero-seed
+        // remap path); the real all-zero-state hazard — a hash equal to
+        // splitmix64's unique (odd!) preimage of 0 would have wedged the
+        // Bernoulli trigger on that thread — is fixed at the source, in
+        // `XorShift64::new`'s nonzero-state fallback (util/rng.rs).
         {
             use std::hash::{Hash, Hasher};
             let mut h = std::collections::hash_map::DefaultHasher::new();
             std::thread::current().id().hash(&mut h);
-            h.finish()
+            h.finish() | 1
         },
     ));
 }
@@ -302,7 +312,10 @@ impl<T: Send + 'static> CmpQueue<T> {
             match self.alloc_node() {
                 Some(n) => nodes.push(n),
                 None => {
-                    self.pool.free_chain(&nodes);
+                    // SAFETY: every node came from this pool's alloc
+                    // moments ago and is still in its reset (FREE)
+                    // state — nothing was linked or published.
+                    unsafe { self.pool.free_chain(&nodes) };
                     return Err(items);
                 }
             }
@@ -713,6 +726,12 @@ impl<T: Send + 'static> CmpQueue<T> {
     /// wakes it immediately. The lock-free `pop` fast path is untouched:
     /// parking is reached only after repeated empty polls.
     ///
+    /// There is no cancellation: this returns only when an item is
+    /// claimed. A [`Self::wake_consumers`] kick onto a still-empty
+    /// queue re-parks the caller — shutdown paths that must not block
+    /// indefinitely should use [`Self::pop_deadline`] /
+    /// [`Self::pop_deadline_batch`] instead.
+    ///
     /// ```
     /// use std::sync::Arc;
     /// use cmpq::CmpQueue;
@@ -773,31 +792,45 @@ impl<T: Send + 'static> CmpQueue<T> {
         deadline: Option<Instant>,
     ) -> Option<R> {
         let mut backoff = Backoff::new();
+        // Under the model checker (constant `false` in normal builds):
+        // skip the spin phase — perf-only noise that bloats the
+        // schedule space (it is just repeated `attempt()`s) — and skip
+        // wall-clock deadline expiry, which would inject machine-load
+        // nondeterminism into otherwise identical schedules (virtual
+        // time does not advance; deadline paths are checked by their
+        // wakeup edges).
+        let model = crate::model::shims_active();
         loop {
             if let Some(r) = attempt() {
                 return Some(r);
             }
             if let Some(d) = deadline {
-                if Instant::now() >= d {
+                if !model && Instant::now() >= d {
                     return None;
                 }
             }
-            if !backoff.is_yielding() {
+            if !model && !backoff.is_yielding() {
                 backoff.spin();
                 continue;
             }
-            let token = self.waiters.register();
+            // RAII registration: if `attempt` (a queue re-poll running
+            // arbitrary payload Drops) unwinds, the waiter count is
+            // still decremented — a leak here would permanently force
+            // every producer onto the notify lock path.
+            let registration = self.waiters.registration();
             if let Some(r) = attempt() {
-                self.waiters.cancel();
-                return Some(r);
+                return Some(r); // registration drops → cancel
             }
             match deadline {
                 Some(d) => {
-                    if !self.waiters.wait_deadline(token, d) {
+                    if !registration.wait_deadline(d) {
+                        // Deadline expired while parked: one final
+                        // attempt so a push racing the expiry is not
+                        // left behind.
                         return attempt();
                     }
                 }
-                None => self.waiters.wait(token),
+                None => registration.wait(),
             }
         }
     }

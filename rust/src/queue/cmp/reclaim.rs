@@ -98,7 +98,12 @@ impl<T: Send + 'static> CmpQueue<T> {
             // Return the whole reclaimed batch with a single spliced
             // push — one freelist CAS per pass instead of one per node
             // (DESIGN.md §7).
-            self.pool.free_chain(&batch);
+            // SAFETY: every node in `batch` came from this queue's own
+            // linked list (hence this pool), was detached from it by
+            // the head-advance CAS above (sole reclamation rights,
+            // §3.6), and was just reset by `reset_node` — FREE state,
+            // payload dropped, `next` nulled.
+            unsafe { self.pool.free_chain(&batch) };
             total += batch.len() as u64;
             if current.is_null() || current == tail_guard {
                 break;

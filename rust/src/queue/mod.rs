@@ -208,11 +208,19 @@ pub trait ConcurrentQueue<T: Send>: Send + Sync {
         .unwrap_or(0)
     }
 
-    /// Wake every consumer blocked in a `pop_blocking*`/`pop_deadline*`
-    /// call (shutdown/drain paths). The default is a no-op because the
-    /// default blocking dequeues poll with bounded sleeps and never park
-    /// indefinitely; parking implementations override it to kick their
-    /// waiters immediately.
+    /// Wake every consumer currently parked in a blocking dequeue. The
+    /// default is a no-op because the default blocking dequeues poll
+    /// with bounded sleeps and never park indefinitely; parking
+    /// implementations override it to kick their waiters immediately.
+    ///
+    /// This is a *wake*, not a cancellation: a woken
+    /// [`ConcurrentQueue::pop_blocking`]/
+    /// [`ConcurrentQueue::pop_blocking_batch`] caller that still finds
+    /// the queue empty re-parks and keeps waiting — those calls return
+    /// only when an item arrives. Shutdown/drain paths must therefore
+    /// use the `pop_deadline*` variants (as the coordinator's worker
+    /// and batcher loops do), with `wake_all` serving to cut the
+    /// remaining deadline short.
     fn wake_all(&self) {}
 
     /// Short static identifier used by the benchmark reports.

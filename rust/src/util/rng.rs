@@ -10,10 +10,17 @@ pub struct XorShift64 {
 }
 
 impl XorShift64 {
-    /// Create a PRNG. A zero seed is remapped (xorshift state must be ≠ 0).
+    /// Create a PRNG. The state is guaranteed nonzero: zero is
+    /// xorshift's fixed point, so a zero *state* (not just a zero seed
+    /// — `splitmix64` is a bijection, and exactly one seed,
+    /// `0x61C8864680B583EB`, spreads to 0) would emit an all-zero
+    /// stream forever and silently wedge every consumer, e.g. the CMP
+    /// Bernoulli reclamation trigger.
     pub fn new(seed: u64) -> Self {
+        let spread = splitmix64(if seed == 0 { 0x9E3779B97F4A7C15 } else { seed });
         Self {
-            state: splitmix64(if seed == 0 { 0x9E3779B97F4A7C15 } else { seed }),
+            // Golden-ratio fallback for the one seed that spreads to 0.
+            state: if spread == 0 { 0x9E3779B97F4A7C15 } else { spread },
         }
     }
 
@@ -99,6 +106,26 @@ mod tests {
     fn zero_seed_is_remapped() {
         let mut r = XorShift64::new(0);
         assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn zero_state_preimage_seed_still_streams() {
+        // splitmix64 is a bijection; this is the unique seed it maps to
+        // 0 — previously that seed produced an all-zero xorshift state,
+        // i.e. a PRNG stuck at 0 forever (`chance(p)` then returns a
+        // constant, wedging the Bernoulli reclamation trigger for any
+        // thread whose id hashed to this value).
+        const PREIMAGE_OF_ZERO: u64 = 0x61C8864680B583EB;
+        assert_eq!(splitmix64(PREIMAGE_OF_ZERO), 0, "preimage constant");
+        let mut r = XorShift64::new(PREIMAGE_OF_ZERO);
+        let (a, b) = (r.next_u64(), r.next_u64());
+        assert_ne!(a, 0, "state must not be the all-zero fixed point");
+        assert_ne!(b, 0);
+        assert_ne!(a, b, "stream must advance");
+        // And the Bernoulli consumer behaves sanely again.
+        let mut r = XorShift64::new(PREIMAGE_OF_ZERO);
+        let hits = (0..1000).filter(|_| r.chance(0.5)).count();
+        assert!((300..700).contains(&hits), "hits={hits}");
     }
 
     #[test]

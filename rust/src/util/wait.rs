@@ -39,9 +39,13 @@
 //! runs under the same lock) or is woken by the notification. Either
 //! way, progress.
 
-use std::sync::atomic::{fence, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::Ordering;
 use std::time::Instant;
+
+// Real std primitives normally; model-checker shims under the
+// `model-check` feature (the whole protocol below then runs, byte for
+// byte, under the exhaustive schedule enumerator — DESIGN.md §9).
+use crate::model::shim::{fence, AtomicU64, Condvar, Mutex};
 
 /// Epoch snapshot returned by [`WaitStrategy::register`]; consumed by
 /// [`WaitStrategy::wait`] / [`WaitStrategy::wait_deadline`].
@@ -73,7 +77,8 @@ impl WaitStrategy {
     /// queue) after this call and before sleeping; that re-check is what
     /// closes the lost-wakeup window (see the module docs). Every
     /// `register` must be paired with exactly one [`Self::cancel`] or
-    /// one wait call.
+    /// one wait call; when the code between the two can unwind, use
+    /// [`Self::registration`] instead, which pairs them by RAII.
     pub fn register(&self) -> WaitToken {
         self.waiters.fetch_add(1, Ordering::SeqCst);
         // Fence-pair with `notify_if_waiting`'s fence: an SC RMW alone
@@ -92,24 +97,64 @@ impl WaitStrategy {
         self.waiters.fetch_sub(1, Ordering::SeqCst);
     }
 
+    /// Announce this thread as a waiter with RAII deregistration: the
+    /// returned [`WaitRegistration`] cancels on drop, so a panic (or a
+    /// poisoned-lock unwind inside a wait) between registration and
+    /// sleep can never leak the `waiters` count. Prefer this over the
+    /// raw [`Self::register`]/[`Self::cancel`] pair whenever arbitrary
+    /// code (a queue re-poll, say) runs between the two.
+    pub fn registration(&self) -> WaitRegistration<'_> {
+        WaitRegistration {
+            ws: self,
+            token: self.register(),
+        }
+    }
+
     /// Sleep until the epoch moves past `token`'s snapshot. Returns
-    /// immediately if it already has. Deregisters on return.
+    /// immediately if it already has. Deregisters on return — including
+    /// by unwind, if the internal lock was poisoned by a panicking
+    /// waiter (the panic propagates, the waiter count does not leak).
     pub fn wait(&self, token: WaitToken) {
+        WaitRegistration { ws: self, token }.wait();
+    }
+
+    /// Sleep until the epoch moves past `token`'s snapshot or `deadline`
+    /// passes. Returns `true` when woken by a notification, `false` on
+    /// deadline expiry. Deregisters on return (unwind included, as with
+    /// [`Self::wait`]).
+    pub fn wait_deadline(&self, token: WaitToken, deadline: Instant) -> bool {
+        WaitRegistration { ws: self, token }.wait_deadline(deadline)
+    }
+
+    /// The sleep loop of [`Self::wait`]; panics (propagating poison)
+    /// without touching the waiter count — callers hold a
+    /// [`WaitRegistration`] for that.
+    fn sleep_until_notified(&self, token: WaitToken) {
         let mut guard = self.lock.lock().unwrap();
         while self.epoch.load(Ordering::SeqCst) == token.0 {
             guard = self.cv.wait(guard).unwrap();
         }
         drop(guard);
-        self.cancel();
     }
 
-    /// Sleep until the epoch moves past `token`'s snapshot or `deadline`
-    /// passes. Returns `true` when woken by a notification, `false` on
-    /// deadline expiry. Deregisters on return.
-    pub fn wait_deadline(&self, token: WaitToken, deadline: Instant) -> bool {
+    /// The sleep loop of [`Self::wait_deadline`]; same unwind contract
+    /// as [`Self::sleep_until_notified`].
+    ///
+    /// Under the model checker the expiry edge is not modeled (virtual
+    /// time does not advance — mirroring the model condvar's
+    /// never-times-out rule), so the wait is wakeup-edge only there;
+    /// a wall-clock check would make identical schedules diverge on a
+    /// loaded machine. `shims_active()` is constant `false` in normal
+    /// builds.
+    fn sleep_until_notified_or_deadline(&self, token: WaitToken, deadline: Instant) -> bool {
+        let model = crate::model::shims_active();
         let mut guard = self.lock.lock().unwrap();
         let mut woken = true;
         while self.epoch.load(Ordering::SeqCst) == token.0 {
+            if model {
+                guard = self.cv.wait(guard).unwrap();
+                continue;
+            }
             let now = Instant::now();
             if now >= deadline {
                 woken = false;
@@ -119,7 +164,6 @@ impl WaitStrategy {
             guard = g;
         }
         drop(guard);
-        self.cancel();
         woken
     }
 
@@ -151,6 +195,46 @@ impl WaitStrategy {
     /// Currently registered waiters (diagnostics; racy by nature).
     pub fn waiters(&self) -> u64 {
         self.waiters.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII waiter registration from [`WaitStrategy::registration`].
+///
+/// Holds the `waiters` increment; dropping it — normally, or during an
+/// unwind from a panicking re-poll or a poisoned internal lock —
+/// performs exactly one decrement. Without this guard, a panic between
+/// `register` and `cancel`/`wait` would permanently inflate the waiter
+/// count and force every future
+/// [`WaitStrategy::notify_if_waiting`] onto the lock path.
+pub struct WaitRegistration<'a> {
+    ws: &'a WaitStrategy,
+    token: WaitToken,
+}
+
+impl WaitRegistration<'_> {
+    /// The epoch snapshot taken at registration.
+    pub fn token(&self) -> WaitToken {
+        self.token
+    }
+
+    /// Sleep until the epoch moves past the registration's snapshot
+    /// (consumes the registration; deregisters on return or unwind).
+    pub fn wait(self) {
+        self.ws.sleep_until_notified(self.token);
+        // `self` drops here → the single decrement.
+    }
+
+    /// Sleep until notified or `deadline` passes; `true` = woken.
+    /// Consumes the registration; deregisters on return or unwind.
+    pub fn wait_deadline(self, deadline: Instant) -> bool {
+        self.ws.sleep_until_notified_or_deadline(self.token, deadline)
+        // `self` drops here → the single decrement.
+    }
+}
+
+impl Drop for WaitRegistration<'_> {
+    fn drop(&mut self) {
+        self.ws.cancel();
     }
 }
 
@@ -209,6 +293,56 @@ mod tests {
         // slow path and wake it.
         ws.notify_if_waiting();
         h.join().unwrap();
+        assert_eq!(ws.waiters(), 0);
+    }
+
+    #[test]
+    fn registration_cancels_on_drop() {
+        let ws = WaitStrategy::new();
+        {
+            let reg = ws.registration();
+            assert_eq!(ws.waiters(), 1);
+            let _ = reg.token();
+        }
+        assert_eq!(ws.waiters(), 0, "drop must deregister");
+    }
+
+    #[test]
+    fn registration_cancels_on_unwind() {
+        let ws = WaitStrategy::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _reg = ws.registration();
+            panic!("re-poll blew up");
+        }));
+        assert!(r.is_err());
+        assert_eq!(ws.waiters(), 0, "unwind must deregister");
+    }
+
+    #[test]
+    fn poisoned_lock_does_not_leak_waiters() {
+        let ws = Arc::new(WaitStrategy::new());
+        // Poison the internal lock with a panicking holder.
+        let ws2 = ws.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = ws2.lock.lock().unwrap();
+            panic!("poison the wait lock");
+        })
+        .join();
+        let token = ws.register();
+        assert_eq!(ws.waiters(), 1);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| ws.wait(token)));
+        assert!(r.is_err(), "poison must propagate as a panic");
+        assert_eq!(
+            ws.waiters(),
+            0,
+            "waiter count must not leak through the poison unwind"
+        );
+        // The deadline path unwinds identically.
+        let token = ws.register();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            ws.wait_deadline(token, Instant::now() + Duration::from_millis(5))
+        }));
+        assert!(r.is_err());
         assert_eq!(ws.waiters(), 0);
     }
 

@@ -1,0 +1,631 @@
+//! Model-checking the wait/claim layer (DESIGN.md §9).
+//!
+//! These tests run the *real* production code — `WaitStrategy`, the
+//! `CmpQueue` claim/frontier core, and the `NodePool` tagged freelist —
+//! under the hand-rolled schedule enumerator in `cmpq::model`. They
+//! only exist under the `model-check` feature, which routes those
+//! layers' atomics and mutex/condvar through the model shims; the CI
+//! `model-check` job runs them with a wall-clock budget.
+//!
+//! Layout:
+//! * exhaustive DFS passes (complete at the configured bound) over the
+//!   §8 lost-wakeup race, 1P×1C in full and 2P×2C prefix-bounded;
+//! * the same protocol driven through `CmpQueue::pop_blocking`;
+//! * claim-CAS vs. reclamation and freelist-ABA property scenarios;
+//! * pinned adversarial schedules as named deterministic regressions;
+//! * detection-power checks: deliberately broken variants (no re-poll,
+//!   untagged freelist) whose bugs the checker must exhibit.
+#![cfg(feature = "model-check")]
+
+use std::collections::HashSet;
+use std::sync::atomic::Ordering::SeqCst;
+use std::sync::Arc;
+use std::sync::Mutex as StdMutex;
+
+use cmpq::model::{
+    explore_dfs, fuzz, replay, ExploreConfig, MAtomicU64, Outcome, Scenario, ThreadBody,
+};
+use cmpq::queue::cmp::{CmpConfig, CmpQueue, Node, NodePool, ReclaimTrigger};
+use cmpq::util::WaitStrategy;
+
+/// Exhaustive prefix depth for the 2P×2C pass. Branching is ≤ 4, so
+/// executions ≤ 4^depth; the 600k execution cap therefore guarantees
+/// completion for any depth ≤ 9 (4^9 = 262 144). CI raises this via
+/// `MODEL_DEPTH` within that bound.
+fn depth_2x2() -> usize {
+    std::env::var("MODEL_DEPTH")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(7)
+        .clamp(4, 9)
+}
+
+fn cfg_with_depth(depth: usize) -> ExploreConfig {
+    ExploreConfig {
+        max_depth: depth,
+        max_steps: 10_000,
+        max_executions: 600_000,
+    }
+}
+
+// ---------------------------------------------------------------------
+// The §8 eventcount race: real WaitStrategy over a model item counter.
+// Thread ids: producers are 0..P, consumers are P..P+C.
+// ---------------------------------------------------------------------
+
+struct EcState {
+    items: MAtomicU64,
+    ws: WaitStrategy,
+}
+
+fn try_take(st: &EcState) -> bool {
+    let mut cur = st.items.load(SeqCst);
+    while cur > 0 {
+        match st.items.compare_exchange(cur, cur - 1, SeqCst, SeqCst) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+    false
+}
+
+/// The canonical consumer protocol from DESIGN.md §8 / `park_wait`:
+/// poll → register → re-poll → sleep, via the RAII registration.
+fn consume_one(st: &EcState) {
+    loop {
+        if try_take(st) {
+            return;
+        }
+        let registration = st.ws.registration();
+        if try_take(st) {
+            return; // registration drops → cancel
+        }
+        registration.wait();
+    }
+}
+
+fn produce_one(st: &EcState) {
+    st.items.fetch_add(1, SeqCst);
+    st.ws.notify_if_waiting();
+}
+
+fn eventcount_scenario(producers: usize, consumers: usize, items_each: u64) -> Scenario {
+    let total = producers as u64 * items_each;
+    assert_eq!(total % consumers as u64, 0, "quota must divide evenly");
+    let quota = total / consumers as u64;
+    let st = Arc::new(EcState {
+        items: MAtomicU64::new(0),
+        ws: WaitStrategy::new(),
+    });
+    let mut threads: Vec<ThreadBody> = Vec::new();
+    for _ in 0..producers {
+        let st = st.clone();
+        threads.push(Box::new(move || {
+            for _ in 0..items_each {
+                produce_one(&st);
+            }
+        }));
+    }
+    for _ in 0..consumers {
+        let st = st.clone();
+        threads.push(Box::new(move || {
+            for _ in 0..quota {
+                consume_one(&st);
+            }
+        }));
+    }
+    let st2 = st.clone();
+    Scenario {
+        threads,
+        check: Box::new(move || {
+            if st2.items.load(SeqCst) != 0 {
+                return Err(format!("items left behind: {}", st2.items.load(SeqCst)));
+            }
+            if st2.ws.waiters() != 0 {
+                return Err(format!("leaked waiters: {}", st2.ws.waiters()));
+            }
+            Ok(())
+        }),
+    }
+}
+
+/// 1 producer × 1 consumer, unbounded depth: a *complete* enumeration
+/// of every SC interleaving of the 4-access race (plus its fences and
+/// the sleep path). No lost wakeup (deadlock), no leaked waiter.
+///
+/// Head-room note: a step-faithful port of this exact scenario
+/// (every atomic op, lock-acquire attempt, cv park/reacquire, and
+/// RAII cancel as one scheduling point) measures **846** leaf
+/// executions at ≤ 21 steps — the 600k execution cap is ~700×
+/// head-room, so `complete` is a safe hard assertion.
+#[test]
+fn eventcount_1p1c_full_exhaustive() {
+    let report = explore_dfs(|| eventcount_scenario(1, 1, 1), cfg_with_depth(100_000));
+    eprintln!(
+        "1P1C full: executions={} max_steps={} truncated={}",
+        report.executions, report.max_steps_seen, report.depth_truncated
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(!report.depth_truncated, "depth bound must never bind here");
+    assert!(report.complete, "1P1C race must be fully enumerable");
+}
+
+/// 2 producers × 2 consumers: exhaustive over all schedule prefixes at
+/// the configured bound (deterministic first-enabled completion past
+/// it). This is the acceptance-criterion pass: 100% of interleavings
+/// at the model's step bound, no lost wakeup, no deadlock.
+#[test]
+fn eventcount_2x2_exhaustive_at_bound() {
+    let depth = depth_2x2();
+    let report = explore_dfs(|| eventcount_scenario(2, 2, 1), cfg_with_depth(depth));
+    eprintln!(
+        "2P2C depth={depth}: executions={} max_steps={} truncated={}",
+        report.executions, report.max_steps_seen, report.depth_truncated
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(report.complete, "prefix space at depth {depth} must be exhausted");
+}
+
+/// Deeper 2P×2C states than the DFS bound reaches, via fixed-seed
+/// random schedules. Fast (< 2 s): this is the smoke test that keeps
+/// the suite usable outside the dedicated CI job.
+#[test]
+fn eventcount_2x2_fuzz_smoke_fixed_seed() {
+    let report = fuzz(
+        || eventcount_scenario(2, 2, 2),
+        cfg_with_depth(0),
+        0xC0FFEE,
+        300,
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+}
+
+/// Pinned adversarial interleavings of the 4-access race, replayed as
+/// named deterministic regressions. Unlisted steps (and steps naming a
+/// thread that is blocked/finished at that point) fall back to the
+/// first enabled thread, so each run is exactly reproducible.
+#[test]
+fn pinned_adversarial_schedules_pass() {
+    // 1P1C: producer = 0, consumer = 1.
+    let pins_1p1c: [(&str, &[usize]); 3] = [
+        // Producer publishes fully before the consumer looks: consumer
+        // must take on the first poll, never sleeping.
+        ("publish_then_poll", &[0, 0, 0, 0, 0, 0, 1, 1, 1]),
+        // The classic lost-wakeup window: consumer fails its poll and
+        // registers; producer publishes and reads the waiter count;
+        // consumer re-polls. The re-poll (or the epoch bump) must save
+        // it — this is the schedule the missing-re-poll variant dies on.
+        ("publish_inside_register_window", &[1, 1, 1, 0, 0, 0, 0, 0, 0, 1]),
+        // Consumer goes fully to sleep first; producer's notify path
+        // must wake it (epoch bump under the lock).
+        ("sleep_then_publish", &[1, 1, 1, 1, 1, 1, 1, 1, 0, 0, 0, 0, 0, 0]),
+    ];
+    for (name, schedule) in pins_1p1c {
+        let result = replay(|| eventcount_scenario(1, 1, 1), schedule, 10_000);
+        assert!(
+            result.outcome.is_pass(),
+            "pinned schedule {name} failed: {result:?}"
+        );
+    }
+    // 2P2C: producers = 0,1; consumers = 2,3. Both consumers park, both
+    // producers publish; both must be woken and drain the queue.
+    let pins_2x2: [(&str, &[usize]); 2] = [
+        (
+            "both_consumers_park_then_two_publishes",
+            &[2, 2, 2, 2, 2, 2, 2, 3, 3, 3, 3, 3, 3, 3, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1],
+        ),
+        (
+            "staggered_park_publish_interleave",
+            &[2, 2, 2, 0, 3, 3, 3, 1, 0, 2, 1, 3, 0, 1, 2, 3],
+        ),
+    ];
+    for (name, schedule) in pins_2x2 {
+        let result = replay(|| eventcount_scenario(2, 2, 1), schedule, 10_000);
+        assert!(
+            result.outcome.is_pass(),
+            "pinned schedule {name} failed: {result:?}"
+        );
+    }
+}
+
+/// Detection power: the same protocol with the register→sleep re-poll
+/// removed is the textbook §8 lost wakeup, and the checker must
+/// exhibit it (as a deadlock: the consumer sleeps forever while the
+/// item sits in the queue). This validates that the passes above are
+/// capable of failing.
+#[test]
+fn missing_repoll_variant_is_caught() {
+    fn broken_consume_one(st: &EcState) {
+        loop {
+            if try_take(st) {
+                return;
+            }
+            let registration = st.ws.registration();
+            // BUG under test: no re-poll between register and sleep.
+            registration.wait();
+        }
+    }
+    let factory = || {
+        let st = Arc::new(EcState {
+            items: MAtomicU64::new(0),
+            ws: WaitStrategy::new(),
+        });
+        let p = st.clone();
+        let c = st.clone();
+        let threads: Vec<ThreadBody> = vec![
+            Box::new(move || produce_one(&p)),
+            Box::new(move || broken_consume_one(&c)),
+        ];
+        Scenario {
+            threads,
+            check: Box::new(|| Ok(())),
+        }
+    };
+    let report = explore_dfs(factory, cfg_with_depth(12));
+    let cx = report
+        .counterexample
+        .expect("the checker must find the lost wakeup");
+    assert!(
+        matches!(cx.outcome, Outcome::Deadlock { .. }),
+        "expected a stranded consumer, got {cx:?}"
+    );
+    eprintln!(
+        "missing-re-poll counterexample after {} executions: schedule {:?}",
+        report.executions, cx.schedule
+    );
+    // The counterexample schedule replays deterministically.
+    let again = replay(factory, &cx.schedule, 10_000);
+    assert_eq!(again.outcome, cx.outcome, "counterexample must replay");
+}
+
+// ---------------------------------------------------------------------
+// The real CmpQueue under the model: parking, claim vs. reclaim.
+// ---------------------------------------------------------------------
+
+fn cmp_park_scenario() -> Scenario {
+    let cfg = CmpConfig::default()
+        .with_trigger(ReclaimTrigger::Manual)
+        .without_magazines()
+        .without_stats();
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::with_config(cfg));
+    let qp = q.clone();
+    let qc = q.clone();
+    let threads: Vec<ThreadBody> = vec![
+        Box::new(move || {
+            qp.push(7).unwrap();
+        }),
+        Box::new(move || {
+            assert_eq!(qc.pop_blocking(), 7, "FIFO single item");
+        }),
+    ];
+    let q2 = q.clone();
+    Scenario {
+        threads,
+        check: Box::new(move || {
+            if q2.parked_consumers() != 0 {
+                return Err(format!("leaked waiters: {}", q2.parked_consumers()));
+            }
+            if let Some(v) = q2.pop() {
+                return Err(format!("item {v} left behind"));
+            }
+            Ok(())
+        }),
+    }
+}
+
+/// `push` vs. `pop_blocking` through the full queue machinery (link
+/// CAS, claim CAS, cursor, frontier, eventcount park): prefix-bounded
+/// exhaustive + deep fuzz, no deadlock and no lost item.
+#[test]
+fn cmp_queue_pop_blocking_never_strands() {
+    let report = explore_dfs(cmp_park_scenario, cfg_with_depth(7));
+    eprintln!(
+        "cmp park DFS: executions={} max_steps={}",
+        report.executions, report.max_steps_seen
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(report.complete);
+    let fz = fuzz(cmp_park_scenario, cfg_with_depth(0), 0xF00D, 300);
+    assert!(fz.counterexample.is_none(), "fuzz: {:?}", fz.counterexample);
+}
+
+/// Claim CAS vs. the reclaimer with the window deliberately at its
+/// minimum (`W = 1`): across all explored interleavings of two
+/// consumers and a reclaimer over a preloaded queue, every item is
+/// delivered exactly once or (stall-past-window semantics) dropped by
+/// the reclaimer — never duplicated, never claimed out of FIFO order
+/// per consumer, and never delivered from a recycled node.
+fn claim_vs_reclaim_scenario() -> Scenario {
+    let cfg = CmpConfig::default()
+        .with_window(1)
+        .with_min_batch(1)
+        .with_trigger(ReclaimTrigger::Manual)
+        .without_magazines();
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::with_config(cfg));
+    const PRELOAD: u64 = 6;
+    for i in 0..PRELOAD {
+        q.push(i).unwrap(); // controller-side: not part of the schedule
+    }
+    let got_a = Arc::new(StdMutex::new(Vec::new()));
+    let got_b = Arc::new(StdMutex::new(Vec::new()));
+    let (qa, qb, qr) = (q.clone(), q.clone(), q.clone());
+    let (ga, gb) = (got_a.clone(), got_b.clone());
+    let threads: Vec<ThreadBody> = vec![
+        Box::new(move || {
+            for _ in 0..2 {
+                if let Some(v) = qa.pop() {
+                    ga.lock().unwrap().push(v);
+                }
+            }
+        }),
+        Box::new(move || {
+            for _ in 0..2 {
+                if let Some(v) = qb.pop() {
+                    gb.lock().unwrap().push(v);
+                }
+            }
+        }),
+        Box::new(move || {
+            qr.reclaim();
+            qr.reclaim();
+        }),
+    ];
+    Scenario {
+        threads,
+        check: Box::new(move || {
+            let a = got_a.lock().unwrap().clone();
+            let b = got_b.lock().unwrap().clone();
+            for seq in [&a, &b] {
+                if !seq.windows(2).all(|w| w[0] < w[1]) {
+                    return Err(format!("per-consumer FIFO violated: {a:?} {b:?}"));
+                }
+            }
+            let mut all: Vec<u64> = a.iter().chain(b.iter()).copied().collect();
+            all.sort_unstable();
+            let popped = all.len() as u64;
+            all.dedup();
+            if all.len() as u64 != popped {
+                return Err(format!("duplicate delivery: {a:?} {b:?}"));
+            }
+            if all.iter().any(|&v| v >= PRELOAD) {
+                return Err(format!("phantom value: {all:?}"));
+            }
+            // Remaining items drain on the controller; the reclaimer
+            // accounts for any payload whose claim stalled past W.
+            let mut drained = 0u64;
+            while q.pop().is_some() {
+                drained += 1;
+            }
+            let dropped = q.stats().payloads_reclaimed;
+            if popped + drained + dropped != PRELOAD {
+                return Err(format!(
+                    "accounting broken: popped={popped} drained={drained} dropped={dropped}"
+                ));
+            }
+            Ok(())
+        }),
+    }
+}
+
+#[test]
+fn cmp_claim_vs_reclaim_accounting_holds() {
+    let report = explore_dfs(claim_vs_reclaim_scenario, cfg_with_depth(7));
+    eprintln!(
+        "claim/reclaim DFS: executions={} max_steps={}",
+        report.executions, report.max_steps_seen
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(report.complete);
+    let fz = fuzz(claim_vs_reclaim_scenario, cfg_with_depth(0), 0xB0B0, 400);
+    assert!(fz.counterexample.is_none(), "fuzz: {:?}", fz.counterexample);
+}
+
+// ---------------------------------------------------------------------
+// Freelist ABA: the real tagged pool must be clean; an untagged
+// variant must be caught.
+// ---------------------------------------------------------------------
+
+/// Real `NodePool` (32-bit ABA tag beside the index): two threads
+/// alloc/free over a 3-node pool while a shared ownership set asserts,
+/// in-thread, that no node is ever handed to two holders at once.
+fn tagged_pool_scenario() -> Scenario {
+    let pool: Arc<NodePool<u64>> = Arc::new(NodePool::with_magazines(Some(3), true, 0));
+    // Preload the freelist (controller side): 3 nodes through one
+    // alloc/free cycle each.
+    let seed: Vec<usize> = (0..3).map(|_| pool.alloc().unwrap().0 as usize).collect();
+    for &p in &seed {
+        // SAFETY: each pointer came from this pool's alloc above and
+        // is still in its reset (FREE) state.
+        unsafe { pool.free(p as *mut Node<u64>) };
+    }
+    let owned = Arc::new(StdMutex::new(HashSet::<usize>::new()));
+    let mut threads: Vec<ThreadBody> = Vec::new();
+    for _ in 0..2 {
+        let pool = pool.clone();
+        let owned = owned.clone();
+        threads.push(Box::new(move || {
+            for _ in 0..2 {
+                if let Some((node, _reused)) = pool.alloc() {
+                    let addr = node as usize;
+                    assert!(
+                        owned.lock().unwrap().insert(addr),
+                        "node {addr:#x} allocated to two holders (freelist ABA)"
+                    );
+                    // Relinquish the claim *before* publishing the node
+                    // back, so the set can never false-positive.
+                    assert!(owned.lock().unwrap().remove(&addr));
+                    // SAFETY: `addr` is the node this thread just
+                    // allocated from this pool, untouched since.
+                    unsafe { pool.free(addr as *mut Node<u64>) };
+                }
+            }
+        }));
+    }
+    let pool2 = pool.clone();
+    let owned2 = owned.clone();
+    Scenario {
+        threads,
+        check: Box::new(move || {
+            if !owned2.lock().unwrap().is_empty() {
+                return Err("ownership set not drained".into());
+            }
+            if pool2.in_use() != 0 {
+                return Err(format!("{} nodes leaked", pool2.in_use()));
+            }
+            Ok(())
+        }),
+    }
+}
+
+#[test]
+fn pool_freelist_aba_tag_holds() {
+    let report = explore_dfs(tagged_pool_scenario, cfg_with_depth(10));
+    eprintln!(
+        "tagged pool DFS: executions={} max_steps={}",
+        report.executions, report.max_steps_seen
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(report.complete);
+    let fz = fuzz(tagged_pool_scenario, cfg_with_depth(0), 0xABA, 400);
+    assert!(fz.counterexample.is_none(), "fuzz: {:?}", fz.counterexample);
+}
+
+/// Detection power for property (c): a Treiber freelist with the tag
+/// removed. The pop/push/pop interleaving re-links a stale head and
+/// hands one node to two holders; the checker must exhibit it.
+struct UntaggedStack {
+    /// Head as index+1; 0 = empty. No generation tag — the bug.
+    head: MAtomicU64,
+    /// `next[i]` as index+1; 0 = none.
+    next: Vec<MAtomicU64>,
+}
+
+impl UntaggedStack {
+    fn new(n: usize) -> Self {
+        let next = (0..n)
+            .map(|i| MAtomicU64::new(if i + 1 < n { i as u64 + 2 } else { 0 }))
+            .collect();
+        Self {
+            head: MAtomicU64::new(1),
+            next,
+        }
+    }
+
+    fn pop(&self) -> Option<usize> {
+        let mut head = self.head.load(SeqCst);
+        loop {
+            if head == 0 {
+                return None;
+            }
+            let idx = (head - 1) as usize;
+            let nxt = self.next[idx].load(SeqCst);
+            match self.head.compare_exchange(head, nxt, SeqCst, SeqCst) {
+                Ok(_) => return Some(idx),
+                Err(now) => head = now,
+            }
+        }
+    }
+
+    fn push(&self, idx: usize) {
+        let mut head = self.head.load(SeqCst);
+        loop {
+            self.next[idx].store(head, SeqCst);
+            match self
+                .head
+                .compare_exchange(head, idx as u64 + 1, SeqCst, SeqCst)
+            {
+                Ok(_) => return,
+                Err(now) => head = now,
+            }
+        }
+    }
+}
+
+fn untagged_stack_scenario() -> Scenario {
+    fn take(stack: &UntaggedStack, owned: &StdMutex<HashSet<usize>>) -> Option<usize> {
+        let idx = stack.pop()?;
+        assert!(
+            owned.lock().unwrap().insert(idx),
+            "node {idx} popped by two holders (ABA, no tag)"
+        );
+        Some(idx)
+    }
+    let stack = Arc::new(UntaggedStack::new(3));
+    let owned = Arc::new(StdMutex::new(HashSet::<usize>::new()));
+    let (s1, o1) = (stack.clone(), owned.clone());
+    let (s2, o2) = (stack.clone(), owned.clone());
+    let threads: Vec<ThreadBody> = vec![
+        // Victim: two pops; the second lands on a stale re-linked head.
+        Box::new(move || {
+            let _a = take(&s1, &o1);
+            let _b = take(&s1, &o1);
+        }),
+        // Attacker: pop A, pop B, push A back — the ABA recipe.
+        Box::new(move || {
+            let a = take(&s2, &o2);
+            let _b = take(&s2, &o2);
+            if let Some(a) = a {
+                assert!(o2.lock().unwrap().remove(&a));
+                s2.push(a);
+            }
+        }),
+    ];
+    Scenario {
+        threads,
+        check: Box::new(|| Ok(())),
+    }
+}
+
+#[test]
+fn untagged_freelist_aba_is_caught() {
+    // Fuzz finds the interleaving cheaply most of the time; the
+    // depth-16 DFS (two threads → ≤ 2^16 executions) is the
+    // deterministic backstop.
+    let fz = fuzz(untagged_stack_scenario, cfg_with_depth(0), 0xDEAD, 6_000);
+    let cx = match fz.counterexample {
+        Some(cx) => {
+            eprintln!("untagged ABA found by fuzz after {} executions", fz.executions);
+            cx
+        }
+        None => {
+            let report = explore_dfs(untagged_stack_scenario, cfg_with_depth(16));
+            eprintln!(
+                "untagged ABA DFS: executions={} complete={}",
+                report.executions, report.complete
+            );
+            report
+                .counterexample
+                .expect("the checker must find the untagged-freelist ABA")
+        }
+    };
+    assert!(
+        matches!(cx.outcome, Outcome::Panicked { .. }),
+        "expected the double-holder assertion, got {cx:?}"
+    );
+    let again = replay(untagged_stack_scenario, &cx.schedule, 10_000);
+    assert_eq!(again.outcome, cx.outcome, "counterexample must replay");
+}
