@@ -1,0 +1,85 @@
+//! Async serving: the pipeline without a thread per waiter.
+//!
+//! ```sh
+//! cargo run --release --example async_serving
+//! ```
+//!
+//! Demonstrates the executor-agnostic async bridge (DESIGN.md §10):
+//! queue-level `pop_async` futures woken directly by pushes, the
+//! server's async worker mode (N model workers as tasks on one host
+//! thread), and `submit_async` clients keeping many requests in flight
+//! from a single thread — all on the crate's own dependency-free
+//! `block_on`/`Executor` (swap in any runtime; the futures only speak
+//! `std::task::Waker`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use cmpq::coordinator::server::{Server, ServerConfig};
+use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+use cmpq::util::executor::{block_on, Executor};
+use cmpq::CmpQueue;
+
+fn main() {
+    // 1. Queue-level async: a future resolves when a push lands — no
+    //    parked thread, no polling loop.
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    let q2 = q.clone();
+    let consumer = std::thread::spawn(move || block_on(q2.pop_async()));
+    while q.parked_consumers() == 0 {
+        std::thread::yield_now(); // wait for the waker registration
+    }
+    q.push(7).unwrap();
+    println!("pop_async resolved: {}", consumer.join().unwrap());
+
+    // 2. The serving pipeline in async worker mode: 4 model workers as
+    //    round-robin executor tasks multiplexed over ONE host thread.
+    let factory: EngineFactory = Arc::new(|| {
+        Ok(Box::new(EchoEngine {
+            batch: 8,
+            features: 16,
+            outputs: 1,
+            scale: 2.0,
+        }) as Box<dyn InferenceEngine>)
+    });
+    let server = Arc::new(Server::start(
+        ServerConfig {
+            shards: 2,
+            workers: 4,
+            async_workers: true,
+            ..ServerConfig::default()
+        },
+        factory,
+    ));
+
+    // 3. Async clients: 4 client tasks × 64 requests each, all in
+    //    flight from one thread via `submit_async`.
+    let total = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut clients = Executor::new();
+    for c in 0..4u32 {
+        let server = server.clone();
+        let total = total.clone();
+        clients.spawn(async move {
+            for i in 0..64u32 {
+                let x = (c * 64 + i) as f32;
+                let resp = server.submit_async(vec![x; 16]).await;
+                assert_eq!(resp.output, vec![x * 2.0]);
+                total.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    }
+    clients.run();
+    let dt = t0.elapsed();
+    let n = total.load(Ordering::Relaxed);
+    println!(
+        "async pipeline served {n} requests in {dt:.2?} ({:.0} req/s) \
+         with 1 client thread + 1 worker thread",
+        n as f64 / dt.as_secs_f64()
+    );
+
+    let server = Arc::try_unwrap(server).ok().expect("clients done");
+    let metrics = server.shutdown();
+    println!("{}", metrics.report());
+}

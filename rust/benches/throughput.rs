@@ -4,15 +4,16 @@
 //! swept across an operation batch-size axis (1/8/64) so the
 //! batch-amortization win (DESIGN.md §7) is measured, not asserted,
 //! plus an offered-load scenario axis (bursty arrival bursts with idle
-//! gaps, and a zero-load idle floor) whose parking consumers report
-//! ops per CPU-second (DESIGN.md §8).
+//! gaps, a zero-load idle floor, and async-task consumers riding the
+//! §10 waker bridge) whose parking consumers report ops per CPU-second
+//! (DESIGN.md §8, §10).
 //!
 //! `cargo bench --bench throughput` — or `repro bench fig1` for the
 //! CLI-configurable version. Env knobs: `BENCH_OPS`, `BENCH_ROUNDS`,
 //! `BENCH_BATCHES` (comma-separated, default `1,8,64`),
 //! `BENCH_SCENARIOS` (comma-separated extra scenarios, default
-//! `bursty,idle`; empty string disables), `BENCH_FULL=1` to include
-//! every implementation.
+//! `bursty,idle,async`; empty string disables), `BENCH_FULL=1` to
+//! include every implementation.
 //!
 //! Outputs:
 //! * `bench_results/fig1_throughput.json` — the batch-1 Figure 1 cells
@@ -161,7 +162,13 @@ fn main() {
                 .filter(|s| !s.is_empty())
                 .collect()
         })
-        .unwrap_or_else(|_| vec!["bursty".to_string(), "idle".to_string()]);
+        .unwrap_or_else(|_| {
+            vec![
+                "bursty".to_string(),
+                "idle".to_string(),
+                "async".to_string(),
+            ]
+        });
     for name in &scenarios {
         let (scenario, scen_pairs, rounds) = match name.as_str() {
             "bursty" => (
@@ -183,8 +190,19 @@ fn main() {
                 vec![PairConfig::symmetric(4)],
                 1usize,
             ),
+            // The async bridge (DESIGN.md §10): consumer threads host
+            // 4 async tasks each; CMP resolves on push-side waker
+            // wakeups, baselines on the polling default — the row is
+            // the measured cost/win of futures vs consumer threads.
+            "async" => (
+                Scenario::Async {
+                    tasks_per_consumer: 4,
+                },
+                vec![PairConfig::symmetric(1), PairConfig::symmetric(4)],
+                2usize,
+            ),
             other => {
-                eprintln!("unknown scenario {other:?} (bursty|idle), skipping");
+                eprintln!("unknown scenario {other:?} (bursty|idle|async), skipping");
                 continue;
             }
         };

@@ -213,6 +213,189 @@ pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
     s
 }
 
+/// One compared cell of `repro bench diff`: the same
+/// `impl × pair × batch × scenario` key measured in two
+/// `BENCH_throughput.json` dumps.
+#[derive(Debug, Clone)]
+pub struct BenchDiffRow {
+    /// Row key: `impl pair batch scenario`.
+    pub key: String,
+    /// Old mean items/sec.
+    pub old_ips: f64,
+    /// New mean items/sec.
+    pub new_ips: f64,
+    /// `(new − old) / old` in percent (items/sec).
+    pub ips_delta_pct: f64,
+    /// Old items per CPU-second (0 = unmeasured in that run).
+    pub old_ops_per_cpu: f64,
+    /// New items per CPU-second (0 = unmeasured in that run).
+    pub new_ops_per_cpu: f64,
+    /// `(new − old) / old` in percent (ops/CPU-s); 0 when either side
+    /// was unmeasured.
+    pub cpu_delta_pct: f64,
+    /// Items/sec dropped by more than the threshold.
+    pub ips_regressed: bool,
+    /// Ops/CPU-s dropped by more than the threshold (never set when
+    /// either side was unmeasured).
+    pub cpu_regressed: bool,
+}
+
+/// Result of comparing two `BENCH_throughput.json` dumps
+/// ([`diff_bench_json`]) — the PR-to-PR perf-trajectory gate behind
+/// `repro bench diff`.
+#[derive(Debug, Clone)]
+pub struct BenchDiff {
+    /// Rows present in both dumps, in old-dump order.
+    pub rows: Vec<BenchDiffRow>,
+    /// Row keys only the old dump has (coverage shrank).
+    pub only_old: Vec<String>,
+    /// Row keys only the new dump has (coverage grew).
+    pub only_new: Vec<String>,
+    /// Regression threshold in percent that was applied.
+    pub threshold_pct: f64,
+}
+
+impl BenchDiff {
+    /// Number of rows flagged as regressed on either metric.
+    pub fn regressions(&self) -> usize {
+        self.rows
+            .iter()
+            .filter(|r| r.ips_regressed || r.cpu_regressed)
+            .count()
+    }
+
+    /// Aligned ASCII table of every compared row, regressions flagged.
+    pub fn table(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "# Bench diff — items/s and ops/CPU-s vs baseline (threshold {:.1}%)",
+            self.threshold_pct
+        );
+        let _ = writeln!(
+            s,
+            "{:<34}{:>12}{:>12}{:>9}{:>12}{:>12}{:>9}  {}",
+            "key", "old ips", "new ips", "Δ%", "old op/cpu", "new op/cpu", "Δ%", "flags"
+        );
+        for r in &self.rows {
+            let mut flags = String::new();
+            if r.ips_regressed {
+                flags.push_str("REGRESS(ips) ");
+            }
+            if r.cpu_regressed {
+                flags.push_str("REGRESS(cpu)");
+            }
+            let _ = writeln!(
+                s,
+                "{:<34}{:>12.0}{:>12.0}{:>+9.1}{:>12.0}{:>12.0}{:>+9.1}  {}",
+                r.key,
+                r.old_ips,
+                r.new_ips,
+                r.ips_delta_pct,
+                r.old_ops_per_cpu,
+                r.new_ops_per_cpu,
+                r.cpu_delta_pct,
+                flags.trim_end()
+            );
+        }
+        for k in &self.only_old {
+            let _ = writeln!(s, "{k:<34} only in old dump (coverage shrank)");
+        }
+        for k in &self.only_new {
+            let _ = writeln!(s, "{k:<34} only in new dump (new coverage)");
+        }
+        s
+    }
+}
+
+/// Percent change from `old` to `new`; 0 when `old` is unmeasurable.
+fn delta_pct(old: f64, new: f64) -> f64 {
+    if old > 0.0 {
+        100.0 * (new - old) / old
+    } else {
+        0.0
+    }
+}
+
+/// Compare two `BENCH_throughput.json` documents (the format
+/// [`batch_throughput_json`] writes). Rows are matched on the
+/// `impl × pair × batch × scenario` key; a drop of more than
+/// `threshold_pct` percent in `mean_ips` or `ops_per_cpu_sec` flags
+/// the row as regressed. A zero `ops_per_cpu_sec` means that run
+/// could not measure CPU time — such rows are never CPU-flagged.
+/// Errors on malformed JSON or missing fields.
+pub fn diff_bench_json(old: &str, new: &str, threshold_pct: f64) -> Result<BenchDiff, String> {
+    let parse = |doc: &str, label: &str| -> Result<Vec<(String, f64, f64)>, String> {
+        let json = crate::util::json::Json::parse(doc).map_err(|e| format!("{label}: {e}"))?;
+        let arr = json
+            .as_arr()
+            .ok_or_else(|| format!("{label}: top level is not an array"))?;
+        let mut rows = Vec::with_capacity(arr.len());
+        for (i, row) in arr.iter().enumerate() {
+            let field = |k: &str| -> Result<String, String> {
+                row.get(k)
+                    .and_then(|v| v.as_str())
+                    .map(str::to_string)
+                    .ok_or_else(|| format!("{label}: row {i} lacks string field {k:?}"))
+            };
+            let num = |k: &str| -> Result<f64, String> {
+                row.get(k)
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| format!("{label}: row {i} lacks numeric field {k:?}"))
+            };
+            let key = format!(
+                "{} {} batch={} {}",
+                field("impl")?,
+                field("pair")?,
+                num("batch")? as u64,
+                field("scenario")?
+            );
+            rows.push((key, num("mean_ips")?, num("ops_per_cpu_sec")?));
+        }
+        Ok(rows)
+    };
+    let old_rows = parse(old, "old")?;
+    let new_rows = parse(new, "new")?;
+
+    let mut rows = Vec::new();
+    let mut only_old = Vec::new();
+    for (key, old_ips, old_cpu) in &old_rows {
+        let Some((_, new_ips, new_cpu)) = new_rows.iter().find(|(k, _, _)| k == key) else {
+            only_old.push(key.clone());
+            continue;
+        };
+        let ips_delta_pct = delta_pct(*old_ips, *new_ips);
+        let cpu_measured = *old_cpu > 0.0 && *new_cpu > 0.0;
+        let cpu_delta_pct = if cpu_measured {
+            delta_pct(*old_cpu, *new_cpu)
+        } else {
+            0.0
+        };
+        rows.push(BenchDiffRow {
+            key: key.clone(),
+            old_ips: *old_ips,
+            new_ips: *new_ips,
+            ips_delta_pct,
+            old_ops_per_cpu: *old_cpu,
+            new_ops_per_cpu: *new_cpu,
+            cpu_delta_pct,
+            ips_regressed: ips_delta_pct < -threshold_pct,
+            cpu_regressed: cpu_measured && cpu_delta_pct < -threshold_pct,
+        });
+    }
+    let only_new = new_rows
+        .iter()
+        .filter(|(k, _, _)| !old_rows.iter().any(|(ok, _, _)| ok == k))
+        .map(|(k, _, _)| k.clone())
+        .collect();
+    Ok(BenchDiff {
+        rows,
+        only_old,
+        only_new,
+        threshold_pct,
+    })
+}
+
 /// Latency cells as a JSON array (`bench_results/tables_latency.json`).
 pub fn latency_json(cells: &[LatencyCell]) -> String {
     let mut s = String::from("[");
@@ -377,6 +560,87 @@ mod tests {
         assert!(arr[0].get("ops_per_cpu_sec").unwrap().as_f64().unwrap() > 0.0);
         let util = arr[0].get("cpu_util").unwrap().as_f64().unwrap();
         assert!((util - 0.25).abs() < 1e-9);
+    }
+
+    fn diff_row(imp: &str, ips: f64, cpu: f64) -> String {
+        format!(
+            "{{\"impl\":\"{imp}\",\"pair\":\"4P4C\",\"threads\":8,\"batch\":1,\
+             \"scenario\":\"closed\",\"mean_ips\":{ips:.1},\"std_ips\":0.0,\
+             \"ops_per_cpu_sec\":{cpu:.1},\"cpu_util\":0.5,\"samples\":[{ips:.1}]}}"
+        )
+    }
+
+    #[test]
+    fn bench_diff_flags_regressions_only() {
+        let old = format!(
+            "[{},{},{}]",
+            diff_row("cmp", 1000.0, 2000.0),
+            diff_row("mutex", 500.0, 800.0),
+            diff_row("vyukov", 700.0, 900.0)
+        );
+        // cmp: ips −20% (regressed), cpu +10%. mutex: ips +20%, cpu
+        // −50% (regressed). vyukov: within threshold both ways.
+        let new = format!(
+            "[{},{},{}]",
+            diff_row("cmp", 800.0, 2200.0),
+            diff_row("mutex", 600.0, 400.0),
+            diff_row("vyukov", 665.0, 900.0)
+        );
+        let d = diff_bench_json(&old, &new, 10.0).expect("valid dumps");
+        assert_eq!(d.rows.len(), 3);
+        assert_eq!(d.regressions(), 2);
+        let cmp = &d.rows[0];
+        assert!(cmp.ips_regressed && !cmp.cpu_regressed, "{cmp:?}");
+        assert!((cmp.ips_delta_pct + 20.0).abs() < 1e-9);
+        let mx = &d.rows[1];
+        assert!(!mx.ips_regressed && mx.cpu_regressed, "{mx:?}");
+        let vy = &d.rows[2];
+        assert!(!vy.ips_regressed && !vy.cpu_regressed, "−5% is in budget");
+        let t = d.table();
+        assert!(t.contains("REGRESS(ips)"), "{t}");
+        assert!(t.contains("REGRESS(cpu)"), "{t}");
+        assert!(t.contains("cmp 4P4C batch=1 closed"), "{t}");
+    }
+
+    #[test]
+    fn bench_diff_handles_coverage_changes_and_unmeasured_cpu() {
+        let old = format!(
+            "[{},{}]",
+            diff_row("cmp", 1000.0, 0.0),
+            diff_row("mutex", 1.0, 1.0)
+        );
+        let new = format!(
+            "[{},{}]",
+            diff_row("cmp", 100.0, 3000.0),
+            diff_row("vyukov", 2.0, 2.0)
+        );
+        let d = diff_bench_json(&old, &new, 10.0).expect("valid dumps");
+        assert_eq!(d.rows.len(), 1, "only cmp matches");
+        assert!(d.rows[0].ips_regressed);
+        assert!(!d.rows[0].cpu_regressed, "unmeasured old CPU must not flag");
+        assert_eq!(d.only_old, vec!["mutex 4P4C batch=1 closed".to_string()]);
+        assert_eq!(d.only_new, vec!["vyukov 4P4C batch=1 closed".to_string()]);
+        let t = d.table();
+        assert!(t.contains("only in old dump"), "{t}");
+        assert!(t.contains("only in new dump"), "{t}");
+    }
+
+    #[test]
+    fn bench_diff_rejects_malformed_input() {
+        assert!(diff_bench_json("not json", "[]", 10.0).is_err());
+        assert!(diff_bench_json("[]", "{\"a\":1}", 10.0).is_err());
+        assert!(diff_bench_json("[{\"impl\":\"cmp\"}]", "[]", 10.0).is_err());
+        // Round-trips the real writer output.
+        let rows = vec![BatchThroughputRow {
+            cell: tcell(Impl::Cmp, 2, 1234.0),
+            batch: 8,
+            scenario: "async",
+        }];
+        let j = batch_throughput_json(&rows);
+        let d = diff_bench_json(&j, &j, 5.0).expect("writer output must diff");
+        assert_eq!(d.rows.len(), 1);
+        assert_eq!(d.regressions(), 0, "identical dumps never regress");
+        assert_eq!(d.rows[0].key, "cmp 2P2C batch=8 async");
     }
 
     #[test]

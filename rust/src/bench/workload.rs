@@ -3,8 +3,9 @@
 //! consumers against a fresh queue instance, measuring either wall-
 //! clock throughput or per-operation latency, with an optional
 //! synthetic load between operations (Figure 2 regime) and an
-//! offered-load [`Scenario`] axis (closed-loop / bursty / idle) that
-//! also reports CPU efficiency (ops per CPU-second, DESIGN.md §8).
+//! offered-load [`Scenario`] axis (closed-loop / bursty / idle /
+//! async-task consumers) that also reports CPU efficiency (ops per
+//! CPU-second, DESIGN.md §8 and §10).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Barrier};
@@ -73,15 +74,29 @@ pub enum Scenario {
         /// How long consumers are left facing an empty queue.
         hold: Duration,
     },
+    /// Async serving shape (DESIGN.md §10): producers push closed-loop
+    /// from threads, but each consumer thread hosts a round-robin
+    /// [`crate::util::Executor`] multiplexing `tasks_per_consumer`
+    /// async consumer tasks pulling through
+    /// [`crate::queue::ConcurrentQueue::pop_deadline_async`]. For CMP
+    /// the tasks resolve on push-side waker wakeups; baselines ride
+    /// the polling default — so the row measures exactly the overhead
+    /// (or win) of the async bridge versus dedicated consumer threads.
+    /// `batch_size` is ignored (tasks claim single items).
+    Async {
+        /// Consumer tasks multiplexed per consumer thread.
+        tasks_per_consumer: usize,
+    },
 }
 
 impl Scenario {
-    /// Short report label: `closed`, `bursty`, or `idle`.
+    /// Short report label: `closed`, `bursty`, `idle`, or `async`.
     pub fn label(&self) -> &'static str {
         match self {
             Scenario::ClosedLoop => "closed",
             Scenario::Bursty { .. } => "bursty",
             Scenario::Idle { .. } => "idle",
+            Scenario::Async { .. } => "async",
         }
     }
 }
@@ -225,7 +240,9 @@ pub fn run_throughput_on(
             let base = p as u64 * per_producer;
             match scenario {
                 Scenario::Idle { hold } => std::thread::sleep(hold),
-                Scenario::ClosedLoop => {
+                // Async consumers face the same full-speed offered
+                // load as the closed loop.
+                Scenario::ClosedLoop | Scenario::Async { .. } => {
                     if batch <= 1 {
                         for i in 0..per_producer {
                             load.run(i ^ (p as u64) << 32);
@@ -325,6 +342,50 @@ pub fn run_throughput_on(
                     }
                 }
                 end_ns.fetch_max(anchor.ns(), Ordering::AcqRel);
+            } else if let Scenario::Async { tasks_per_consumer } = scenario {
+                // Async consumer: one executor per consumer thread,
+                // `tasks_per_consumer` tasks pulling via the async
+                // dequeue in park slices (the slice bounds how quickly
+                // the drain condition is re-checked, exactly like the
+                // parking branch below).
+                let mut ex = crate::util::Executor::new();
+                let thread_claimed = Arc::new(AtomicU64::new(0));
+                for t in 0..tasks_per_consumer.max(1) {
+                    let queue = queue.clone();
+                    let consumed = consumed.clone();
+                    let producers_done = producers_done.clone();
+                    let end_ns = end_ns.clone();
+                    let thread_claimed = thread_claimed.clone();
+                    let mut salt = salt.wrapping_add(t as u64);
+                    ex.spawn(async move {
+                        let mut empty_slices = 0u32;
+                        loop {
+                            let slice_end = Instant::now() + PARK_SLICE;
+                            match queue.pop_deadline_async(slice_end).await {
+                                Some(_) => {
+                                    load.run(salt);
+                                    salt = salt.wrapping_add(0x9E37_79B9);
+                                    consumed.fetch_add(1, Ordering::AcqRel);
+                                    end_ns.fetch_max(anchor.ns(), Ordering::AcqRel);
+                                    thread_claimed.fetch_add(1, Ordering::Relaxed);
+                                    empty_slices = 0;
+                                }
+                                None => {
+                                    if producers_done.load(Ordering::Acquire) == n_producers {
+                                        empty_slices += 1;
+                                        if empty_slices >= EMPTY_SLICE_EXIT {
+                                            break;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    });
+                }
+                ex.run();
+                if thread_claimed.load(Ordering::Relaxed) == 0 {
+                    end_ns.fetch_max(anchor.ns(), Ordering::AcqRel);
+                }
             } else {
                 // Parking consumer (bursty/idle scenarios): blocking
                 // claims in park slices — asleep through the gaps,
@@ -623,6 +684,25 @@ mod tests {
     }
 
     #[test]
+    fn async_trial_conserves_items() {
+        let cfg = TrialConfig {
+            total_ops: 2000,
+            scenario: Scenario::Async {
+                tasks_per_consumer: 4,
+            },
+            ..TrialConfig::default()
+        };
+        // CMP rides real waker wakeups; Mutex rides the polling
+        // default — both must conserve items.
+        for imp in [Impl::Cmp, Impl::Mutex] {
+            let t = throughput_trial(imp, PairConfig::symmetric(2), &cfg);
+            assert_eq!(t.items, 2000, "{}", imp.name());
+            assert_eq!(t.lost, 0, "{}", imp.name());
+            assert!(t.items_per_sec > 0.0, "{}", imp.name());
+        }
+    }
+
+    #[test]
     fn idle_trial_parks_consumers() {
         let cfg = TrialConfig {
             scenario: Scenario::Idle {
@@ -661,6 +741,13 @@ mod tests {
             }
             .label(),
             "idle"
+        );
+        assert_eq!(
+            Scenario::Async {
+                tasks_per_consumer: 4
+            }
+            .label(),
+            "async"
         );
     }
 

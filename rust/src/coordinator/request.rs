@@ -1,6 +1,12 @@
-//! Request/response types and the completion slot clients wait on.
+//! Request/response types and the completion slot clients wait on —
+//! blocking ([`ResponseSlot::wait`]) or async
+//! ([`ResponseSlot::wait_async`], the surface behind
+//! [`crate::coordinator::server::Server::submit_async`]).
 
+use std::future::Future;
+use std::pin::Pin;
 use std::sync::{Arc, Condvar, Mutex};
+use std::task::{Context, Poll, Waker};
 use std::time::{Duration, Instant};
 
 /// An inference request flowing through the CMP fabric.
@@ -28,11 +34,20 @@ pub struct InferResponse {
     pub batch_size: usize,
 }
 
-/// One-shot completion slot (std-only oneshot channel: Mutex+Condvar).
+/// One-shot completion slot (std-only oneshot channel: Mutex+Condvar
+/// for blocking waiters, plus registered [`Waker`]s for async ones).
 #[derive(Default)]
 pub struct ResponseSlot {
-    inner: Mutex<Option<InferResponse>>,
+    inner: Mutex<SlotInner>,
     cv: Condvar,
+}
+
+/// Guarded slot state: the response (until taken) and the wakers of
+/// tasks pending in [`ResponseFuture`].
+#[derive(Default)]
+struct SlotInner {
+    resp: Option<InferResponse>,
+    wakers: Vec<Waker>,
 }
 
 impl ResponseSlot {
@@ -43,12 +58,18 @@ impl ResponseSlot {
     }
 
     /// Complete the slot (worker side). Later completions are ignored —
-    /// a slot completes exactly once.
+    /// a slot completes exactly once. Wakes blocking and async waiters
+    /// alike.
     pub fn complete(&self, resp: InferResponse) {
         let mut g = self.inner.lock().unwrap();
-        if g.is_none() {
-            *g = Some(resp);
+        if g.resp.is_none() {
+            g.resp = Some(resp);
+            let wakers = std::mem::take(&mut g.wakers);
+            drop(g);
             self.cv.notify_all();
+            for w in wakers {
+                w.wake();
+            }
         }
     }
 
@@ -56,7 +77,7 @@ impl ResponseSlot {
     pub fn wait(&self) -> InferResponse {
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(r) = g.take() {
+            if let Some(r) = g.resp.take() {
                 return r;
             }
             g = self.cv.wait(g).unwrap();
@@ -68,7 +89,7 @@ impl ResponseSlot {
         let deadline = Instant::now() + dur;
         let mut g = self.inner.lock().unwrap();
         loop {
-            if let Some(r) = g.take() {
+            if let Some(r) = g.resp.take() {
                 return Some(r);
             }
             let now = Instant::now();
@@ -77,15 +98,60 @@ impl ResponseSlot {
             }
             let (guard, res) = self.cv.wait_timeout(g, deadline - now).unwrap();
             g = guard;
-            if res.timed_out() && g.is_none() {
+            if res.timed_out() && g.resp.is_none() {
                 return None;
             }
         }
     }
 
+    /// Await completion without blocking a thread: the returned future
+    /// registers its waker in the slot and resolves when a worker
+    /// completes it. The response is *taken* — with several futures
+    /// (or a concurrent [`ResponseSlot::wait`]) on one slot, exactly
+    /// one waiter receives it; the rest keep waiting.
+    pub fn wait_async(self: &Arc<Self>) -> ResponseFuture {
+        ResponseFuture { slot: self.clone() }
+    }
+
     /// Non-blocking poll.
     pub fn try_take(&self) -> Option<InferResponse> {
-        self.inner.lock().unwrap().take()
+        self.inner.lock().unwrap().resp.take()
+    }
+
+    /// Poll-protocol core of [`ResponseFuture`]: take the response or
+    /// register `waker` (deduplicated against already-registered
+    /// clones of itself).
+    fn poll_take(&self, cx: &mut Context<'_>) -> Poll<InferResponse> {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(r) = g.resp.take() {
+            return Poll::Ready(r);
+        }
+        if !g.wakers.iter().any(|w| w.will_wake(cx.waker())) {
+            g.wakers.push(cx.waker().clone());
+        }
+        Poll::Pending
+    }
+}
+
+/// Future returned by [`ResponseSlot::wait_async`] (and
+/// [`crate::coordinator::server::Server::submit_async`]): resolves to
+/// the [`InferResponse`] once a worker completes the slot.
+///
+/// The registration lives under the slot's mutex, so waker storage and
+/// response publication cannot race: a completion either finds the
+/// waker (and wakes it) or the next poll finds the response. Dropping
+/// a pending future abandons only this waiter — the request itself
+/// stays in flight and the worker's completion is kept in the slot for
+/// any other waiter (a stale waker left behind is woken harmlessly).
+pub struct ResponseFuture {
+    slot: Arc<ResponseSlot>,
+}
+
+impl Future for ResponseFuture {
+    type Output = InferResponse;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<InferResponse> {
+        self.slot.poll_take(cx)
     }
 }
 
@@ -142,5 +208,25 @@ mod tests {
         s.complete(resp(4));
         assert_eq!(s.try_take().unwrap().id, 4);
         assert!(s.try_take().is_none(), "taken once");
+    }
+
+    #[test]
+    fn wait_async_resolves_on_complete() {
+        use crate::util::executor::block_on;
+        let s = ResponseSlot::new();
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || block_on(s2.wait_async()).id);
+        std::thread::sleep(Duration::from_millis(10));
+        s.complete(resp(11));
+        assert_eq!(h.join().unwrap(), 11);
+    }
+
+    #[test]
+    fn wait_async_after_complete_is_immediate() {
+        use crate::util::executor::block_on;
+        let s = ResponseSlot::new();
+        s.complete(resp(9));
+        assert_eq!(block_on(s.wait_async()).id, 9);
+        assert!(s.try_take().is_none(), "the future took it");
     }
 }

@@ -165,7 +165,25 @@ impl Router {
         n
     }
 
-    /// Wake every consumer parked on any shard queue (shutdown path).
+    /// Async [`Router::drain_many`]: await a run of 1..=`max` requests
+    /// from shard `i` through the shard queue's waker-based
+    /// [`CmpQueue::pop_async_batch`] (DESIGN.md §10), appending to
+    /// `out`; returns the number drained. A routed request wakes the
+    /// pending task directly — no batcher thread parks. Like the
+    /// blocking drains, the in-flight gauge is decremented only for
+    /// requests actually claimed.
+    pub async fn drain_async(&self, i: usize, max: usize, out: &mut Vec<InferRequest>) -> usize {
+        let run = self.shards[i].pop_async_batch(max).await;
+        let n = run.len();
+        if n > 0 {
+            self.inflight[i].fetch_sub(n as u64, Ordering::Relaxed);
+            out.extend(run);
+        }
+        n
+    }
+
+    /// Wake every consumer parked on any shard queue (shutdown path) —
+    /// threads and pending async drains alike.
     pub fn wake_all(&self) {
         for shard in &self.shards {
             shard.wake_consumers();
@@ -264,6 +282,24 @@ mod tests {
         assert_eq!(n, 1, "woken by the routed request");
         assert_eq!(out[0].id, 7);
         assert_eq!(r.inflight(0), 0, "gauge decremented on the parked drain");
+    }
+
+    #[test]
+    fn drain_async_woken_by_route() {
+        use crate::util::block_on;
+        let r = Arc::new(Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default()));
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || {
+            let mut out = Vec::new();
+            let n = block_on(r2.drain_async(0, 8, &mut out));
+            (n, out)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        r.route(req(9));
+        let (n, out) = h.join().unwrap();
+        assert_eq!(n, 1, "woken by the routed request");
+        assert_eq!(out[0].id, 9);
+        assert_eq!(r.inflight(0), 0, "gauge decremented by the async drain");
     }
 
     #[test]

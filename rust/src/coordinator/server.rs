@@ -12,16 +12,17 @@ use crate::queue::cmp::CmpConfig;
 
 use super::batcher::{batcher_loop, new_work_queue, BatchPolicy, WorkQueue};
 use super::metrics::Metrics;
-use super::request::{InferRequest, ResponseSlot};
+use super::request::{InferRequest, ResponseFuture, ResponseSlot};
 use super::router::{RoutePolicy, Router};
-use super::worker::{worker_loop, EngineFactory};
+use super::worker::{async_worker_loop, worker_loop, EngineFactory};
 
 /// Pipeline configuration.
 #[derive(Clone)]
 pub struct ServerConfig {
     /// Router shards (one batcher thread per shard).
     pub shards: usize,
-    /// Model worker threads.
+    /// Model workers: threads in the default mode, async tasks on one
+    /// host thread when [`ServerConfig::async_workers`] is set.
     pub workers: usize,
     /// How the router spreads requests across shards.
     pub route_policy: RoutePolicy,
@@ -29,6 +30,12 @@ pub struct ServerConfig {
     pub batch_policy: BatchPolicy,
     /// CMP configuration for every queue in the pipeline.
     pub queue_config: CmpConfig,
+    /// Async worker mode (DESIGN.md §10): run the `workers` model
+    /// workers as round-robin executor tasks multiplexed over a single
+    /// OS thread, pulling work through the CMP queue's async dequeues
+    /// — the N-consumer idle fleet costs one parked thread instead of
+    /// N. Default `false` (one thread per worker).
+    pub async_workers: bool,
 }
 
 impl Default for ServerConfig {
@@ -39,6 +46,7 @@ impl Default for ServerConfig {
             route_policy: RoutePolicy::RoundRobin,
             batch_policy: BatchPolicy::default(),
             queue_config: CmpConfig::default(),
+            async_workers: false,
         }
     }
 }
@@ -99,16 +107,28 @@ impl Server {
                     .expect("spawn batcher")
             })
             .collect();
-        let workers = (0..cfg.workers)
-            .map(|i| {
-                let (w, m, s) = (work.clone(), metrics.clone(), stop_workers.clone());
-                let f = engine_factory.clone();
-                std::thread::Builder::new()
-                    .name(format!("worker-{i}"))
-                    .spawn(move || worker_loop(w, f, m, s))
-                    .expect("spawn worker")
-            })
-            .collect();
+        let workers = if cfg.async_workers {
+            // One host thread, `workers` executor tasks (async mode).
+            let (w, m, s) = (work.clone(), metrics.clone(), stop_workers.clone());
+            let f = engine_factory.clone();
+            let tasks = cfg.workers.max(1);
+            let host = std::thread::Builder::new()
+                .name("workers-async".into())
+                .spawn(move || async_worker_loop(w, f, m, s, tasks))
+                .expect("spawn async worker host");
+            vec![host]
+        } else {
+            (0..cfg.workers)
+                .map(|i| {
+                    let (w, m, s) = (work.clone(), metrics.clone(), stop_workers.clone());
+                    let f = engine_factory.clone();
+                    std::thread::Builder::new()
+                        .name(format!("worker-{i}"))
+                        .spawn(move || worker_loop(w, f, m, s))
+                        .expect("spawn worker")
+                })
+                .collect()
+        };
 
         Server {
             router,
@@ -175,6 +195,52 @@ impl Server {
         }
         self.router.route_many(reqs);
         slots
+    }
+
+    /// Submit a request and await its response without blocking a
+    /// thread: the returned future registers its waker in the
+    /// response slot and is woken by the completing worker
+    /// (DESIGN.md §10). Executor-agnostic — drive it with
+    /// [`crate::util::executor::block_on`], spawn it on a
+    /// [`crate::util::Executor`], or hand it to any runtime.
+    ///
+    /// The request is routed *before* this returns (submission itself
+    /// is cheap and non-blocking); only the wait is deferred, so
+    /// dropping the future abandons the wait, not the request.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use cmpq::coordinator::server::{Server, ServerConfig};
+    /// use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+    /// use cmpq::util::executor::{block_on, Executor};
+    ///
+    /// let factory: EngineFactory = Arc::new(|| {
+    ///     Ok(Box::new(EchoEngine { batch: 4, features: 2, outputs: 1, scale: 2.0 })
+    ///         as Box<dyn InferenceEngine>)
+    /// });
+    /// let cfg = ServerConfig { async_workers: true, ..ServerConfig::default() };
+    /// let server = Arc::new(Server::start(cfg, factory));
+    ///
+    /// // One-off await:
+    /// let resp = block_on(server.submit_async(vec![1.0, 3.0]));
+    /// assert_eq!(resp.output, vec![4.0]); // mean 2 × scale 2
+    ///
+    /// // Or many concurrent in-flight requests on one client thread:
+    /// let mut ex = Executor::new();
+    /// for i in 0..8u32 {
+    ///     let server = server.clone();
+    ///     ex.spawn(async move {
+    ///         let r = server.submit_async(vec![i as f32, i as f32]).await;
+    ///         assert_eq!(r.output, vec![i as f32 * 2.0]);
+    ///     });
+    /// }
+    /// ex.run();
+    /// Arc::try_unwrap(server).ok().unwrap().shutdown();
+    /// ```
+    pub fn submit_async(&self, features: Vec<f32>) -> ResponseFuture {
+        self.submit(features).wait_async()
     }
 
     /// Convenience: submit and block for the response.
@@ -304,6 +370,66 @@ mod tests {
         }
         let metrics = server.shutdown();
         assert_eq!(metrics.completed.load(Ordering::Relaxed), 40);
+    }
+
+    #[test]
+    fn async_workers_serve_end_to_end() {
+        let server = Server::start(
+            ServerConfig {
+                shards: 2,
+                workers: 3, // 3 tasks on one host thread
+                async_workers: true,
+                batch_policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                ..ServerConfig::default()
+            },
+            echo_factory(),
+        );
+        let mut slots = Vec::new();
+        for i in 0..30u32 {
+            slots.push((i, server.submit(vec![i as f32, i as f32])));
+        }
+        for (i, s) in &slots {
+            let r = s.wait_timeout(Duration::from_secs(20)).expect("response");
+            assert_eq!(r.output, vec![*i as f32 * 2.0]);
+        }
+        let metrics = server.shutdown();
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 30);
+    }
+
+    #[test]
+    fn submit_async_resolves_concurrently() {
+        use crate::util::Executor;
+        let server = Arc::new(Server::start(
+            ServerConfig {
+                batch_policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                async_workers: true,
+                ..ServerConfig::default()
+            },
+            echo_factory(),
+        ));
+        // 16 requests in flight from one client thread, no blocking.
+        let done = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let mut ex = Executor::new();
+        for i in 0..16u32 {
+            let server = server.clone();
+            let done = done.clone();
+            ex.spawn(async move {
+                let r = server.submit_async(vec![i as f32, i as f32]).await;
+                assert_eq!(r.output, vec![i as f32 * 2.0]);
+                done.fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        ex.run();
+        assert_eq!(done.load(Ordering::Relaxed), 16);
+        let server = Arc::try_unwrap(server).ok().expect("executor done");
+        let metrics = server.shutdown();
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 16);
     }
 
     #[test]

@@ -23,7 +23,8 @@
 //!   batcher → model workers) whose request fabric is CMP queues; workers
 //!   execute an AOT-compiled JAX/Pallas model through [`runtime`].
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
-//! * [`util`] — owned substrates (PRNG, backoff, eventcount parking,
+//! * [`util`] — owned substrates (PRNG, backoff, eventcount parking +
+//!   async waker registry, a dependency-free `block_on`/executor/timer,
 //!   CPU accounting, CLI/JSON helpers) the offline image forces on us.
 //! * [`model`] — a hand-rolled concurrency model checker (virtual
 //!   atomics + cooperative scheduler + exhaustive/fuzz schedule
@@ -36,7 +37,12 @@
 //! and their batch variants), and [`CmpQueue`] backs them with a
 //! lost-wakeup-safe eventcount ([`util::WaitStrategy`], DESIGN.md §8)
 //! so idle consumers sleep in the kernel while the lock-free fast
-//! paths stay untouched.
+//! paths stay untouched. The same eventcount carries an
+//! executor-agnostic async bridge (DESIGN.md §10):
+//! [`ConcurrentQueue::pop_async`] (plus batch/deadline variants and
+//! `Server::submit_async`) resolves through push-side waker wakeups —
+//! no thread per waiter, any runtime, with [`util::executor`] as the
+//! built-in fallback.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index,
 //! and the top-level `README.md` for a quickstart.

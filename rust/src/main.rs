@@ -54,7 +54,8 @@ fn main() {
 const HELP: &str = "repro — CMP queue reproduction (see README.md)\n\
 commands:\n  \
 bench <fig1|tables|fig2|faults|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--batch K] [--verbose]\n  \
-serve [--requests N] [--clients C] [--shards S] [--workers W] [--idle-ms N] [--echo]\n  \
+bench diff <old.json> <new.json> [--threshold-pct P]   compare two BENCH_throughput.json dumps\n  \
+serve [--requests N] [--clients C] [--shards S] [--workers W] [--idle-ms N] [--async-workers] [--echo]\n  \
 selftest [--artifacts DIR]\n  \
 demo";
 
@@ -95,8 +96,49 @@ fn write_out(args: &Args, name: &str, content: &str) {
     eprintln!("wrote {path}");
 }
 
+/// `repro bench diff <old.json> <new.json>`: compare two
+/// `BENCH_throughput.json` perf-trajectory dumps and flag ops/s and
+/// ops/CPU-s regressions beyond `--threshold-pct` (default 10%).
+/// Exits nonzero when any row regressed, so CI (or a pre-merge check)
+/// can gate on it.
+fn cmd_bench_diff(args: &Args) -> i32 {
+    let (Some(old_path), Some(new_path)) = (args.positional.get(2), args.positional.get(3))
+    else {
+        eprintln!("usage: repro bench diff <old.json> <new.json> [--threshold-pct P]");
+        return 2;
+    };
+    let threshold: f64 = args.get_parse("threshold-pct", 10.0f64);
+    let read = |p: &str| {
+        std::fs::read_to_string(p).unwrap_or_else(|e| {
+            eprintln!("cannot read {p}: {e}");
+            std::process::exit(2);
+        })
+    };
+    let (old, new) = (read(old_path), read(new_path));
+    match report::diff_bench_json(&old, &new, threshold) {
+        Ok(diff) => {
+            print!("{}", diff.table());
+            let n = diff.regressions();
+            if n > 0 {
+                eprintln!("bench diff: {n} row(s) regressed more than {threshold:.1}%");
+                1
+            } else {
+                eprintln!("bench diff: no regressions beyond {threshold:.1}%");
+                0
+            }
+        }
+        Err(e) => {
+            eprintln!("bench diff: {e}");
+            2
+        }
+    }
+}
+
 fn cmd_bench(args: &Args) -> i32 {
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    if what == "diff" {
+        return cmd_bench_diff(args);
+    }
     let impls = parse_impls(args);
     let pairs = parse_pairs(args);
     let opts = suite_options(args);
@@ -184,7 +226,7 @@ fn cmd_bench(args: &Args) -> i32 {
             run_faults();
         }
         other => {
-            eprintln!("unknown bench target {other:?} (fig1|tables|fig2|faults|all)");
+            eprintln!("unknown bench target {other:?} (fig1|tables|fig2|faults|all|diff)");
             return 2;
         }
     }
@@ -225,8 +267,17 @@ fn cmd_serve(args: &Args) -> i32 {
     let cfg = ServerConfig {
         shards: args.get_parse("shards", 2usize),
         workers: args.get_parse("workers", 2usize),
+        // Async worker mode (DESIGN.md §10): the workers become
+        // executor tasks multiplexed over one host thread.
+        async_workers: args.flag("async-workers"),
         ..ServerConfig::default()
     };
+    if cfg.async_workers {
+        eprintln!(
+            "serve: async worker mode ({} tasks, 1 host thread)",
+            cfg.workers
+        );
+    }
     let server = Arc::new(Server::start(cfg, factory));
 
     let n_requests: u64 = args.get_parse("requests", 512u64);

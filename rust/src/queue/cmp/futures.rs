@@ -1,0 +1,343 @@
+//! Futures behind [`CmpQueue`]'s async dequeues (DESIGN.md §10).
+//!
+//! All three futures follow the waker-slot protocol — the async mirror
+//! of the §8 eventcount's register → re-poll → sleep:
+//!
+//! 1. Try the lock-free claim; resolve on success.
+//! 2. Register (or refresh) a waker slot on the queue's eventcount —
+//!    this joins the same waiter count and seq-cst fence pair the
+//!    parking threads use.
+//! 3. **Re-try the claim**, and only then return `Pending`.
+//!
+//! Step 3 is the lost-wakeup guard: a push that lands between step 1
+//! and step 2 is observed by the re-try; a push after step 2 observes
+//! the registration (fence pair) and wakes the stored waker. Either
+//! way the future cannot sleep through a publication.
+//!
+//! Cancellation is `Drop`: dropping a pending future deregisters its
+//! waker slot (never leaking the waiter count). No future holds a
+//! claimed element across `Pending` — claims happen inside `poll` and
+//! resolve immediately — so cancellation can never strand an item.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::task::{Context, Poll, Waker};
+use std::time::Instant;
+
+use super::queue::CmpQueue;
+use crate::util::executor::wake_at;
+use crate::util::wait::WakerKey;
+
+/// Waker-slot registration state shared by the pop futures: at most
+/// one live slot on the queue's eventcount, dropped-or-consumed
+/// exactly once.
+struct Registration {
+    key: Option<WakerKey>,
+}
+
+impl Registration {
+    fn new() -> Self {
+        Registration { key: None }
+    }
+
+    /// Ensure a live slot holding (a clone of) `waker`: refresh the
+    /// existing slot, or register a fresh one when a notification
+    /// consumed it (protocol step 2).
+    fn ensure<T: Send + 'static>(&mut self, queue: &CmpQueue<T>, cx: &Context<'_>) {
+        let ws = queue.wait_strategy();
+        match self.key {
+            Some(key) if ws.update_waker(key, cx.waker()) => {}
+            _ => self.key = Some(ws.register_waker(cx.waker())),
+        }
+    }
+
+    /// Drop the slot (resolution or cancellation). Idempotent; a slot
+    /// already consumed by a notification is a no-op.
+    fn clear<T: Send + 'static>(&mut self, queue: &CmpQueue<T>) {
+        if let Some(key) = self.key.take() {
+            queue.wait_strategy().deregister_waker(key);
+        }
+    }
+}
+
+/// The one copy of the waker-slot poll protocol (module docs steps
+/// 1–3): claim → register/refresh → re-claim → `Pending`. Every pop
+/// future funnels through this with its own `claim` expression, so a
+/// protocol change lands in exactly one place. Clears the
+/// registration on resolution.
+fn poll_claim<T: Send + 'static, R>(
+    queue: &CmpQueue<T>,
+    registration: &mut Registration,
+    cx: &Context<'_>,
+    mut claim: impl FnMut(&CmpQueue<T>) -> Option<R>,
+) -> Poll<R> {
+    if let Some(v) = claim(queue) {
+        registration.clear(queue);
+        return Poll::Ready(v);
+    }
+    registration.ensure(queue, cx);
+    // Protocol step 3: the re-try after registration.
+    if let Some(v) = claim(queue) {
+        registration.clear(queue);
+        return Poll::Ready(v);
+    }
+    Poll::Pending
+}
+
+/// Future returned by [`CmpQueue::pop_async`]: resolves to the
+/// dequeued item once one is available, woken directly by the
+/// publishing push. See the module docs for the protocol and
+/// [`CmpQueue::pop_async`] for usage.
+pub struct PopFuture<'a, T: Send + 'static> {
+    queue: &'a CmpQueue<T>,
+    registration: Registration,
+}
+
+impl<'a, T: Send + 'static> PopFuture<'a, T> {
+    pub(super) fn new(queue: &'a CmpQueue<T>) -> Self {
+        PopFuture {
+            queue,
+            registration: Registration::new(),
+        }
+    }
+}
+
+impl<T: Send + 'static> Future for PopFuture<'_, T> {
+    type Output = T;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<T> {
+        let this = self.get_mut();
+        poll_claim(this.queue, &mut this.registration, cx, |q| q.pop())
+    }
+}
+
+impl<T: Send + 'static> Drop for PopFuture<'_, T> {
+    fn drop(&mut self) {
+        self.registration.clear(self.queue);
+    }
+}
+
+/// Future returned by [`CmpQueue::pop_async_batch`]: resolves to a
+/// run of 1..=`max` items claimed through the amortized batch dequeue
+/// (`max == 0` resolves immediately with an empty vector).
+pub struct PopBatchFuture<'a, T: Send + 'static> {
+    queue: &'a CmpQueue<T>,
+    max: usize,
+    registration: Registration,
+}
+
+impl<'a, T: Send + 'static> PopBatchFuture<'a, T> {
+    pub(super) fn new(queue: &'a CmpQueue<T>, max: usize) -> Self {
+        PopBatchFuture {
+            queue,
+            max,
+            registration: Registration::new(),
+        }
+    }
+}
+
+impl<T: Send + 'static> Future for PopBatchFuture<'_, T> {
+    type Output = Vec<T>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Vec<T>> {
+        let this = self.get_mut();
+        if this.max == 0 {
+            this.registration.clear(this.queue);
+            return Poll::Ready(Vec::new());
+        }
+        let max = this.max;
+        poll_claim(this.queue, &mut this.registration, cx, |q| {
+            let mut out = Vec::new();
+            if q.pop_batch_into(max, &mut out) > 0 {
+                Some(out)
+            } else {
+                None
+            }
+        })
+    }
+}
+
+impl<T: Send + 'static> Drop for PopBatchFuture<'_, T> {
+    fn drop(&mut self) {
+        self.registration.clear(self.queue);
+    }
+}
+
+/// Future returned by [`CmpQueue::pop_deadline_async`]: resolves to
+/// `Some(item)` on a successful claim or `None` once `deadline`
+/// passes. Expiry is driven by the shared timer thread
+/// ([`crate::util::executor::wake_at`]) — no polling loop, no thread
+/// per sleeper.
+pub struct PopDeadlineFuture<'a, T: Send + 'static> {
+    queue: &'a CmpQueue<T>,
+    deadline: Instant,
+    registration: Registration,
+    /// The waker the shared timer holds for us; re-armed only if the
+    /// task shows up with a different waker (executor migration).
+    armed: Option<Waker>,
+}
+
+impl<'a, T: Send + 'static> PopDeadlineFuture<'a, T> {
+    pub(super) fn new(queue: &'a CmpQueue<T>, deadline: Instant) -> Self {
+        PopDeadlineFuture {
+            queue,
+            deadline,
+            registration: Registration::new(),
+            armed: None,
+        }
+    }
+}
+
+impl<T: Send + 'static> Future for PopDeadlineFuture<'_, T> {
+    type Output = Option<T>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Option<T>> {
+        let this = self.get_mut();
+        if let Poll::Ready(v) = poll_claim(this.queue, &mut this.registration, cx, |q| q.pop()) {
+            return Poll::Ready(Some(v));
+        }
+        if Instant::now() >= this.deadline {
+            // The claim attempts above raced ahead of expiry; the
+            // deadline passed with the queue observed empty (the slot
+            // registered a moment ago is released right here).
+            this.registration.clear(this.queue);
+            return Poll::Ready(None);
+        }
+        let stale = match &this.armed {
+            Some(w) => !w.will_wake(cx.waker()),
+            None => true,
+        };
+        if stale {
+            wake_at(this.deadline, cx.waker().clone());
+            this.armed = Some(cx.waker().clone());
+        }
+        Poll::Pending
+    }
+}
+
+impl<T: Send + 'static> Drop for PopDeadlineFuture<'_, T> {
+    fn drop(&mut self) {
+        self.registration.clear(self.queue);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::executor::block_on;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::task::Wake;
+    use std::time::Duration;
+
+    struct CountWake(AtomicUsize);
+
+    impl Wake for CountWake {
+        fn wake(self: Arc<Self>) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    fn test_waker() -> (Arc<CountWake>, Waker) {
+        let cw = Arc::new(CountWake(AtomicUsize::new(0)));
+        let waker = Waker::from(cw.clone());
+        (cw, waker)
+    }
+
+    /// Poll `fut` once with a counting waker (manual poll harness for
+    /// the registration/cancellation tests).
+    fn poll_once<F: Future>(fut: Pin<&mut F>, waker: &Waker) -> Poll<F::Output> {
+        let mut cx = Context::from_waker(waker);
+        fut.poll(&mut cx)
+    }
+
+    #[test]
+    fn resolves_immediately_when_item_present() {
+        let q: CmpQueue<u32> = CmpQueue::new();
+        q.push(5).unwrap();
+        assert_eq!(block_on(q.pop_async()), 5);
+        assert_eq!(q.parked_consumers(), 0);
+    }
+
+    #[test]
+    fn pending_future_registers_exactly_one_slot() {
+        let q: CmpQueue<u32> = CmpQueue::new();
+        let (_cw, waker) = test_waker();
+        let mut fut = q.pop_async();
+        let mut fut = Pin::new(&mut fut);
+        assert!(poll_once(fut.as_mut(), &waker).is_pending());
+        assert_eq!(q.parked_consumers(), 1);
+        // Re-polling refreshes the same slot, never stacks a second.
+        assert!(poll_once(fut.as_mut(), &waker).is_pending());
+        assert_eq!(q.parked_consumers(), 1);
+    }
+
+    #[test]
+    fn drop_deregisters_pending_future() {
+        let q: CmpQueue<u32> = CmpQueue::new();
+        let (_cw, waker) = test_waker();
+        {
+            let mut fut = q.pop_async();
+            assert!(poll_once(Pin::new(&mut fut), &waker).is_pending());
+            assert_eq!(q.parked_consumers(), 1);
+        } // dropped pending
+        assert_eq!(q.parked_consumers(), 0, "drop must free the slot");
+        // The push fast path is back to fence + relaxed load only.
+        q.push(1).unwrap();
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn push_wakes_registered_future() {
+        let q: CmpQueue<u32> = CmpQueue::new();
+        let (cw, waker) = test_waker();
+        let mut fut = q.pop_async();
+        let mut fut = Pin::new(&mut fut);
+        assert!(poll_once(fut.as_mut(), &waker).is_pending());
+        q.push(9).unwrap();
+        assert_eq!(cw.0.load(Ordering::SeqCst), 1, "push woke the task");
+        assert_eq!(poll_once(fut.as_mut(), &waker), Poll::Ready(9));
+        assert_eq!(q.parked_consumers(), 0);
+    }
+
+    #[test]
+    fn woken_but_dropped_future_strands_nothing() {
+        // Push lands after the future registered; the future is then
+        // dropped without being re-polled. The item must remain
+        // claimable — futures never hold claims across polls.
+        let q: CmpQueue<u32> = CmpQueue::new();
+        let (cw, waker) = test_waker();
+        {
+            let mut fut = q.pop_async();
+            assert!(poll_once(Pin::new(&mut fut), &waker).is_pending());
+            q.push(7).unwrap();
+            assert_eq!(cw.0.load(Ordering::SeqCst), 1);
+        } // dropped after the wake, before any re-poll
+        assert_eq!(q.parked_consumers(), 0);
+        assert_eq!(q.pop(), Some(7), "the woken item was not stranded");
+    }
+
+    #[test]
+    fn batch_future_claims_a_run() {
+        let q: CmpQueue<u32> = CmpQueue::new();
+        q.push_batch((0..10).collect::<Vec<_>>()).unwrap();
+        let run = block_on(q.pop_async_batch(4));
+        assert_eq!(run, vec![0, 1, 2, 3]);
+        let rest = block_on(q.pop_async_batch(100));
+        assert_eq!(rest, (4..10).collect::<Vec<_>>());
+        assert!(block_on(q.pop_async_batch(0)).is_empty(), "max == 0");
+    }
+
+    #[test]
+    fn deadline_future_times_out_then_delivers() {
+        let q: CmpQueue<u32> = CmpQueue::new();
+        let t0 = Instant::now();
+        let out = block_on(q.pop_deadline_async(t0 + Duration::from_millis(40)));
+        assert_eq!(out, None);
+        assert!(t0.elapsed() >= Duration::from_millis(40));
+        assert_eq!(q.parked_consumers(), 0, "expiry freed the slot");
+        q.push(3).unwrap();
+        let out = block_on(q.pop_deadline_async(Instant::now() + Duration::from_secs(30)));
+        assert_eq!(out, Some(3));
+    }
+}

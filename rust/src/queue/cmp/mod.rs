@@ -25,7 +25,15 @@
 //! operation. None of this relaxes strict FIFO — a batch occupies
 //! consecutive FIFO positions by construction.
 
+//! A third layer is the **async bridge** (DESIGN.md §10):
+//! [`CmpQueue::pop_async`], [`CmpQueue::pop_async_batch`] and
+//! [`CmpQueue::pop_deadline_async`] resolve through push-side waker
+//! wakeups on the §8 eventcount — no parked thread per consumer, no
+//! executor dependency, and the enqueue fast path still pays one fence
+//! plus one relaxed load when nobody waits.
+
 mod config;
+mod futures;
 mod node;
 mod pool;
 mod queue;
@@ -33,6 +41,7 @@ mod reclaim;
 mod stats;
 
 pub use config::{CmpConfig, ReclaimTrigger};
+pub use futures::{PopBatchFuture, PopDeadlineFuture, PopFuture};
 pub use node::{NodeState, DUMMY_CYCLE};
 pub use queue::CmpQueue;
 pub use stats::CmpStatsSnapshot;

@@ -855,18 +855,90 @@ impl<T: Send + 'static> CmpQueue<T> {
         .unwrap_or(0)
     }
 
+    // ------------------------------------------------------------------
+    // Async dequeues (DESIGN.md §10) — waker registration, no threads
+    // ------------------------------------------------------------------
+
+    /// Dequeue asynchronously: the returned future resolves once an
+    /// item is claimed, woken directly by the publishing
+    /// [`CmpQueue::push`] / [`CmpQueue::push_batch`] through a waker
+    /// slot on the queue's eventcount — no dedicated waiter thread, no
+    /// executor dependency (any runtime's [`std::task::Waker`] works),
+    /// and the enqueue fast path is untouched while no waiter is
+    /// registered.
+    ///
+    /// Dropping a pending future cancels it: its waker slot is
+    /// deregistered and no element is stranded (claims happen only
+    /// inside `poll` and resolve immediately). Like
+    /// [`CmpQueue::pop_blocking`], a resolved value is the only exit —
+    /// shutdown paths should prefer [`CmpQueue::pop_deadline_async`],
+    /// since [`CmpQueue::wake_consumers`] is a wake, not a
+    /// cancellation: a woken future that still finds the queue empty
+    /// re-registers and keeps waiting.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use cmpq::util::executor::block_on;
+    /// use cmpq::CmpQueue;
+    ///
+    /// let q: Arc<CmpQueue<u32>> = Arc::new(CmpQueue::new());
+    /// let q2 = q.clone();
+    /// let consumer = std::thread::spawn(move || block_on(q2.pop_async()));
+    /// q.push(7).unwrap();
+    /// assert_eq!(consumer.join().unwrap(), 7);
+    /// ```
+    pub fn pop_async(&self) -> super::futures::PopFuture<'_, T> {
+        super::futures::PopFuture::new(self)
+    }
+
+    /// Async batch dequeue: resolves to a run of 1..=`max` items
+    /// claimed through the amortized [`CmpQueue::pop_batch_into`] path
+    /// (`max == 0` resolves immediately with an empty vector). Same
+    /// wakeup and cancellation semantics as [`CmpQueue::pop_async`].
+    pub fn pop_async_batch(&self, max: usize) -> super::futures::PopBatchFuture<'_, T> {
+        super::futures::PopBatchFuture::new(self, max)
+    }
+
+    /// Async dequeue with a deadline: resolves to `Some(item)` on a
+    /// claim or `None` once `deadline` passes with the queue observed
+    /// empty. Push-side wakeups work as in [`CmpQueue::pop_async`];
+    /// expiry is delivered by the shared timer thread
+    /// ([`crate::util::executor::wake_at`]), so a pending future burns
+    /// no CPU while it waits.
+    ///
+    /// Timer entries are not cancellable: a future resolved (or
+    /// dropped) early leaves its armed entry in the shared heap until
+    /// `deadline`, when it fires one spurious wake. On high-churn
+    /// paths prefer bounded deadline slices in a loop (as the
+    /// coordinator's workers do) over one long far-future deadline.
+    pub fn pop_deadline_async(
+        &self,
+        deadline: Instant,
+    ) -> super::futures::PopDeadlineFuture<'_, T> {
+        super::futures::PopDeadlineFuture::new(self, deadline)
+    }
+
     /// Wake every consumer parked in a blocking dequeue (shutdown and
-    /// drain paths). Safe to call at any time; a consumer woken onto a
-    /// still-empty queue simply re-parks (or returns, for the deadline
-    /// variants, once its deadline passes).
+    /// drain paths), and every task pending in an async dequeue. Safe
+    /// to call at any time; a consumer woken onto a still-empty queue
+    /// simply re-parks — and a woken future re-registers — so this is
+    /// a wake, not a cancellation (use the deadline variants on paths
+    /// that must not wait forever).
     pub fn wake_consumers(&self) {
         self.waiters.notify_all();
     }
 
-    /// Consumers currently registered on the parking layer (telemetry;
-    /// racy by nature).
+    /// Consumers currently registered on the parking layer — parked
+    /// (or about-to-park) threads plus pending async waker slots
+    /// (telemetry; racy by nature).
     pub fn parked_consumers(&self) -> u64 {
         self.waiters.waiters()
+    }
+
+    /// The queue's eventcount (waker registration surface for the
+    /// async futures in `super::futures`).
+    pub(super) fn wait_strategy(&self) -> &WaitStrategy {
+        &self.waiters
     }
 
     // ------------------------------------------------------------------
@@ -936,6 +1008,18 @@ impl<T: Send + 'static> ConcurrentQueue<T> for CmpQueue<T> {
 
     fn pop_deadline_batch(&self, max: usize, out: &mut Vec<T>, deadline: Instant) -> usize {
         CmpQueue::pop_deadline_batch(self, max, out, deadline)
+    }
+
+    fn pop_async(&self) -> crate::queue::BoxFuture<'_, T> {
+        Box::pin(CmpQueue::pop_async(self))
+    }
+
+    fn pop_deadline_async(&self, deadline: Instant) -> crate::queue::BoxFuture<'_, Option<T>> {
+        Box::pin(CmpQueue::pop_deadline_async(self, deadline))
+    }
+
+    fn pop_async_batch(&self, max: usize) -> crate::queue::BoxFuture<'_, Vec<T>> {
+        Box::pin(CmpQueue::pop_async_batch(self, max))
     }
 
     fn wake_all(&self) {

@@ -7,10 +7,89 @@ pub mod baselines;
 pub mod cmp;
 pub mod reclamation;
 
+use std::future::Future;
+use std::marker::PhantomData;
+use std::pin::Pin;
 use std::sync::Arc;
+use std::task::{Context, Poll};
 use std::time::{Duration, Instant};
 
 use crate::util::Backoff;
+
+/// Boxed future returned by the [`ConcurrentQueue`] async dequeues.
+/// Boxing keeps the trait object-safe (the async paths work through
+/// `Arc<dyn ConcurrentQueue<T>>`, exactly like the benches use it) at
+/// the cost of one allocation per call — on the empty-queue slow path
+/// by construction, never per item of a resolved batch.
+pub type BoxFuture<'a, R> = Pin<Box<dyn Future<Output = R> + Send + 'a>>;
+
+/// Default async dequeue: poll-and-reschedule. Each `poll` tries one
+/// `try_dequeue`; on empty it immediately wakes itself, so the hosting
+/// executor keeps it fair but busy (see
+/// [`ConcurrentQueue::pop_async`] for the CPU caveat).
+struct PollPop<'a, Q: ?Sized, T> {
+    queue: &'a Q,
+    _item: PhantomData<fn() -> T>,
+}
+
+impl<T: Send, Q: ConcurrentQueue<T> + ?Sized> Future for PollPop<'_, Q, T> {
+    type Output = T;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<T> {
+        match self.queue.try_dequeue() {
+            Some(v) => Poll::Ready(v),
+            None => {
+                cx.waker().wake_by_ref();
+                Poll::Pending
+            }
+        }
+    }
+}
+
+/// Deadline variant of [`PollPop`].
+struct PollPopDeadline<'a, Q: ?Sized, T> {
+    queue: &'a Q,
+    deadline: Instant,
+    _item: PhantomData<fn() -> T>,
+}
+
+impl<T: Send, Q: ConcurrentQueue<T> + ?Sized> Future for PollPopDeadline<'_, Q, T> {
+    type Output = Option<T>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Option<T>> {
+        if let Some(v) = self.queue.try_dequeue() {
+            return Poll::Ready(Some(v));
+        }
+        if Instant::now() >= self.deadline {
+            return Poll::Ready(None);
+        }
+        cx.waker().wake_by_ref();
+        Poll::Pending
+    }
+}
+
+/// Batch variant of [`PollPop`].
+struct PollPopBatch<'a, Q: ?Sized, T> {
+    queue: &'a Q,
+    max: usize,
+    _item: PhantomData<fn() -> T>,
+}
+
+impl<T: Send, Q: ConcurrentQueue<T> + ?Sized> Future for PollPopBatch<'_, Q, T> {
+    type Output = Vec<T>;
+
+    fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Vec<T>> {
+        if self.max == 0 {
+            return Poll::Ready(Vec::new());
+        }
+        let mut out = Vec::new();
+        if self.queue.try_dequeue_batch(self.max, &mut out) > 0 {
+            return Poll::Ready(out);
+        }
+        cx.waker().wake_by_ref();
+        Poll::Pending
+    }
+}
 
 /// Longest single sleep of the default (polling) blocking-dequeue
 /// implementations: bounds both wake latency and idle CPU burn for
@@ -206,6 +285,55 @@ pub trait ConcurrentQueue<T: Send>: Send + Sync {
             Some(deadline),
         )
         .unwrap_or(0)
+    }
+
+    /// Dequeue asynchronously: the returned future resolves once an
+    /// item is claimed. Executor-agnostic — the future communicates
+    /// only through [`std::task::Waker`]s (drive it with
+    /// [`crate::util::executor::block_on`], an [`crate::util::Executor`]
+    /// task, or any runtime).
+    ///
+    /// The default is *polling-based* so all seven implementations
+    /// stay comparable: every poll that finds the queue empty
+    /// immediately re-schedules itself, which keeps the hosting
+    /// executor fair but busy-polls through it (an idle default future
+    /// costs CPU like a spinning consumer). [`cmp::CmpQueue`]
+    /// overrides this with real push-side wakeups on its eventcount —
+    /// a pending future costs nothing until a push lands
+    /// (DESIGN.md §10). Like [`ConcurrentQueue::pop_blocking`], the
+    /// only exit is a resolved item; dropping the future cancels
+    /// cleanly for every implementation.
+    fn pop_async(&self) -> BoxFuture<'_, T> {
+        Box::pin(PollPop {
+            queue: self,
+            _item: PhantomData,
+        })
+    }
+
+    /// Async [`ConcurrentQueue::pop_deadline`]: resolves to
+    /// `Some(item)` on a claim, `None` once `deadline` passes with the
+    /// queue observed empty. Default is polling-based (see
+    /// [`ConcurrentQueue::pop_async`]); CMP overrides it with waker
+    /// wakeups plus a shared-timer expiry.
+    fn pop_deadline_async(&self, deadline: Instant) -> BoxFuture<'_, Option<T>> {
+        Box::pin(PollPopDeadline {
+            queue: self,
+            deadline,
+            _item: PhantomData,
+        })
+    }
+
+    /// Async batch dequeue: resolves to a run of 1..=`max` items in
+    /// queue order (`max == 0` resolves immediately empty). Default is
+    /// polling-based over [`ConcurrentQueue::try_dequeue_batch`]; CMP
+    /// overrides it with its amortized claimed-run dequeue behind a
+    /// waker registration.
+    fn pop_async_batch(&self, max: usize) -> BoxFuture<'_, Vec<T>> {
+        Box::pin(PollPopBatch {
+            queue: self,
+            max,
+            _item: PhantomData,
+        })
     }
 
     /// Wake every consumer currently parked in a blocking dequeue. The
@@ -440,6 +568,53 @@ mod tests {
         );
         assert!(t0.elapsed() < Duration::from_secs(5));
         q.wake_all(); // default no-op must exist for every impl
+    }
+
+    #[test]
+    fn async_defaults_deliver_for_every_impl() {
+        use crate::util::executor::block_on;
+        // Every implementation (CMP overrides with waker wakeups, the
+        // baselines use the polling defaults) must deliver through the
+        // async paths.
+        for i in Impl::ALL {
+            let q: Arc<dyn ConcurrentQueue<u64>> = i.make(1024);
+            q.enqueue(5);
+            assert_eq!(block_on(q.pop_async()), 5, "{}", i.name());
+            q.enqueue(6);
+            let d = Instant::now() + Duration::from_secs(5);
+            assert_eq!(block_on(q.pop_deadline_async(d)), Some(6), "{}", i.name());
+            q.try_enqueue_batch(vec![1, 2, 3]).unwrap();
+            let run = block_on(q.pop_async_batch(8));
+            if q.is_strict_fifo() {
+                assert_eq!(run, vec![1, 2, 3], "{}", i.name());
+            } else {
+                assert_eq!(run.len(), 3, "{}", i.name());
+            }
+            assert!(block_on(q.pop_async_batch(0)).is_empty(), "{}", i.name());
+        }
+    }
+
+    #[test]
+    fn async_default_deadline_times_out_empty() {
+        use crate::util::executor::block_on;
+        let q: Arc<dyn ConcurrentQueue<u64>> = Impl::Mutex.make(16);
+        let t0 = Instant::now();
+        let out = block_on(q.pop_deadline_async(t0 + Duration::from_millis(20)));
+        assert_eq!(out, None);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn async_resolves_after_cross_thread_push() {
+        use crate::util::executor::block_on;
+        for i in [Impl::Cmp, Impl::Mutex] {
+            let q: Arc<dyn ConcurrentQueue<u64>> = i.make(64);
+            let q2 = q.clone();
+            let h = std::thread::spawn(move || block_on(q2.pop_async()));
+            std::thread::sleep(Duration::from_millis(10));
+            q.enqueue(77);
+            assert_eq!(h.join().unwrap(), 77, "{}", i.name());
+        }
     }
 
     #[test]

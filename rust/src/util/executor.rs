@@ -1,0 +1,487 @@
+//! Hand-rolled, dependency-free async plumbing: [`block_on`], a
+//! single-threaded round-robin [`Executor`], and a shared timer
+//! ([`wake_at`] / [`sleep_until`]).
+//!
+//! The offline image ships no tokio (or any async runtime), and the
+//! queue's async bridge (DESIGN.md §10) is deliberately
+//! executor-agnostic — futures communicate only through
+//! [`std::task::Waker`]s, never through runtime-specific hooks. This
+//! module exists so the coordinator, the benches, the examples and the
+//! tests have *an* executor to ride; swapping in tokio (or any other
+//! runtime) requires no queue-side changes.
+//!
+//! Design notes:
+//!
+//! * [`block_on`] parks the calling thread between polls — the waker
+//!   stores a notification flag and unparks, so a wake between "poll
+//!   returned `Pending`" and "park" is never lost (`unpark` tokens
+//!   make the next `park` return immediately).
+//! * [`Executor`] multiplexes N tasks over the calling thread with a
+//!   strict round-robin sweep over ready tasks; it parks only when no
+//!   task is ready. Wakes may arrive from any thread (queue producers
+//!   wake consumer tasks directly).
+//! * The timer is one shared, lazily-spawned thread holding a binary
+//!   heap of `(deadline, waker)` entries — deadline futures arm it
+//!   once and are woken at expiry. Queue consumers never get a
+//!   dedicated thread; the timer serves every deadline future in the
+//!   process.
+
+use std::collections::BinaryHeap;
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::task::{Context, Poll, Wake, Waker};
+use std::thread::{self, Thread};
+use std::time::Instant;
+
+/// Parking-based notification target shared by [`block_on`] and
+/// [`Executor`]: a wake stores the flag and unparks the host thread.
+struct ThreadNotify {
+    thread: Thread,
+    notified: AtomicBool,
+}
+
+impl ThreadNotify {
+    fn for_current() -> Arc<Self> {
+        Arc::new(ThreadNotify {
+            thread: thread::current(),
+            // Start notified so the first poll runs immediately.
+            notified: AtomicBool::new(true),
+        })
+    }
+
+    fn notify(&self) {
+        self.notified.store(true, Ordering::SeqCst);
+        self.thread.unpark();
+    }
+
+    /// Consume a pending notification, parking until one arrives.
+    fn await_notification(&self) {
+        while !self.notified.swap(false, Ordering::SeqCst) {
+            thread::park();
+        }
+    }
+}
+
+impl Wake for ThreadNotify {
+    fn wake(self: Arc<Self>) {
+        self.notify();
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.notify();
+    }
+}
+
+/// Drive `fut` to completion on the calling thread, parking it while
+/// the future is pending. The minimal executor: one future, one
+/// thread, no allocation beyond pinning.
+///
+/// ```
+/// use cmpq::util::executor::block_on;
+/// assert_eq!(block_on(async { 2 + 2 }), 4);
+/// ```
+pub fn block_on<F: Future>(fut: F) -> F::Output {
+    let mut fut = Box::pin(fut);
+    let notify = ThreadNotify::for_current();
+    let waker = Waker::from(notify.clone());
+    let mut cx = Context::from_waker(&waker);
+    loop {
+        notify.await_notification();
+        if let Poll::Ready(v) = fut.as_mut().poll(&mut cx) {
+            return v;
+        }
+    }
+}
+
+/// Per-task wake state: marks the task ready and unparks the executor.
+struct TaskState {
+    ready: AtomicBool,
+    parker: Arc<ThreadNotify>,
+}
+
+impl Wake for TaskState {
+    fn wake(self: Arc<Self>) {
+        self.wake_by_ref();
+    }
+
+    fn wake_by_ref(self: &Arc<Self>) {
+        self.ready.store(true, Ordering::SeqCst);
+        self.parker.notify();
+    }
+}
+
+struct Task {
+    /// `None` once the task completed (its future is dropped promptly
+    /// so cancellation-on-drop side effects — waker deregistration —
+    /// run as soon as possible).
+    fut: Option<Pin<Box<dyn Future<Output = ()>>>>,
+    state: Arc<TaskState>,
+}
+
+/// Single-threaded round-robin executor over N spawned tasks.
+///
+/// [`Executor::run`] sweeps the tasks in spawn order, polling each one
+/// whose waker fired since its last poll, and parks the thread when no
+/// task is ready; it returns when every task has completed. Tasks need
+/// not be `Send` — they never leave the calling thread — but wakes may
+/// arrive from any thread.
+///
+/// ```
+/// use cmpq::util::executor::{yield_now, Executor};
+/// use std::cell::Cell;
+/// use std::rc::Rc;
+///
+/// let hits = Rc::new(Cell::new(0));
+/// let mut ex = Executor::new();
+/// for _ in 0..3 {
+///     let hits = hits.clone();
+///     ex.spawn(async move {
+///         yield_now().await; // interleave with the other tasks
+///         hits.set(hits.get() + 1);
+///     });
+/// }
+/// ex.run();
+/// assert_eq!(hits.get(), 3);
+/// ```
+#[derive(Default)]
+pub struct Executor {
+    tasks: Vec<Task>,
+    parker: Option<Arc<ThreadNotify>>,
+}
+
+impl Executor {
+    /// An executor with no tasks.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Queue `fut` to run on the next [`Executor::run`]. Futures spawn
+    /// ready, so each gets an initial poll.
+    pub fn spawn(&mut self, fut: impl Future<Output = ()> + 'static) {
+        let parker = self.parker.get_or_insert_with(ThreadNotify::for_current).clone();
+        self.tasks.push(Task {
+            fut: Some(Box::pin(fut)),
+            state: Arc::new(TaskState {
+                ready: AtomicBool::new(true),
+                parker,
+            }),
+        });
+    }
+
+    /// Number of spawned tasks not yet completed.
+    pub fn pending_tasks(&self) -> usize {
+        self.tasks.iter().filter(|t| t.fut.is_some()).count()
+    }
+
+    /// Run until every spawned task completes. Must be called on the
+    /// thread that spawned the tasks (the parker targets it).
+    pub fn run(&mut self) {
+        let Some(parker) = self.parker.clone() else {
+            return; // nothing was ever spawned
+        };
+        loop {
+            let mut any_ready = false;
+            let mut all_done = true;
+            for task in &mut self.tasks {
+                if task.fut.is_none() {
+                    continue;
+                }
+                all_done = false;
+                if !task.state.ready.swap(false, Ordering::SeqCst) {
+                    continue;
+                }
+                any_ready = true;
+                let waker = Waker::from(task.state.clone());
+                let mut cx = Context::from_waker(&waker);
+                let done = task
+                    .fut
+                    .as_mut()
+                    .expect("checked above")
+                    .as_mut()
+                    .poll(&mut cx)
+                    .is_ready();
+                if done {
+                    task.fut = None;
+                }
+            }
+            if all_done {
+                self.tasks.clear();
+                return;
+            }
+            if !any_ready {
+                parker.await_notification();
+            }
+        }
+    }
+}
+
+/// Future that returns `Pending` exactly once, re-scheduling itself —
+/// the cooperative yield point for round-robin executors.
+pub fn yield_now() -> YieldNow {
+    YieldNow { yielded: false }
+}
+
+/// Future returned by [`yield_now`].
+pub struct YieldNow {
+    yielded: bool,
+}
+
+impl Future for YieldNow {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.yielded {
+            Poll::Ready(())
+        } else {
+            self.yielded = true;
+            cx.waker().wake_by_ref();
+            Poll::Pending
+        }
+    }
+}
+
+/// One armed timer entry. Ordered by *earliest* deadline first (the
+/// comparison is reversed because [`BinaryHeap`] is a max-heap).
+struct TimerEntry {
+    at: Instant,
+    waker: Waker,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at
+    }
+}
+
+impl Eq for TimerEntry {}
+
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.at.cmp(&self.at)
+    }
+}
+
+struct TimerShared {
+    heap: Mutex<BinaryHeap<TimerEntry>>,
+    cv: Condvar,
+}
+
+/// The process-wide timer thread, spawned on first use.
+fn timer() -> &'static Arc<TimerShared> {
+    static TIMER: OnceLock<Arc<TimerShared>> = OnceLock::new();
+    TIMER.get_or_init(|| {
+        let shared = Arc::new(TimerShared {
+            heap: Mutex::new(BinaryHeap::new()),
+            cv: Condvar::new(),
+        });
+        let for_thread = shared.clone();
+        thread::Builder::new()
+            .name("cmpq-timer".into())
+            .spawn(move || timer_loop(&for_thread))
+            .expect("spawn timer thread");
+        shared
+    })
+}
+
+fn timer_loop(shared: &TimerShared) {
+    let mut guard = shared.heap.lock().unwrap();
+    loop {
+        // Pull everything due, then wake outside the lock (a wake may
+        // re-arm the timer and would deadlock on `heap` otherwise).
+        let now = Instant::now();
+        let mut due = Vec::new();
+        while guard.peek().is_some_and(|e| e.at <= now) {
+            due.push(guard.pop().expect("peeked"));
+        }
+        if !due.is_empty() {
+            drop(guard);
+            for entry in due {
+                entry.waker.wake();
+            }
+            guard = shared.heap.lock().unwrap();
+            continue;
+        }
+        guard = match guard.peek().map(|e| e.at) {
+            Some(at) => {
+                let now = Instant::now();
+                if at <= now {
+                    continue;
+                }
+                shared.cv.wait_timeout(guard, at - now).unwrap().0
+            }
+            None => shared.cv.wait(guard).unwrap(),
+        };
+    }
+}
+
+/// Arm the shared timer: `waker` is invoked once `deadline` passes.
+/// Entries are one-shot; waking a future that already completed is a
+/// harmless no-op (wakers are designed for spurious wakes).
+///
+/// Entries cannot be cancelled: a future that resolves (or is
+/// dropped) before its deadline leaves its entry — and the cloned
+/// waker it pins — in the heap until the deadline passes, when it is
+/// popped and fired as a spurious wake. Keep armed deadlines short on
+/// high-churn paths (the queue's deadline futures use bounded slices,
+/// ≤100 ms in the coordinator) or the heap grows with
+/// churn-rate × deadline.
+pub fn wake_at(deadline: Instant, waker: Waker) {
+    let shared = timer();
+    let mut heap = shared.heap.lock().unwrap();
+    heap.push(TimerEntry {
+        at: deadline,
+        waker,
+    });
+    drop(heap);
+    shared.cv.notify_one();
+}
+
+/// Future that resolves once `deadline` passes (via the shared timer —
+/// no thread is parked per sleeper).
+pub fn sleep_until(deadline: Instant) -> Sleep {
+    Sleep {
+        deadline,
+        armed: None,
+    }
+}
+
+/// Future returned by [`sleep_until`].
+pub struct Sleep {
+    deadline: Instant,
+    /// The waker the timer currently holds for us; re-armed when the
+    /// task migrates between polls (a different waker shows up).
+    armed: Option<Waker>,
+}
+
+impl Future for Sleep {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if Instant::now() >= self.deadline {
+            return Poll::Ready(());
+        }
+        let stale = match &self.armed {
+            Some(w) => !w.will_wake(cx.waker()),
+            None => true,
+        };
+        if stale {
+            wake_at(self.deadline, cx.waker().clone());
+            self.armed = Some(cx.waker().clone());
+        }
+        Poll::Pending
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn block_on_ready_future() {
+        assert_eq!(block_on(async { 41 + 1 }), 42);
+    }
+
+    #[test]
+    fn block_on_parks_until_cross_thread_wake() {
+        // A future whose readiness is flipped by another thread: the
+        // first poll stores the waker, the thread wakes it later.
+        struct Gate {
+            open: Mutex<(bool, Option<Waker>)>,
+        }
+        struct GateFuture(Arc<Gate>);
+        impl Future for GateFuture {
+            type Output = u32;
+            fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<u32> {
+                let mut g = self.0.open.lock().unwrap();
+                if g.0 {
+                    Poll::Ready(7)
+                } else {
+                    g.1 = Some(cx.waker().clone());
+                    Poll::Pending
+                }
+            }
+        }
+        let gate = Arc::new(Gate {
+            open: Mutex::new((false, None)),
+        });
+        let gate2 = gate.clone();
+        let opener = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            let mut g = gate2.open.lock().unwrap();
+            g.0 = true;
+            if let Some(w) = g.1.take() {
+                w.wake();
+            }
+        });
+        assert_eq!(block_on(GateFuture(gate)), 7);
+        opener.join().unwrap();
+    }
+
+    #[test]
+    fn executor_runs_all_tasks_round_robin() {
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut ex = Executor::new();
+        for id in 0..3u32 {
+            let order = order.clone();
+            ex.spawn(async move {
+                for round in 0..3u32 {
+                    order.lock().unwrap().push((round, id));
+                    yield_now().await;
+                }
+            });
+        }
+        assert_eq!(ex.pending_tasks(), 3);
+        ex.run();
+        assert_eq!(ex.pending_tasks(), 0);
+        let order = order.lock().unwrap();
+        assert_eq!(order.len(), 9);
+        // Round-robin: all tasks complete round r before any starts
+        // round r+1.
+        let expect: Vec<(u32, u32)> = (0..3).flat_map(|r| (0..3).map(move |t| (r, t))).collect();
+        assert_eq!(*order, expect);
+    }
+
+    #[test]
+    fn executor_with_no_tasks_returns() {
+        Executor::new().run();
+    }
+
+    #[test]
+    fn sleep_until_fires_via_timer() {
+        let t0 = Instant::now();
+        block_on(sleep_until(t0 + Duration::from_millis(30)));
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+        // Already-expired deadlines resolve on the first poll.
+        let t1 = Instant::now();
+        block_on(sleep_until(t1));
+        assert!(t1.elapsed() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn timer_orders_multiple_deadlines() {
+        let fired = Arc::new(Mutex::new(Vec::new()));
+        let mut ex = Executor::new();
+        let base = Instant::now();
+        // Armed out of order; must fire nearest-first. Gaps are wide
+        // (≥100ms) so a scheduler hiccup cannot reorder the sweeps.
+        for (i, ms) in [300u64, 50, 150].iter().enumerate() {
+            let fired = fired.clone();
+            let at = base + Duration::from_millis(*ms);
+            ex.spawn(async move {
+                sleep_until(at).await;
+                fired.lock().unwrap().push(i);
+            });
+        }
+        ex.run();
+        assert_eq!(*fired.lock().unwrap(), vec![1, 2, 0], "nearest first");
+    }
+}

@@ -1,14 +1,17 @@
 //! Small substrates the offline image forces us to own: PRNG, backoff,
-//! consumer parking, CPU accounting, CLI parsing, and timing helpers.
+//! consumer parking (thread and async), a minimal executor, CPU
+//! accounting, CLI parsing, and timing helpers.
 
 pub mod backoff;
 pub mod cli;
 pub mod cpu;
+pub mod executor;
 pub mod json;
 pub mod rng;
 pub mod time;
 pub mod wait;
 
 pub use backoff::Backoff;
+pub use executor::{block_on, Executor};
 pub use rng::XorShift64;
-pub use wait::WaitStrategy;
+pub use wait::{WaitStrategy, WakerSet};

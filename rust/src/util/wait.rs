@@ -22,6 +22,18 @@
 //! followed by a relaxed load of the waiter count; only when waiters
 //! are present does it take the lock, bump the epoch, and notify.
 //!
+//! # Async waiters
+//!
+//! The same edge drives futures (DESIGN.md §10): an async consumer
+//! registers a [`std::task::Waker`] in the strategy's [`WakerSet`] via
+//! [`WaitStrategy::register_waker`] — which participates in the *same*
+//! `waiters` count and fence pair as a parking thread — re-polls its
+//! wait condition, and only then returns `Pending`. Notifications
+//! drain the set and wake every registered task, so a push between the
+//! future's poll and its `Pending` cannot be lost, and the producer
+//! fast path stays exactly one fence + one relaxed load when nobody
+//! (thread *or* task) waits.
+//!
 //! # Why no wakeup is ever lost
 //!
 //! The race to exclude: producer publishes, consumer decides to sleep,
@@ -39,7 +51,11 @@
 //! runs under the same lock) or is woken by the notification. Either
 //! way, progress.
 
-use std::sync::atomic::Ordering;
+// `AtomicUsize` is deliberately the raw std type (the `WakerSet` gate
+// stays invisible to the model checker — see its docs); `Ordering` is
+// shared by the shim and std types alike.
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::task::Waker;
 use std::time::Instant;
 
 // Real std primitives normally; model-checker shims under the
@@ -59,10 +75,15 @@ pub struct WaitToken(u64);
 pub struct WaitStrategy {
     /// Wakeup epoch: bumped (under `lock`) by every notification.
     epoch: AtomicU64,
-    /// Registered (parked or about-to-park) waiters.
+    /// Registered (parked or about-to-park) waiters — threads *and*
+    /// async waker slots; the producer fast path checks only this.
     waiters: AtomicU64,
     lock: Mutex<()>,
     cv: Condvar,
+    /// Slow-path registry of async waiters (DESIGN.md §10). Touched
+    /// only by registering futures and by notifications that already
+    /// observed `waiters > 0`.
+    wakers: WakerSet,
 }
 
 impl WaitStrategy {
@@ -185,14 +206,87 @@ impl WaitStrategy {
     /// drain paths, where "no waiters registered *yet*" must still
     /// prevent a later sleeper from stranding: the sleeper's epoch
     /// snapshot happens after this bump, so its own re-check covers it).
+    ///
+    /// Async waiters are woken too: every waker registered in the
+    /// strategy's [`WakerSet`] is drained and invoked. As with parked
+    /// threads, this is a *wake*, not a cancellation — a woken future
+    /// that still finds its condition unmet re-registers on its next
+    /// poll (DESIGN.md §10).
     pub fn notify_all(&self) {
         let guard = self.lock.lock().unwrap();
         self.epoch.fetch_add(1, Ordering::SeqCst);
         drop(guard);
         self.cv.notify_all();
+        let drained = self.wakers.drain();
+        if !drained.is_empty() {
+            // One decrement per drained slot — the slot's registration
+            // incremented `waiters` exactly once, and `deregister_waker`
+            // on a drained key is a no-op (the slot is gone).
+            self.waiters.fetch_sub(drained.len() as u64, Ordering::SeqCst);
+            for waker in drained {
+                waker.wake();
+            }
+        }
     }
 
-    /// Currently registered waiters (diagnostics; racy by nature).
+    /// Announce an async waiter: store `waker` in the strategy's
+    /// [`WakerSet`] and count it in the same `waiters` total the
+    /// producer fast path checks. The slot is stamped with the current
+    /// wakeup epoch.
+    ///
+    /// The caller **must** re-check its wait condition after this call
+    /// and before returning `Pending` — exactly like the thread
+    /// protocol's step 2 (see the module docs): the seq-cst fence at
+    /// the end of this call pairs with [`Self::notify_if_waiting`]'s,
+    /// so either the re-check observes the publication or the producer
+    /// observes the registration and wakes the stored waker.
+    ///
+    /// Every registration is balanced by exactly one of: a
+    /// notification draining the slot, or one successful
+    /// [`Self::deregister_waker`] (futures call it on completion and
+    /// from `Drop`, so cancellation never leaks a slot).
+    pub fn register_waker(&self, waker: &Waker) -> WakerKey {
+        // Count first, slot second: a concurrent notification that
+        // drains the fresh slot decrements a count we have already
+        // added (never underflows), while a drain that misses the slot
+        // ordered the slot mutex before our insert — in which case the
+        // caller's re-poll is ordered after the state change that
+        // prompted the notification and observes it (DESIGN.md §10).
+        self.waiters.fetch_add(1, Ordering::SeqCst);
+        let epoch = self.epoch.load(Ordering::SeqCst);
+        let key = self.wakers.insert(epoch, waker);
+        fence(Ordering::SeqCst);
+        key
+    }
+
+    /// Refresh the waker stored under `key` (tasks may migrate between
+    /// polls). Returns `false` when the slot no longer exists — i.e. a
+    /// notification consumed it since registration — in which case the
+    /// caller must [`Self::register_waker`] afresh before it may return
+    /// `Pending` again.
+    pub fn update_waker(&self, key: WakerKey, waker: &Waker) -> bool {
+        self.wakers.update(key, waker)
+    }
+
+    /// Remove the waker slot `key` if it is still registered,
+    /// decrementing the waiter count it contributed. Returns whether
+    /// the slot was present (a `false` means a notification already
+    /// drained — and accounted for — it). Idempotent per key.
+    pub fn deregister_waker(&self, key: WakerKey) -> bool {
+        let removed = self.wakers.remove(key);
+        if removed {
+            self.waiters.fetch_sub(1, Ordering::SeqCst);
+        }
+        removed
+    }
+
+    /// Currently registered async waker slots (diagnostics).
+    pub fn registered_wakers(&self) -> usize {
+        self.wakers.len()
+    }
+
+    /// Currently registered waiters — parked/parking threads plus
+    /// registered async waker slots (diagnostics; racy by nature).
     pub fn waiters(&self) -> u64 {
         self.waiters.load(Ordering::Relaxed)
     }
@@ -235,6 +329,132 @@ impl WaitRegistration<'_> {
 impl Drop for WaitRegistration<'_> {
     fn drop(&mut self) {
         self.ws.cancel();
+    }
+}
+
+/// Key naming one registered slot in a [`WakerSet`] (returned by
+/// [`WaitStrategy::register_waker`] / [`WakerSet::insert`]). Keys are
+/// never reused within one set, so a stale key held after its slot was
+/// drained simply misses (`update`/`remove` return `false`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WakerKey(u64);
+
+/// One registered async waiter: its key, the wakeup epoch observed at
+/// registration (diagnostics — a drained slot's stamp is always ≤ the
+/// epoch of the notification that drained it), and the waker to invoke.
+struct WakerSlot {
+    key: u64,
+    epoch: u64,
+    waker: Waker,
+}
+
+/// Slow-path registry of [`Waker`]s awaiting a notification — the
+/// async half of the eventcount (DESIGN.md §10).
+///
+/// All mutation goes through an internal mutex: registration, refresh
+/// and removal happen only on futures' slow paths (a queue that came
+/// up empty), and draining happens only inside a notification that
+/// already observed a nonzero waiter count. A `len` gate kept outside
+/// the mutex lets notifiers skip the lock entirely when no async
+/// waiter exists; the seq-cst fence pair of the surrounding eventcount
+/// protocol is what makes that gate safe to trust (see
+/// [`WaitStrategy::register_waker`] and DESIGN.md §10).
+///
+/// Deliberately built on `std` primitives rather than the model-check
+/// shims: the §9 schedule enumerator never drives async waiters, and
+/// keeping this registry invisible to it leaves the enumerated state
+/// spaces of the thread protocol unchanged.
+#[derive(Default)]
+pub struct WakerSet {
+    slots: std::sync::Mutex<WakerSlots>,
+    /// Mirror of `slots.len()`, maintained under the mutex, readable
+    /// without it (the notifier's skip gate).
+    len: AtomicUsize,
+}
+
+#[derive(Default)]
+struct WakerSlots {
+    slots: Vec<WakerSlot>,
+    next_key: u64,
+}
+
+impl WakerSet {
+    /// An empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `waker` stamped with `epoch`; returns the slot's key.
+    pub fn insert(&self, epoch: u64, waker: &Waker) -> WakerKey {
+        let mut inner = self.slots.lock().unwrap();
+        let key = inner.next_key;
+        inner.next_key += 1;
+        inner.slots.push(WakerSlot {
+            key,
+            epoch,
+            waker: waker.clone(),
+        });
+        self.len.store(inner.slots.len(), Ordering::Release);
+        WakerKey(key)
+    }
+
+    /// Replace the waker stored under `key`; `false` when the slot no
+    /// longer exists (a drain consumed it).
+    pub fn update(&self, key: WakerKey, waker: &Waker) -> bool {
+        let mut inner = self.slots.lock().unwrap();
+        match inner.slots.iter_mut().find(|s| s.key == key.0) {
+            Some(slot) => {
+                if !slot.waker.will_wake(waker) {
+                    slot.waker = waker.clone();
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Remove the slot under `key`; `false` when it no longer exists.
+    pub fn remove(&self, key: WakerKey) -> bool {
+        let mut inner = self.slots.lock().unwrap();
+        match inner.slots.iter().position(|s| s.key == key.0) {
+            Some(i) => {
+                inner.slots.swap_remove(i);
+                self.len.store(inner.slots.len(), Ordering::Release);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Take every registered waker out of the set (the notification
+    /// edge). Callers invoke the returned wakers *after* releasing
+    /// their own locks. Returns an empty vector — without touching the
+    /// mutex — when the gate shows no registrations.
+    pub fn drain(&self) -> Vec<Waker> {
+        if self.len.load(Ordering::Acquire) == 0 {
+            return Vec::new();
+        }
+        let mut inner = self.slots.lock().unwrap();
+        self.len.store(0, Ordering::Release);
+        let slots = std::mem::take(&mut inner.slots);
+        slots.into_iter().map(|s| s.waker).collect()
+    }
+
+    /// Registered slot count (diagnostics; racy by nature).
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Acquire)
+    }
+
+    /// Whether no waker is registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Epoch stamp of the slot under `key` (diagnostics/tests); `None`
+    /// when the slot no longer exists.
+    pub fn epoch_of(&self, key: WakerKey) -> Option<u64> {
+        let inner = self.slots.lock().unwrap();
+        inner.slots.iter().find(|s| s.key == key.0).map(|s| s.epoch)
     }
 }
 
@@ -355,6 +575,113 @@ mod tests {
         assert!(!woken, "nobody notified");
         assert!(t0.elapsed() >= Duration::from_millis(30));
         assert_eq!(ws.waiters(), 0);
+    }
+
+    /// Test waker that counts its wakes.
+    struct CountWake(std::sync::atomic::AtomicUsize);
+
+    impl std::task::Wake for CountWake {
+        fn wake(self: Arc<Self>) {
+            self.0.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    fn count_waker() -> (Arc<CountWake>, Waker) {
+        let cw = Arc::new(CountWake(std::sync::atomic::AtomicUsize::new(0)));
+        let waker = Waker::from(cw.clone());
+        (cw, waker)
+    }
+
+    #[test]
+    fn register_waker_counts_as_waiter() {
+        let ws = WaitStrategy::new();
+        let (_cw, waker) = count_waker();
+        let key = ws.register_waker(&waker);
+        assert_eq!(ws.waiters(), 1, "waker slots share the waiter count");
+        assert_eq!(ws.registered_wakers(), 1);
+        assert!(ws.deregister_waker(key));
+        assert_eq!(ws.waiters(), 0);
+        assert_eq!(ws.registered_wakers(), 0);
+        assert!(!ws.deregister_waker(key), "second deregister is a no-op");
+        assert_eq!(ws.waiters(), 0, "no double decrement");
+    }
+
+    #[test]
+    fn notify_drains_and_wakes_registered_wakers() {
+        let ws = WaitStrategy::new();
+        let (cw, waker) = count_waker();
+        let key = ws.register_waker(&waker);
+        ws.notify_if_waiting();
+        assert_eq!(cw.0.load(Ordering::SeqCst), 1, "waker invoked");
+        assert_eq!(ws.waiters(), 0, "drain decremented the count");
+        assert_eq!(ws.registered_wakers(), 0);
+        assert!(!ws.update_waker(key, &waker), "slot consumed by the drain");
+        assert!(!ws.deregister_waker(key), "nothing left to deregister");
+        assert_eq!(ws.waiters(), 0);
+    }
+
+    #[test]
+    fn update_waker_refreshes_live_slot() {
+        let ws = WaitStrategy::new();
+        let (cw1, waker1) = count_waker();
+        let (cw2, waker2) = count_waker();
+        let key = ws.register_waker(&waker1);
+        assert!(ws.update_waker(key, &waker2), "slot still live");
+        ws.notify_all();
+        assert_eq!(cw1.0.load(Ordering::SeqCst), 0, "replaced waker not woken");
+        assert_eq!(cw2.0.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn notify_wakes_threads_and_wakers_together() {
+        let ws = Arc::new(WaitStrategy::new());
+        let (cw, waker) = count_waker();
+        let _key = ws.register_waker(&waker);
+        let ws2 = ws.clone();
+        let h = std::thread::spawn(move || {
+            let t = ws2.register();
+            ws2.wait(t);
+        });
+        while ws.waiters() < 2 {
+            std::thread::yield_now();
+        }
+        ws.notify_if_waiting();
+        h.join().unwrap();
+        assert_eq!(cw.0.load(Ordering::SeqCst), 1);
+        assert_eq!(ws.waiters(), 0);
+    }
+
+    #[test]
+    fn idle_notify_leaves_waker_set_untouched() {
+        let ws = WaitStrategy::new();
+        ws.notify_if_waiting(); // fast path: no waiters of either kind
+        let (cw, waker) = count_waker();
+        let key = ws.register_waker(&waker);
+        assert_eq!(cw.0.load(Ordering::SeqCst), 0, "nothing woke it yet");
+        assert!(ws.deregister_waker(key));
+    }
+
+    #[test]
+    fn waker_set_standalone_semantics() {
+        let set = WakerSet::new();
+        assert!(set.is_empty());
+        let (cw, waker) = count_waker();
+        let k1 = set.insert(3, &waker);
+        let k2 = set.insert(5, &waker);
+        assert_eq!(set.len(), 2);
+        assert_eq!(set.epoch_of(k1), Some(3));
+        assert_eq!(set.epoch_of(k2), Some(5));
+        assert!(set.remove(k1));
+        assert!(!set.remove(k1), "keys are not reused");
+        let drained = set.drain();
+        assert_eq!(drained.len(), 1);
+        for w in drained {
+            w.wake();
+        }
+        assert_eq!(cw.0.load(Ordering::SeqCst), 1);
+        assert!(set.is_empty());
+        assert_eq!(set.epoch_of(k2), None);
+        assert!(set.drain().is_empty(), "gate short-circuits when empty");
     }
 
     #[test]

@@ -1,0 +1,243 @@
+//! Integration tests for the async bridge (DESIGN.md §10): push-side
+//! waker wakeups, cancellation-on-drop, deadline futures, and the
+//! executor plumbing — all through the public API.
+
+use std::future::Future;
+use std::pin::Pin;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::task::{Context, Poll, Wake, Waker};
+use std::time::{Duration, Instant};
+
+use cmpq::queue::Impl;
+use cmpq::util::executor::{block_on, Executor};
+use cmpq::{CmpQueue, ConcurrentQueue};
+
+/// Counting test waker (manual poll harness).
+struct CountWake(AtomicUsize);
+
+impl Wake for CountWake {
+    fn wake(self: Arc<Self>) {
+        self.0.fetch_add(1, Ordering::SeqCst);
+    }
+}
+
+fn test_waker() -> (Arc<CountWake>, Waker) {
+    let cw = Arc::new(CountWake(AtomicUsize::new(0)));
+    let waker = Waker::from(cw.clone());
+    (cw, waker)
+}
+
+fn poll_once<F: Future + Unpin>(fut: &mut F, waker: &Waker) -> Poll<F::Output> {
+    let mut cx = Context::from_waker(waker);
+    Pin::new(fut).poll(&mut cx)
+}
+
+#[test]
+fn wake_on_push_resolves_pending_future() {
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    assert_eq!(q.parked_consumers(), 0, "fast path: nobody registered");
+    let q2 = q.clone();
+    let consumer = std::thread::spawn(move || block_on(q2.pop_async()));
+    // Wait until the future's waker slot is registered (the same
+    // counter that gates the producer's notify slow path).
+    let until = Instant::now() + Duration::from_secs(10);
+    while q.parked_consumers() == 0 && Instant::now() < until {
+        std::thread::yield_now();
+    }
+    assert_eq!(q.parked_consumers(), 1, "future registered one slot");
+    q.push(42).unwrap();
+    assert_eq!(consumer.join().unwrap(), 42);
+    assert_eq!(q.parked_consumers(), 0, "resolution freed the slot");
+}
+
+#[test]
+fn drop_before_wake_leaks_no_waker_slot() {
+    // Regression shape: a future polled to Pending and then cancelled
+    // must deregister its slot — a leak here would permanently force
+    // every push onto the notify lock path (and `parked_consumers`
+    // would never return to 0).
+    let q: CmpQueue<u64> = CmpQueue::new();
+    let (_cw, waker) = test_waker();
+    for round in 0..100 {
+        let mut fut = q.pop_async();
+        assert!(poll_once(&mut fut, &waker).is_pending());
+        assert_eq!(q.parked_consumers(), 1, "round {round}");
+        drop(fut);
+        assert_eq!(q.parked_consumers(), 0, "round {round}: slot leaked");
+    }
+    // The push fast path is intact after all that churn.
+    q.push(7).unwrap();
+    assert_eq!(q.pop(), Some(7));
+}
+
+#[test]
+fn dropped_future_never_strands_an_element() {
+    // Push lands after registration (the future is woken), then the
+    // future is dropped without being re-polled: the element must stay
+    // claimable by anyone else.
+    let q: CmpQueue<u64> = CmpQueue::new();
+    let (cw, waker) = test_waker();
+    let mut fut = q.pop_async();
+    assert!(poll_once(&mut fut, &waker).is_pending());
+    q.push(9).unwrap();
+    assert_eq!(cw.0.load(Ordering::SeqCst), 1, "push woke the task");
+    drop(fut);
+    assert_eq!(q.parked_consumers(), 0);
+    assert_eq!(q.pop(), Some(9), "woken-then-cancelled strands nothing");
+}
+
+#[test]
+fn deadline_future_times_out_empty() {
+    // CMP (timer-driven expiry) and a baseline (polling default) agree
+    // on the timeout contract.
+    for i in [Impl::Cmp, Impl::Mutex] {
+        let q: Arc<dyn ConcurrentQueue<u64>> = i.make(64);
+        let t0 = Instant::now();
+        let out = block_on(q.pop_deadline_async(t0 + Duration::from_millis(40)));
+        assert_eq!(out, None, "{}", i.name());
+        assert!(
+            t0.elapsed() >= Duration::from_millis(40),
+            "{} returned early",
+            i.name()
+        );
+    }
+}
+
+#[test]
+fn deadline_future_resolves_on_late_push() {
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    let q2 = q.clone();
+    let consumer = std::thread::spawn(move || {
+        block_on(q2.pop_deadline_async(Instant::now() + Duration::from_secs(30)))
+    });
+    let until = Instant::now() + Duration::from_secs(10);
+    while q.parked_consumers() == 0 && Instant::now() < until {
+        std::thread::yield_now();
+    }
+    q.push(5).unwrap();
+    assert_eq!(consumer.join().unwrap(), Some(5), "woken before expiry");
+    assert_eq!(q.parked_consumers(), 0);
+}
+
+#[test]
+fn many_futures_one_push_wakes_exactly_one_into_the_item() {
+    // Four tasks pend on one queue; one push arrives. The notification
+    // wakes every registered waker (like notify_all), but exactly one
+    // future can claim the item and resolve `Some` — the rest
+    // re-register and time out.
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    let consumers: Vec<_> = (0..4)
+        .map(|_| {
+            let q = q.clone();
+            std::thread::spawn(move || {
+                // Per-thread window: starts at registration time, so a
+                // slow spawn cannot eat into it.
+                let deadline = Instant::now() + Duration::from_secs(2);
+                block_on(q.pop_deadline_async(deadline))
+            })
+        })
+        .collect();
+    let until = Instant::now() + Duration::from_secs(10);
+    while q.parked_consumers() < 4 && Instant::now() < until {
+        std::thread::yield_now();
+    }
+    assert_eq!(q.parked_consumers(), 4);
+    q.push(77).unwrap();
+    let results: Vec<_> = consumers.into_iter().map(|h| h.join().unwrap()).collect();
+    let hits: Vec<_> = results.iter().filter_map(|r| *r).collect();
+    assert_eq!(hits, vec![77], "exactly one future resolved the item");
+    assert_eq!(q.parked_consumers(), 0, "losers deregistered at expiry");
+    assert_eq!(q.pop(), None, "no duplicate claim");
+}
+
+#[test]
+fn pop_async_batch_claims_runs_in_order() {
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    let q2 = q.clone();
+    let consumer = std::thread::spawn(move || block_on(q2.pop_async_batch(8)));
+    let until = Instant::now() + Duration::from_secs(10);
+    while q.parked_consumers() == 0 && Instant::now() < until {
+        std::thread::yield_now();
+    }
+    q.push_batch(vec![1, 2, 3]).unwrap();
+    let run = consumer.join().unwrap();
+    assert!(!run.is_empty() && run[0] == 1, "FIFO claim: {run:?}");
+}
+
+#[test]
+fn executor_fleet_drains_queue_without_loss() {
+    // 8 async consumer tasks on one executor thread vs 2 producer
+    // threads: every item is consumed exactly once, with no dedicated
+    // thread per consumer.
+    const TOTAL: u64 = 4_000;
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::new());
+    let consumed = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let producers_done = Arc::new(AtomicUsize::new(0));
+    let producers: Vec<_> = (0..2u64)
+        .map(|p| {
+            let q = q.clone();
+            let producers_done = producers_done.clone();
+            std::thread::spawn(move || {
+                for i in 0..TOTAL / 2 {
+                    q.push(p * (TOTAL / 2) + i).unwrap();
+                }
+                producers_done.fetch_add(1, Ordering::SeqCst);
+            })
+        })
+        .collect();
+    let mut ex = Executor::new();
+    let done = Arc::new(AtomicUsize::new(0));
+    for _ in 0..8 {
+        let q = q.clone();
+        let consumed = consumed.clone();
+        let done = done.clone();
+        let producers_done = producers_done.clone();
+        ex.spawn(async move {
+            let mut empty_slices = 0u32;
+            loop {
+                let slice = Instant::now() + Duration::from_millis(50);
+                match q.pop_deadline_async(slice).await {
+                    Some(v) => {
+                        consumed.lock().unwrap().push(v);
+                        empty_slices = 0;
+                    }
+                    None => {
+                        // Drained only once the producers finished and
+                        // two consecutive full slices stayed empty.
+                        if producers_done.load(Ordering::SeqCst) == 2 {
+                            empty_slices += 1;
+                            if empty_slices >= 2 {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            done.fetch_add(1, Ordering::SeqCst);
+        });
+    }
+    ex.run();
+    for p in producers {
+        p.join().unwrap();
+    }
+    assert_eq!(done.load(Ordering::SeqCst), 8, "all tasks exited");
+    let mut all = consumed.lock().unwrap().clone();
+    assert_eq!(all.len() as u64, TOTAL, "no loss");
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len() as u64, TOTAL, "no duplicates");
+    assert_eq!(q.parked_consumers(), 0);
+}
+
+#[test]
+fn async_defaults_work_through_trait_objects() {
+    for i in Impl::ALL {
+        let q: Arc<dyn ConcurrentQueue<u64>> = i.make(1024);
+        q.enqueue(1);
+        assert_eq!(block_on(q.pop_async()), 1, "{}", i.name());
+        q.try_enqueue_batch(vec![2, 3]).unwrap();
+        let run = block_on(q.pop_async_batch(4));
+        assert_eq!(run.len(), 2, "{}", i.name());
+    }
+}
