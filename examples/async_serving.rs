@@ -64,7 +64,7 @@ fn main() {
         clients.spawn(async move {
             for i in 0..64u32 {
                 let x = (c * 64 + i) as f32;
-                let resp = server.submit_async(vec![x; 16]).await;
+                let resp = server.submit_async(vec![x; 16]).expect("admitted").await;
                 assert_eq!(resp.output, vec![x * 2.0]);
                 total.fetch_add(1, Ordering::Relaxed);
             }
@@ -80,6 +80,6 @@ fn main() {
     );
 
     let server = Arc::try_unwrap(server).ok().expect("clients done");
-    let metrics = server.shutdown();
-    println!("{}", metrics.report());
+    let report = server.shutdown();
+    println!("{}", report.metrics.report());
 }

@@ -6,13 +6,25 @@
 //! * EBR — a thread stalls while pinned: retention grows with churn.
 //! * Hazard pointers — a never-cleared hazard pins its node forever.
 //!
+//! Plus the coordinator layer (DESIGN.md §11): a worker that panics
+//! mid-batch NACKs every claimed request and is respawned by its
+//! supervisor — requests resolve with an explicit error, never strand.
+//!
 //! ```sh
 //! cargo run --release --example fault_tolerance
 //! ```
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
 use cmpq::bench::faults::{
     cmp_stalled_consumer, ebr_stalled_reader, fault_table, hp_stalled_reader,
 };
+use cmpq::coordinator::batcher::BatchPolicy;
+use cmpq::coordinator::request::InferError;
+use cmpq::coordinator::server::{Server, ServerConfig};
+use cmpq::coordinator::worker::{EngineFactory, InferenceEngine};
 use cmpq::queue::cmp::{CmpConfig, CmpQueue, ReclaimTrigger};
 
 fn main() {
@@ -62,4 +74,90 @@ fn main() {
     println!("  pool footprint: {} nodes", q.footprint_nodes());
     assert!(stats.payloads_reclaimed >= 8, "all abandoned payloads dropped");
     println!("\nCMP recovered every abandoned node without any coordination. ✓");
+
+    coordinator_panic_demo();
+}
+
+/// Echo engine whose FIRST inference panics. The trip flag lives
+/// outside the engine, so the respawned worker's fresh instance serves
+/// normally — a crash-once model bug, not a permanently broken one.
+struct FlakyEcho {
+    tripped: Arc<AtomicBool>,
+}
+
+impl InferenceEngine for FlakyEcho {
+    fn batch_size(&self) -> usize {
+        4
+    }
+    fn features_per_row(&self) -> usize {
+        2
+    }
+    fn outputs_per_row(&self) -> usize {
+        1
+    }
+    fn infer(&self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        if !self.tripped.swap(true, Ordering::SeqCst) {
+            panic!("model bug: first inference dies");
+        }
+        Ok(input.chunks(2).map(|row| row[0] + row[1]).collect())
+    }
+}
+
+/// Worker supervision end to end: panic mid-batch → NACK (an explicit
+/// `WorkerPanicked` error, not a hung client) → supervisor respawn →
+/// the next request is served — and the shutdown report says exactly
+/// what happened.
+fn coordinator_panic_demo() {
+    println!("\nCoordinator-layer fault tolerance (worker panic mid-batch):");
+    let tripped = Arc::new(AtomicBool::new(false));
+    let factory: EngineFactory = {
+        let tripped = tripped.clone();
+        Arc::new(move || {
+            Ok(Box::new(FlakyEcho {
+                tripped: tripped.clone(),
+            }) as Box<dyn InferenceEngine>)
+        })
+    };
+    let server = Server::start(
+        ServerConfig {
+            shards: 1,
+            workers: 1,
+            batch_policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServerConfig::default()
+        },
+        factory,
+    );
+
+    // Request 1 rides the batch that panics: it resolves with a NACK.
+    let slot = server.submit(vec![1.0, 2.0]).expect("admitted");
+    let resp = slot
+        .wait_timeout(Duration::from_secs(30))
+        .expect("resolved — a panic never strands a claimed request");
+    assert_eq!(resp.error, Some(InferError::WorkerPanicked));
+    println!("  request 1: NACKed with {:?}", resp.error.unwrap());
+
+    // Request 2 lands on the respawned worker and is served.
+    let slot = server.submit(vec![3.0, 4.0]).expect("admitted");
+    let resp = slot
+        .wait_timeout(Duration::from_secs(30))
+        .expect("served after respawn");
+    assert!(resp.error.is_none());
+    println!(
+        "  request 2: served by the respawned worker -> {:?}",
+        resp.output
+    );
+
+    let report = server.shutdown();
+    println!(
+        "  shutdown report: worker_panics={} restarts={} degraded={}",
+        report.worker_panics,
+        report.metrics.worker_restarts.load(Ordering::Relaxed),
+        report.degraded
+    );
+    assert_eq!(report.worker_panics, 1);
+    assert!(!report.degraded, "one panic is inside the restart budget");
+    println!("  every request resolved; the panic cost one NACK, not a hang. ✓");
 }

@@ -95,6 +95,7 @@ fn main() {
                         (0..128).map(|_| rng.next_f64() as f32 - 0.5).collect();
                     let resp = server
                         .submit(features)
+                        .expect("admitted (no admission limit configured)")
                         .wait_timeout(Duration::from_secs(120))
                         .expect("request timed out");
                     assert_eq!(resp.output.len(), 16, "one logit row");
@@ -120,9 +121,10 @@ fn main() {
         server.work_queue_footprint()
     );
     let server = Arc::try_unwrap(server).ok().expect("clients joined");
-    let m = server.shutdown();
+    let report = server.shutdown();
+    assert!(report.clean(), "no panics, deaths, or drain NACKs");
     assert_eq!(
-        m.completed.load(std::sync::atomic::Ordering::Relaxed),
+        report.metrics.completed.load(std::sync::atomic::Ordering::Relaxed),
         total
     );
     println!("clean shutdown: all {total} requests completed. ✓");

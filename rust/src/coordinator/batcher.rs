@@ -3,6 +3,7 @@
 //! trade-off between padding waste and tail latency. Batches travel to
 //! workers over another CMP queue (the whole pipeline is CMP fabric).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -10,8 +11,11 @@ use std::time::{Duration, Instant};
 use crate::queue::cmp::{CmpConfig, CmpQueue};
 use crate::util::Backoff;
 
-use super::request::InferRequest;
+use super::metrics::Metrics;
+use super::request::{InferError, InferRequest, InferResponse};
 use super::router::Router;
+use super::supervisor::{restart_backoff, sleep_observing_stop, SupervisorPolicy};
+use super::worker::nack_batch;
 
 /// A batch headed to a worker.
 pub struct Batch {
@@ -66,15 +70,80 @@ const BATCHER_PARK: Duration = Duration::from_millis(50);
 /// only until that batch's flush deadline, otherwise for a bounded
 /// slice. Arriving requests wake it immediately either way, so tail
 /// latency is unchanged while idle shards cost no CPU (DESIGN.md §8).
+///
+/// The loop is supervised: a panic inside a collection pass NACKs the
+/// partial batch it was holding ([`InferError::BatcherPanicked`] —
+/// claimed requests never strand) and the pass restarts with
+/// exponential backoff, up to `restart.max_restarts`; past the cap the
+/// shard's batcher is abandoned and the server degrades
+/// ([`Metrics::record_batcher_dead`]).
 pub fn batcher_loop(
     router: Arc<Router>,
     shard: usize,
     policy: BatchPolicy,
     work: WorkQueue,
     stop: Arc<AtomicBool>,
+    metrics: Arc<Metrics>,
+    restart: SupervisorPolicy,
 ) {
+    // Lives outside the catch so a panicking pass's partial batch
+    // survives to be NACKed instead of vanishing with the stack frame.
     let mut pending: Vec<InferRequest> = Vec::with_capacity(policy.max_batch);
-    let mut window_start: Option<Instant> = None;
+    let mut restarts: u64 = 0;
+    loop {
+        let pass = catch_unwind(AssertUnwindSafe(|| {
+            batcher_core(&router, shard, &policy, &work, &stop, &metrics, &mut pending)
+        }));
+        match pass {
+            Ok(()) => return,
+            Err(_) => {
+                metrics.record_batcher_panic();
+                for req in pending.drain(..) {
+                    let latency = req.submitted_at.elapsed();
+                    if req.slot.complete(InferResponse::nack(
+                        req.id,
+                        latency,
+                        InferError::BatcherPanicked,
+                    )) {
+                        metrics.record_nack(latency);
+                    }
+                }
+                if stop.load(Ordering::Acquire) {
+                    // Shutdown's residual drain owns whatever is still
+                    // queued on the shard.
+                    return;
+                }
+                restarts += 1;
+                if restarts > restart.max_restarts as u64 {
+                    metrics.record_batcher_dead();
+                    eprintln!(
+                        "batcher {shard}: abandoned after {} restarts — server degraded",
+                        restarts - 1
+                    );
+                    return;
+                }
+                sleep_observing_stop(restart_backoff(&restart, restarts), &stop);
+            }
+        }
+    }
+}
+
+/// One supervised collection pass (the pre-supervision `batcher_loop`
+/// body). Returns on drain-then-exit; panics propagate to the wrapper.
+fn batcher_core(
+    router: &Router,
+    shard: usize,
+    policy: &BatchPolicy,
+    work: &WorkQueue,
+    stop: &AtomicBool,
+    metrics: &Metrics,
+    pending: &mut Vec<InferRequest>,
+) {
+    let mut window_start: Option<Instant> = if pending.is_empty() {
+        None
+    } else {
+        Some(Instant::now())
+    };
     let mut idle = Backoff::new();
     loop {
         // `pending` is always below max_batch here (flushed on fill).
@@ -89,9 +158,9 @@ pub fn batcher_loop(
                 Some(t) => (t + policy.max_wait).min(backstop),
                 None => backstop,
             };
-            router.drain_deadline(shard, room, &mut pending, deadline)
+            router.drain_deadline(shard, room, pending, deadline)
         } else {
-            router.drain_many(shard, room, &mut pending)
+            router.drain_many(shard, room, pending)
         };
         if got > 0 {
             idle.reset();
@@ -99,7 +168,7 @@ pub fn batcher_loop(
                 window_start = Some(Instant::now());
             }
             if pending.len() >= policy.max_batch {
-                flush(&mut pending, &work);
+                flush(pending, work, metrics);
                 window_start = None;
             }
         } else {
@@ -107,13 +176,13 @@ pub fn batcher_loop(
                 .map(|t| t.elapsed() >= policy.max_wait)
                 .unwrap_or(false);
             if !pending.is_empty() && expired {
-                flush(&mut pending, &work);
+                flush(pending, work, metrics);
                 window_start = None;
             } else if stop.load(Ordering::Acquire) {
                 // Drain-then-exit: flush whatever is left.
                 if router.inflight(shard) == 0 {
                     if !pending.is_empty() {
-                        flush(&mut pending, &work);
+                        flush(pending, work, metrics);
                     }
                     return;
                 }
@@ -124,13 +193,40 @@ pub fn batcher_loop(
     }
 }
 
-fn flush(pending: &mut Vec<InferRequest>, work: &WorkQueue) {
+fn flush(pending: &mut Vec<InferRequest>, work: &WorkQueue, metrics: &Metrics) {
+    crate::fail_point!("batcher/flush");
+    // Deadline triage at batch-seal time: expired requests are NACKed
+    // here instead of riding to a worker (it re-checks for requests
+    // that expire in the work queue).
+    let now = Instant::now();
+    let mut requests = Vec::with_capacity(pending.len());
+    for req in pending.drain(..) {
+        if req.expired(now) {
+            let latency = req.submitted_at.elapsed();
+            if req.slot.complete(InferResponse::nack(
+                req.id,
+                latency,
+                InferError::DeadlineExceeded,
+            )) {
+                metrics.record_deadline_nack(latency);
+            }
+        } else {
+            requests.push(req);
+        }
+    }
+    if requests.is_empty() {
+        return;
+    }
     let batch = Batch {
-        requests: std::mem::take(pending),
-        formed_at: Instant::now(),
+        requests,
+        formed_at: now,
     };
-    work.push(batch)
-        .unwrap_or_else(|_| panic!("unbounded work queue rejected a batch"));
+    if let Err(batch) = work.push(batch) {
+        // Unreachable with the default unbounded work queue; reachable
+        // with a bounded capacity or an injected fault. Either way the
+        // requests resolve with an explicit error, never strand.
+        nack_batch(batch, metrics, InferError::Rejected);
+    }
 }
 
 #[cfg(test)]
@@ -145,6 +241,7 @@ mod tests {
             id,
             features: vec![0.0; 2],
             submitted_at: Instant::now(),
+            deadline: None,
             slot: ResponseSlot::new(),
         }
     }
@@ -159,7 +256,17 @@ mod tests {
             let router = router.clone();
             let work = work.clone();
             let stop = stop.clone();
-            std::thread::spawn(move || batcher_loop(router, 0, policy, work, stop))
+            std::thread::spawn(move || {
+                batcher_loop(
+                    router,
+                    0,
+                    policy,
+                    work,
+                    stop,
+                    Arc::new(Metrics::new()),
+                    SupervisorPolicy::default(),
+                )
+            })
         };
         (work, stop, h)
     }
@@ -175,7 +282,7 @@ mod tests {
             },
         );
         for i in 0..8 {
-            router.route(req(i));
+            router.route(req(i)).ok().unwrap();
         }
         // Two full batches must appear without the deadline.
         let mut got = Vec::new();
@@ -211,7 +318,7 @@ mod tests {
             },
         );
         for i in 0..3 {
-            router.route(req(i));
+            router.route(req(i)).ok().unwrap();
         }
         let deadline = Instant::now() + Duration::from_secs(5);
         let batch = loop {
@@ -237,7 +344,7 @@ mod tests {
             },
         );
         for i in 0..5 {
-            router.route(req(i));
+            router.route(req(i)).ok().unwrap();
         }
         std::thread::sleep(Duration::from_millis(10));
         stop.store(true, Ordering::Release);

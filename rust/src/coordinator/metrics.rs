@@ -1,6 +1,6 @@
 //! Pipeline metrics: counters plus an end-to-end latency histogram.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -8,18 +8,45 @@ use crate::bench::latency::{Histogram, LatencySummary};
 
 /// Shared pipeline metrics (cheap counters, mutex-guarded histogram —
 /// recorded once per *batch*, not per queue op).
+///
+/// Conservation invariant: every request counted in `submitted`
+/// eventually shows up in `completed` — served, engine-failed, or
+/// NACKed. Requests shed at admission (`shed`) are counted in neither.
 #[derive(Default)]
 pub struct Metrics {
-    /// Requests accepted by the server.
+    /// Requests accepted by the server (admitted *and* routed).
     pub submitted: AtomicU64,
-    /// Responses delivered (including failures).
+    /// Responses delivered (including failures and NACKs).
     pub completed: AtomicU64,
     /// Model invocations executed.
     pub batches: AtomicU64,
     /// Sum of padded rows (batch capacity − real requests).
     pub padding_rows: AtomicU64,
-    /// Failed inferences (responses completed with empty output).
+    /// Failed inferences (engine returned an error for the batch).
     pub failures: AtomicU64,
+    /// Requests resolved with an explicit [`crate::coordinator::request::InferError`]
+    /// NACK (worker/batcher panic, queue rejection, shutdown drain).
+    pub nacks: AtomicU64,
+    /// Requests NACKed specifically for an expired deadline (also
+    /// counted in `nacks`).
+    pub deadline_expired: AtomicU64,
+    /// Requests refused at admission (`Overloaded`) — never submitted.
+    pub shed: AtomicU64,
+    /// Worker panics caught by supervision (or observed at shutdown).
+    pub worker_panics: AtomicU64,
+    /// Worker respawns performed by the supervisor.
+    pub worker_restarts: AtomicU64,
+    /// Workers abandoned after exhausting their restart cap.
+    pub workers_dead: AtomicU64,
+    /// Batcher panics caught by the restart wrapper.
+    pub batcher_panics: AtomicU64,
+    /// Batchers abandoned after exhausting their restart cap.
+    pub batchers_dead: AtomicU64,
+    /// Gauge: workers currently running but not heartbeating (wedged).
+    pub workers_stalled: AtomicU64,
+    /// Latched once any stage is abandoned: the server still serves
+    /// what it can, but at reduced capacity.
+    degraded: AtomicBool,
     latency: Mutex<Histogram>,
 }
 
@@ -54,6 +81,68 @@ impl Metrics {
             .record(latency.as_nanos() as u64);
     }
 
+    /// Count one NACK delivery (the slot resolved with an error).
+    /// Completed++ so conservation holds; `failures` stays engine-only.
+    pub fn record_nack(&self, latency: Duration) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.nacks.fetch_add(1, Ordering::Relaxed);
+        self.latency
+            .lock()
+            .unwrap()
+            .record(latency.as_nanos() as u64);
+    }
+
+    /// Count one deadline-expiry NACK (a `record_nack` plus the
+    /// dedicated counter).
+    pub fn record_deadline_nack(&self, latency: Duration) {
+        self.deadline_expired.fetch_add(1, Ordering::Relaxed);
+        self.record_nack(latency);
+    }
+
+    /// Count one request refused at admission.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one caught worker panic.
+    pub fn record_worker_panic(&self) {
+        self.worker_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one supervisor-driven worker respawn.
+    pub fn record_worker_restart(&self) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a worker abandoned past its restart cap; latches
+    /// degraded mode.
+    pub fn record_worker_dead(&self) {
+        self.workers_dead.fetch_add(1, Ordering::Relaxed);
+        self.degraded.store(true, Ordering::Relaxed);
+    }
+
+    /// Count one caught batcher panic.
+    pub fn record_batcher_panic(&self) {
+        self.batcher_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a batcher abandoned past its restart cap; latches
+    /// degraded mode.
+    pub fn record_batcher_dead(&self) {
+        self.batchers_dead.fetch_add(1, Ordering::Relaxed);
+        self.degraded.store(true, Ordering::Relaxed);
+    }
+
+    /// Update the wedged-worker gauge (set by the supervisor monitor).
+    pub fn set_stalled(&self, n: u64) {
+        self.workers_stalled.store(n, Ordering::Relaxed);
+    }
+
+    /// Whether any stage has been abandoned (reduced capacity).
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Relaxed)
+    }
+
     /// Summary of the end-to-end latency histogram.
     pub fn latency_summary(&self) -> LatencySummary {
         LatencySummary::from_histogram(&self.latency.lock().unwrap())
@@ -73,18 +162,36 @@ impl Metrics {
     /// One-line human-readable summary of every counter.
     pub fn report(&self) -> String {
         let s = self.latency_summary();
-        format!(
-            "submitted={} completed={} failures={} batches={} padding_ratio={:.3} \
-             latency: avg={:.1}us p50={}us p99={}us",
+        let mut out = format!(
+            "submitted={} completed={} failures={} nacks={} shed={} batches={} \
+             padding_ratio={:.3} latency: avg={:.1}us p50={}us p99={}us",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failures.load(Ordering::Relaxed),
+            self.nacks.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.padding_ratio(),
             s.avg_ns / 1000.0,
             s.p50_ns / 1000,
             s.p99_ns / 1000,
-        )
+        );
+        let panics = self.worker_panics.load(Ordering::Relaxed)
+            + self.batcher_panics.load(Ordering::Relaxed);
+        if panics > 0 || self.is_degraded() {
+            out.push_str(&format!(
+                " | health: worker_panics={} restarts={} workers_dead={} \
+                 batcher_panics={} batchers_dead={} stalled={} degraded={}",
+                self.worker_panics.load(Ordering::Relaxed),
+                self.worker_restarts.load(Ordering::Relaxed),
+                self.workers_dead.load(Ordering::Relaxed),
+                self.batcher_panics.load(Ordering::Relaxed),
+                self.batchers_dead.load(Ordering::Relaxed),
+                self.workers_stalled.load(Ordering::Relaxed),
+                self.is_degraded(),
+            ));
+        }
+        out
     }
 }
 
@@ -135,5 +242,46 @@ mod tests {
         let r = m.report();
         assert!(r.contains("submitted=1"));
         assert!(r.contains("latency:"));
+        assert!(!r.contains("health:"), "healthy runs omit the health tail");
+    }
+
+    #[test]
+    fn nacks_preserve_conservation() {
+        let m = Metrics::new();
+        m.record_submit();
+        m.record_submit();
+        m.record_complete(Duration::from_micros(10), true);
+        m.record_nack(Duration::from_micros(20));
+        assert_eq!(m.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(m.nacks.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failures.load(Ordering::Relaxed), 0, "nack is not an engine failure");
+        assert_eq!(m.latency_summary().count, 2, "nack latency recorded");
+    }
+
+    #[test]
+    fn deadline_nack_counts_both() {
+        let m = Metrics::new();
+        m.record_deadline_nack(Duration::from_micros(5));
+        assert_eq!(m.nacks.load(Ordering::Relaxed), 1);
+        assert_eq!(m.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn degraded_latches_and_reports() {
+        let m = Metrics::new();
+        assert!(!m.is_degraded());
+        m.record_worker_panic();
+        m.record_worker_restart();
+        m.record_worker_dead();
+        assert!(m.is_degraded());
+        let r = m.report();
+        assert!(r.contains("health:"));
+        assert!(r.contains("workers_dead=1"));
+        assert!(r.contains("degraded=true"));
+        m.record_batcher_dead();
+        assert_eq!(m.batchers_dead.load(Ordering::Relaxed), 1);
+        m.set_stalled(3);
+        assert_eq!(m.workers_stalled.load(Ordering::Relaxed), 3);
     }
 }

@@ -9,4 +9,5 @@ pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod supervisor;
 pub mod worker;

@@ -17,21 +17,88 @@ pub struct InferRequest {
     pub features: Vec<f32>,
     /// When the client submitted (end-to-end latency anchor).
     pub submitted_at: Instant,
+    /// Absolute deadline, if any: past it the pipeline NACKs with
+    /// [`InferError::DeadlineExceeded`] instead of paying engine cost.
+    pub deadline: Option<Instant>,
     /// Completion slot the client blocks on.
     pub slot: Arc<ResponseSlot>,
 }
 
-/// An inference result.
+impl InferRequest {
+    /// Whether the request's deadline (if any) has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Why a request was NACKed instead of answered. Every submitted
+/// request resolves as a response or one of these — the serving stack's
+/// conservation invariant (DESIGN.md §11) is that nothing strands.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferError {
+    /// The worker processing the batch panicked before completing it.
+    WorkerPanicked,
+    /// The batcher owning the request's shard panicked while it was
+    /// held in a partially-formed batch.
+    BatcherPanicked,
+    /// The engine returned an error for the batch (message attached).
+    Engine(String),
+    /// The request's deadline passed before an engine saw it.
+    DeadlineExceeded,
+    /// A queue rejected the request after admission (bounded capacity
+    /// exhausted, or an injected routing fault).
+    Rejected,
+    /// The server shut down while the request was still queued.
+    ShuttingDown,
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::WorkerPanicked => write!(f, "worker panicked mid-batch"),
+            InferError::BatcherPanicked => write!(f, "batcher panicked holding the request"),
+            InferError::Engine(msg) => write!(f, "engine error: {msg}"),
+            InferError::DeadlineExceeded => write!(f, "deadline exceeded before inference"),
+            InferError::Rejected => write!(f, "queue rejected the request"),
+            InferError::ShuttingDown => write!(f, "server shut down with the request queued"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// An inference result — or, when [`InferResponse::error`] is set, an
+/// explicit NACK carrying why the request could not be served.
 #[derive(Debug, Clone)]
 pub struct InferResponse {
     /// The request this responds to.
     pub id: u64,
-    /// Flattened output row (logits).
+    /// Flattened output row (logits). Empty on NACKs.
     pub output: Vec<f32>,
     /// Submit → complete latency.
     pub latency: Duration,
     /// Size of the batch this request rode in (telemetry).
     pub batch_size: usize,
+    /// `None` for a served response; `Some` for an explicit NACK.
+    pub error: Option<InferError>,
+}
+
+impl InferResponse {
+    /// Whether this is a served response rather than a NACK.
+    pub fn is_ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// Build a NACK: empty output, `batch_size` 0, `error` set.
+    pub fn nack(id: u64, latency: Duration, error: InferError) -> Self {
+        InferResponse {
+            id,
+            output: Vec::new(),
+            latency,
+            batch_size: 0,
+            error: Some(error),
+        }
+    }
 }
 
 /// One-shot completion slot (std-only oneshot channel: Mutex+Condvar
@@ -59,18 +126,21 @@ impl ResponseSlot {
 
     /// Complete the slot (worker side). Later completions are ignored —
     /// a slot completes exactly once. Wakes blocking and async waiters
-    /// alike.
-    pub fn complete(&self, resp: InferResponse) {
+    /// alike. Returns `true` iff this call stored the response, so NACK
+    /// paths racing a real completion know whether to count it.
+    pub fn complete(&self, resp: InferResponse) -> bool {
         let mut g = self.inner.lock().unwrap();
-        if g.resp.is_none() {
-            g.resp = Some(resp);
-            let wakers = std::mem::take(&mut g.wakers);
-            drop(g);
-            self.cv.notify_all();
-            for w in wakers {
-                w.wake();
-            }
+        if g.resp.is_some() {
+            return false;
         }
+        g.resp = Some(resp);
+        let wakers = std::mem::take(&mut g.wakers);
+        drop(g);
+        self.cv.notify_all();
+        for w in wakers {
+            w.wake();
+        }
+        true
     }
 
     /// Block until completed.
@@ -165,13 +235,14 @@ mod tests {
             output: vec![1.0],
             latency: Duration::from_micros(5),
             batch_size: 8,
+            error: None,
         }
     }
 
     #[test]
     fn complete_then_wait() {
         let s = ResponseSlot::new();
-        s.complete(resp(1));
+        assert!(s.complete(resp(1)));
         assert_eq!(s.wait().id, 1);
     }
 
@@ -188,9 +259,36 @@ mod tests {
     #[test]
     fn double_complete_keeps_first() {
         let s = ResponseSlot::new();
-        s.complete(resp(1));
-        s.complete(resp(2));
+        assert!(s.complete(resp(1)));
+        assert!(!s.complete(resp(2)), "second complete reports a loss");
         assert_eq!(s.wait().id, 1);
+    }
+
+    #[test]
+    fn nack_shape_and_expiry() {
+        let n = InferResponse::nack(5, Duration::from_micros(1), InferError::WorkerPanicked);
+        assert!(!n.is_ok());
+        assert!(n.output.is_empty());
+        assert_eq!(n.error, Some(InferError::WorkerPanicked));
+        assert!(resp(5).is_ok());
+
+        let now = Instant::now();
+        let req = InferRequest {
+            id: 1,
+            features: vec![],
+            submitted_at: now,
+            deadline: Some(now),
+            slot: ResponseSlot::new(),
+        };
+        assert!(req.expired(now));
+        let open = InferRequest {
+            id: 2,
+            features: vec![],
+            submitted_at: now,
+            deadline: None,
+            slot: ResponseSlot::new(),
+        };
+        assert!(!open.expired(now + Duration::from_secs(3600)));
     }
 
     #[test]

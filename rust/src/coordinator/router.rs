@@ -89,15 +89,28 @@ impl Router {
         }
     }
 
-    /// Route a request onto its shard queue. Returns the shard index.
-    pub fn route(&self, req: InferRequest) -> usize {
+    /// Route a request onto its shard queue. Returns the shard index,
+    /// or the request back on rejection (bounded shard at capacity, or
+    /// an injected `router/route` fault) so the caller can shed or NACK
+    /// it — the pre-robustness version panicked here.
+    ///
+    /// The in-flight gauge and routed counter are incremented *before*
+    /// the push (a concurrent drain of the just-pushed request must
+    /// never observe a gauge it would wrap below zero) and rolled back
+    /// on the rejection path, where no drain can have seen the request.
+    pub fn route(&self, req: InferRequest) -> Result<usize, InferRequest> {
+        crate::fail_point!("router/route", Err(req));
         let shard = self.pick(&req);
         self.inflight[shard].fetch_add(1, Ordering::Relaxed);
         self.routed.fetch_add(1, Ordering::Relaxed);
-        self.shards[shard]
-            .push(req)
-            .unwrap_or_else(|_| panic!("unbounded CMP shard rejected a request"));
-        shard
+        match self.shards[shard].push(req) {
+            Ok(()) => Ok(shard),
+            Err(req) => {
+                self.inflight[shard].fetch_sub(1, Ordering::Relaxed);
+                self.routed.fetch_sub(1, Ordering::Relaxed);
+                Err(req)
+            }
+        }
     }
 
     /// Route a whole batch of requests: pick a shard per request, group
@@ -106,7 +119,11 @@ impl Router {
     /// shard instead of per request (batch fan-in, DESIGN.md §7).
     /// Relative order of requests that land on the same shard is
     /// preserved.
-    pub fn route_many(&self, reqs: Vec<InferRequest>) {
+    ///
+    /// Returns the requests of any group whose shard rejected its push
+    /// (empty = everything routed); gauges are rolled back for those,
+    /// as in [`Router::route`].
+    pub fn route_many(&self, reqs: Vec<InferRequest>) -> Vec<InferRequest> {
         let n = reqs.len() as u64;
         let mut groups: Vec<Vec<InferRequest>> = Vec::new();
         groups.resize_with(self.shards.len(), Vec::new);
@@ -116,14 +133,19 @@ impl Router {
             groups[shard].push(req);
         }
         self.routed.fetch_add(n, Ordering::Relaxed);
+        let mut rejected = Vec::new();
         for (shard, group) in groups.into_iter().enumerate() {
             if group.is_empty() {
                 continue;
             }
-            self.shards[shard]
-                .push_batch(group)
-                .unwrap_or_else(|_| panic!("unbounded CMP shard rejected a batch"));
+            let len = group.len() as u64;
+            if let Err(group) = self.shards[shard].push_batch(group) {
+                self.inflight[shard].fetch_sub(len, Ordering::Relaxed);
+                self.routed.fetch_sub(len, Ordering::Relaxed);
+                rejected.extend(group);
+            }
         }
+        rejected
     }
 
     /// Dequeue from shard `i` (batcher side). Decrements the in-flight
@@ -202,6 +224,7 @@ mod tests {
             id,
             features: vec![0.0; 4],
             submitted_at: Instant::now(),
+            deadline: None,
             slot: ResponseSlot::new(),
         }
     }
@@ -211,7 +234,7 @@ mod tests {
         let r = Router::new(4, RoutePolicy::RoundRobin, CmpConfig::default());
         let mut counts = [0u32; 4];
         for i in 0..100 {
-            counts[r.route(req(i))] += 1;
+            counts[r.route(req(i)).ok().unwrap()] += 1;
         }
         assert_eq!(counts, [25, 25, 25, 25]);
         assert_eq!(r.routed(), 100);
@@ -220,28 +243,28 @@ mod tests {
     #[test]
     fn hash_id_is_sticky() {
         let r = Router::new(3, RoutePolicy::HashId, CmpConfig::default());
-        assert_eq!(r.route(req(7)), 1);
-        assert_eq!(r.route(req(7)), 1);
-        assert_eq!(r.route(req(9)), 0);
+        assert_eq!(r.route(req(7)).ok(), Some(1));
+        assert_eq!(r.route(req(7)).ok(), Some(1));
+        assert_eq!(r.route(req(9)).ok(), Some(0));
     }
 
     #[test]
     fn least_loaded_balances_after_drain() {
         let r = Router::new(2, RoutePolicy::LeastLoaded, CmpConfig::default());
         // Both start at 0 → shard 0 wins, then 1, then even.
-        let s1 = r.route(req(1));
-        let s2 = r.route(req(2));
+        let s1 = r.route(req(1)).ok().unwrap();
+        let s2 = r.route(req(2)).ok().unwrap();
         assert_ne!(s1, s2, "second request must go to the other shard");
         // Drain shard s1 → next request prefers it again.
         assert!(r.drain_one(s1).is_some());
-        assert_eq!(r.route(req(3)), s1);
+        assert_eq!(r.route(req(3)).ok(), Some(s1));
     }
 
     #[test]
     fn drain_preserves_fifo_per_shard() {
         let r = Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default());
         for i in 0..10 {
-            r.route(req(i));
+            r.route(req(i)).ok().unwrap();
         }
         for i in 0..10 {
             assert_eq!(r.drain_one(0).unwrap().id, i);
@@ -254,7 +277,7 @@ mod tests {
     fn drain_many_claims_a_fifo_run() {
         let r = Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default());
         for i in 0..10 {
-            r.route(req(i));
+            r.route(req(i)).ok().unwrap();
         }
         let mut out = Vec::new();
         assert_eq!(r.drain_many(0, 4, &mut out), 4);
@@ -277,7 +300,7 @@ mod tests {
             (n, out)
         });
         std::thread::sleep(std::time::Duration::from_millis(20));
-        r.route(req(7));
+        r.route(req(7)).ok().unwrap();
         let (n, out) = h.join().unwrap();
         assert_eq!(n, 1, "woken by the routed request");
         assert_eq!(out[0].id, 7);
@@ -295,7 +318,7 @@ mod tests {
             (n, out)
         });
         std::thread::sleep(std::time::Duration::from_millis(20));
-        r.route(req(9));
+        r.route(req(9)).ok().unwrap();
         let (n, out) = h.join().unwrap();
         assert_eq!(n, 1, "woken by the routed request");
         assert_eq!(out[0].id, 9);
@@ -324,7 +347,8 @@ mod tests {
     #[test]
     fn route_many_groups_by_shard_and_preserves_order() {
         let r = Router::new(3, RoutePolicy::HashId, CmpConfig::default());
-        r.route_many((0..30).map(req).collect());
+        let rejected = r.route_many((0..30).map(req).collect());
+        assert!(rejected.is_empty(), "unbounded shards accept everything");
         assert_eq!(r.routed(), 30);
         for shard in 0..3u64 {
             assert_eq!(r.inflight(shard as usize), 10);

@@ -2,19 +2,28 @@
 //! Every hand-off is a CMP queue; the only blocking point is the
 //! client-facing completion slot (by design — clients sleep, the
 //! pipeline never does).
+//!
+//! Robustness (DESIGN.md §11): workers and batchers are supervised —
+//! panics NACK the claimed requests and the stage respawns with backoff
+//! up to a cap, past which the server *degrades* instead of wedging.
+//! [`Server::submit`] sheds load above a configurable in-flight depth,
+//! and [`Server::shutdown`] reports stage outcomes and NACKs every
+//! still-queued request instead of stranding (or `.expect`-ing on a
+//! panicked stage, as the pre-robustness version did).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::queue::cmp::CmpConfig;
 
 use super::batcher::{batcher_loop, new_work_queue, BatchPolicy, WorkQueue};
 use super::metrics::Metrics;
-use super::request::{InferRequest, ResponseFuture, ResponseSlot};
+use super::request::{InferError, InferRequest, InferResponse, ResponseFuture, ResponseSlot};
 use super::router::{RoutePolicy, Router};
-use super::worker::{async_worker_loop, worker_loop, EngineFactory};
+use super::supervisor::{monitor_loop, supervised_worker_loop, Supervision, SupervisorPolicy};
+use super::worker::{async_worker_loop, nack_batch, EngineFactory};
 
 /// Pipeline configuration.
 #[derive(Clone)]
@@ -36,6 +45,19 @@ pub struct ServerConfig {
     /// — the N-consumer idle fleet costs one parked thread instead of
     /// N. Default `false` (one thread per worker).
     pub async_workers: bool,
+    /// Admission-control depth: [`Server::submit`] returns
+    /// [`SubmitError::Overloaded`] while `submitted − completed` is at
+    /// or above this. `None` (default) admits everything — queue depth
+    /// is unbounded, as before.
+    pub max_inflight: Option<usize>,
+    /// Deadline attached to every request relative to its submit time;
+    /// batcher and worker NACK expired requests
+    /// ([`InferError::DeadlineExceeded`]) before paying engine cost.
+    /// `None` (default): requests never expire.
+    pub default_deadline: Option<Duration>,
+    /// Restart/backoff/stall policy for supervised workers and
+    /// batchers.
+    pub supervisor: SupervisorPolicy,
 }
 
 impl Default for ServerConfig {
@@ -47,7 +69,64 @@ impl Default for ServerConfig {
             batch_policy: BatchPolicy::default(),
             queue_config: CmpConfig::default(),
             async_workers: false,
+            max_inflight: None,
+            default_deadline: None,
+            supervisor: SupervisorPolicy::default(),
         }
+    }
+}
+
+/// Why [`Server::submit`] refused a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Admission control shed the request: the in-flight depth is at
+    /// [`ServerConfig::max_inflight`], or the router's shard queue
+    /// rejected the push (bounded capacity / injected fault). The
+    /// request was *not* enqueued; retry with backoff.
+    Overloaded,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded => write!(f, "server overloaded; request shed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Outcome of [`Server::shutdown`]: the metrics handle plus a summary
+/// of everything that went wrong during the server's lifetime.
+#[derive(Debug)]
+pub struct ShutdownReport {
+    /// Pipeline metrics (counters + latency histogram).
+    pub metrics: Arc<Metrics>,
+    /// Worker panics caught by supervision or observed at join.
+    pub worker_panics: u64,
+    /// Batcher panics caught by the restart wrapper or observed at join.
+    pub batcher_panics: u64,
+    /// Workers abandoned past the restart cap.
+    pub workers_dead: u64,
+    /// Batchers abandoned past the restart cap.
+    pub batchers_dead: u64,
+    /// Requests NACKed by the residual drain (left queued because a
+    /// stage died or shutdown raced them in).
+    pub drained_nacks: u64,
+    /// Whether the server ended degraded (any stage abandoned).
+    pub degraded: bool,
+}
+
+impl ShutdownReport {
+    /// `true` when nothing panicked, nothing died, and nothing had to
+    /// be drain-NACKed.
+    pub fn clean(&self) -> bool {
+        self.worker_panics == 0
+            && self.batcher_panics == 0
+            && self.workers_dead == 0
+            && self.batchers_dead == 0
+            && self.drained_nacks == 0
+            && !self.degraded
     }
 }
 
@@ -57,15 +136,21 @@ pub struct Server {
     router: Arc<Router>,
     work: WorkQueue,
     metrics: Arc<Metrics>,
+    supervision: Arc<Supervision>,
     stop_batchers: Arc<AtomicBool>,
     stop_workers: Arc<AtomicBool>,
     batchers: Vec<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
+    monitor: Option<JoinHandle<()>>,
+    max_inflight: Option<usize>,
+    default_deadline: Option<Duration>,
     next_id: AtomicU64,
 }
 
 impl Server {
-    /// Start batcher and worker threads.
+    /// Start batcher and worker threads (each worker supervised:
+    /// panics respawn it with backoff, up to
+    /// [`SupervisorPolicy::max_restarts`]).
     ///
     /// # Examples
     ///
@@ -84,7 +169,7 @@ impl Server {
     ///     .infer_blocking(vec![1.0, 3.0], Duration::from_secs(20))
     ///     .expect("response");
     /// assert_eq!(out, vec![4.0]); // mean 2 × scale 2
-    /// server.shutdown();
+    /// assert!(server.shutdown().clean());
     /// ```
     pub fn start(cfg: ServerConfig, engine_factory: EngineFactory) -> Self {
         let router = Arc::new(Router::new(
@@ -96,14 +181,22 @@ impl Server {
         let metrics = Arc::new(Metrics::new());
         let stop_batchers = Arc::new(AtomicBool::new(false));
         let stop_workers = Arc::new(AtomicBool::new(false));
+        let worker_slots = if cfg.async_workers {
+            cfg.workers.max(1)
+        } else {
+            cfg.workers
+        };
+        let supervision = Arc::new(Supervision::new(worker_slots, cfg.supervisor.clone()));
 
         let batchers = (0..cfg.shards)
             .map(|shard| {
                 let (r, w, s) = (router.clone(), work.clone(), stop_batchers.clone());
+                let m = metrics.clone();
                 let policy = cfg.batch_policy.clone();
+                let restart = cfg.supervisor.clone();
                 std::thread::Builder::new()
                     .name(format!("batcher-{shard}"))
-                    .spawn(move || batcher_loop(r, shard, policy, w, s))
+                    .spawn(move || batcher_loop(r, shard, policy, w, s, m, restart))
                     .expect("spawn batcher")
             })
             .collect();
@@ -111,10 +204,10 @@ impl Server {
             // One host thread, `workers` executor tasks (async mode).
             let (w, m, s) = (work.clone(), metrics.clone(), stop_workers.clone());
             let f = engine_factory.clone();
-            let tasks = cfg.workers.max(1);
+            let sup = supervision.clone();
             let host = std::thread::Builder::new()
                 .name("workers-async".into())
-                .spawn(move || async_worker_loop(w, f, m, s, tasks))
+                .spawn(move || async_worker_loop(w, f, m, s, worker_slots, sup))
                 .expect("spawn async worker host");
             vec![host]
         } else {
@@ -122,27 +215,72 @@ impl Server {
                 .map(|i| {
                     let (w, m, s) = (work.clone(), metrics.clone(), stop_workers.clone());
                     let f = engine_factory.clone();
+                    let sup = supervision.clone();
                     std::thread::Builder::new()
                         .name(format!("worker-{i}"))
-                        .spawn(move || worker_loop(w, f, m, s))
+                        .spawn(move || supervised_worker_loop(i, w, f, m, s, sup))
                         .expect("spawn worker")
                 })
                 .collect()
+        };
+        let monitor = {
+            let (sup, m, s) = (supervision.clone(), metrics.clone(), stop_workers.clone());
+            Some(
+                std::thread::Builder::new()
+                    .name("worker-monitor".into())
+                    .spawn(move || monitor_loop(sup, m, s))
+                    .expect("spawn monitor"),
+            )
         };
 
         Server {
             router,
             work,
             metrics,
+            supervision,
             stop_batchers,
             stop_workers,
             batchers,
             workers,
+            monitor,
+            max_inflight: cfg.max_inflight,
+            default_deadline: cfg.default_deadline,
             next_id: AtomicU64::new(1),
         }
     }
 
-    /// Submit a request; returns the slot to wait on.
+    /// Whether the in-flight depth (`submitted − completed`) is at the
+    /// admission limit. Approximate under concurrency, exact enough for
+    /// load shedding.
+    fn over_depth(&self, adding: u64) -> bool {
+        match self.max_inflight {
+            None => false,
+            Some(depth) => {
+                let submitted = self.metrics.submitted.load(Ordering::Relaxed);
+                let completed = self.metrics.completed.load(Ordering::Relaxed);
+                submitted.saturating_sub(completed) + adding > depth as u64
+            }
+        }
+    }
+
+    /// Build a request carrying the server-default deadline.
+    fn make_request(&self, features: Vec<f32>, slot: Arc<ResponseSlot>) -> InferRequest {
+        let now = Instant::now();
+        InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            features,
+            submitted_at: now,
+            deadline: self.default_deadline.map(|d| now + d),
+            slot,
+        }
+    }
+
+    /// Submit a request; returns the slot to wait on, or
+    /// [`SubmitError::Overloaded`] when admission control sheds it
+    /// (in-flight depth at [`ServerConfig::max_inflight`], or the
+    /// shard queue rejected the push). A shed request was never
+    /// enqueued and counts in [`Metrics::shed`], not
+    /// [`Metrics::submitted`].
     ///
     /// # Examples
     ///
@@ -157,44 +295,70 @@ impl Server {
     ///         as Box<dyn InferenceEngine>)
     /// });
     /// let server = Server::start(ServerConfig::default(), factory);
-    /// let slot = server.submit(vec![2.0, 4.0]);
+    /// let slot = server.submit(vec![2.0, 4.0]).expect("admitted");
     /// let resp = slot.wait_timeout(Duration::from_secs(20)).expect("response");
     /// assert_eq!(resp.output, vec![3.0]); // mean of [2, 4]
     /// server.shutdown();
     /// ```
-    pub fn submit(&self, features: Vec<f32>) -> Arc<ResponseSlot> {
+    pub fn submit(&self, features: Vec<f32>) -> Result<Arc<ResponseSlot>, SubmitError> {
+        if self.over_depth(1) {
+            self.metrics.record_shed();
+            return Err(SubmitError::Overloaded);
+        }
         let slot = ResponseSlot::new();
-        let req = InferRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
-            features,
-            submitted_at: std::time::Instant::now(),
-            slot: slot.clone(),
-        };
-        self.metrics.record_submit();
-        self.router.route(req);
-        slot
+        let req = self.make_request(features, slot.clone());
+        match self.router.route(req) {
+            Ok(_) => {
+                self.metrics.record_submit();
+                Ok(slot)
+            }
+            Err(_rejected) => {
+                self.metrics.record_shed();
+                Err(SubmitError::Overloaded)
+            }
+        }
     }
 
     /// Submit a whole batch of requests through the router's batch
     /// fan-in ([`Router::route_many`]): one CMP cycle RMW and one tail
     /// CAS per shard touched, instead of per request. Returns the slots
-    /// in submission order.
-    pub fn submit_batch(&self, features_list: Vec<Vec<f32>>) -> Vec<Arc<ResponseSlot>> {
+    /// in submission order, or [`SubmitError::Overloaded`] when the
+    /// whole batch is shed at admission.
+    ///
+    /// If a shard rejects its group after admission (bounded capacity /
+    /// injected fault), those requests' slots resolve immediately with
+    /// [`InferError::Rejected`] — the call still returns `Ok` and no
+    /// slot strands.
+    pub fn submit_batch(
+        &self,
+        features_list: Vec<Vec<f32>>,
+    ) -> Result<Vec<Arc<ResponseSlot>>, SubmitError> {
+        let wanted = features_list.len() as u64;
+        if self.over_depth(wanted) {
+            self.metrics.shed.fetch_add(wanted, Ordering::Relaxed);
+            return Err(SubmitError::Overloaded);
+        }
         let mut slots = Vec::with_capacity(features_list.len());
         let mut reqs = Vec::with_capacity(features_list.len());
         for features in features_list {
             let slot = ResponseSlot::new();
-            reqs.push(InferRequest {
-                id: self.next_id.fetch_add(1, Ordering::Relaxed),
-                features,
-                submitted_at: std::time::Instant::now(),
-                slot: slot.clone(),
-            });
-            self.metrics.record_submit();
+            reqs.push(self.make_request(features, slot.clone()));
             slots.push(slot);
         }
-        self.router.route_many(reqs);
-        slots
+        let total = reqs.len() as u64;
+        let rejected = self.router.route_many(reqs);
+        let n_rejected = rejected.len() as u64;
+        for req in rejected {
+            // Never enqueued: resolve the slot explicitly (no metrics
+            // completion — the request was never submitted).
+            let latency = req.submitted_at.elapsed();
+            let nack = InferResponse::nack(req.id, latency, InferError::Rejected);
+            req.slot.complete(nack);
+        }
+        self.metrics.shed.fetch_add(n_rejected, Ordering::Relaxed);
+        let routed = total - n_rejected;
+        self.metrics.submitted.fetch_add(routed, Ordering::Relaxed);
+        Ok(slots)
     }
 
     /// Submit a request and await its response without blocking a
@@ -206,7 +370,8 @@ impl Server {
     ///
     /// The request is routed *before* this returns (submission itself
     /// is cheap and non-blocking); only the wait is deferred, so
-    /// dropping the future abandons the wait, not the request.
+    /// dropping the future abandons the wait, not the request. Shed
+    /// requests return [`SubmitError::Overloaded`] immediately.
     ///
     /// # Examples
     ///
@@ -224,7 +389,7 @@ impl Server {
     /// let server = Arc::new(Server::start(cfg, factory));
     ///
     /// // One-off await:
-    /// let resp = block_on(server.submit_async(vec![1.0, 3.0]));
+    /// let resp = block_on(server.submit_async(vec![1.0, 3.0]).expect("admitted"));
     /// assert_eq!(resp.output, vec![4.0]); // mean 2 × scale 2
     ///
     /// // Or many concurrent in-flight requests on one client thread:
@@ -232,20 +397,26 @@ impl Server {
     /// for i in 0..8u32 {
     ///     let server = server.clone();
     ///     ex.spawn(async move {
-    ///         let r = server.submit_async(vec![i as f32, i as f32]).await;
+    ///         let fut = server.submit_async(vec![i as f32, i as f32]).expect("admitted");
+    ///         let r = fut.await;
     ///         assert_eq!(r.output, vec![i as f32 * 2.0]);
     ///     });
     /// }
     /// ex.run();
     /// Arc::try_unwrap(server).ok().unwrap().shutdown();
     /// ```
-    pub fn submit_async(&self, features: Vec<f32>) -> ResponseFuture {
-        self.submit(features).wait_async()
+    pub fn submit_async(&self, features: Vec<f32>) -> Result<ResponseFuture, SubmitError> {
+        Ok(self.submit(features)?.wait_async())
     }
 
-    /// Convenience: submit and block for the response.
+    /// Convenience: submit and block for the response. `None` on shed,
+    /// timeout, or a NACK/engine failure (all of which deliver empty
+    /// output).
     pub fn infer_blocking(&self, features: Vec<f32>, timeout: Duration) -> Option<Vec<f32>> {
-        self.submit(features).wait_timeout(timeout).map(|r| r.output)
+        self.submit(features)
+            .ok()?
+            .wait_timeout(timeout)
+            .map(|r| r.output)
     }
 
     /// Pipeline metrics (counters + end-to-end latency histogram).
@@ -258,6 +429,17 @@ impl Server {
         &self.router
     }
 
+    /// Worker supervision state (restart counts, heartbeats).
+    pub fn supervision(&self) -> &Supervision {
+        &self.supervision
+    }
+
+    /// Whether any supervised stage has been abandoned — the server
+    /// still serves what it can, at reduced capacity.
+    pub fn is_degraded(&self) -> bool {
+        self.metrics.is_degraded()
+    }
+
     /// Nodes retained by the work queue's CMP pool (telemetry).
     pub fn work_queue_footprint(&self) -> u64 {
         self.work.footprint_nodes()
@@ -267,18 +449,62 @@ impl Server {
     /// is pending), then workers — each stage's parked threads are woken
     /// explicitly so shutdown never waits out a park slice. All queues
     /// are fully drained before the corresponding threads exit.
-    pub fn shutdown(mut self) -> Arc<Metrics> {
+    ///
+    /// A panicked stage is *reported* in the [`ShutdownReport`] instead
+    /// of re-panicking the caller mid-drain, and a residual drain NACKs
+    /// ([`InferError::ShuttingDown`]) anything a dead stage left queued
+    /// — every submitted request resolves, whatever happened to the
+    /// threads serving it.
+    pub fn shutdown(mut self) -> ShutdownReport {
         self.stop_batchers.store(true, Ordering::Release);
         self.router.wake_all();
         for b in self.batchers.drain(..) {
-            b.join().expect("batcher panicked");
+            if b.join().is_err() {
+                // Escaped the batcher's own supervision (it should not)
+                // — count it rather than re-panic mid-shutdown.
+                self.metrics.record_batcher_panic();
+            }
         }
         self.stop_workers.store(true, Ordering::Release);
         self.work.wake_consumers();
         for w in self.workers.drain(..) {
-            w.join().expect("worker panicked");
+            if w.join().is_err() {
+                self.metrics.record_worker_panic();
+            }
         }
-        self.metrics.clone()
+        if let Some(m) = self.monitor.take() {
+            let _ = m.join();
+        }
+        // Residual drain: a dead batcher leaves requests on its shard,
+        // a dead worker fleet leaves batches on the work queue. NACK
+        // them all — conservation over stranding.
+        let mut drained_nacks = 0u64;
+        for i in 0..self.router.shard_count() {
+            while let Some(req) = self.router.drain_one(i) {
+                drained_nacks += 1;
+                let latency = req.submitted_at.elapsed();
+                if req.slot.complete(InferResponse::nack(
+                    req.id,
+                    latency,
+                    InferError::ShuttingDown,
+                )) {
+                    self.metrics.record_nack(latency);
+                }
+            }
+        }
+        while let Some(batch) = self.work.pop() {
+            drained_nacks += batch.requests.len() as u64;
+            nack_batch(batch, &self.metrics, InferError::ShuttingDown);
+        }
+        ShutdownReport {
+            worker_panics: self.metrics.worker_panics.load(Ordering::Relaxed),
+            batcher_panics: self.metrics.batcher_panics.load(Ordering::Relaxed),
+            workers_dead: self.metrics.workers_dead.load(Ordering::Relaxed),
+            batchers_dead: self.metrics.batchers_dead.load(Ordering::Relaxed),
+            drained_nacks,
+            degraded: self.metrics.is_degraded(),
+            metrics: self.metrics.clone(),
+        }
     }
 }
 
@@ -314,15 +540,17 @@ mod tests {
         );
         let mut slots = Vec::new();
         for i in 0..50u32 {
-            slots.push((i, server.submit(vec![i as f32, i as f32])));
+            let slot = server.submit(vec![i as f32, i as f32]).expect("admitted");
+            slots.push((i, slot));
         }
         for (i, s) in &slots {
             let r = s.wait_timeout(Duration::from_secs(20)).expect("response");
             assert_eq!(r.output, vec![*i as f32 * 2.0]);
         }
-        let metrics = server.shutdown();
-        assert_eq!(metrics.completed.load(Ordering::Relaxed), 50);
-        assert!(metrics.latency_summary().count >= 50);
+        let report = server.shutdown();
+        assert!(report.clean());
+        assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 50);
+        assert!(report.metrics.latency_summary().count >= 50);
     }
 
     #[test]
@@ -339,12 +567,14 @@ mod tests {
             },
             echo_factory(),
         );
-        let slots: Vec<_> = (0..5).map(|i| server.submit(vec![i as f32, 0.0])).collect();
-        let metrics = server.shutdown();
+        let slots: Vec<_> = (0..5)
+            .map(|i| server.submit(vec![i as f32, 0.0]).expect("admitted"))
+            .collect();
+        let report = server.shutdown();
         for s in slots {
             assert!(s.try_take().is_some(), "drained at shutdown");
         }
-        assert_eq!(metrics.completed.load(Ordering::Relaxed), 5);
+        assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 5);
     }
 
     #[test]
@@ -362,14 +592,14 @@ mod tests {
             echo_factory(),
         );
         let feats: Vec<Vec<f32>> = (0..40u32).map(|i| vec![i as f32, i as f32]).collect();
-        let slots = server.submit_batch(feats);
+        let slots = server.submit_batch(feats).expect("admitted");
         assert_eq!(slots.len(), 40);
         for (i, s) in slots.iter().enumerate() {
             let r = s.wait_timeout(Duration::from_secs(20)).expect("response");
             assert_eq!(r.output, vec![i as f32 * 2.0]);
         }
-        let metrics = server.shutdown();
-        assert_eq!(metrics.completed.load(Ordering::Relaxed), 40);
+        let report = server.shutdown();
+        assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 40);
     }
 
     #[test]
@@ -389,14 +619,16 @@ mod tests {
         );
         let mut slots = Vec::new();
         for i in 0..30u32 {
-            slots.push((i, server.submit(vec![i as f32, i as f32])));
+            let slot = server.submit(vec![i as f32, i as f32]).expect("admitted");
+            slots.push((i, slot));
         }
         for (i, s) in &slots {
             let r = s.wait_timeout(Duration::from_secs(20)).expect("response");
             assert_eq!(r.output, vec![*i as f32 * 2.0]);
         }
-        let metrics = server.shutdown();
-        assert_eq!(metrics.completed.load(Ordering::Relaxed), 30);
+        let report = server.shutdown();
+        assert!(report.clean());
+        assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 30);
     }
 
     #[test]
@@ -420,16 +652,17 @@ mod tests {
             let server = server.clone();
             let done = done.clone();
             ex.spawn(async move {
-                let r = server.submit_async(vec![i as f32, i as f32]).await;
+                let fut = server.submit_async(vec![i as f32, i as f32]).expect("admitted");
+                let r = fut.await;
                 assert_eq!(r.output, vec![i as f32 * 2.0]);
                 done.fetch_add(1, Ordering::Relaxed);
             });
         }
         ex.run();
         assert_eq!(done.load(Ordering::Relaxed), 16);
-        let server = Arc::try_unwrap(server).ok().expect("executor done");
-        let metrics = server.shutdown();
-        assert_eq!(metrics.completed.load(Ordering::Relaxed), 16);
+        let server = Arc::try_unwrap(server).ok().unwrap();
+        let report = server.shutdown();
+        assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 16);
     }
 
     #[test]
@@ -440,5 +673,178 @@ mod tests {
             .expect("response");
         assert_eq!(out, vec![8.0]); // mean 4 × scale 2
         server.shutdown();
+    }
+
+    /// Engine whose `infer` blocks until released (admission tests).
+    struct GatedEngine {
+        gate: Arc<AtomicBool>,
+    }
+
+    impl InferenceEngine for GatedEngine {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn features_per_row(&self) -> usize {
+            2
+        }
+        fn outputs_per_row(&self) -> usize {
+            1
+        }
+        fn infer(&self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+            while !self.gate.load(Ordering::Acquire) {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Ok(vec![input[0]])
+        }
+    }
+
+    #[test]
+    fn overload_sheds_and_recovers() {
+        let gate = Arc::new(AtomicBool::new(false));
+        let factory: EngineFactory = {
+            let gate = gate.clone();
+            Arc::new(move || {
+                Ok(Box::new(GatedEngine { gate: gate.clone() }) as Box<dyn InferenceEngine>)
+            })
+        };
+        let server = Server::start(
+            ServerConfig {
+                shards: 1,
+                workers: 1,
+                max_inflight: Some(4),
+                batch_policy: BatchPolicy {
+                    max_batch: 1,
+                    max_wait: Duration::from_millis(1),
+                },
+                ..ServerConfig::default()
+            },
+            factory,
+        );
+        // Fill the admission window while the engine is gated shut.
+        let admitted: Vec<_> = (0..4)
+            .map(|i| server.submit(vec![i as f32, 0.0]).expect("under the limit"))
+            .collect();
+        assert!(
+            matches!(server.submit(vec![9.0, 0.0]), Err(SubmitError::Overloaded)),
+            "depth 4 reached"
+        );
+        assert!(server.metrics().shed.load(Ordering::Relaxed) >= 1);
+        // Release the engine: admitted load completes, depth drops,
+        // and new submits are admitted again.
+        gate.store(true, Ordering::Release);
+        for s in &admitted {
+            assert!(s.wait_timeout(Duration::from_secs(30)).is_some());
+        }
+        let slot = server.submit(vec![7.0, 0.0]).expect("readmitted after drain");
+        let served = slot.wait_timeout(Duration::from_secs(30)).expect("served");
+        assert_eq!(served.output, vec![7.0]);
+        let report = server.shutdown();
+        assert_eq!(
+            report.metrics.submitted.load(Ordering::Relaxed),
+            report.metrics.completed.load(Ordering::Relaxed),
+            "conservation"
+        );
+    }
+
+    #[test]
+    fn default_deadline_expires_to_nack() {
+        let server = Server::start(
+            ServerConfig {
+                shards: 1,
+                workers: 1,
+                // Already expired at submit: triaged at the first
+                // checkpoint (batcher flush), never reaches the engine.
+                default_deadline: Some(Duration::ZERO),
+                batch_policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                ..ServerConfig::default()
+            },
+            echo_factory(),
+        );
+        let slot = server.submit(vec![1.0, 1.0]).expect("admitted");
+        let resp = slot.wait_timeout(Duration::from_secs(20)).expect("resolved");
+        assert_eq!(resp.error, Some(InferError::DeadlineExceeded));
+        let report = server.shutdown();
+        assert_eq!(report.metrics.deadline_expired.load(Ordering::Relaxed), 1);
+        let completed = report.metrics.completed.load(Ordering::Relaxed);
+        assert_eq!(completed, 1, "conservation");
+    }
+
+    /// Engine that panics on the first `infer` across all instances
+    /// (the flag outlives the engine, so the respawned worker's fresh
+    /// engine serves normally).
+    struct PanicOnceEngine {
+        tripped: Arc<AtomicBool>,
+    }
+
+    impl InferenceEngine for PanicOnceEngine {
+        fn batch_size(&self) -> usize {
+            4
+        }
+        fn features_per_row(&self) -> usize {
+            2
+        }
+        fn outputs_per_row(&self) -> usize {
+            1
+        }
+        fn infer(&self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+            if !self.tripped.swap(true, Ordering::SeqCst) {
+                panic!("first inference panics");
+            }
+            Ok(vec![input[0]; 4])
+        }
+    }
+
+    #[test]
+    fn supervised_worker_restarts_after_panic() {
+        let tripped = Arc::new(AtomicBool::new(false));
+        let factory: EngineFactory = {
+            let tripped = tripped.clone();
+            Arc::new(move || {
+                Ok(Box::new(PanicOnceEngine {
+                    tripped: tripped.clone(),
+                }) as Box<dyn InferenceEngine>)
+            })
+        };
+        let server = Server::start(
+            ServerConfig {
+                shards: 1,
+                workers: 1,
+                batch_policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: Duration::from_millis(1),
+                },
+                ..ServerConfig::default()
+            },
+            factory,
+        );
+        // First request: the engine panics mid-batch → NACK, never a
+        // strand, and the supervisor respawns the worker.
+        let s1 = server.submit(vec![1.0, 1.0]).expect("admitted");
+        let r1 = s1
+            .wait_timeout(Duration::from_secs(30))
+            .expect("nack, not strand");
+        assert_eq!(r1.error, Some(InferError::WorkerPanicked));
+        // Second request: served by the respawned worker.
+        let s2 = server.submit(vec![5.0, 5.0]).expect("admitted");
+        let r2 = s2
+            .wait_timeout(Duration::from_secs(30))
+            .expect("served after respawn");
+        assert_eq!(r2.output, vec![5.0]);
+        assert!(
+            !server.is_degraded(),
+            "one panic is inside the restart budget"
+        );
+        let report = server.shutdown();
+        assert_eq!(report.worker_panics, 1);
+        assert!(!report.clean(), "the panic is reported");
+        assert_eq!(report.metrics.worker_restarts.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            report.metrics.submitted.load(Ordering::Relaxed),
+            report.metrics.completed.load(Ordering::Relaxed),
+            "conservation across the panic"
+        );
     }
 }

@@ -1,0 +1,337 @@
+//! Worker supervision: respawn panicked workers with exponential
+//! backoff, cap restarts, detect wedged (non-panicking) workers through
+//! heartbeats, and surface all of it via [`Metrics`].
+//!
+//! The design mirrors the paper's "protection paradox" argument
+//! (§2.3.1/§3.6) one layer up: the CMP queue already tolerates crashed
+//! or stalled *participants* with bounded retention, so the coordinator
+//! must tolerate crashed or stalled *workers* without stranding
+//! requests. Two rules make that composable (DESIGN.md §11):
+//!
+//! 1. **No claim is held across a panic boundary.** A worker claims
+//!    batches from the work queue, and every claimed request is either
+//!    answered or NACKed before the panic propagates to the supervisor
+//!    — the queue-layer protection window never has to cover a dead
+//!    coordinator thread.
+//! 2. **Restarts are bounded.** A persistently-crashing worker (bad
+//!    engine, poisoned input pattern) is abandoned after
+//!    [`SupervisorPolicy::max_restarts`] attempts and the server enters
+//!    a *degraded* mode that is observable ([`Metrics::is_degraded`])
+//!    instead of an invisible hot crash-loop.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::batcher::WorkQueue;
+use super::metrics::Metrics;
+use super::worker::{build_engine, worker_core, EngineFactory};
+
+/// Restart and health-monitoring policy for supervised stages.
+#[derive(Debug, Clone)]
+pub struct SupervisorPolicy {
+    /// Respawns allowed per worker before it is abandoned (degraded
+    /// mode). The count resets never — a flaky-but-recovering worker
+    /// budget, not a rate.
+    pub max_restarts: u32,
+    /// First restart delay; doubles per consecutive restart.
+    pub backoff_base: Duration,
+    /// Ceiling on the restart delay.
+    pub backoff_cap: Duration,
+    /// A Running worker whose last heartbeat is older than this is
+    /// reported as stalled (wedged in the engine, not panicked).
+    pub stall_after: Duration,
+    /// How often the monitor thread re-evaluates heartbeats.
+    pub monitor_period: Duration,
+}
+
+impl Default for SupervisorPolicy {
+    fn default() -> Self {
+        SupervisorPolicy {
+            max_restarts: 8,
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(100),
+            stall_after: Duration::from_secs(1),
+            monitor_period: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Lifecycle of one supervised worker slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum WorkerState {
+    /// Spawned, engine not yet built.
+    Starting = 0,
+    /// In the consume loop, heartbeating.
+    Running = 1,
+    /// Returned cleanly (stop observed, queue drained).
+    Exited = 2,
+    /// Abandoned after exhausting the restart cap.
+    Dead = 3,
+}
+
+/// Health record for one worker slot; all fields are written by the
+/// worker/supervisor and read by the monitor, so everything is atomic.
+struct WorkerHealth {
+    /// Milliseconds since [`Supervision::epoch`] of the last beat,
+    /// plus 1 so that 0 means "never beat".
+    heartbeat_ms: AtomicU64,
+    restarts: AtomicU64,
+    state: AtomicU8,
+}
+
+/// Shared supervision state: one [`WorkerHealth`] per worker slot plus
+/// the policy. Owned by the server, shared with worker threads and the
+/// monitor.
+pub struct Supervision {
+    epoch: Instant,
+    policy: SupervisorPolicy,
+    workers: Vec<WorkerHealth>,
+}
+
+impl Supervision {
+    /// Supervision state for `n` worker slots.
+    pub fn new(n: usize, policy: SupervisorPolicy) -> Self {
+        Supervision {
+            epoch: Instant::now(),
+            policy,
+            workers: (0..n)
+                .map(|_| WorkerHealth {
+                    heartbeat_ms: AtomicU64::new(0),
+                    restarts: AtomicU64::new(0),
+                    state: AtomicU8::new(WorkerState::Starting as u8),
+                })
+                .collect(),
+        }
+    }
+
+    /// The restart/stall policy in force.
+    pub fn policy(&self) -> &SupervisorPolicy {
+        &self.policy
+    }
+
+    /// Number of supervised worker slots.
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Stamp worker `i`'s heartbeat (called every loop iteration; the
+    /// park slice bounds the beat interval well under `stall_after`).
+    pub fn beat(&self, i: usize) {
+        let ms = self.epoch.elapsed().as_millis() as u64 + 1;
+        self.workers[i].heartbeat_ms.store(ms, Ordering::Relaxed);
+    }
+
+    /// Worker `i`'s lifecycle state.
+    pub fn state(&self, i: usize) -> WorkerState {
+        match self.workers[i].state.load(Ordering::Relaxed) {
+            0 => WorkerState::Starting,
+            1 => WorkerState::Running,
+            2 => WorkerState::Exited,
+            _ => WorkerState::Dead,
+        }
+    }
+
+    /// Set worker `i`'s lifecycle state.
+    pub fn set_state(&self, i: usize, s: WorkerState) {
+        self.workers[i].state.store(s as u8, Ordering::Relaxed);
+    }
+
+    /// Count a respawn of worker `i`; returns the new total.
+    pub fn note_restart(&self, i: usize) -> u64 {
+        self.workers[i].restarts.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Respawns of worker `i` so far.
+    pub fn restarts(&self, i: usize) -> u64 {
+        self.workers[i].restarts.load(Ordering::Relaxed)
+    }
+
+    /// Workers abandoned past the restart cap.
+    pub fn dead_count(&self) -> u64 {
+        self.workers
+            .iter()
+            .filter(|w| w.state.load(Ordering::Relaxed) == WorkerState::Dead as u8)
+            .count() as u64
+    }
+
+    /// Running workers whose heartbeat is older than
+    /// [`SupervisorPolicy::stall_after`] — wedged, not panicked.
+    pub fn stalled(&self) -> u64 {
+        let now_ms = self.epoch.elapsed().as_millis() as u64 + 1;
+        let limit = self.policy.stall_after.as_millis() as u64;
+        self.workers
+            .iter()
+            .filter(|w| {
+                let beat = w.heartbeat_ms.load(Ordering::Relaxed);
+                w.state.load(Ordering::Relaxed) == WorkerState::Running as u8
+                    && beat != 0
+                    && now_ms.saturating_sub(beat) > limit
+            })
+            .count() as u64
+    }
+}
+
+/// Backoff before restart attempt `attempt` (1-based): `base × 2^(n−1)`
+/// capped at `backoff_cap`.
+pub(crate) fn restart_backoff(policy: &SupervisorPolicy, attempt: u64) -> Duration {
+    let shift = (attempt.saturating_sub(1)).min(16) as u32;
+    policy
+        .backoff_base
+        .saturating_mul(1u32 << shift)
+        .min(policy.backoff_cap)
+}
+
+/// Sleep up to `dur`, in slices, returning early once `stop` is set —
+/// a backing-off supervisor must not delay shutdown.
+pub(crate) fn sleep_observing_stop(dur: Duration, stop: &AtomicBool) {
+    const SLICE: Duration = Duration::from_millis(5);
+    let deadline = Instant::now() + dur;
+    while !stop.load(Ordering::Acquire) {
+        let now = Instant::now();
+        if now >= deadline {
+            return;
+        }
+        std::thread::sleep((deadline - now).min(SLICE));
+    }
+}
+
+/// Supervised worker slot `idx`: run the worker loop under
+/// `catch_unwind`, respawning on panic (and on engine-build failure)
+/// with exponential backoff until the restart cap is hit, at which
+/// point the slot is marked [`WorkerState::Dead`] and the server
+/// degrades. Claimed requests are NACKed *inside* the worker core
+/// before the panic reaches this frame (rule 1 above), so respawning
+/// never races a stranded slot.
+pub fn supervised_worker_loop(
+    idx: usize,
+    work: WorkQueue,
+    factory: EngineFactory,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    sup: Arc<Supervision>,
+) {
+    loop {
+        let attempt = catch_unwind(AssertUnwindSafe(|| -> anyhow::Result<()> {
+            let engine = build_engine(&factory)?;
+            sup.set_state(idx, WorkerState::Running);
+            sup.beat(idx);
+            worker_core(&work, &*engine, &metrics, &stop, Some((&sup, idx)));
+            Ok(())
+        }));
+        match attempt {
+            Ok(Ok(())) => {
+                sup.set_state(idx, WorkerState::Exited);
+                return;
+            }
+            Ok(Err(e)) => {
+                eprintln!("worker {idx}: engine construction failed: {e:#}");
+            }
+            Err(_) => {
+                metrics.record_worker_panic();
+            }
+        }
+        if stop.load(Ordering::Acquire) {
+            // Shutdown is in progress; the residual drain NACKs
+            // whatever this worker would have claimed.
+            sup.set_state(idx, WorkerState::Exited);
+            return;
+        }
+        let restarts = sup.note_restart(idx);
+        if restarts > sup.policy().max_restarts as u64 {
+            sup.set_state(idx, WorkerState::Dead);
+            metrics.record_worker_dead();
+            eprintln!(
+                "worker {idx}: abandoned after {} restarts — server degraded",
+                restarts - 1
+            );
+            return;
+        }
+        metrics.record_worker_restart();
+        sup.set_state(idx, WorkerState::Starting);
+        sleep_observing_stop(restart_backoff(sup.policy(), restarts), &stop);
+    }
+}
+
+/// Monitor thread: periodically publish the wedged-worker count to the
+/// [`Metrics::workers_stalled`] gauge until `stop` is set.
+pub fn monitor_loop(sup: Arc<Supervision>, metrics: Arc<Metrics>, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Acquire) {
+        metrics.set_stalled(sup.stalled());
+        sleep_observing_stop(sup.policy().monitor_period, &stop);
+    }
+    metrics.set_stalled(sup.stalled());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        let p = SupervisorPolicy {
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(10),
+            ..SupervisorPolicy::default()
+        };
+        assert_eq!(restart_backoff(&p, 1), Duration::from_millis(1));
+        assert_eq!(restart_backoff(&p, 2), Duration::from_millis(2));
+        assert_eq!(restart_backoff(&p, 3), Duration::from_millis(4));
+        assert_eq!(restart_backoff(&p, 4), Duration::from_millis(8));
+        assert_eq!(restart_backoff(&p, 5), Duration::from_millis(10), "capped");
+        assert_eq!(restart_backoff(&p, 60), Duration::from_millis(10), "shift clamped");
+    }
+
+    #[test]
+    fn sleep_observing_stop_exits_early() {
+        let stop = AtomicBool::new(false);
+        let t0 = Instant::now();
+        sleep_observing_stop(Duration::from_millis(5), &stop);
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        stop.store(true, Ordering::Release);
+        let t1 = Instant::now();
+        sleep_observing_stop(Duration::from_secs(10), &stop);
+        assert!(t1.elapsed() < Duration::from_secs(1), "stop short-circuits");
+    }
+
+    #[test]
+    fn state_machine_round_trips() {
+        let sup = Supervision::new(2, SupervisorPolicy::default());
+        assert_eq!(sup.worker_count(), 2);
+        assert_eq!(sup.state(0), WorkerState::Starting);
+        sup.set_state(0, WorkerState::Running);
+        assert_eq!(sup.state(0), WorkerState::Running);
+        sup.set_state(0, WorkerState::Dead);
+        sup.set_state(1, WorkerState::Exited);
+        assert_eq!(sup.dead_count(), 1);
+        assert_eq!(sup.note_restart(1), 1);
+        assert_eq!(sup.note_restart(1), 2);
+        assert_eq!(sup.restarts(1), 2);
+        assert_eq!(sup.restarts(0), 0);
+    }
+
+    #[test]
+    fn stall_detection_needs_running_and_old_beat() {
+        let sup = Supervision::new(
+            1,
+            SupervisorPolicy {
+                stall_after: Duration::from_millis(20),
+                ..SupervisorPolicy::default()
+            },
+        );
+        // Never beat → not stalled even when Running.
+        sup.set_state(0, WorkerState::Running);
+        assert_eq!(sup.stalled(), 0);
+        sup.beat(0);
+        assert_eq!(sup.stalled(), 0, "fresh beat");
+        std::thread::sleep(Duration::from_millis(40));
+        assert_eq!(sup.stalled(), 1, "beat aged past stall_after");
+        sup.beat(0);
+        assert_eq!(sup.stalled(), 0, "recovered");
+        std::thread::sleep(Duration::from_millis(40));
+        sup.set_state(0, WorkerState::Exited);
+        assert_eq!(sup.stalled(), 0, "only Running workers count");
+    }
+}

@@ -6,6 +6,7 @@
 //! [`crate::runtime::ModelRuntime`] (each worker owns its own PJRT
 //! executable — `PjRtLoadedExecutable` is not `Send`).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -14,7 +15,9 @@ use anyhow::Result;
 
 use super::batcher::{Batch, WorkQueue};
 use super::metrics::Metrics;
-use super::request::InferResponse;
+use super::request::{InferError, InferResponse, ResponseSlot};
+use super::supervisor::{restart_backoff, Supervision, WorkerState};
+use crate::util::executor::sleep_until;
 use crate::util::{Backoff, Executor};
 
 /// Something that can run a fixed-shape batched inference.
@@ -98,6 +101,122 @@ const WORK_POP_BATCH: usize = 4;
 /// slice only bounds stop-latency if a wake were ever missed.
 const WORKER_PARK: Duration = Duration::from_millis(100);
 
+/// Build an engine through `factory`. Carries the
+/// `worker/engine-build` fail point so chaos runs can exercise the
+/// supervisor's build-failure path.
+pub(crate) fn build_engine(factory: &EngineFactory) -> Result<Box<dyn InferenceEngine>> {
+    crate::fail_point!(
+        "worker/engine-build",
+        Err(anyhow::anyhow!("injected engine-build failure"))
+    );
+    factory()
+}
+
+/// NACK every request in `batch` with `err` (idempotently — requests
+/// already completed are skipped and not double-counted). Shared by
+/// the panic paths of worker, batcher and shutdown drain.
+pub(crate) fn nack_batch(batch: Batch, metrics: &Metrics, err: InferError) {
+    for req in batch.requests {
+        let latency = req.submitted_at.elapsed();
+        if req
+            .slot
+            .complete(InferResponse::nack(req.id, latency, err.clone()))
+        {
+            metrics.record_nack(latency);
+        }
+    }
+}
+
+/// Run `batch` under `catch_unwind`: on panic, every request in the
+/// batch that the engine had not already answered is NACKed with
+/// [`InferError::WorkerPanicked`], then the payload is returned so the
+/// caller decides whether to respawn (supervised) or propagate
+/// (unsupervised). A claimed request never strands behind a panic
+/// boundary (DESIGN.md §11).
+pub(crate) fn run_batch_protected(
+    engine: &dyn InferenceEngine,
+    batch: Batch,
+    metrics: &Metrics,
+) -> std::result::Result<(), Box<dyn std::any::Any + Send>> {
+    let meta: Vec<(u64, Instant, Arc<ResponseSlot>)> = batch
+        .requests
+        .iter()
+        .map(|r| (r.id, r.submitted_at, r.slot.clone()))
+        .collect();
+    match catch_unwind(AssertUnwindSafe(|| run_batch(engine, batch, metrics))) {
+        Ok(()) => Ok(()),
+        Err(payload) => {
+            for (id, submitted_at, slot) in meta {
+                let latency = submitted_at.elapsed();
+                if slot.complete(InferResponse::nack(id, latency, InferError::WorkerPanicked)) {
+                    metrics.record_nack(latency);
+                }
+            }
+            Err(payload)
+        }
+    }
+}
+
+/// Drain claimed batches one at a time; on a panic inside any batch,
+/// NACK every *other* still-claimed batch and re-raise the panic —
+/// the claims die with the worker pass, but the requests do not.
+fn drain_inbox(inbox: &mut Vec<Batch>, engine: &dyn InferenceEngine, metrics: &Metrics) {
+    while !inbox.is_empty() {
+        let batch = inbox.remove(0);
+        if let Err(payload) = run_batch_protected(engine, batch, metrics) {
+            for rest in inbox.drain(..) {
+                nack_batch(rest, metrics, InferError::WorkerPanicked);
+            }
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// The consume loop shared by the supervised and unsupervised workers:
+/// claim batches until `stop` is set and the queue is empty, stamping a
+/// heartbeat (when supervised) every iteration — the park slice bounds
+/// the beat interval to [`WORKER_PARK`], well inside the default
+/// stall threshold.
+///
+/// Panics propagate out of this function *after* every claimed request
+/// has been NACKed (see [`run_batch_protected`]).
+pub(crate) fn worker_core(
+    work: &WorkQueue,
+    engine: &dyn InferenceEngine,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+    sup: Option<(&Supervision, usize)>,
+) {
+    let mut inbox: Vec<Batch> = Vec::with_capacity(WORK_POP_BATCH);
+    let mut idle = Backoff::new();
+    loop {
+        if let Some((s, i)) = sup {
+            s.beat(i);
+        }
+        if work.pop_batch_into(WORK_POP_BATCH, &mut inbox) > 0 {
+            idle.reset();
+            drain_inbox(&mut inbox, engine, metrics);
+        } else if stop.load(Ordering::Acquire) {
+            // Re-probe once after observing `stop`: anything claimed
+            // here must still be processed before exiting.
+            if work.pop_batch_into(1, &mut inbox) == 0 {
+                return;
+            }
+            drain_inbox(&mut inbox, engine, metrics);
+        } else if idle.is_yielding() {
+            // Park (lost-wakeup-safe): a push wakes us at once; the
+            // deadline keeps `stop` observed within WORKER_PARK.
+            let deadline = Instant::now() + WORKER_PARK;
+            if work.pop_deadline_batch(WORK_POP_BATCH, &mut inbox, deadline) > 0 {
+                idle.reset();
+                drain_inbox(&mut inbox, engine, metrics);
+            }
+        } else {
+            idle.spin();
+        }
+    }
+}
+
 /// Worker loop: consume batches until `stop` is set and the queue is
 /// empty. Oversized batches (more requests than the model batch) are
 /// split into multiple invocations; undersized ones are zero-padded.
@@ -108,44 +227,19 @@ const WORKER_PARK: Duration = Duration::from_millis(100);
 /// and, once [`Backoff::is_yielding`] reports the spin budget spent,
 /// parks on the work queue's eventcount (DESIGN.md §8) — an idle worker
 /// fleet sleeps in the kernel instead of burning cores.
+///
+/// This is the *unsupervised* entry point: an engine panic still NACKs
+/// every claimed request first, but then propagates and kills the
+/// thread. [`crate::coordinator::supervisor::supervised_worker_loop`]
+/// wraps the same core with catch-and-respawn.
 pub fn worker_loop(
     work: WorkQueue,
     factory: EngineFactory,
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) {
-    let engine = factory().expect("engine construction failed");
-    let mut inbox: Vec<Batch> = Vec::with_capacity(WORK_POP_BATCH);
-    let mut idle = Backoff::new();
-    // Single drain point for every claim branch below, so per-batch
-    // policy (metrics, error handling) lives in one place.
-    let drain = |inbox: &mut Vec<Batch>, idle: &mut Backoff| {
-        idle.reset();
-        for batch in inbox.drain(..) {
-            run_batch(&*engine, batch, &metrics);
-        }
-    };
-    loop {
-        if work.pop_batch_into(WORK_POP_BATCH, &mut inbox) > 0 {
-            drain(&mut inbox, &mut idle);
-        } else if stop.load(Ordering::Acquire) {
-            // Re-probe once after observing `stop`: anything claimed
-            // here must still be processed before exiting.
-            if work.pop_batch_into(1, &mut inbox) == 0 {
-                return;
-            }
-            drain(&mut inbox, &mut idle);
-        } else if idle.is_yielding() {
-            // Park (lost-wakeup-safe): a push wakes us at once; the
-            // deadline keeps `stop` observed within WORKER_PARK.
-            let deadline = Instant::now() + WORKER_PARK;
-            if work.pop_deadline_batch(WORK_POP_BATCH, &mut inbox, deadline) > 0 {
-                drain(&mut inbox, &mut idle);
-            }
-        } else {
-            idle.spin();
-        }
-    }
+    let engine = build_engine(&factory).expect("engine construction failed");
+    worker_core(&work, &*engine, &metrics, &stop, None);
 }
 
 /// Async worker host (DESIGN.md §10): multiplex `tasks` worker tasks
@@ -171,28 +265,78 @@ pub fn async_worker_loop(
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     tasks: usize,
+    sup: Arc<Supervision>,
 ) {
     let mut ex = Executor::new();
-    for _ in 0..tasks.max(1) {
+    for t in 0..tasks.max(1) {
         let work = work.clone();
         let factory = factory.clone();
         let metrics = metrics.clone();
         let stop = stop.clone();
+        let sup = sup.clone();
         ex.spawn(async move {
-            let engine = factory().expect("engine construction failed");
+            // `engine` is None whenever the previous one is suspect
+            // (mid-batch panic) or not yet built; the loop head
+            // rebuilds it under the same restart budget the threaded
+            // supervisor uses, backing off via the shared timer so the
+            // other tasks on this executor keep running.
+            let mut engine: Option<Box<dyn InferenceEngine>> = None;
             let mut inbox: Vec<Batch> = Vec::with_capacity(WORK_POP_BATCH);
             loop {
+                if engine.is_none() {
+                    match catch_unwind(AssertUnwindSafe(|| build_engine(&factory))) {
+                        Ok(Ok(e)) => {
+                            engine = Some(e);
+                            sup.set_state(t, WorkerState::Running);
+                        }
+                        Ok(Err(e)) => {
+                            eprintln!("async worker {t}: engine construction failed: {e:#}");
+                            if !async_respawn_gate(t, &sup, &metrics, &stop).await {
+                                return;
+                            }
+                            continue;
+                        }
+                        Err(_) => {
+                            metrics.record_worker_panic();
+                            if !async_respawn_gate(t, &sup, &metrics, &stop).await {
+                                return;
+                            }
+                            continue;
+                        }
+                    }
+                }
+                let eng = engine.take().expect("built above");
+                sup.beat(t);
                 let deadline = Instant::now() + WORKER_PARK;
                 match work.pop_deadline_async(deadline).await {
                     Some(batch) => {
-                        run_batch(&*engine, batch, &metrics);
                         // Amortized follow-up, as in `worker_loop`:
                         // claim a run of the remaining queued batches
                         // with one cursor/frontier RMW pair instead of
                         // one awaited dequeue each.
                         work.pop_batch_into(WORK_POP_BATCH - 1, &mut inbox);
-                        for b in inbox.drain(..) {
-                            run_batch(&*engine, b, &metrics);
+                        inbox.insert(0, batch);
+                        let mut panicked = false;
+                        while !inbox.is_empty() {
+                            let b = inbox.remove(0);
+                            if run_batch_protected(&*eng, b, &metrics).is_err() {
+                                // NACK the rest of the claim and drop
+                                // the suspect engine; the loop head
+                                // rebuilds (or gives up at the cap).
+                                for rest in inbox.drain(..) {
+                                    nack_batch(rest, &metrics, InferError::WorkerPanicked);
+                                }
+                                metrics.record_worker_panic();
+                                panicked = true;
+                                break;
+                            }
+                        }
+                        if panicked {
+                            if !async_respawn_gate(t, &sup, &metrics, &stop).await {
+                                return;
+                            }
+                        } else {
+                            engine = Some(eng);
                         }
                     }
                     None => {
@@ -201,9 +345,24 @@ pub fn async_worker_loop(
                             // anything claimed here must still be
                             // processed before exiting.
                             match work.pop() {
-                                Some(batch) => run_batch(&*engine, batch, &metrics),
-                                None => return,
+                                Some(batch) => {
+                                    if run_batch_protected(&*eng, batch, &metrics).is_err() {
+                                        // Shutting down anyway: the
+                                        // requests were NACKed; the
+                                        // residual drain owns the rest.
+                                        metrics.record_worker_panic();
+                                        sup.set_state(t, WorkerState::Exited);
+                                        return;
+                                    }
+                                    engine = Some(eng);
+                                }
+                                None => {
+                                    sup.set_state(t, WorkerState::Exited);
+                                    return;
+                                }
                             }
+                        } else {
+                            engine = Some(eng);
                         }
                     }
                 }
@@ -213,12 +372,64 @@ pub fn async_worker_loop(
     ex.run();
 }
 
+/// Restart bookkeeping shared by the async task's failure paths
+/// (engine-build failure and mid-batch panic). Returns `false` when
+/// the task must exit — `stop` was set, or the restart cap was hit
+/// (slot marked Dead, server degraded); on `true` the caller re-enters
+/// its build path after an awaited exponential backoff.
+async fn async_respawn_gate(
+    t: usize,
+    sup: &Supervision,
+    metrics: &Metrics,
+    stop: &AtomicBool,
+) -> bool {
+    if stop.load(Ordering::Acquire) {
+        sup.set_state(t, WorkerState::Exited);
+        return false;
+    }
+    let n = sup.note_restart(t);
+    if n > sup.policy().max_restarts as u64 {
+        sup.set_state(t, WorkerState::Dead);
+        metrics.record_worker_dead();
+        eprintln!(
+            "async worker {t}: abandoned after {} restarts — server degraded",
+            n - 1
+        );
+        return false;
+    }
+    metrics.record_worker_restart();
+    sup.set_state(t, WorkerState::Starting);
+    sleep_until(Instant::now() + restart_backoff(sup.policy(), n)).await;
+    true
+}
+
 fn run_batch(engine: &dyn InferenceEngine, batch: Batch, metrics: &Metrics) {
     let cap = engine.batch_size();
     let fpr = engine.features_per_row();
     let opr = engine.outputs_per_row();
 
-    for chunk in batch.requests.chunks(cap) {
+    // Deadline triage before paying any engine cost: expired requests
+    // are NACKed here (the cheapest point past the queue) and the rest
+    // proceed.
+    let now = Instant::now();
+    let mut live = Vec::with_capacity(batch.requests.len());
+    for req in batch.requests {
+        if req.expired(now) {
+            let latency = req.submitted_at.elapsed();
+            if req.slot.complete(InferResponse::nack(
+                req.id,
+                latency,
+                InferError::DeadlineExceeded,
+            )) {
+                metrics.record_deadline_nack(latency);
+            }
+        } else {
+            live.push(req);
+        }
+    }
+
+    for chunk in live.chunks(cap) {
+        crate::fail_point!("worker/pre-infer");
         let mut input = vec![0.0f32; cap * fpr];
         for (row, req) in chunk.iter().enumerate() {
             let n = req.features.len().min(fpr);
@@ -234,6 +445,7 @@ fn run_batch(engine: &dyn InferenceEngine, batch: Batch, metrics: &Metrics) {
                         output: out[row * opr..(row + 1) * opr].to_vec(),
                         latency,
                         batch_size: chunk.len(),
+                        error: None,
                     });
                     metrics.record_complete(latency, true);
                 }
@@ -247,6 +459,7 @@ fn run_batch(engine: &dyn InferenceEngine, batch: Batch, metrics: &Metrics) {
                         output: Vec::new(),
                         latency,
                         batch_size: chunk.len(),
+                        error: Some(InferError::Engine(format!("{e:#}"))),
                     });
                     metrics.record_complete(latency, false);
                 }
@@ -280,6 +493,7 @@ mod tests {
                 id,
                 features: f,
                 submitted_at: Instant::now(),
+                deadline: None,
                 slot: slot.clone(),
             },
             slot,
@@ -351,10 +565,11 @@ mod tests {
         let work = new_work_queue();
         let metrics = Arc::new(Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
+        let sup = Arc::new(Supervision::new(3, Default::default()));
         let h = {
-            let (w, m, s) = (work.clone(), metrics.clone(), stop.clone());
+            let (w, m, s, sv) = (work.clone(), metrics.clone(), stop.clone(), sup.clone());
             // 3 worker tasks multiplexed over one host thread.
-            std::thread::spawn(move || async_worker_loop(w, echo_factory(), m, s, 3))
+            std::thread::spawn(move || async_worker_loop(w, echo_factory(), m, s, 3, sv))
         };
         let mut slots = Vec::new();
         for i in 0..6 {
@@ -376,6 +591,84 @@ mod tests {
         work.wake_consumers();
         h.join().unwrap();
         assert_eq!(metrics.completed.load(Ordering::Relaxed), 6);
+    }
+
+    /// Engine that panics on every `infer` call.
+    struct PanickingEngine;
+
+    impl InferenceEngine for PanickingEngine {
+        fn batch_size(&self) -> usize {
+            4
+        }
+        fn features_per_row(&self) -> usize {
+            2
+        }
+        fn outputs_per_row(&self) -> usize {
+            1
+        }
+        fn infer(&self, _input: &[f32]) -> Result<Vec<f32>> {
+            panic!("engine exploded");
+        }
+    }
+
+    #[test]
+    fn panicking_engine_nacks_every_claimed_request() {
+        let work = new_work_queue();
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = {
+            let (w, m, s) = (work.clone(), metrics.clone(), stop.clone());
+            let factory: EngineFactory =
+                Arc::new(|| Ok(Box::new(PanickingEngine) as Box<dyn InferenceEngine>));
+            std::thread::spawn(move || worker_loop(w, factory, m, s))
+        };
+        let (r1, s1) = req(1, vec![1.0, 1.0]);
+        let (r2, s2) = req(2, vec![2.0, 2.0]);
+        work.push(Batch {
+            requests: vec![r1, r2],
+            formed_at: Instant::now(),
+        })
+        .ok()
+        .unwrap();
+        // Both slots must resolve as NACKs, not strand.
+        let o1 = s1.wait_timeout(Duration::from_secs(30)).expect("nack, not strand");
+        let o2 = s2.wait_timeout(Duration::from_secs(30)).expect("nack, not strand");
+        assert_eq!(o1.error, Some(InferError::WorkerPanicked));
+        assert_eq!(o2.error, Some(InferError::WorkerPanicked));
+        assert!(o1.output.is_empty());
+        // Unsupervised loop: the panic propagates after the NACKs.
+        assert!(h.join().is_err(), "worker_loop re-raises the panic");
+        assert_eq!(metrics.nacks.load(Ordering::Relaxed), 2);
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 2, "conservation");
+        stop.store(true, Ordering::Release);
+    }
+
+    #[test]
+    fn expired_deadlines_are_nacked_before_inference() {
+        let work = new_work_queue();
+        let metrics = Arc::new(Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let h = {
+            let (w, m, s) = (work.clone(), metrics.clone(), stop.clone());
+            std::thread::spawn(move || worker_loop(w, echo_factory(), m, s))
+        };
+        let (mut r1, s1) = req(1, vec![6.0, 6.0]);
+        r1.deadline = Some(Instant::now() - Duration::from_millis(1)); // already past
+        let (r2, s2) = req(2, vec![4.0, 4.0]);
+        work.push(Batch {
+            requests: vec![r1, r2],
+            formed_at: Instant::now(),
+        })
+        .ok()
+        .unwrap();
+        let o1 = s1.wait_timeout(Duration::from_secs(30)).expect("resolved");
+        let o2 = s2.wait_timeout(Duration::from_secs(30)).expect("resolved");
+        assert_eq!(o1.error, Some(InferError::DeadlineExceeded));
+        assert_eq!(o2.output, vec![40.0, 40.0, 40.0], "live request still served");
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+        assert_eq!(metrics.deadline_expired.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
     }
 
     #[test]

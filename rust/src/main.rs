@@ -7,6 +7,7 @@
 //! repro bench faults    FAULT experiment (stall/crash tolerance)
 //! repro bench all       everything above
 //! repro serve           run the inference pipeline on the AOT model
+//! repro chaos           fault-injection run with conservation check
 //! repro selftest        runtime numerics check against testvec.json
 //! repro demo            quickstart walk-through
 //! ```
@@ -36,6 +37,7 @@ fn main() {
     let code = match cmd {
         "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
+        "chaos" => cmd_chaos(&args),
         "selftest" => cmd_selftest(&args),
         "demo" => cmd_demo(),
         _ => {
@@ -56,6 +58,7 @@ commands:\n  \
 bench <fig1|tables|fig2|faults|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--batch K] [--verbose]\n  \
 bench diff <old.json> <new.json> [--threshold-pct P]   compare two BENCH_throughput.json dumps\n  \
 serve [--requests N] [--clients C] [--shards S] [--workers W] [--idle-ms N] [--async-workers] [--echo]\n  \
+chaos [--requests N] [--clients C] [--seed S] [--p-panic P] [--p-delay P] [--delay-us U] [--max-inflight D]\n  \
 selftest [--artifacts DIR]\n  \
 demo";
 
@@ -296,6 +299,7 @@ fn cmd_serve(args: &Args) -> i32 {
                         (0..128).map(|_| (rng.next_f64() as f32) - 0.5).collect();
                     let out = server
                         .submit(features)
+                        .expect("admitted (no admission limit configured)")
                         .wait_timeout(Duration::from_secs(120))
                         .expect("request timed out");
                     assert!(!out.output.is_empty(), "inference failed");
@@ -334,9 +338,173 @@ fn cmd_serve(args: &Args) -> i32 {
     }
 
     let server = Arc::try_unwrap(server).ok().expect("all clients joined");
-    let metrics = server.shutdown();
-    println!("{}", metrics.report());
+    let report = server.shutdown();
+    println!("{}", report.metrics.report());
     0
+}
+
+/// `repro chaos`: hammer the serving pipeline while fail points inject
+/// worker panics and batcher delays, then check the conservation
+/// invariant — every admitted request resolves (served, engine-failed,
+/// or NACKed), zero strand. Exits nonzero on any stranded slot or a
+/// `submitted != completed` mismatch.
+fn cmd_chaos(args: &Args) -> i32 {
+    use std::sync::atomic::Ordering;
+
+    use cmpq::coordinator::request::InferError;
+    use cmpq::coordinator::supervisor::SupervisorPolicy;
+    use cmpq::util::failpoint as fp;
+
+    if !fp::compiled_in() {
+        eprintln!(
+            "chaos: built without the `failpoints` feature — faults will not fire.\n\
+             rebuild with `cargo run --features failpoints -- chaos` for a real run"
+        );
+    }
+    let n_requests: u64 = args.get_parse("requests", 10_000u64);
+    let n_clients: usize = args.get_parse("clients", 4usize);
+    let seed: u64 = args.get_parse("seed", 42u64);
+    let p_panic: f64 = args.get_parse("p-panic", 0.01f64);
+    let p_delay: f64 = args.get_parse("p-delay", 0.05f64);
+    let delay_us: u64 = args.get_parse("delay-us", 200u64);
+
+    fp::set_seed(seed);
+    fp::arm("worker/pre-infer", fp::FailAction::Panic, p_panic);
+    fp::arm("batcher/flush", fp::FailAction::Delay(delay_us), p_delay);
+
+    // Injected panics are the point of the exercise; keep the default
+    // hook's backtrace spew out of the report. Real (uninjected) panics
+    // still print.
+    let default_hook = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let injected = info
+            .payload()
+            .downcast_ref::<String>()
+            .is_some_and(|s| s.contains("fail point"));
+        if !injected {
+            default_hook(info);
+        }
+    }));
+
+    let cfg = ServerConfig {
+        shards: args.get_parse("shards", 2usize),
+        workers: args.get_parse("workers", 2usize),
+        max_inflight: Some(args.get_parse("max-inflight", 4096usize)),
+        // A chaos run injects panics on purpose — give the supervisor
+        // an effectively unlimited restart budget so the run measures
+        // conservation, not the (separately tested) degradation cap.
+        supervisor: SupervisorPolicy {
+            max_restarts: args.get_parse("max-restarts", 1_000_000u32),
+            ..SupervisorPolicy::default()
+        },
+        ..ServerConfig::default()
+    };
+    eprintln!(
+        "chaos: {n_requests} requests, {n_clients} clients, seed={seed}, \
+         worker/pre-infer=panic:{p_panic}, batcher/flush=delay:{p_delay}:{delay_us}us"
+    );
+    let server = Arc::new(Server::start(cfg, echo_factory()));
+
+    #[derive(Default)]
+    struct Tally {
+        ok: u64,
+        engine_failed: u64,
+        nacked: u64,
+        deadline: u64,
+        shed: u64,
+        stranded: u64,
+    }
+
+    let per_client = (n_requests / n_clients as u64).max(1);
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let mut rng = cmpq::util::XorShift64::new(c as u64 + 1);
+                let mut t = Tally::default();
+                for _ in 0..per_client {
+                    let features: Vec<f32> =
+                        (0..128).map(|_| (rng.next_f64() as f32) - 0.5).collect();
+                    let slot = match server.submit(features) {
+                        Ok(slot) => slot,
+                        Err(_) => {
+                            t.shed += 1;
+                            continue;
+                        }
+                    };
+                    match slot.wait_timeout(Duration::from_secs(60)) {
+                        None => t.stranded += 1,
+                        Some(resp) => match resp.error {
+                            None => t.ok += 1,
+                            Some(InferError::Engine(_)) => t.engine_failed += 1,
+                            Some(InferError::DeadlineExceeded) => t.deadline += 1,
+                            Some(_) => t.nacked += 1,
+                        },
+                    }
+                }
+                t
+            })
+        })
+        .collect();
+    let mut tally = Tally::default();
+    for c in clients {
+        let t = c.join().expect("client panicked");
+        tally.ok += t.ok;
+        tally.engine_failed += t.engine_failed;
+        tally.nacked += t.nacked;
+        tally.deadline += t.deadline;
+        tally.shed += t.shed;
+        tally.stranded += t.stranded;
+    }
+    let elapsed = t0.elapsed();
+    let report = server_shutdown(server);
+    fp::disarm_all();
+
+    println!(
+        "chaos: {} requests in {elapsed:.2?}",
+        per_client * n_clients as u64
+    );
+    println!(
+        "  resolved ok={} engine_failed={} nacked={} deadline={} shed={} stranded={}",
+        tally.ok, tally.engine_failed, tally.nacked, tally.deadline, tally.shed, tally.stranded
+    );
+    for (site, armed, hits, trips) in fp::snapshot() {
+        println!("  fail point {site}: armed={armed} hits={hits} trips={trips}");
+    }
+    println!("  {}", report.metrics.report());
+    println!(
+        "  shutdown: worker_panics={} batcher_panics={} dead={}/{} drained_nacks={} degraded={}",
+        report.worker_panics,
+        report.batcher_panics,
+        report.workers_dead,
+        report.batchers_dead,
+        report.drained_nacks,
+        report.degraded
+    );
+
+    let submitted = report.metrics.submitted.load(Ordering::Relaxed);
+    let completed = report.metrics.completed.load(Ordering::Relaxed);
+    let mut code = 0;
+    if tally.stranded > 0 {
+        eprintln!("chaos FAILED: {} stranded slot(s)", tally.stranded);
+        code = 1;
+    }
+    if submitted != completed {
+        eprintln!(
+            "chaos FAILED: conservation broken (submitted={submitted} completed={completed})"
+        );
+        code = 1;
+    }
+    if code == 0 {
+        println!("chaos OK: conservation holds (submitted={submitted} == completed={completed})");
+    }
+    code
+}
+
+/// Unwrap the last `Arc` handle and shut the server down.
+fn server_shutdown(server: Arc<Server>) -> cmpq::coordinator::server::ShutdownReport {
+    Arc::try_unwrap(server).ok().expect("all clients joined").shutdown()
 }
 
 fn cmd_selftest(args: &Args) -> i32 {

@@ -243,6 +243,10 @@ impl<T: Send + 'static> NodePool<T> {
     /// caller (enqueue) then triggers reclamation and retries (§3.3).
     /// Returns `(ptr, reused)`.
     pub fn alloc(&self) -> Option<(*mut Node<T>, bool)> {
+        // Fault injection: simulate pool exhaustion (`None` is exactly
+        // what a capped pool returns), exercising the caller's
+        // reclaim-and-retry path. Compiles out without `failpoints`.
+        crate::fail_point!("pool/alloc", None);
         // Under the model checker the magazine layer is bypassed: its
         // thread-exit flush (`LocalMagazines::Drop`) runs after the
         // virtual thread deregisters, i.e. *outside* the schedule —

@@ -25,6 +25,9 @@ impl<T: Send + 'static> CmpQueue<T> {
     /// another thread holds the reclaimer slot). Returns the number of
     /// nodes recycled.
     pub fn reclaim(&self) -> u64 {
+        // Fault injection: delay here widens the reclaim/claim race
+        // window (§3.6); panic exercises a reclaimer dying mid-pipeline.
+        crate::fail_point!("cmp/reclaim");
         // Single-reclaimer try-lock (§3.3 Phase 3). `swap` rather than a
         // CAS loop: either we get it or we leave.
         if self.reclaim_busy.swap(true, Ordering::Acquire) {

@@ -1,0 +1,413 @@
+//! Dependency-free fail-point injection (the `fail` crate is not
+//! vendored in this image).
+//!
+//! A *fail point* is a named site in the code — e.g.
+//! `fail_point!("worker/pre-infer")` — where a fault can be injected at
+//! runtime for chaos testing. Each site can be armed with a
+//! [`FailAction`] (panic, delay, or error) and a trigger probability
+//! drawn from the crate's own deterministic [`XorShift64`], either
+//! through the API ([`arm`]) or the [`ENV_VAR`] environment variable.
+//!
+//! Cost model (the whole point of the design):
+//!
+//! * **Without the `failpoints` feature** the [`fail_point!`] macro
+//!   expands to nothing — the site does not exist in the binary.
+//! * **With the feature, nothing armed**: one relaxed atomic load (the
+//!   global armed-site count is zero) and an untaken branch.
+//! * **Armed**: the slow path takes a registry mutex, rolls the
+//!   per-thread PRNG against the site's probability, and performs the
+//!   action. Chaos runs are not benchmarks; this is fine.
+//!
+//! The registry itself is always compiled (it is tiny and lets the
+//! `repro chaos` subcommand and tests link without feature gymnastics);
+//! only the *sites* are feature-gated.
+//!
+//! # Environment arming
+//!
+//! `REPRO_FAILPOINTS` holds a `;`-separated list of
+//! `site=action[:prob[:micros]]` entries, parsed on first use:
+//!
+//! ```text
+//! REPRO_FAILPOINTS='worker/pre-infer=panic:0.01;batcher/flush=delay:0.2:500'
+//! ```
+//!
+//! `action` is one of `off`, `panic`, `error`, `delay`; `prob` defaults
+//! to 1.0; `micros` (delay only) defaults to 100. The PRNG seed can be
+//! pinned with `REPRO_FAILPOINTS_SEED=<u64>` for reproducible
+//! schedules.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::rng::{splitmix64, XorShift64};
+
+/// Environment variable holding the fail-point arming spec.
+pub const ENV_VAR: &str = "REPRO_FAILPOINTS";
+/// Environment variable pinning the injection PRNG seed.
+pub const ENV_SEED: &str = "REPRO_FAILPOINTS_SEED";
+
+/// What an armed fail point does when its probability trips.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FailAction {
+    /// Registered but inert (same behaviour as never-armed).
+    Off,
+    /// Panic at the site — the injected-crash case the supervision
+    /// layer (DESIGN.md §11) must absorb.
+    Panic,
+    /// Sleep for the given number of microseconds — models a stalled
+    /// or wedged participant without killing it.
+    Delay(u64),
+    /// Make the site fail its fallible operation: the two-argument form
+    /// of [`fail_point!`] returns its error expression. At a
+    /// non-fallible (one-argument) site this escalates to a panic so a
+    /// misconfigured schedule is loud, not silent.
+    Error,
+}
+
+struct Site {
+    name: String,
+    action: FailAction,
+    p: f64,
+    hits: u64,
+    trips: u64,
+}
+
+/// Armed-site registry. Locked only on the armed slow path.
+static SITES: Mutex<Vec<Site>> = Mutex::new(Vec::new());
+
+/// Fast-path gate: number of sites whose action is not `Off`.
+/// `UNINIT` forces the first check through env-var initialisation.
+const UNINIT: u64 = u64::MAX;
+static ARMED: AtomicU64 = AtomicU64::new(UNINIT);
+
+/// Seed for the per-thread injection PRNGs ([`set_seed`]).
+static SEED: AtomicU64 = AtomicU64::new(0x5EED_FA17);
+/// Monotonic thread counter: each thread's PRNG stream is
+/// `splitmix64(seed ^ splitmix64(thread_index))`.
+static THREAD_IDX: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static RNG: RefCell<Option<XorShift64>> = const { RefCell::new(None) };
+}
+
+fn with_rng<R>(f: impl FnOnce(&mut XorShift64) -> R) -> R {
+    RNG.with(|cell| {
+        let mut slot = cell.borrow_mut();
+        let rng = slot.get_or_insert_with(|| {
+            let idx = THREAD_IDX.fetch_add(1, Ordering::Relaxed);
+            XorShift64::new(SEED.load(Ordering::Relaxed) ^ splitmix64(idx + 1))
+        });
+        f(rng)
+    })
+}
+
+/// Parse and apply the [`ENV_VAR`]/[`ENV_SEED`] variables exactly once.
+fn init_from_env() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        if let Some(seed) = std::env::var(ENV_SEED).ok().and_then(|s| s.parse().ok()) {
+            SEED.store(seed, Ordering::Relaxed);
+        }
+        match std::env::var(ENV_VAR) {
+            Ok(spec) => {
+                if let Err(e) = apply_spec(&spec) {
+                    eprintln!("failpoints: ignoring malformed {ENV_VAR} entry: {e}");
+                }
+            }
+            Err(_) => {}
+        }
+        recount_locked(&SITES.lock().unwrap());
+    });
+}
+
+/// Recompute the fast-path gate from the registry (caller holds lock).
+fn recount_locked(sites: &[Site]) {
+    let armed = sites.iter().filter(|s| s.action != FailAction::Off).count() as u64;
+    ARMED.store(armed, Ordering::Relaxed);
+}
+
+/// Seed the per-thread injection PRNGs. Call before the first trip on
+/// any thread for a fully reproducible schedule; threads that already
+/// rolled keep their old stream.
+pub fn set_seed(seed: u64) {
+    SEED.store(seed, Ordering::Relaxed);
+}
+
+/// Arm (or re-arm) `site` with `action`, tripping with probability `p`
+/// (clamped to `[0, 1]`). Arming with [`FailAction::Off`] disarms.
+pub fn arm(site: &str, action: FailAction, p: f64) {
+    init_from_env();
+    let p = p.clamp(0.0, 1.0);
+    let mut sites = SITES.lock().unwrap();
+    match sites.iter_mut().find(|s| s.name == site) {
+        Some(s) => {
+            s.action = action;
+            s.p = p;
+        }
+        None => sites.push(Site {
+            name: site.to_string(),
+            action,
+            p,
+            hits: 0,
+            trips: 0,
+        }),
+    }
+    recount_locked(&sites);
+}
+
+/// Disarm `site` (it stays registered so its counters survive).
+pub fn disarm(site: &str) {
+    arm(site, FailAction::Off, 0.0);
+}
+
+/// Disarm every site. Counters are kept; use [`reset`] to wipe them.
+pub fn disarm_all() {
+    init_from_env();
+    let mut sites = SITES.lock().unwrap();
+    for s in sites.iter_mut() {
+        s.action = FailAction::Off;
+    }
+    recount_locked(&sites);
+}
+
+/// Disarm every site and zero all counters (test isolation).
+pub fn reset() {
+    init_from_env();
+    let mut sites = SITES.lock().unwrap();
+    sites.clear();
+    recount_locked(&sites);
+}
+
+/// Apply a `site=action[:prob[:micros]]` spec list (the [`ENV_VAR`]
+/// grammar); entries are `;`-separated. Returns the first parse error.
+pub fn apply_spec(spec: &str) -> Result<(), String> {
+    for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+        let (name, rest) = entry
+            .split_once('=')
+            .ok_or_else(|| format!("{entry:?}: expected site=action"))?;
+        let mut parts = rest.split(':');
+        let kind = parts.next().unwrap_or("");
+        let p: f64 = match parts.next() {
+            Some(s) => s.parse().map_err(|_| format!("{entry:?}: bad probability {s:?}"))?,
+            None => 1.0,
+        };
+        let micros: u64 = match parts.next() {
+            Some(s) => s.parse().map_err(|_| format!("{entry:?}: bad delay {s:?}"))?,
+            None => 100,
+        };
+        let action = match kind {
+            "off" => FailAction::Off,
+            "panic" => FailAction::Panic,
+            "error" => FailAction::Error,
+            "delay" => FailAction::Delay(micros),
+            other => return Err(format!("{entry:?}: unknown action {other:?}")),
+        };
+        arm(name.trim(), action, p);
+    }
+    Ok(())
+}
+
+/// Fail-point check: `None` when the site is disarmed or the
+/// probability did not trip, `Some(action)` when the caller (the
+/// [`fail_point!`] expansion) must perform `action`. Disarmed-registry
+/// fast path is a single relaxed load.
+#[inline]
+pub fn check(site: &str) -> Option<FailAction> {
+    match ARMED.load(Ordering::Relaxed) {
+        0 => None,
+        UNINIT => {
+            init_from_env();
+            check_slow(site)
+        }
+        _ => check_slow(site),
+    }
+}
+
+#[cold]
+fn check_slow(site: &str) -> Option<FailAction> {
+    let mut sites = SITES.lock().unwrap();
+    let s = sites
+        .iter_mut()
+        .find(|s| s.name == site && s.action != FailAction::Off)?;
+    s.hits += 1;
+    let trip = s.p >= 1.0 || with_rng(|rng| rng.chance(s.p));
+    if !trip {
+        return None;
+    }
+    s.trips += 1;
+    Some(s.action)
+}
+
+/// Perform `action` at `site`: panics on [`FailAction::Panic`], sleeps
+/// on [`FailAction::Delay`], and returns `true` iff the caller should
+/// take its error path ([`FailAction::Error`]).
+pub fn perform(site: &str, action: FailAction) -> bool {
+    match action {
+        FailAction::Off => false,
+        FailAction::Panic => panic!("fail point {site:?} fired (injected panic)"),
+        FailAction::Delay(us) => {
+            std::thread::sleep(Duration::from_micros(us));
+            false
+        }
+        FailAction::Error => true,
+    }
+}
+
+/// `(hits, trips)` counters for `site` — hits count armed evaluations,
+/// trips count fired actions. `(0, 0)` for unknown sites.
+pub fn counters(site: &str) -> (u64, u64) {
+    init_from_env();
+    let sites = SITES.lock().unwrap();
+    sites
+        .iter()
+        .find(|s| s.name == site)
+        .map(|s| (s.hits, s.trips))
+        .unwrap_or((0, 0))
+}
+
+/// Snapshot of every registered site: `(name, armed, hits, trips)`.
+/// Feeds the `repro chaos` conservation report.
+pub fn snapshot() -> Vec<(String, bool, u64, u64)> {
+    init_from_env();
+    let sites = SITES.lock().unwrap();
+    sites
+        .iter()
+        .map(|s| (s.name.clone(), s.action != FailAction::Off, s.hits, s.trips))
+        .collect()
+}
+
+/// Whether the crate was built with fail-point sites compiled in.
+pub fn compiled_in() -> bool {
+    cfg!(feature = "failpoints")
+}
+
+/// Mark a fail-point site.
+///
+/// `fail_point!("name")` may panic or delay in place;
+/// `fail_point!("name", expr)` additionally supports the
+/// [`FailAction::Error`] action by `return`ing `expr` from the
+/// enclosing function. Without the `failpoints` feature both forms
+/// expand to nothing (the error expression is not evaluated).
+#[macro_export]
+macro_rules! fail_point {
+    ($name:expr) => {{
+        #[cfg(feature = "failpoints")]
+        {
+            if let Some(__fp_action) = $crate::util::failpoint::check($name) {
+                if $crate::util::failpoint::perform($name, __fp_action) {
+                    panic!(
+                        "fail point {:?} armed with an `error` action at a non-fallible site",
+                        $name
+                    );
+                }
+            }
+        }
+    }};
+    ($name:expr, $ret:expr) => {{
+        #[cfg(feature = "failpoints")]
+        {
+            if let Some(__fp_action) = $crate::util::failpoint::check($name) {
+                if $crate::util::failpoint::perform($name, __fp_action) {
+                    return $ret;
+                }
+            }
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests use synthetic "test/..." site names only: the registry
+    // is process-global and integration tests arm the real sites.
+
+    #[test]
+    fn disarmed_site_never_triggers() {
+        reset();
+        assert_eq!(check("test/unarmed"), None);
+        arm("test/unarmed", FailAction::Off, 1.0);
+        assert_eq!(check("test/unarmed"), None);
+    }
+
+    #[test]
+    fn armed_site_trips_at_p1() {
+        arm("test/p1", FailAction::Delay(1), 1.0);
+        assert_eq!(check("test/p1"), Some(FailAction::Delay(1)));
+        let (hits, trips) = counters("test/p1");
+        assert!(hits >= 1 && trips >= 1);
+        disarm("test/p1");
+        assert_eq!(check("test/p1"), None);
+    }
+
+    #[test]
+    fn probability_zero_never_trips() {
+        arm("test/p0", FailAction::Panic, 0.0);
+        for _ in 0..100 {
+            assert_eq!(check("test/p0"), None);
+        }
+        let (hits, trips) = counters("test/p0");
+        assert!(hits >= 100, "armed checks count as hits: {hits}");
+        assert_eq!(trips, 0);
+        disarm("test/p0");
+    }
+
+    #[test]
+    fn probability_is_roughly_calibrated() {
+        set_seed(7);
+        arm("test/half", FailAction::Error, 0.5);
+        let trips_before = counters("test/half").1;
+        let fired = (0..2000).filter(|_| check("test/half").is_some()).count();
+        assert!((700..1300).contains(&fired), "fired={fired}");
+        assert_eq!(counters("test/half").1 - trips_before, fired as u64);
+        disarm("test/half");
+    }
+
+    #[test]
+    fn spec_grammar_round_trips() {
+        apply_spec("test/spec-a=panic:0.25; test/spec-b=delay:0.5:250 ;test/spec-c=error").unwrap();
+        {
+            let sites = SITES.lock().unwrap();
+            let find = |n: &str| sites.iter().find(|s| s.name == n).unwrap();
+            assert_eq!(find("test/spec-a").action, FailAction::Panic);
+            assert!((find("test/spec-a").p - 0.25).abs() < 1e-12);
+            assert_eq!(find("test/spec-b").action, FailAction::Delay(250));
+            assert_eq!(find("test/spec-c").action, FailAction::Error);
+            assert!((find("test/spec-c").p - 1.0).abs() < 1e-12);
+        }
+        apply_spec("test/spec-a=off;test/spec-b=off;test/spec-c=off").unwrap();
+    }
+
+    #[test]
+    fn spec_rejects_garbage() {
+        assert!(apply_spec("no-equals-sign").is_err());
+        assert!(apply_spec("test/x=explode").is_err());
+        assert!(apply_spec("test/x=panic:notanumber").is_err());
+    }
+
+    #[test]
+    fn perform_semantics() {
+        assert!(!perform("test/x", FailAction::Off));
+        assert!(!perform("test/x", FailAction::Delay(1)));
+        assert!(perform("test/x", FailAction::Error));
+        let p = std::panic::catch_unwind(|| perform("test/x", FailAction::Panic));
+        assert!(p.is_err(), "Panic action must panic");
+    }
+
+    #[test]
+    fn error_action_returns_from_fallible_site() {
+        fn fallible() -> Result<u32, &'static str> {
+            fail_point!("test/fallible", Err("injected"));
+            Ok(7)
+        }
+        // Without the feature the macro is a no-op and this still passes.
+        if cfg!(feature = "failpoints") {
+            arm("test/fallible", FailAction::Error, 1.0);
+            assert_eq!(fallible(), Err("injected"));
+            disarm("test/fallible");
+        }
+        assert_eq!(fallible(), Ok(7));
+    }
+}

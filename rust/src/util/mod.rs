@@ -6,6 +6,7 @@ pub mod backoff;
 pub mod cli;
 pub mod cpu;
 pub mod executor;
+pub mod failpoint;
 pub mod json;
 pub mod rng;
 pub mod time;

@@ -1,0 +1,413 @@
+//! Chaos suite: fault-injection tests for the serving stack
+//! (DESIGN.md §11). Only built with `--features failpoints`; the
+//! driving invariant throughout is *conservation* — every admitted
+//! request resolves (served, engine-failed, or NACKed), zero strand,
+//! whatever the injected faults do to the threads serving it.
+//!
+//! The fail-point registry is process-global, so every test serializes
+//! on [`serial`] and resets the registry on entry and exit.
+
+#![cfg(feature = "failpoints")]
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use cmpq::coordinator::batcher::BatchPolicy;
+use cmpq::coordinator::request::InferError;
+use cmpq::coordinator::server::{Server, ServerConfig, SubmitError};
+use cmpq::coordinator::supervisor::SupervisorPolicy;
+use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+use cmpq::util::failpoint as fp;
+use cmpq::CmpQueue;
+
+static GUARD: Mutex<()> = Mutex::new(());
+
+/// Serialize tests (global fail-point registry) and start clean. A
+/// poisoned lock just means an earlier test failed; the registry reset
+/// below restores the invariant the guard protects.
+fn serial() -> MutexGuard<'static, ()> {
+    let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    fp::reset();
+    g
+}
+
+fn echo_factory() -> EngineFactory {
+    Arc::new(|| {
+        Ok(Box::new(EchoEngine {
+            batch: 8,
+            features: 2,
+            outputs: 1,
+            scale: 2.0,
+        }) as Box<dyn InferenceEngine>)
+    })
+}
+
+/// Queue-layer fail point: an injected allocation error makes `push`
+/// fail deterministically (the bounded-pool failure path) and clears
+/// when disarmed.
+#[test]
+fn pool_alloc_error_fails_push_and_recovers() {
+    let _g = serial();
+    // Construct first: the dummy node allocates through the same site.
+    let q: CmpQueue<u64> = CmpQueue::new();
+    fp::arm("pool/alloc", fp::FailAction::Error, 1.0);
+    assert_eq!(q.push(7), Err(7), "every alloc injected to fail");
+    let (hits, trips) = fp::counters("pool/alloc");
+    assert!(hits >= 1 && trips >= 1, "site evaluated and fired");
+    fp::disarm("pool/alloc");
+    assert_eq!(q.push(7), Ok(()));
+    assert_eq!(q.pop(), Some(7));
+    fp::reset();
+}
+
+/// Router-layer fail point: an injected route error surfaces as
+/// `SubmitError::Overloaded` (shed, never stranded) and service
+/// resumes when disarmed.
+#[test]
+fn route_error_sheds_at_submit() {
+    let _g = serial();
+    let server = Server::start(
+        ServerConfig {
+            shards: 1,
+            workers: 1,
+            batch_policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServerConfig::default()
+        },
+        echo_factory(),
+    );
+    fp::arm("router/route", fp::FailAction::Error, 1.0);
+    assert!(matches!(
+        server.submit(vec![1.0, 1.0]),
+        Err(SubmitError::Overloaded)
+    ));
+    assert_eq!(server.metrics().shed.load(Ordering::Relaxed), 1);
+    fp::disarm("router/route");
+    let slot = server.submit(vec![3.0, 3.0]).expect("admitted after disarm");
+    let resp = slot.wait_timeout(Duration::from_secs(20)).expect("served");
+    assert_eq!(resp.output, vec![6.0]);
+    let report = server.shutdown();
+    assert_eq!(
+        report.metrics.submitted.load(Ordering::Relaxed),
+        report.metrics.completed.load(Ordering::Relaxed),
+        "conservation: the shed request was never submitted"
+    );
+    fp::reset();
+}
+
+/// The tentpole invariant: 10k submissions with workers panicking at
+/// p≈0.01 all resolve — served or NACKed, nothing stranded, and
+/// `submitted == completed` at shutdown.
+#[test]
+fn conservation_under_injected_worker_panics() {
+    let _g = serial();
+    fp::set_seed(42);
+    fp::arm("worker/pre-infer", fp::FailAction::Panic, 0.01);
+    let server = Arc::new(Server::start(
+        ServerConfig {
+            shards: 2,
+            workers: 2,
+            batch_policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            supervisor: SupervisorPolicy {
+                max_restarts: 1_000_000,
+                backoff_base: Duration::from_micros(100),
+                ..SupervisorPolicy::default()
+            },
+            ..ServerConfig::default()
+        },
+        echo_factory(),
+    ));
+    const CLIENTS: usize = 2;
+    const PER_CLIENT: u64 = 5_000;
+    const WAVE: usize = 200; // pipeline submits so batches actually fill
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let (mut ok, mut nacked) = (0u64, 0u64);
+                let mut left = PER_CLIENT;
+                while left > 0 {
+                    let wave = (left as usize).min(WAVE);
+                    let slots: Vec<_> = (0..wave)
+                        .map(|_| server.submit(vec![1.0, 1.0]).expect("no admission limit"))
+                        .collect();
+                    for s in slots {
+                        let resp = s
+                            .wait_timeout(Duration::from_secs(60))
+                            .expect("resolved, not stranded");
+                        if resp.error.is_none() {
+                            ok += 1;
+                        } else {
+                            assert_eq!(resp.error, Some(InferError::WorkerPanicked));
+                            nacked += 1;
+                        }
+                    }
+                    left -= wave as u64;
+                }
+                (ok, nacked)
+            })
+        })
+        .collect();
+    let (mut ok, mut nacked) = (0u64, 0u64);
+    for c in clients {
+        let (o, n) = c.join().expect("client panicked");
+        ok += o;
+        nacked += n;
+    }
+    fp::disarm_all();
+    let total = CLIENTS as u64 * PER_CLIENT;
+    assert_eq!(ok + nacked, total, "every request resolved");
+    let report = server_shutdown(server);
+    let m = &report.metrics;
+    assert_eq!(m.submitted.load(Ordering::Relaxed), total);
+    assert_eq!(
+        m.completed.load(Ordering::Relaxed),
+        total,
+        "conservation under chaos"
+    );
+    assert_eq!(m.nacks.load(Ordering::Relaxed), nacked);
+    assert!(
+        m.worker_panics.load(Ordering::Relaxed) >= 1,
+        "p=0.01 over ~{} batches must fire",
+        total / 8
+    );
+    assert_eq!(
+        report.workers_dead, 0,
+        "restart budget is effectively unlimited"
+    );
+    assert!(!report.degraded);
+    fp::reset();
+}
+
+/// Exhausting the restart cap marks the worker dead, latches degraded
+/// mode (visible through metrics), and shutdown still resolves every
+/// outstanding request via the residual drain.
+#[test]
+fn restart_cap_exhaustion_degrades_and_drains() {
+    let _g = serial();
+    fp::arm("worker/pre-infer", fp::FailAction::Panic, 1.0);
+    let server = Server::start(
+        ServerConfig {
+            shards: 1,
+            workers: 1,
+            batch_policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+            supervisor: SupervisorPolicy {
+                max_restarts: 1,
+                backoff_base: Duration::from_micros(500),
+                ..SupervisorPolicy::default()
+            },
+            ..ServerConfig::default()
+        },
+        echo_factory(),
+    );
+    let mut slots = Vec::new();
+    // Two spaced waves guarantee the worker claims at least two rounds:
+    // panic → restart → panic → past the cap → dead.
+    for wave in 0..2 {
+        for _ in 0..8 {
+            slots.push(server.submit(vec![1.0, 1.0]).expect("admitted"));
+        }
+        if wave == 0 {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics().workers_dead.load(Ordering::Relaxed) == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "worker never hit the restart cap"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(server.is_degraded());
+    let report = server.shutdown();
+    assert_eq!(report.workers_dead, 1);
+    assert!(report.degraded);
+    assert!(!report.clean());
+    for s in &slots {
+        let resp = s.try_take().expect("resolved by NACK or shutdown drain");
+        assert!(
+            matches!(
+                resp.error,
+                Some(InferError::WorkerPanicked) | Some(InferError::ShuttingDown)
+            ),
+            "unexpected resolution: {:?}",
+            resp.error
+        );
+    }
+    let m = &report.metrics;
+    assert_eq!(
+        m.submitted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed),
+        "conservation with a dead worker"
+    );
+    fp::reset();
+}
+
+/// Engine that sleeps per batch, letting a single client outrun the
+/// pipeline and hit the admission limit.
+struct SlowEngine;
+
+impl InferenceEngine for SlowEngine {
+    fn batch_size(&self) -> usize {
+        1
+    }
+    fn features_per_row(&self) -> usize {
+        2
+    }
+    fn outputs_per_row(&self) -> usize {
+        1
+    }
+    fn infer(&self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        std::thread::sleep(Duration::from_millis(5));
+        Ok(vec![input[0]])
+    }
+}
+
+/// Load shedding: above `max_inflight` the server refuses instead of
+/// queueing without bound, and everything it *did* admit still resolves.
+#[test]
+fn shed_under_overload_conserves_admitted_requests() {
+    let _g = serial();
+    let factory: EngineFactory =
+        Arc::new(|| Ok(Box::new(SlowEngine) as Box<dyn InferenceEngine>));
+    let server = Server::start(
+        ServerConfig {
+            shards: 1,
+            workers: 1,
+            max_inflight: Some(4),
+            batch_policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_micros(100),
+            },
+            ..ServerConfig::default()
+        },
+        factory,
+    );
+    const ATTEMPTS: usize = 50;
+    let mut admitted = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..ATTEMPTS {
+        match server.submit(vec![i as f32, 0.0]) {
+            Ok(slot) => admitted.push(slot),
+            Err(SubmitError::Overloaded) => shed += 1,
+        }
+    }
+    assert!(shed > 0, "a 5ms/batch engine cannot keep up with depth 4");
+    for s in &admitted {
+        assert!(
+            s.wait_timeout(Duration::from_secs(30)).is_some(),
+            "admitted requests all resolve"
+        );
+    }
+    let report = server.shutdown();
+    let m = &report.metrics;
+    assert_eq!(m.shed.load(Ordering::Relaxed), shed);
+    assert_eq!(m.submitted.load(Ordering::Relaxed), admitted.len() as u64);
+    assert_eq!(
+        m.submitted.load(Ordering::Relaxed) + shed,
+        ATTEMPTS as u64,
+        "every attempt accounted for exactly once"
+    );
+    assert_eq!(
+        m.submitted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed),
+        "conservation for the admitted subset"
+    );
+    fp::reset();
+}
+
+/// A wedged (not panicked) worker: an injected 1.5s stall stops its
+/// heartbeat long enough for the monitor to flag it, and the gauge
+/// clears once the worker resumes.
+#[test]
+fn stall_detection_flags_wedged_worker() {
+    let _g = serial();
+    fp::arm("worker/pre-infer", fp::FailAction::Delay(1_500_000), 1.0);
+    let server = Server::start(
+        ServerConfig {
+            shards: 1,
+            workers: 1,
+            batch_policy: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_micros(100),
+            },
+            supervisor: SupervisorPolicy {
+                // Well above the worker's 100ms idle-park slice (no
+                // false positives) and well below the injected stall.
+                stall_after: Duration::from_millis(300),
+                monitor_period: Duration::from_millis(10),
+                ..SupervisorPolicy::default()
+            },
+            ..ServerConfig::default()
+        },
+        echo_factory(),
+    );
+    let slot = server.submit(vec![1.0, 1.0]).expect("admitted");
+    let deadline = Instant::now() + Duration::from_millis(1_300);
+    while server.metrics().workers_stalled.load(Ordering::Relaxed) == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "monitor never flagged the wedged worker"
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    fp::disarm_all();
+    let resp = slot
+        .wait_timeout(Duration::from_secs(20))
+        .expect("served after the stall");
+    assert!(resp.error.is_none(), "a stall is not a failure");
+    let report = server.shutdown();
+    assert_eq!(
+        report.workers_dead, 0,
+        "stalls do not consume the restart budget"
+    );
+    fp::reset();
+}
+
+/// Shutdown while a batcher delay is armed: the injected flush delay
+/// slows the drain but every request still resolves before `shutdown`
+/// returns.
+#[test]
+fn shutdown_completes_with_batcher_delays_armed() {
+    let _g = serial();
+    fp::set_seed(7);
+    fp::arm("batcher/flush", fp::FailAction::Delay(2_000), 0.5);
+    let server = Server::start(
+        ServerConfig {
+            shards: 2,
+            workers: 2,
+            batch_policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            ..ServerConfig::default()
+        },
+        echo_factory(),
+    );
+    let slots: Vec<_> = (0..64)
+        .map(|i| server.submit(vec![i as f32, 0.0]).expect("admitted"))
+        .collect();
+    let report = server.shutdown();
+    for s in &slots {
+        assert!(s.try_take().is_some(), "resolved despite delayed flushes");
+    }
+    let m = &report.metrics;
+    assert_eq!(m.submitted.load(Ordering::Relaxed), 64);
+    assert_eq!(m.completed.load(Ordering::Relaxed), 64, "conservation");
+    fp::reset();
+}
+
+/// Unwrap the last handle and shut down (chaos tests share clients).
+fn server_shutdown(server: Arc<Server>) -> cmpq::coordinator::server::ShutdownReport {
+    Arc::try_unwrap(server).ok().expect("all clients joined").shutdown()
+}

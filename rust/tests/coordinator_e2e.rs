@@ -47,6 +47,7 @@ fn pipeline_under_concurrent_clients() {
                     let v = (c * 100 + i) as f32;
                     let out = server
                         .submit(vec![v, v])
+                        .expect("admitted")
                         .wait_timeout(Duration::from_secs(60))
                         .expect("response");
                     assert_eq!(out.output, vec![v * 3.0], "echo engine math");
@@ -58,7 +59,9 @@ fn pipeline_under_concurrent_clients() {
         c.join().unwrap();
     }
     let server = Arc::try_unwrap(server).ok().expect("clients joined");
-    let m = server.shutdown();
+    let report = server.shutdown();
+    assert!(report.clean());
+    let m = &report.metrics;
     assert_eq!(m.completed.load(Ordering::Relaxed), 240);
     assert_eq!(m.failures.load(Ordering::Relaxed), 0);
     let lat = m.latency_summary();
@@ -85,13 +88,19 @@ fn pipeline_routing_policies_all_complete() {
             },
             echo_factory(8, 1, 1),
         );
-        let slots: Vec<_> = (0..60).map(|i| server.submit(vec![i as f32])).collect();
+        let slots: Vec<_> = (0..60)
+            .map(|i| server.submit(vec![i as f32]).expect("admitted"))
+            .collect();
         for (i, s) in slots.iter().enumerate() {
             let out = s.wait_timeout(Duration::from_secs(60)).expect("response");
             assert_eq!(out.output, vec![i as f32 * 3.0], "{policy:?}");
         }
-        let m = server.shutdown();
-        assert_eq!(m.completed.load(Ordering::Relaxed), 60, "{policy:?}");
+        let report = server.shutdown();
+        assert_eq!(
+            report.metrics.completed.load(Ordering::Relaxed),
+            60,
+            "{policy:?}"
+        );
     }
 }
 
@@ -135,6 +144,7 @@ fn pipeline_with_real_model_when_artifacts_exist() {
                         (0..128).map(|k| ((c * 31 + i + k) as f32 * 0.01).sin()).collect();
                     let out = server
                         .submit(features)
+                        .expect("admitted")
                         .wait_timeout(Duration::from_secs(120))
                         .expect("model response");
                     assert_eq!(out.output.len(), 16, "one logit row");
@@ -147,7 +157,7 @@ fn pipeline_with_real_model_when_artifacts_exist() {
         c.join().unwrap();
     }
     let server = Arc::try_unwrap(server).ok().expect("clients joined");
-    let m = server.shutdown();
+    let m = server.shutdown().metrics;
     assert_eq!(m.completed.load(Ordering::Relaxed), 32);
     assert_eq!(m.failures.load(Ordering::Relaxed), 0);
 }

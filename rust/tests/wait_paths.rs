@@ -172,13 +172,14 @@ fn shutdown_while_pipeline_parked() {
     );
     std::thread::sleep(Duration::from_millis(60));
     let t0 = Instant::now();
-    let metrics = server.shutdown();
+    let report = server.shutdown();
     assert!(
         t0.elapsed() < Duration::from_secs(5),
         "shutdown hung on parked threads: {:?}",
         t0.elapsed()
     );
-    assert_eq!(metrics.completed.load(Ordering::Relaxed), 0);
+    assert!(report.clean());
+    assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 0);
 }
 
 #[test]
