@@ -74,9 +74,12 @@ const BATCHER_PARK: Duration = Duration::from_millis(50);
 /// The loop is supervised: a panic inside a collection pass NACKs the
 /// partial batch it was holding ([`InferError::BatcherPanicked`] —
 /// claimed requests never strand) and the pass restarts with
-/// exponential backoff, up to `restart.max_restarts`; past the cap the
+/// exponential backoff, up to `restart.max_restarts`. Past the cap the
 /// shard's batcher is abandoned and the server degrades
-/// ([`Metrics::record_batcher_dead`]).
+/// ([`Metrics::record_batcher_dead`]): the shard leaves routing
+/// rotation ([`Router::mark_dead`]) and this thread becomes a drain
+/// loop that NACKs anything still routed there — a dead shard costs
+/// clients an explicit error, never a hung wait.
 pub fn batcher_loop(
     router: Arc<Router>,
     shard: usize,
@@ -116,14 +119,48 @@ pub fn batcher_loop(
                 restarts += 1;
                 if restarts > restart.max_restarts as u64 {
                     metrics.record_batcher_dead();
+                    router.mark_dead(shard);
                     eprintln!(
-                        "batcher {shard}: abandoned after {} restarts — server degraded",
+                        "batcher {shard}: abandoned after {} restarts — shard out of \
+                         rotation, draining to NACKs; server degraded",
                         restarts - 1
                     );
+                    dead_shard_drain(&router, shard, &stop, &metrics);
                     return;
                 }
                 sleep_observing_stop(restart_backoff(&restart, restarts), &stop);
             }
+        }
+    }
+}
+
+/// Terminal loop for a shard whose batcher was abandoned past the
+/// restart cap. The shard is already out of `pick` rotation
+/// ([`Router::mark_dead`]), but requests routed before the mark — or
+/// routed anyway because every shard is dead — must still resolve, so
+/// this drains the shard and NACKs each request
+/// ([`InferError::BatcherPanicked`]) until `stop` is set and the shard
+/// is empty. Without it, traffic landing on the dead shard would sit
+/// queued until shutdown's residual drain — a hung client for the full
+/// wait timeout, exactly what the robustness layer promises never
+/// happens.
+fn dead_shard_drain(router: &Router, shard: usize, stop: &AtomicBool, metrics: &Metrics) {
+    let mut reqs: Vec<InferRequest> = Vec::new();
+    loop {
+        let deadline = Instant::now() + BATCHER_PARK;
+        let got = router.drain_deadline(shard, 64, &mut reqs, deadline);
+        for req in reqs.drain(..) {
+            let latency = req.submitted_at.elapsed();
+            if req.slot.complete(InferResponse::nack(
+                req.id,
+                latency,
+                InferError::BatcherPanicked,
+            )) {
+                metrics.record_nack(latency);
+            }
+        }
+        if got == 0 && stop.load(Ordering::Acquire) && router.inflight(shard) == 0 {
+            return;
         }
     }
 }

@@ -39,7 +39,9 @@ pub enum InferError {
     /// The worker processing the batch panicked before completing it.
     WorkerPanicked,
     /// The batcher owning the request's shard panicked while it was
-    /// held in a partially-formed batch.
+    /// held in a partially-formed batch — or was abandoned past its
+    /// restart cap, in which case the dead shard's drain loop resolves
+    /// everything routed there with this error.
     BatcherPanicked,
     /// The engine returned an error for the batch (message attached).
     Engine(String),

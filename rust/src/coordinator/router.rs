@@ -3,7 +3,7 @@
 //! pipelines). Sharding bounds contention per queue instance while the
 //! queues themselves stay coordination-free.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -30,6 +30,9 @@ pub struct Router {
     rr: AtomicU64,
     /// In-flight (routed − drained) per shard, for LeastLoaded.
     inflight: Vec<AtomicU64>,
+    /// Shards taken out of rotation ([`Router::mark_dead`]) because
+    /// their batcher was abandoned past the restart cap.
+    dead: Vec<AtomicBool>,
     routed: AtomicU64,
 }
 
@@ -44,6 +47,7 @@ impl Router {
             policy,
             rr: AtomicU64::new(0),
             inflight: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..shards).map(|_| AtomicBool::new(false)).collect(),
             routed: AtomicU64::new(0),
         }
     }
@@ -68,16 +72,35 @@ impl Router {
         self.inflight[i].load(Ordering::Relaxed)
     }
 
+    /// Take shard `i` out of routing rotation — its batcher was
+    /// abandoned past the restart cap, so anything routed there will
+    /// only ever be NACKed by the dead-shard drain. Routing stops
+    /// selecting the shard as long as any live shard remains;
+    /// requests already queued (or raced in) are the drain's to
+    /// resolve.
+    pub fn mark_dead(&self, i: usize) {
+        self.dead[i].store(true, Ordering::Release);
+    }
+
+    /// Whether shard `i` has been taken out of rotation.
+    pub fn is_dead(&self, i: usize) -> bool {
+        self.dead[i].load(Ordering::Acquire)
+    }
+
     fn pick(&self, req: &InferRequest) -> usize {
-        match self.policy {
+        let n = self.shards.len();
+        let first = match self.policy {
             RoutePolicy::RoundRobin => {
-                (self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len() as u64) as usize
+                (self.rr.fetch_add(1, Ordering::Relaxed) % n as u64) as usize
             }
-            RoutePolicy::HashId => (req.id % self.shards.len() as u64) as usize,
+            RoutePolicy::HashId => (req.id % n as u64) as usize,
             RoutePolicy::LeastLoaded => {
                 let mut best = 0;
                 let mut best_load = u64::MAX;
                 for (i, c) in self.inflight.iter().enumerate() {
+                    if self.dead[i].load(Ordering::Relaxed) {
+                        continue;
+                    }
                     let l = c.load(Ordering::Relaxed);
                     if l < best_load {
                         best_load = l;
@@ -86,7 +109,22 @@ impl Router {
                 }
                 best
             }
+        };
+        if !self.dead[first].load(Ordering::Relaxed) {
+            return first;
         }
+        // Dead shard: remap deterministically to the next live one
+        // (keeps HashId sticky on its fallback too). With *every*
+        // shard dead there is nothing better than `first` — the dead
+        // shard's drain loop NACKs, so clients still get an explicit
+        // error instead of a hung wait.
+        for k in 1..n {
+            let s = (first + k) % n;
+            if !self.dead[s].load(Ordering::Relaxed) {
+                return s;
+            }
+        }
+        first
     }
 
     /// Route a request onto its shard queue. Returns the shard index,
@@ -342,6 +380,39 @@ mod tests {
         }
         r.wake_all();
         assert_eq!(h.join().unwrap(), 0, "woken onto an empty shard");
+    }
+
+    #[test]
+    fn dead_shards_are_skipped_by_routing() {
+        let r = Router::new(3, RoutePolicy::RoundRobin, CmpConfig::default());
+        r.mark_dead(1);
+        assert!(r.is_dead(1));
+        let mut counts = [0u32; 3];
+        for i in 0..30 {
+            counts[r.route(req(i)).ok().unwrap()] += 1;
+        }
+        assert_eq!(counts[1], 0, "dead shard out of rotation");
+        assert_eq!(counts[0] + counts[2], 30);
+
+        // HashId remaps deterministically to the next live shard.
+        let r = Router::new(3, RoutePolicy::HashId, CmpConfig::default());
+        r.mark_dead(1);
+        assert_eq!(r.route(req(7)).ok(), Some(2), "7 % 3 == 1 is dead → 2");
+        assert_eq!(r.route(req(7)).ok(), Some(2), "remap is sticky");
+
+        // LeastLoaded never scans a dead shard, even at zero load.
+        let r = Router::new(2, RoutePolicy::LeastLoaded, CmpConfig::default());
+        r.mark_dead(0);
+        for i in 0..4 {
+            assert_eq!(r.route(req(i)).ok(), Some(1));
+        }
+
+        // All shards dead: requests still route somewhere (the dead
+        // shard's drain loop NACKs them — explicit error, no hang).
+        let r = Router::new(2, RoutePolicy::RoundRobin, CmpConfig::default());
+        r.mark_dead(0);
+        r.mark_dead(1);
+        assert!(r.route(req(1)).is_ok(), "all-dead fallback still enqueues");
     }
 
     #[test]

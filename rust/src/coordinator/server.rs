@@ -49,6 +49,13 @@ pub struct ServerConfig {
     /// [`SubmitError::Overloaded`] while `submitted − completed` is at
     /// or above this. `None` (default) admits everything — queue depth
     /// is unbounded, as before.
+    ///
+    /// Admission is all-or-nothing per call: [`Server::submit_batch`]
+    /// is admitted only when the *entire* batch fits in the remaining
+    /// headroom, so a single batch with more than `max_inflight`
+    /// requests can never be admitted, even on an idle server. Split
+    /// client batches below the limit (or raise it) when batching
+    /// through a depth-limited server.
     pub max_inflight: Option<usize>,
     /// Deadline attached to every request relative to its submit time;
     /// batcher and worker NACK expired requests
@@ -307,12 +314,16 @@ impl Server {
         }
         let slot = ResponseSlot::new();
         let req = self.make_request(features, slot.clone());
+        // `submitted` is incremented *before* the route and rolled back
+        // on rejection — mirroring `Router::route`'s inflight gauge —
+        // so a worker completing the request at once can never make a
+        // concurrent `over_depth` read `submitted < completed` and
+        // transiently bypass admission control.
+        self.metrics.record_submit();
         match self.router.route(req) {
-            Ok(_) => {
-                self.metrics.record_submit();
-                Ok(slot)
-            }
+            Ok(_) => Ok(slot),
             Err(_rejected) => {
+                self.metrics.submitted.fetch_sub(1, Ordering::Relaxed);
                 self.metrics.record_shed();
                 Err(SubmitError::Overloaded)
             }
@@ -323,7 +334,10 @@ impl Server {
     /// fan-in ([`Router::route_many`]): one CMP cycle RMW and one tail
     /// CAS per shard touched, instead of per request. Returns the slots
     /// in submission order, or [`SubmitError::Overloaded`] when the
-    /// whole batch is shed at admission.
+    /// whole batch is shed at admission. Admission is all-or-nothing:
+    /// the batch must fit entirely in the remaining
+    /// [`ServerConfig::max_inflight`] headroom, so a batch larger than
+    /// the depth itself is always shed (split it client-side).
     ///
     /// If a shard rejects its group after admission (bounded capacity /
     /// injected fault), those requests' slots resolve immediately with
@@ -346,6 +360,12 @@ impl Server {
             slots.push(slot);
         }
         let total = reqs.len() as u64;
+        // Pre-increment for the whole batch, rolled back for rejected
+        // groups — same `over_depth` race as `submit`: counting after
+        // `route_many` would let a fast worker drive `completed` past
+        // `submitted` and open the admission gate to concurrent
+        // submitters.
+        self.metrics.submitted.fetch_add(total, Ordering::Relaxed);
         let rejected = self.router.route_many(reqs);
         let n_rejected = rejected.len() as u64;
         for req in rejected {
@@ -355,9 +375,8 @@ impl Server {
             let nack = InferResponse::nack(req.id, latency, InferError::Rejected);
             req.slot.complete(nack);
         }
+        self.metrics.submitted.fetch_sub(n_rejected, Ordering::Relaxed);
         self.metrics.shed.fetch_add(n_rejected, Ordering::Relaxed);
-        let routed = total - n_rejected;
-        self.metrics.submitted.fetch_add(routed, Ordering::Relaxed);
         Ok(slots)
     }
 

@@ -41,6 +41,15 @@ pub struct SupervisorPolicy {
     pub backoff_cap: Duration,
     /// A Running worker whose last heartbeat is older than this is
     /// reported as stalled (wedged in the engine, not panicked).
+    ///
+    /// Size this above the worst-case *single* engine invocation:
+    /// workers beat between claimed batches and between model-batch
+    /// chunks, but cannot beat inside `InferenceEngine::infer`, so one
+    /// legitimate inference longer than this reads as a (transient)
+    /// stall — the gauge clears on the next beat. In async worker mode
+    /// every task shares one host thread, so one task wedged in its
+    /// engine stalls the *other* tasks' beats too and the gauge can
+    /// briefly report the whole fleet.
     pub stall_after: Duration,
     /// How often the monitor thread re-evaluates heartbeats.
     pub monitor_period: Duration,

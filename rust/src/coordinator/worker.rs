@@ -137,13 +137,14 @@ pub(crate) fn run_batch_protected(
     engine: &dyn InferenceEngine,
     batch: Batch,
     metrics: &Metrics,
+    sup: Option<(&Supervision, usize)>,
 ) -> std::result::Result<(), Box<dyn std::any::Any + Send>> {
     let meta: Vec<(u64, Instant, Arc<ResponseSlot>)> = batch
         .requests
         .iter()
         .map(|r| (r.id, r.submitted_at, r.slot.clone()))
         .collect();
-    match catch_unwind(AssertUnwindSafe(|| run_batch(engine, batch, metrics))) {
+    match catch_unwind(AssertUnwindSafe(|| run_batch(engine, batch, metrics, sup))) {
         Ok(()) => Ok(()),
         Err(payload) => {
             for (id, submitted_at, slot) in meta {
@@ -157,13 +158,23 @@ pub(crate) fn run_batch_protected(
     }
 }
 
-/// Drain claimed batches one at a time; on a panic inside any batch,
-/// NACK every *other* still-claimed batch and re-raise the panic —
-/// the claims die with the worker pass, but the requests do not.
-fn drain_inbox(inbox: &mut Vec<Batch>, engine: &dyn InferenceEngine, metrics: &Metrics) {
+/// Drain claimed batches one at a time, stamping a heartbeat (when
+/// supervised) before each so a long multi-batch drain does not read
+/// as a stall; on a panic inside any batch, NACK every *other*
+/// still-claimed batch and re-raise the panic — the claims die with
+/// the worker pass, but the requests do not.
+fn drain_inbox(
+    inbox: &mut Vec<Batch>,
+    engine: &dyn InferenceEngine,
+    metrics: &Metrics,
+    sup: Option<(&Supervision, usize)>,
+) {
     while !inbox.is_empty() {
+        if let Some((s, i)) = sup {
+            s.beat(i);
+        }
         let batch = inbox.remove(0);
-        if let Err(payload) = run_batch_protected(engine, batch, metrics) {
+        if let Err(payload) = run_batch_protected(engine, batch, metrics, sup) {
             for rest in inbox.drain(..) {
                 nack_batch(rest, metrics, InferError::WorkerPanicked);
             }
@@ -175,8 +186,12 @@ fn drain_inbox(inbox: &mut Vec<Batch>, engine: &dyn InferenceEngine, metrics: &M
 /// The consume loop shared by the supervised and unsupervised workers:
 /// claim batches until `stop` is set and the queue is empty, stamping a
 /// heartbeat (when supervised) every iteration — the park slice bounds
-/// the beat interval to [`WORKER_PARK`], well inside the default
-/// stall threshold.
+/// the idle beat interval to [`WORKER_PARK`], well inside the default
+/// stall threshold. Under load the beat also lands between claimed
+/// batches and between model-batch chunks (see `drain_inbox` /
+/// `run_batch`), so only a *single engine invocation* longer than
+/// `stall_after` reads as a stall — which is exactly the wedged-engine
+/// condition the gauge exists to catch.
 ///
 /// Panics propagate out of this function *after* every claimed request
 /// has been NACKed (see [`run_batch_protected`]).
@@ -195,21 +210,21 @@ pub(crate) fn worker_core(
         }
         if work.pop_batch_into(WORK_POP_BATCH, &mut inbox) > 0 {
             idle.reset();
-            drain_inbox(&mut inbox, engine, metrics);
+            drain_inbox(&mut inbox, engine, metrics, sup);
         } else if stop.load(Ordering::Acquire) {
             // Re-probe once after observing `stop`: anything claimed
             // here must still be processed before exiting.
             if work.pop_batch_into(1, &mut inbox) == 0 {
                 return;
             }
-            drain_inbox(&mut inbox, engine, metrics);
+            drain_inbox(&mut inbox, engine, metrics, sup);
         } else if idle.is_yielding() {
             // Park (lost-wakeup-safe): a push wakes us at once; the
             // deadline keeps `stop` observed within WORKER_PARK.
             let deadline = Instant::now() + WORKER_PARK;
             if work.pop_deadline_batch(WORK_POP_BATCH, &mut inbox, deadline) > 0 {
                 idle.reset();
-                drain_inbox(&mut inbox, engine, metrics);
+                drain_inbox(&mut inbox, engine, metrics, sup);
             }
         } else {
             idle.spin();
@@ -318,8 +333,11 @@ pub fn async_worker_loop(
                         inbox.insert(0, batch);
                         let mut panicked = false;
                         while !inbox.is_empty() {
+                            sup.beat(t);
                             let b = inbox.remove(0);
-                            if run_batch_protected(&*eng, b, &metrics).is_err() {
+                            if run_batch_protected(&*eng, b, &metrics, Some((sup.as_ref(), t)))
+                                .is_err()
+                            {
                                 // NACK the rest of the claim and drop
                                 // the suspect engine; the loop head
                                 // rebuilds (or gives up at the cap).
@@ -346,7 +364,14 @@ pub fn async_worker_loop(
                             // processed before exiting.
                             match work.pop() {
                                 Some(batch) => {
-                                    if run_batch_protected(&*eng, batch, &metrics).is_err() {
+                                    if run_batch_protected(
+                                        &*eng,
+                                        batch,
+                                        &metrics,
+                                        Some((sup.as_ref(), t)),
+                                    )
+                                    .is_err()
+                                    {
                                         // Shutting down anyway: the
                                         // requests were NACKed; the
                                         // residual drain owns the rest.
@@ -403,7 +428,12 @@ async fn async_respawn_gate(
     true
 }
 
-fn run_batch(engine: &dyn InferenceEngine, batch: Batch, metrics: &Metrics) {
+fn run_batch(
+    engine: &dyn InferenceEngine,
+    batch: Batch,
+    metrics: &Metrics,
+    sup: Option<(&Supervision, usize)>,
+) {
     let cap = engine.batch_size();
     let fpr = engine.features_per_row();
     let opr = engine.outputs_per_row();
@@ -429,6 +459,12 @@ fn run_batch(engine: &dyn InferenceEngine, batch: Batch, metrics: &Metrics) {
     }
 
     for chunk in live.chunks(cap) {
+        // Beat per model invocation: an oversized batch split into many
+        // chunks stays visibly alive; only one `infer` call exceeding
+        // `stall_after` can trip the stall gauge.
+        if let Some((s, i)) = sup {
+            s.beat(i);
+        }
         crate::fail_point!("worker/pre-infer");
         let mut input = vec![0.0f32; cap * fpr];
         for (row, req) in chunk.iter().enumerate() {

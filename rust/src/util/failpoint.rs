@@ -104,19 +104,21 @@ fn with_rng<R>(f: impl FnOnce(&mut XorShift64) -> R) -> R {
 }
 
 /// Parse and apply the [`ENV_VAR`]/[`ENV_SEED`] variables exactly once.
+///
+/// Every public registry entry point funnels through here, so the
+/// `Once` closure must never call back into one of them — a reentrant
+/// `Once::call_once` on the same `Once` deadlocks. It therefore uses
+/// the `*_inner` variants, which touch `SITES` directly.
 fn init_from_env() {
     static ONCE: std::sync::Once = std::sync::Once::new();
     ONCE.call_once(|| {
         if let Some(seed) = std::env::var(ENV_SEED).ok().and_then(|s| s.parse().ok()) {
             SEED.store(seed, Ordering::Relaxed);
         }
-        match std::env::var(ENV_VAR) {
-            Ok(spec) => {
-                if let Err(e) = apply_spec(&spec) {
-                    eprintln!("failpoints: ignoring malformed {ENV_VAR} entry: {e}");
-                }
+        if let Ok(spec) = std::env::var(ENV_VAR) {
+            if let Err(e) = apply_spec_inner(&spec) {
+                eprintln!("failpoints: ignoring malformed {ENV_VAR} entry: {e}");
             }
-            Err(_) => {}
         }
         recount_locked(&SITES.lock().unwrap());
     });
@@ -139,6 +141,12 @@ pub fn set_seed(seed: u64) {
 /// (clamped to `[0, 1]`). Arming with [`FailAction::Off`] disarms.
 pub fn arm(site: &str, action: FailAction, p: f64) {
     init_from_env();
+    arm_inner(site, action, p);
+}
+
+/// [`arm`] without the env-init hook — the form [`init_from_env`]'s
+/// `Once` closure may safely call.
+fn arm_inner(site: &str, action: FailAction, p: f64) {
     let p = p.clamp(0.0, 1.0);
     let mut sites = SITES.lock().unwrap();
     match sites.iter_mut().find(|s| s.name == site) {
@@ -183,6 +191,12 @@ pub fn reset() {
 /// Apply a `site=action[:prob[:micros]]` spec list (the [`ENV_VAR`]
 /// grammar); entries are `;`-separated. Returns the first parse error.
 pub fn apply_spec(spec: &str) -> Result<(), String> {
+    init_from_env();
+    apply_spec_inner(spec)
+}
+
+/// [`apply_spec`] without the env-init hook (see [`arm_inner`]).
+fn apply_spec_inner(spec: &str) -> Result<(), String> {
     for entry in spec.split(';').map(str::trim).filter(|e| !e.is_empty()) {
         let (name, rest) = entry
             .split_once('=')
@@ -204,7 +218,7 @@ pub fn apply_spec(spec: &str) -> Result<(), String> {
             "delay" => FailAction::Delay(micros),
             other => return Err(format!("{entry:?}: unknown action {other:?}")),
         };
-        arm(name.trim(), action, p);
+        arm_inner(name.trim(), action, p);
     }
     Ok(())
 }

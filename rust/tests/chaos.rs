@@ -253,6 +253,72 @@ fn restart_cap_exhaustion_degrades_and_drains() {
     fp::reset();
 }
 
+/// A batcher crash-looped past its restart cap takes its shard out of
+/// rotation and becomes a drain loop: requests submitted *after* the
+/// batcher died still resolve with an explicit NACK instead of sitting
+/// queued until shutdown (the no-hung-client invariant).
+#[test]
+fn dead_batcher_shard_nacks_instead_of_stranding() {
+    let _g = serial();
+    fp::arm("batcher/flush", fp::FailAction::Panic, 1.0);
+    let server = Server::start(
+        ServerConfig {
+            shards: 1,
+            workers: 1,
+            batch_policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+            supervisor: SupervisorPolicy {
+                max_restarts: 1,
+                backoff_base: Duration::from_micros(100),
+                ..SupervisorPolicy::default()
+            },
+            ..ServerConfig::default()
+        },
+        echo_factory(),
+    );
+    // Feed the single batcher until its two flush panics exhaust the
+    // restart cap (each submit triggers a 1ms-deadline flush).
+    let mut slots = Vec::new();
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while server.metrics().batchers_dead.load(Ordering::Relaxed) == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "batcher never hit the restart cap"
+        );
+        slots.push(server.submit(vec![1.0, 1.0]).expect("admitted"));
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(server.is_degraded());
+    fp::disarm_all();
+    // The shard is dead — these can only resolve through the drain
+    // loop, and they must do so long before any shutdown.
+    for _ in 0..8 {
+        slots.push(server.submit(vec![2.0, 2.0]).expect("admitted"));
+    }
+    for s in &slots {
+        let resp = s
+            .wait_timeout(Duration::from_secs(10))
+            .expect("resolved, not stranded");
+        assert_eq!(
+            resp.error,
+            Some(InferError::BatcherPanicked),
+            "a dead shard answers with explicit NACKs"
+        );
+    }
+    let report = server.shutdown();
+    assert!(report.batchers_dead >= 1);
+    assert!(report.degraded);
+    let m = &report.metrics;
+    assert_eq!(
+        m.submitted.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed),
+        "conservation with a dead batcher"
+    );
+    fp::reset();
+}
+
 /// Engine that sleeps per batch, letting a single client outrun the
 /// pipeline and hit the admission limit.
 struct SlowEngine;

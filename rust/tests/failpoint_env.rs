@@ -1,0 +1,39 @@
+//! Regression test for environment-variable fail-point arming.
+//!
+//! This lives in its own integration-test binary on purpose: the
+//! registry's env parsing runs under a process-global `Once`, so the
+//! scenario under test — the *first ever* registry touch happening
+//! with `REPRO_FAILPOINTS` set — only exists while that `Once` is
+//! still unfired. An earlier version deadlocked here: the `Once`
+//! closure called `apply_spec` → `arm` → `init_from_env`, re-entering
+//! `Once::call_once` on the same `Once`.
+//!
+//! The registry (unlike the sites) is always compiled, so this binary
+//! needs no feature gate.
+
+use cmpq::util::failpoint as fp;
+
+#[test]
+fn env_spec_arms_on_first_registry_touch() {
+    // Single test in this binary → nothing can have fired the Once yet.
+    std::env::set_var(fp::ENV_SEED, "42");
+    std::env::set_var(
+        fp::ENV_VAR,
+        "test/env-armed=delay:1.0:7; test/env-off=off",
+    );
+
+    // First registry use: parses the env spec inside the Once closure.
+    // With the reentrant-Once bug this call never returns.
+    let armed = fp::check("test/env-armed");
+    assert_eq!(armed, Some(fp::FailAction::Delay(7)), "env spec armed the site");
+    assert_eq!(fp::check("test/env-off"), None, "off entries stay inert");
+
+    let (hits, trips) = fp::counters("test/env-armed");
+    assert!(hits >= 1 && trips >= 1, "env-armed site counted: {hits}/{trips}");
+    let sites = fp::snapshot();
+    assert!(
+        sites.iter().any(|(name, armed, _, _)| name == "test/env-armed" && *armed),
+        "snapshot sees the env-armed site"
+    );
+    fp::reset();
+}
