@@ -276,6 +276,7 @@ mod tests {
     fn req(id: u64) -> InferRequest {
         InferRequest {
             id,
+            tenant: 0,
             features: vec![0.0; 2],
             submitted_at: Instant::now(),
             deadline: None,

@@ -32,6 +32,10 @@ pub struct Metrics {
     pub deadline_expired: AtomicU64,
     /// Requests refused at admission (`Overloaded`) — never submitted.
     pub shed: AtomicU64,
+    /// Requests refused at the network edge by per-tenant admission
+    /// (a tenant over its in-flight cap) — a subset of `shed`; they
+    /// never reached `Server::submit`.
+    pub shed_tenant: AtomicU64,
     /// Worker panics caught by supervision (or observed at shutdown).
     pub worker_panics: AtomicU64,
     /// Worker respawns performed by the supervisor.
@@ -102,6 +106,14 @@ impl Metrics {
     /// Count one request refused at admission.
     pub fn record_shed(&self) {
         self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one per-tenant admission refusal at the network edge — a
+    /// [`Metrics::record_shed`] plus the dedicated counter, keeping one
+    /// conservation ledger across both shedding layers.
+    pub fn record_tenant_shed(&self) {
+        self.shed_tenant.fetch_add(1, Ordering::Relaxed);
+        self.record_shed();
     }
 
     /// Count one caught worker panic.
@@ -176,6 +188,10 @@ impl Metrics {
             s.p50_ns / 1000,
             s.p99_ns / 1000,
         );
+        let tenant_shed = self.shed_tenant.load(Ordering::Relaxed);
+        if tenant_shed > 0 {
+            out.push_str(&format!(" shed_tenant={tenant_shed}"));
+        }
         let panics = self.worker_panics.load(Ordering::Relaxed)
             + self.batcher_panics.load(Ordering::Relaxed);
         if panics > 0 || self.is_degraded() {
@@ -265,6 +281,16 @@ mod tests {
         assert_eq!(m.nacks.load(Ordering::Relaxed), 1);
         assert_eq!(m.deadline_expired.load(Ordering::Relaxed), 1);
         assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn tenant_shed_counts_into_shed() {
+        let m = Metrics::new();
+        m.record_tenant_shed();
+        m.record_shed();
+        assert_eq!(m.shed.load(Ordering::Relaxed), 2, "one ledger");
+        assert_eq!(m.shed_tenant.load(Ordering::Relaxed), 1);
+        assert!(m.report().contains("shed_tenant=1"));
     }
 
     #[test]

@@ -13,6 +13,10 @@ use std::time::{Duration, Instant};
 pub struct InferRequest {
     /// Server-assigned request id.
     pub id: u64,
+    /// Tenant the request belongs to (0 = untagged). Stamped by the
+    /// TCP ingress from the wire frame; in-process submissions default
+    /// to 0. Carried through the pipeline for per-tenant accounting.
+    pub tenant: u32,
     /// Flattened feature row (`features_per_row` elements).
     pub features: Vec<f32>,
     /// When the client submitted (end-to-end latency anchor).
@@ -277,6 +281,7 @@ mod tests {
         let now = Instant::now();
         let req = InferRequest {
             id: 1,
+            tenant: 0,
             features: vec![],
             submitted_at: now,
             deadline: Some(now),
@@ -285,6 +290,7 @@ mod tests {
         assert!(req.expired(now));
         let open = InferRequest {
             id: 2,
+            tenant: 0,
             features: vec![],
             submitted_at: now,
             deadline: None,

@@ -260,6 +260,7 @@ mod tests {
     fn req(id: u64) -> InferRequest {
         InferRequest {
             id,
+            tenant: 0,
             features: vec![0.0; 4],
             submitted_at: Instant::now(),
             deadline: None,

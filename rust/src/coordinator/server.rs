@@ -122,6 +122,13 @@ pub struct ShutdownReport {
     pub drained_nacks: u64,
     /// Whether the server ended degraded (any stage abandoned).
     pub degraded: bool,
+    /// Connections closed by the TCP front end over its lifetime
+    /// (0 when the server ran without one — `Server::shutdown` itself
+    /// never opens sockets; `NetServer::shutdown` fills these in).
+    pub net_conns_closed: u64,
+    /// Responses flushed to clients during the front end's graceful
+    /// drain window (stop accepting → flush in-flight → close).
+    pub net_drained_replies: u64,
 }
 
 impl ShutdownReport {
@@ -275,6 +282,7 @@ impl Server {
         let now = Instant::now();
         InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tenant: 0,
             features,
             submitted_at: now,
             deadline: self.default_deadline.map(|d| now + d),
@@ -308,12 +316,25 @@ impl Server {
     /// server.shutdown();
     /// ```
     pub fn submit(&self, features: Vec<f32>) -> Result<Arc<ResponseSlot>, SubmitError> {
+        self.submit_for_tenant(features, 0)
+    }
+
+    /// [`Server::submit`] with the request stamped as belonging to
+    /// `tenant` (the TCP ingress passes the wire frame's tenant id; 0
+    /// means untagged). Admission control is identical — per-tenant
+    /// *fairness* caps live in the ingress ([`crate::net`]), not here.
+    pub fn submit_for_tenant(
+        &self,
+        features: Vec<f32>,
+        tenant: u32,
+    ) -> Result<Arc<ResponseSlot>, SubmitError> {
         if self.over_depth(1) {
             self.metrics.record_shed();
             return Err(SubmitError::Overloaded);
         }
         let slot = ResponseSlot::new();
-        let req = self.make_request(features, slot.clone());
+        let mut req = self.make_request(features, slot.clone());
+        req.tenant = tenant;
         // `submitted` is incremented *before* the route and rolled back
         // on rejection — mirroring `Router::route`'s inflight gauge —
         // so a worker completing the request at once can never make a
@@ -428,6 +449,18 @@ impl Server {
         Ok(self.submit(features)?.wait_async())
     }
 
+    /// [`Server::submit_async`] with a tenant stamp (see
+    /// [`Server::submit_for_tenant`]) — the TCP connection state
+    /// machine's entry point: one future per in-flight wire request,
+    /// polled inline by the connection task.
+    pub fn submit_async_for_tenant(
+        &self,
+        features: Vec<f32>,
+        tenant: u32,
+    ) -> Result<ResponseFuture, SubmitError> {
+        Ok(self.submit_for_tenant(features, tenant)?.wait_async())
+    }
+
     /// Convenience: submit and block for the response. `None` on shed,
     /// timeout, or a NACK/engine failure (all of which deliver empty
     /// output).
@@ -522,6 +555,8 @@ impl Server {
             batchers_dead: self.metrics.batchers_dead.load(Ordering::Relaxed),
             drained_nacks,
             degraded: self.metrics.is_degraded(),
+            net_conns_closed: 0,
+            net_drained_replies: 0,
             metrics: self.metrics.clone(),
         }
     }

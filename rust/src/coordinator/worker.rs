@@ -527,6 +527,7 @@ mod tests {
         (
             InferRequest {
                 id,
+                tenant: 0,
                 features: f,
                 submitted_at: Instant::now(),
                 deadline: None,

@@ -22,6 +22,11 @@
 //! * [`coordinator`] — an inference-serving pipeline (router → dynamic
 //!   batcher → model workers) whose request fabric is CMP queues; workers
 //!   execute an AOT-compiled JAX/Pallas model through [`runtime`].
+//! * [`net`] — a dependency-free TCP front end for the pipeline
+//!   (DESIGN.md §12): a handful of I/O threads running the crate's own
+//!   reactor multiplex tens of thousands of nonblocking connections,
+//!   with per-tenant admission, read/write deadlines, and
+//!   disconnect-safe conservation accounting.
 //! * [`runtime`] — PJRT client wrapper loading `artifacts/*.hlo.txt`.
 //! * [`util`] — owned substrates (PRNG, backoff, eventcount parking +
 //!   async waker registry, a dependency-free `block_on`/executor/timer,
@@ -52,6 +57,7 @@
 pub mod bench;
 pub mod coordinator;
 pub mod model;
+pub mod net;
 pub mod queue;
 pub mod runtime;
 pub mod util;

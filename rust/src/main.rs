@@ -58,7 +58,9 @@ commands:\n  \
 bench <fig1|tables|fig2|faults|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--batch K] [--verbose]\n  \
 bench diff <old.json> <new.json> [--threshold-pct P]   compare two BENCH_throughput.json dumps\n  \
 serve [--requests N] [--clients C] [--shards S] [--workers W] [--idle-ms N] [--async-workers] [--echo]\n  \
+serve --tcp [--addr A] [--io-threads N] [--tenant-max-inflight T] [--requests N] [--clients C]\n  \
 chaos [--requests N] [--clients C] [--seed S] [--p-panic P] [--p-delay P] [--delay-us U] [--max-inflight D]\n  \
+chaos --tcp [--connections N] [--concurrency K] [--io-threads N] [--seed S] [--p-net P] [--p-disconnect P] [--p-stall P] [--read-timeout-ms M]\n  \
 selftest [--artifacts DIR]\n  \
 demo";
 
@@ -281,6 +283,9 @@ fn cmd_serve(args: &Args) -> i32 {
             cfg.workers
         );
     }
+    if args.flag("tcp") {
+        return cmd_serve_tcp(args, cfg, factory);
+    }
     let server = Arc::new(Server::start(cfg, factory));
 
     let n_requests: u64 = args.get_parse("requests", 512u64);
@@ -343,6 +348,90 @@ fn cmd_serve(args: &Args) -> i32 {
     0
 }
 
+/// `repro serve --tcp`: the same pipeline behind the TCP front end
+/// (DESIGN.md §12), exercised by a fleet of blocking loopback clients
+/// speaking the length-prefixed wire format.
+fn cmd_serve_tcp(args: &Args, cfg: ServerConfig, factory: EngineFactory) -> i32 {
+    use std::io::Write;
+    use std::net::TcpStream;
+
+    use cmpq::net::codec::{self, Status};
+    use cmpq::net::listener::NetServer;
+    use cmpq::net::NetConfig;
+
+    let net_cfg = NetConfig {
+        addr: args.get_or("addr", "127.0.0.1:0").to_string(),
+        io_threads: args.get_parse("io-threads", 2usize),
+        tenant_max_inflight: args.get_parse("tenant-max-inflight", 0usize),
+        ..NetConfig::default()
+    };
+    let server = Server::start(cfg, factory);
+    let net = match NetServer::start(net_cfg, server) {
+        Ok(net) => net,
+        Err(e) => {
+            eprintln!("serve: cannot bind TCP front end: {e}");
+            return 1;
+        }
+    };
+    let addr = net.addr();
+    eprintln!("serve: TCP front end on {addr}");
+
+    let n_requests: u64 = args.get_parse("requests", 512u64);
+    let n_clients: usize = args.get_parse("clients", 8usize);
+    let per_client = (n_requests / n_clients as u64).max(1);
+    eprintln!("serve: {n_clients} TCP clients × {per_client} requests");
+
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect");
+                let mut rng = cmpq::util::XorShift64::new(c as u64 + 1);
+                let mut buf = Vec::new();
+                let (mut ok, mut busy) = (0u64, 0u64);
+                for i in 0..per_client {
+                    let req = codec::Request {
+                        id: i + 1,
+                        tenant: c as u32,
+                        features: (0..128).map(|_| (rng.next_f64() as f32) - 0.5).collect(),
+                    };
+                    let mut wire = Vec::new();
+                    codec::encode_request(&req, &mut wire);
+                    stream.write_all(&wire).expect("write request");
+                    let resp = codec::read_response_blocking(&mut stream, &mut buf)
+                        .expect("server closed mid-request");
+                    assert_eq!(resp.id, req.id, "replies are pipelined one at a time");
+                    match resp.status {
+                        Status::Ok => ok += 1,
+                        Status::Busy => busy += 1,
+                        other => panic!("unexpected reply status {other:?}"),
+                    }
+                }
+                (ok, busy)
+            })
+        })
+        .collect();
+    let (mut ok, mut busy) = (0u64, 0u64);
+    for c in clients {
+        let (o, b) = c.join().expect("client panicked");
+        ok += o;
+        busy += b;
+    }
+    let elapsed = t0.elapsed();
+    println!(
+        "served {ok} requests over TCP in {elapsed:.2?} -> {:.1} req/s (busy={busy})",
+        ok as f64 / elapsed.as_secs_f64()
+    );
+    println!("{}", net.metrics().report());
+    let report = net.shutdown();
+    println!("{}", report.metrics.report());
+    println!(
+        "net shutdown: conns_closed={} drained_replies={}",
+        report.net_conns_closed, report.net_drained_replies
+    );
+    0
+}
+
 /// `repro chaos`: hammer the serving pipeline while fail points inject
 /// worker panics and batcher delays, then check the conservation
 /// invariant — every admitted request resolves (served, engine-failed,
@@ -360,6 +449,9 @@ fn cmd_chaos(args: &Args) -> i32 {
             "chaos: built without the `failpoints` feature — faults will not fire.\n\
              rebuild with `cargo run --features failpoints -- chaos` for a real run"
         );
+    }
+    if args.flag("tcp") {
+        return tcp_chaos::run(args);
     }
     let n_requests: u64 = args.get_parse("requests", 10_000u64);
     let n_clients: usize = args.get_parse("clients", 4usize);
@@ -505,6 +597,482 @@ fn cmd_chaos(args: &Args) -> i32 {
 /// Unwrap the last `Arc` handle and shut the server down.
 fn server_shutdown(server: Arc<Server>) -> cmpq::coordinator::server::ShutdownReport {
     Arc::try_unwrap(server).ok().expect("all clients joined").shutdown()
+}
+
+/// `repro chaos --tcp`: the network-resilience counterpart of `chaos`.
+/// A seeded async client fleet (a couple of host threads, each
+/// multiplexing hundreds of connections on the crate's executor) runs
+/// thousands of short sessions against the TCP front end while fail
+/// points inject read/write/accept faults server-side and the fleet
+/// itself misbehaves on purpose: abrupt disconnects (half of them
+/// mid-frame) and slow-loris stalls. A session is *stranded* if a
+/// request got neither a reply nor an EOF before its deadline. Exits
+/// nonzero on any stranded session, a `submitted != completed`
+/// mismatch, or connections the fleet could not place.
+mod tcp_chaos {
+    use std::future::Future;
+    use std::io::{self, Read, Write};
+    use std::net::{SocketAddr, TcpStream};
+    use std::pin::Pin;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    use std::task::{Context, Poll};
+    use std::time::{Duration, Instant};
+
+    use cmpq::coordinator::server::{Server, ServerConfig};
+    use cmpq::coordinator::supervisor::SupervisorPolicy;
+    use cmpq::net::codec::{self, Status};
+    use cmpq::net::listener::NetServer;
+    use cmpq::net::NetConfig;
+    use cmpq::util::cli::Args;
+    use cmpq::util::executor::{sleep_until, Executor, Reactor};
+    use cmpq::util::failpoint as fp;
+    use cmpq::util::XorShift64;
+
+    #[derive(Default)]
+    struct Tally {
+        sessions: AtomicU64,
+        ok: AtomicU64,
+        busy: AtomicU64,
+        error_replies: AtomicU64,
+        timeout_notices: AtomicU64,
+        eof_early: AtomicU64,
+        disconnects_injected: AtomicU64,
+        stalls: AtomicU64,
+        connect_failures: AtomicU64,
+        stranded: AtomicU64,
+    }
+
+    #[derive(Clone, Copy, PartialEq)]
+    enum Behavior {
+        /// Send k requests, wait for k replies (or EOF).
+        Normal,
+        /// Send requests (half the time cut mid-frame), close without
+        /// reading — the abandon-in-flight path.
+        Disconnect,
+        /// Send a partial frame and hold — the slow-loris path; the
+        /// session ends when the server's read deadline drains us.
+        Stall,
+    }
+
+    /// One client connection, polled on the fleet's executor.
+    struct Session {
+        stream: TcpStream,
+        reactor: Reactor,
+        tally: Arc<Tally>,
+        behavior: Behavior,
+        out: Vec<u8>,
+        out_pos: usize,
+        expected: u64,
+        received: u64,
+        read_buf: Vec<u8>,
+        deadline: Instant,
+    }
+
+    impl Session {
+        fn bump(&self, c: &AtomicU64) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    impl Future for Session {
+        type Output = ();
+
+        fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+            let this = &mut *self;
+            let now = Instant::now();
+            // Send phase. A failed write means the server killed the
+            // connection (injected fault or drain) — reply-or-EOF
+            // holds, so the session is over, not stranded.
+            while this.out_pos < this.out.len() {
+                match this.stream.write(&this.out[this.out_pos..]) {
+                    Ok(0) => {
+                        this.tally.eof_early.fetch_add(1, Ordering::Relaxed);
+                        return Poll::Ready(());
+                    }
+                    Ok(n) => this.out_pos += n,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        this.tally.eof_early.fetch_add(1, Ordering::Relaxed);
+                        return Poll::Ready(());
+                    }
+                }
+            }
+            if this.behavior == Behavior::Disconnect && this.out_pos == this.out.len() {
+                this.bump(&this.tally.disconnects_injected);
+                return Poll::Ready(()); // drop closes without reading
+            }
+            // Read phase.
+            let mut chunk = [0u8; 4096];
+            loop {
+                match this.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        if this.behavior == Behavior::Stall {
+                            this.bump(&this.tally.stalls);
+                        } else if this.received < this.expected {
+                            this.bump(&this.tally.eof_early);
+                        }
+                        return Poll::Ready(());
+                    }
+                    Ok(n) => {
+                        this.read_buf.extend_from_slice(&chunk[..n]);
+                        loop {
+                            match codec::decode_response(&this.read_buf) {
+                                Ok(Some((resp, used))) => {
+                                    this.read_buf.drain(..used);
+                                    match resp.status {
+                                        Status::Ok => {
+                                            this.bump(&this.tally.ok);
+                                            this.received += 1;
+                                        }
+                                        Status::Busy => {
+                                            this.bump(&this.tally.busy);
+                                            this.received += 1;
+                                        }
+                                        Status::Error => {
+                                            this.bump(&this.tally.error_replies);
+                                            this.received += 1;
+                                        }
+                                        // Connection-level notice, not
+                                        // a per-request reply.
+                                        Status::Timeout => {
+                                            this.bump(&this.tally.timeout_notices)
+                                        }
+                                    }
+                                }
+                                Ok(None) => break,
+                                Err(_) => {
+                                    this.bump(&this.tally.eof_early);
+                                    return Poll::Ready(());
+                                }
+                            }
+                        }
+                        if this.behavior == Behavior::Normal && this.received >= this.expected {
+                            return Poll::Ready(());
+                        }
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        this.bump(&this.tally.eof_early);
+                        return Poll::Ready(());
+                    }
+                }
+            }
+            if now >= this.deadline {
+                // Neither replies nor EOF in time: the front end
+                // wedged or lost us. This is the failure the run
+                // exists to catch.
+                this.bump(&this.tally.stranded);
+                return Poll::Ready(());
+            }
+            this.reactor.register(cx);
+            Poll::Pending
+        }
+    }
+
+    /// Everything a session-runner task needs; one per client thread.
+    struct Fleet {
+        addr: SocketAddr,
+        reactor: Reactor,
+        tally: Arc<Tally>,
+        remaining: Arc<AtomicU64>,
+        seed: u64,
+        p_disconnect: f64,
+        p_stall: f64,
+        session_deadline: Duration,
+    }
+
+    /// Claim one connection slot, or `false` when the target is met.
+    fn claim(remaining: &AtomicU64) -> bool {
+        loop {
+            let cur = remaining.load(Ordering::Acquire);
+            if cur == 0 {
+                return false;
+            }
+            if remaining
+                .compare_exchange(cur, cur - 1, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+
+    /// Build one session's outgoing bytes and expected-reply count.
+    fn build_session(rng: &mut XorShift64, behavior: Behavior) -> (Vec<u8>, u64) {
+        let mut out = Vec::new();
+        if behavior == Behavior::Stall {
+            // Five bytes of a frame that claims 24 more: a textbook
+            // slow loris.
+            out.extend_from_slice(&24u32.to_le_bytes());
+            out.push(0);
+            return (out, 0);
+        }
+        let k = 1 + (rng.next_u64() % 4);
+        for i in 0..k {
+            let req = codec::Request {
+                id: i + 1,
+                tenant: (rng.next_u64() % 16) as u32,
+                features: (0..16).map(|_| (rng.next_f64() as f32) - 0.5).collect(),
+            };
+            codec::encode_request(&req, &mut out);
+        }
+        if behavior == Behavior::Disconnect {
+            if rng.next_f64() < 0.5 {
+                // Cut the last frame in half: the server is left
+                // holding a partial frame when we vanish.
+                let cut = out.len() - 10;
+                out.truncate(cut);
+            }
+            return (out, 0);
+        }
+        (out, k)
+    }
+
+    /// One task: run sessions until the global connection target is
+    /// met (or the server becomes unreachable).
+    async fn session_runner(fleet: Arc<Fleet>, task_id: u64) {
+        let mut rng = XorShift64::new(
+            fleet
+                .seed
+                .wrapping_mul(0x9e3779b97f4a7c15)
+                .wrapping_add(task_id)
+                | 1,
+        );
+        // Stagger starts so thousands of connects don't hit the
+        // listener backlog in one instant.
+        let jitter = Duration::from_micros((task_id % 512) * 1500);
+        sleep_until(Instant::now() + jitter).await;
+        let mut consecutive_failures = 0u32;
+        while claim(&fleet.remaining) {
+            let stream = match TcpStream::connect_timeout(&fleet.addr, Duration::from_secs(5)) {
+                Ok(s) => s,
+                Err(_) => {
+                    fleet.tally.connect_failures.fetch_add(1, Ordering::Relaxed);
+                    fleet.remaining.fetch_add(1, Ordering::Release);
+                    consecutive_failures += 1;
+                    if consecutive_failures > 50 {
+                        return; // server unreachable; leave slots unclaimed
+                    }
+                    sleep_until(Instant::now() + Duration::from_millis(50)).await;
+                    continue;
+                }
+            };
+            consecutive_failures = 0;
+            if stream.set_nonblocking(true).is_err() {
+                fleet.tally.connect_failures.fetch_add(1, Ordering::Relaxed);
+                fleet.remaining.fetch_add(1, Ordering::Release);
+                continue;
+            }
+            let _ = stream.set_nodelay(true);
+            let r = rng.next_f64();
+            let behavior = if r < fleet.p_disconnect {
+                Behavior::Disconnect
+            } else if r < fleet.p_disconnect + fleet.p_stall {
+                Behavior::Stall
+            } else {
+                Behavior::Normal
+            };
+            let (out, expected) = build_session(&mut rng, behavior);
+            fleet.tally.sessions.fetch_add(1, Ordering::Relaxed);
+            Session {
+                stream,
+                reactor: fleet.reactor.clone(),
+                tally: fleet.tally.clone(),
+                behavior,
+                out,
+                out_pos: 0,
+                expected,
+                received: 0,
+                read_buf: Vec::new(),
+                deadline: Instant::now() + fleet.session_deadline,
+            }
+            .await;
+        }
+    }
+
+    /// Small/fast echo engine for network chaos: the load is
+    /// connection churn, not matmuls.
+    fn chaos_echo() -> cmpq::coordinator::worker::EngineFactory {
+        use cmpq::coordinator::worker::{EchoEngine, InferenceEngine};
+        Arc::new(|| {
+            Ok(Box::new(EchoEngine {
+                batch: 8,
+                features: 16,
+                outputs: 4,
+                scale: 1.0,
+            }) as Box<dyn InferenceEngine>)
+        })
+    }
+
+    pub fn run(args: &Args) -> i32 {
+        let connections: u64 = args.get_parse("connections", 10_000u64);
+        let concurrency: usize = args.get_parse("concurrency", 256usize);
+        let client_threads: usize = args.get_parse("client-threads", 2usize).max(1);
+        let io_threads: usize = args.get_parse("io-threads", 4usize);
+        let seed: u64 = args.get_parse("seed", 42u64);
+        let p_net: f64 = args.get_parse("p-net", 0.002f64);
+        let p_accept: f64 = args.get_parse("p-accept", 0.01f64);
+        let p_panic: f64 = args.get_parse("p-panic", 0.005f64);
+        let p_disconnect: f64 = args.get_parse("p-disconnect", 0.08f64);
+        let p_stall: f64 = args.get_parse("p-stall", 0.02f64);
+        let read_timeout_ms: u64 = args.get_parse("read-timeout-ms", 300u64);
+
+        fp::set_seed(seed);
+        fp::arm("net/read", fp::FailAction::Error, p_net);
+        fp::arm("net/write", fp::FailAction::Error, p_net);
+        fp::arm("net/accept", fp::FailAction::Error, p_accept);
+        fp::arm("worker/pre-infer", fp::FailAction::Panic, p_panic);
+
+        // Same suppression as plain `chaos`: injected panics are the
+        // point; keep their backtraces out of the report.
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .is_some_and(|s| s.contains("fail point"));
+            if !injected {
+                default_hook(info);
+            }
+        }));
+
+        let cfg = ServerConfig {
+            shards: args.get_parse("shards", 2usize),
+            workers: args.get_parse("workers", 2usize),
+            max_inflight: Some(args.get_parse("max-inflight", 4096usize)),
+            supervisor: SupervisorPolicy {
+                max_restarts: 1_000_000,
+                ..SupervisorPolicy::default()
+            },
+            ..ServerConfig::default()
+        };
+        let net_cfg = NetConfig {
+            io_threads,
+            read_timeout: Duration::from_millis(read_timeout_ms),
+            tenant_max_inflight: args.get_parse("tenant-max-inflight", 0usize),
+            ..NetConfig::default()
+        };
+        eprintln!(
+            "chaos --tcp: {connections} connections (≤{concurrency} concurrent) on \
+             {io_threads} io threads, seed={seed}, net faults p={p_net}, accept p={p_accept}, \
+             disconnect p={p_disconnect}, stall p={p_stall}"
+        );
+        let server = Server::start(cfg, chaos_echo());
+        let net = match NetServer::start(net_cfg, server) {
+            Ok(net) => net,
+            Err(e) => {
+                eprintln!("chaos --tcp: cannot bind: {e}");
+                return 1;
+            }
+        };
+        let addr = net.addr();
+
+        let tally = Arc::new(Tally::default());
+        let remaining = Arc::new(AtomicU64::new(connections));
+        let per_thread_tasks = (concurrency / client_threads).max(1);
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..client_threads)
+            .map(|t| {
+                let tally = tally.clone();
+                let remaining = remaining.clone();
+                std::thread::Builder::new()
+                    .name(format!("chaos-client-{t}"))
+                    .spawn(move || {
+                        let fleet = Arc::new(Fleet {
+                            addr,
+                            reactor: Reactor::new(
+                                Duration::from_micros(200),
+                                Duration::from_millis(5),
+                            ),
+                            tally,
+                            remaining,
+                            seed,
+                            p_disconnect,
+                            p_stall,
+                            session_deadline: Duration::from_secs(30),
+                        });
+                        let mut ex = Executor::new();
+                        for i in 0..per_thread_tasks {
+                            ex.spawn(session_runner(
+                                fleet.clone(),
+                                (t * per_thread_tasks + i) as u64,
+                            ));
+                        }
+                        ex.run();
+                    })
+                    .expect("spawn chaos client thread")
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("client thread panicked");
+        }
+        let elapsed = t0.elapsed();
+        let unplaced = remaining.load(Ordering::Acquire);
+
+        println!("{}", net.metrics().report());
+        let report = net.shutdown();
+        fp::disarm_all();
+
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        println!(
+            "chaos --tcp: {} sessions in {elapsed:.2?}",
+            ld(&tally.sessions)
+        );
+        println!(
+            "  client: ok={} busy={} error={} timeout_notices={} eof_early={} \
+             disconnects={} stalls={} connect_failures={} stranded={}",
+            ld(&tally.ok),
+            ld(&tally.busy),
+            ld(&tally.error_replies),
+            ld(&tally.timeout_notices),
+            ld(&tally.eof_early),
+            ld(&tally.disconnects_injected),
+            ld(&tally.stalls),
+            ld(&tally.connect_failures),
+            ld(&tally.stranded),
+        );
+        for (site, armed, hits, trips) in fp::snapshot() {
+            println!("  fail point {site}: armed={armed} hits={hits} trips={trips}");
+        }
+        println!("  {}", report.metrics.report());
+        println!(
+            "  shutdown: conns_closed={} drained_replies={} worker_panics={} degraded={}",
+            report.net_conns_closed,
+            report.net_drained_replies,
+            report.worker_panics,
+            report.degraded
+        );
+
+        let submitted = report.metrics.submitted.load(Ordering::Relaxed);
+        let completed = report.metrics.completed.load(Ordering::Relaxed);
+        let stranded = ld(&tally.stranded);
+        let mut code = 0;
+        if stranded > 0 {
+            eprintln!("chaos --tcp FAILED: {stranded} stranded session(s)");
+            code = 1;
+        }
+        if submitted != completed {
+            eprintln!(
+                "chaos --tcp FAILED: conservation broken \
+                 (submitted={submitted} completed={completed})"
+            );
+            code = 1;
+        }
+        if unplaced > 0 {
+            eprintln!("chaos --tcp FAILED: {unplaced} connection(s) never placed");
+            code = 1;
+        }
+        if code == 0 {
+            println!(
+                "chaos --tcp OK: {connections} connections, conservation holds \
+                 (submitted={submitted} == completed={completed})"
+            );
+        }
+        code
+    }
 }
 
 fn cmd_selftest(args: &Args) -> i32 {

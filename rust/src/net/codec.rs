@@ -1,0 +1,390 @@
+//! Length-prefixed wire format for the TCP front end (DESIGN.md §12).
+//!
+//! Every frame starts with a little-endian `u32` byte length covering
+//! everything *after* the length field itself. Payload layout:
+//!
+//! ```text
+//! request:  [len: u32][id: u64][tenant: u32][n: u32][n × f32]
+//! response: [len: u32][id: u64][status: u8][n: u32][n × f32]
+//! ```
+//!
+//! `id` is a client-chosen correlation id echoed back verbatim —
+//! responses may arrive out of request order (batching reorders), so
+//! clients match on the id, never on position. All integers and floats
+//! are little-endian.
+//!
+//! Decoding is incremental and allocation-bounded: `Ok(None)` means
+//! "need more bytes" (the caller keeps accumulating), and any frame
+//! whose declared length exceeds [`MAX_FRAME_BYTES`] — or whose
+//! payload doesn't match its declared length — is a [`DecodeError`],
+//! after which the connection is poisoned and drained (a malformed
+//! stream has no resynchronization point).
+
+/// Hard ceiling on the declared payload length of a single frame.
+/// Anything larger is a protocol error, not an allocation: the guard
+/// runs before any buffer is sized from attacker-controlled input.
+pub const MAX_FRAME_BYTES: usize = 1 << 20;
+
+/// Fixed part of a request payload: id (8) + tenant (4) + count (4).
+const REQ_HEADER: usize = 16;
+/// Fixed part of a response payload: id (8) + status (1) + count (4).
+const RESP_HEADER: usize = 13;
+
+/// Response status byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Served: the output rows follow.
+    Ok,
+    /// Shed by admission control (server depth or per-tenant cap):
+    /// never enqueued, safe to retry after backoff.
+    Busy,
+    /// NACKed inside the pipeline (worker/batcher death, engine
+    /// failure, deadline, shutdown): the request was admitted but
+    /// could not be served.
+    Error,
+    /// The connection's read deadline expired mid-frame (slow-loris
+    /// guard): sent with id 0 just before the server drains the
+    /// connection.
+    Timeout,
+}
+
+impl Status {
+    /// Wire encoding of the status byte.
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Status::Ok => 0,
+            Status::Busy => 1,
+            Status::Error => 2,
+            Status::Timeout => 3,
+        }
+    }
+
+    /// Inverse of [`Status::as_u8`]; `None` for unknown bytes.
+    pub fn from_u8(b: u8) -> Option<Status> {
+        match b {
+            0 => Some(Status::Ok),
+            1 => Some(Status::Busy),
+            2 => Some(Status::Error),
+            3 => Some(Status::Timeout),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Client-chosen correlation id, echoed back in the response.
+    pub id: u64,
+    /// Tenant the request is billed to (admission fairness key).
+    pub tenant: u32,
+    /// Flattened feature row.
+    pub features: Vec<f32>,
+}
+
+/// A decoded response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
+    /// Correlation id of the request this answers (0 for
+    /// connection-level [`Status::Timeout`] notices).
+    pub id: u64,
+    /// Outcome.
+    pub status: Status,
+    /// Output rows; empty unless `status` is [`Status::Ok`].
+    pub output: Vec<f32>,
+}
+
+/// Why a byte stream stopped being a valid frame sequence. All
+/// variants poison the connection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecodeError {
+    /// Declared payload length exceeds [`MAX_FRAME_BYTES`].
+    Oversize(usize),
+    /// Declared payload length contradicts the fixed header + element
+    /// count it contains.
+    Malformed,
+    /// Unknown status byte in a response frame.
+    BadStatus(u8),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Oversize(n) => write!(f, "frame of {n} bytes exceeds the cap"),
+            DecodeError::Malformed => write!(f, "frame length contradicts its contents"),
+            DecodeError::BadStatus(b) => write!(f, "unknown response status byte {b}"),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(buf: &[u8]) -> u32 {
+    u32::from_le_bytes(buf[..4].try_into().expect("4 bytes"))
+}
+
+fn get_u64(buf: &[u8]) -> u64 {
+    u64::from_le_bytes(buf[..8].try_into().expect("8 bytes"))
+}
+
+/// Append the wire encoding of `req` to `out`.
+pub fn encode_request(req: &Request, out: &mut Vec<u8>) {
+    let len = REQ_HEADER + 4 * req.features.len();
+    put_u32(out, len as u32);
+    put_u64(out, req.id);
+    put_u32(out, req.tenant);
+    put_u32(out, req.features.len() as u32);
+    for f in &req.features {
+        out.extend_from_slice(&f.to_le_bytes());
+    }
+}
+
+/// Append the wire encoding of `resp` to `out`.
+pub fn encode_response(resp: &Response, out: &mut Vec<u8>) {
+    let len = RESP_HEADER + 4 * resp.output.len();
+    put_u32(out, len as u32);
+    put_u64(out, resp.id);
+    out.push(resp.status.as_u8());
+    put_u32(out, resp.output.len() as u32);
+    for f in &resp.output {
+        out.extend_from_slice(&f.to_le_bytes());
+    }
+}
+
+/// Frame boundary scan shared by both decoders: `Ok(Some(payload))`
+/// with the payload slice once the buffer holds a whole frame,
+/// `Ok(None)` while bytes are still missing.
+fn frame(buf: &[u8]) -> Result<Option<&[u8]>, DecodeError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = get_u32(buf) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(DecodeError::Oversize(len));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    Ok(Some(&buf[4..4 + len]))
+}
+
+/// Decode one request frame from the front of `buf`. Returns the
+/// request and the total bytes consumed (length prefix included);
+/// `Ok(None)` means the buffer holds only a partial frame.
+pub fn decode_request(buf: &[u8]) -> Result<Option<(Request, usize)>, DecodeError> {
+    let Some(payload) = frame(buf)? else {
+        return Ok(None);
+    };
+    if payload.len() < REQ_HEADER {
+        return Err(DecodeError::Malformed);
+    }
+    let id = get_u64(payload);
+    let tenant = get_u32(&payload[8..]);
+    let n = get_u32(&payload[12..]) as usize;
+    if payload.len() != REQ_HEADER + 4 * n {
+        return Err(DecodeError::Malformed);
+    }
+    let features = payload[REQ_HEADER..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+        .collect();
+    Ok(Some((
+        Request { id, tenant, features },
+        4 + payload.len(),
+    )))
+}
+
+/// Decode one response frame from the front of `buf` (client side).
+/// Same contract as [`decode_request`].
+pub fn decode_response(buf: &[u8]) -> Result<Option<(Response, usize)>, DecodeError> {
+    let Some(payload) = frame(buf)? else {
+        return Ok(None);
+    };
+    if payload.len() < RESP_HEADER {
+        return Err(DecodeError::Malformed);
+    }
+    let id = get_u64(payload);
+    let status = Status::from_u8(payload[8]).ok_or(DecodeError::BadStatus(payload[8]))?;
+    let n = get_u32(&payload[9..]) as usize;
+    if payload.len() != RESP_HEADER + 4 * n {
+        return Err(DecodeError::Malformed);
+    }
+    let output = payload[RESP_HEADER..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().expect("4 bytes")))
+        .collect();
+    Ok(Some((Response { id, status, output }, 4 + payload.len())))
+}
+
+/// Blocking client convenience: read from `r` (accumulating into
+/// `buf`, which carries partial frames across calls) until one
+/// complete response decodes. `None` on EOF, I/O error, or an
+/// undecodable stream. Server-side code never blocks like this — it
+/// exists for test clients, examples, and the CLI's client fleets.
+pub fn read_response_blocking(
+    r: &mut impl std::io::Read,
+    buf: &mut Vec<u8>,
+) -> Option<Response> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        match decode_response(buf) {
+            Ok(Some((resp, used))) => {
+                buf.drain(..used);
+                return Some(resp);
+            }
+            Ok(None) => {}
+            Err(_) => return None,
+        }
+        match r.read(&mut chunk) {
+            Ok(0) => return None,
+            Ok(n) => buf.extend_from_slice(&chunk[..n]),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let req = Request {
+            id: 42,
+            tenant: 7,
+            features: vec![1.5, -2.0, 0.25],
+        };
+        let mut buf = Vec::new();
+        encode_request(&req, &mut buf);
+        let (back, used) = decode_request(&buf).unwrap().unwrap();
+        assert_eq!(back, req);
+        assert_eq!(used, buf.len());
+    }
+
+    #[test]
+    fn response_roundtrip_all_statuses() {
+        for status in [Status::Ok, Status::Busy, Status::Error, Status::Timeout] {
+            let resp = Response {
+                id: 9,
+                status,
+                output: if status == Status::Ok { vec![3.0] } else { vec![] },
+            };
+            let mut buf = Vec::new();
+            encode_response(&resp, &mut buf);
+            let (back, used) = decode_response(&buf).unwrap().unwrap();
+            assert_eq!(back, resp);
+            assert_eq!(used, buf.len());
+            assert_eq!(Status::from_u8(status.as_u8()), Some(status));
+        }
+        assert_eq!(Status::from_u8(200), None);
+    }
+
+    #[test]
+    fn partial_frames_need_more_bytes() {
+        let req = Request {
+            id: 1,
+            tenant: 0,
+            features: vec![1.0, 2.0],
+        };
+        let mut buf = Vec::new();
+        encode_request(&req, &mut buf);
+        for cut in 0..buf.len() {
+            assert_eq!(decode_request(&buf[..cut]).unwrap(), None, "cut={cut}");
+        }
+        assert!(decode_request(&buf).unwrap().is_some());
+    }
+
+    #[test]
+    fn pipelined_frames_decode_in_sequence() {
+        let mut buf = Vec::new();
+        for id in 0..3u64 {
+            encode_request(
+                &Request {
+                    id,
+                    tenant: id as u32,
+                    features: vec![id as f32],
+                },
+                &mut buf,
+            );
+        }
+        let mut pos = 0;
+        for id in 0..3u64 {
+            let (req, used) = decode_request(&buf[pos..]).unwrap().unwrap();
+            assert_eq!(req.id, id);
+            assert_eq!(req.features, vec![id as f32]);
+            pos += used;
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn oversize_frame_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        assert_eq!(
+            decode_request(&buf),
+            Err(DecodeError::Oversize(MAX_FRAME_BYTES + 1))
+        );
+    }
+
+    #[test]
+    fn malformed_lengths_are_rejected() {
+        // Declared length smaller than the fixed header.
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 8]);
+        assert_eq!(decode_request(&buf), Err(DecodeError::Malformed));
+
+        // Element count contradicting the declared length.
+        let mut buf = Vec::new();
+        let req = Request {
+            id: 1,
+            tenant: 0,
+            features: vec![1.0],
+        };
+        encode_request(&req, &mut buf);
+        buf[16] = 99; // inflate the element count, keep the length
+        assert_eq!(decode_request(&buf), Err(DecodeError::Malformed));
+    }
+
+    #[test]
+    fn blocking_reader_crosses_frames_and_reports_eof() {
+        let resp = Response {
+            id: 5,
+            status: Status::Ok,
+            output: vec![1.0, 2.0],
+        };
+        let mut wire = Vec::new();
+        encode_response(&resp, &mut wire);
+        encode_response(&resp, &mut wire);
+        let mut cur = std::io::Cursor::new(wire);
+        let mut buf = Vec::new();
+        assert_eq!(read_response_blocking(&mut cur, &mut buf).unwrap(), resp);
+        assert_eq!(read_response_blocking(&mut cur, &mut buf).unwrap(), resp);
+        assert!(read_response_blocking(&mut cur, &mut buf).is_none(), "EOF");
+    }
+
+    #[test]
+    fn bad_status_byte_is_rejected() {
+        let mut buf = Vec::new();
+        encode_response(
+            &Response {
+                id: 1,
+                status: Status::Ok,
+                output: vec![],
+            },
+            &mut buf,
+        );
+        buf[12] = 9; // status byte lives after len(4) + id(8)
+        assert_eq!(decode_response(&buf), Err(DecodeError::BadStatus(9)));
+    }
+}

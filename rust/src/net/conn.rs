@@ -1,0 +1,458 @@
+//! One TCP connection as a hand-rolled future.
+//!
+//! [`Conn`] owns a nonblocking socket and runs a four-phase poll:
+//! read + decode, poll in-flight responses, flush writes, check
+//! deadlines. It parks on the shared [`Reactor`] (polled every tick)
+//! *and* on each pending [`ResponseFuture`]'s slot waker, so replies
+//! flush as soon as a worker completes them — ticks only bound the
+//! latency of socket readiness and deadline checks.
+//!
+//! Lifecycle: `Open` → (`Draining`) → `Closed`. Draining starts on
+//! shutdown, a protocol error, or a read-deadline expiry: the read side
+//! stops, pending replies finish and flush, then the socket closes.
+//! A dead peer (EOF, I/O error, stalled writes, drain overrun) skips
+//! the drain: pending replies are *abandoned* at the socket while the
+//! server completes them normally — the conservation ledger never
+//! depends on a client staying alive. EOF is treated as a full
+//! disconnect (no half-close protocol): clients must keep the socket
+//! open until their replies arrive.
+
+use std::future::Future;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::pin::Pin;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::task::{Context, Poll};
+use std::time::Instant;
+
+use super::codec::{self, Response, Status};
+use super::NetShared;
+use crate::coordinator::request::ResponseFuture;
+use crate::coordinator::server::{Server, SubmitError};
+use crate::util::executor::Reactor;
+
+/// Read granularity per syscall; with [`MAX_READS_PER_POLL`] it bounds
+/// how much one connection can consume in a single poll, so a firehose
+/// peer cannot starve its siblings on the same I/O thread.
+const READ_CHUNK: usize = 16 * 1024;
+/// Max read syscalls per poll (see [`READ_CHUNK`]).
+const MAX_READS_PER_POLL: usize = 4;
+
+/// A request admitted to the server whose reply has not yet been
+/// written back to the wire.
+struct PendingReply {
+    /// Client correlation id from the request frame.
+    id: u64,
+    /// Tenant holding the edge-admission slot to release.
+    tenant: u32,
+    /// Resolves when a worker completes the slot.
+    fut: ResponseFuture,
+}
+
+/// One connection's future; spawned onto an I/O thread's executor by
+/// the listener and polled to completion. Resolves `()` when the
+/// socket is fully closed and accounted.
+pub struct Conn {
+    stream: TcpStream,
+    server: Arc<Server>,
+    shared: Arc<NetShared>,
+    reactor: Reactor,
+    read_buf: Vec<u8>,
+    write_buf: Vec<u8>,
+    write_pos: usize,
+    unflushed_frames: u64,
+    pending: Vec<PendingReply>,
+    last_read_progress: Instant,
+    last_write_progress: Instant,
+    draining: bool,
+    drain_started: Option<Instant>,
+    peer_gone: bool,
+}
+
+/// Relaxed counter bump; metric sites below are hot-path adjacent, so
+/// keep them to one call each.
+fn inc(c: &AtomicU64) {
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Relaxed counter add (see [`inc`]).
+fn add(c: &AtomicU64, n: u64) {
+    c.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Read syscall wrapper carrying the `net/read` fail point: an armed
+/// `error` action surfaces as a connection reset, exercising the
+/// abandon-in-flight path without a real network fault.
+fn read_some(stream: &mut TcpStream, buf: &mut [u8]) -> io::Result<usize> {
+    crate::fail_point!(
+        "net/read",
+        Err(io::Error::new(
+            io::ErrorKind::ConnectionReset,
+            "injected read fault",
+        ))
+    );
+    stream.read(buf)
+}
+
+/// Write syscall wrapper carrying the `net/write` fail point.
+fn write_some(stream: &mut TcpStream, buf: &[u8]) -> io::Result<usize> {
+    crate::fail_point!(
+        "net/write",
+        Err(io::Error::new(
+            io::ErrorKind::BrokenPipe,
+            "injected write fault",
+        ))
+    );
+    stream.write(buf)
+}
+
+impl Conn {
+    /// Wrap an already-nonblocking accepted socket.
+    pub fn new(
+        stream: TcpStream,
+        server: Arc<Server>,
+        shared: Arc<NetShared>,
+        reactor: Reactor,
+    ) -> Self {
+        let now = Instant::now();
+        Conn {
+            stream,
+            server,
+            shared,
+            reactor,
+            read_buf: Vec::new(),
+            write_buf: Vec::new(),
+            write_pos: 0,
+            unflushed_frames: 0,
+            pending: Vec::new(),
+            last_read_progress: now,
+            last_write_progress: now,
+            draining: false,
+            drain_started: None,
+            peer_gone: false,
+        }
+    }
+
+    fn write_done(&self) -> bool {
+        self.write_pos == self.write_buf.len()
+    }
+
+    /// Stop reading; finish pending work, flush, then close.
+    fn begin_drain(&mut self, now: Instant) {
+        if !self.draining {
+            self.draining = true;
+            self.drain_started = Some(now);
+        }
+    }
+
+    /// Latch the peer as dead (idempotent); callers count their own
+    /// cause-specific metric before calling.
+    fn mark_gone(&mut self) {
+        self.peer_gone = true;
+    }
+
+    /// EOF: clean if nothing was outstanding, a disconnect otherwise.
+    fn on_peer_eof(&mut self) {
+        if self.peer_gone {
+            return;
+        }
+        let outstanding =
+            !self.pending.is_empty() || !self.read_buf.is_empty() || !self.write_done();
+        if outstanding {
+            inc(&self.shared.metrics.disconnects);
+        }
+        self.mark_gone();
+    }
+
+    /// Hard I/O error (real or injected): always a disconnect.
+    fn on_peer_error(&mut self) {
+        if self.peer_gone {
+            return;
+        }
+        inc(&self.shared.metrics.disconnects);
+        self.mark_gone();
+    }
+
+    /// Append a response frame, restarting the write-stall clock when
+    /// the buffer was empty.
+    fn queue_reply(&mut self, resp: &Response, now: Instant) {
+        if self.write_done() {
+            self.write_buf.clear();
+            self.write_pos = 0;
+            self.last_write_progress = now;
+        }
+        codec::encode_response(resp, &mut self.write_buf);
+        self.unflushed_frames += 1;
+    }
+
+    /// Two-layer admission for one decoded request: the per-tenant edge
+    /// cap first, then the server's global depth — both refusals answer
+    /// `Busy` on the wire and land in the one shed ledger.
+    fn admit(&mut self, req: codec::Request, now: Instant) {
+        if !self.shared.tenants.try_admit(req.tenant) {
+            inc(&self.shared.metrics.tenant_busy);
+            inc(&self.shared.metrics.busy_replies);
+            self.server.metrics().record_tenant_shed();
+            self.queue_reply(
+                &Response {
+                    id: req.id,
+                    status: Status::Busy,
+                    output: vec![],
+                },
+                now,
+            );
+            return;
+        }
+        match self.server.submit_async_for_tenant(req.features, req.tenant) {
+            Ok(fut) => self.pending.push(PendingReply {
+                id: req.id,
+                tenant: req.tenant,
+                fut,
+            }),
+            Err(SubmitError::Overloaded) => {
+                // The server already counted the shed; give back the
+                // edge slot and tell the client to back off.
+                self.shared.tenants.release(req.tenant);
+                inc(&self.shared.metrics.busy_replies);
+                self.queue_reply(
+                    &Response {
+                        id: req.id,
+                        status: Status::Busy,
+                        output: vec![],
+                    },
+                    now,
+                );
+            }
+        }
+    }
+
+    /// Decode every complete frame in `read_buf`; a malformed frame
+    /// poisons the connection (error notice + drain, rest discarded).
+    fn decode_frames(&mut self, now: Instant) {
+        let mut pos = 0;
+        loop {
+            match codec::decode_request(&self.read_buf[pos..]) {
+                Ok(Some((req, used))) => {
+                    pos += used;
+                    inc(&self.shared.metrics.frames_in);
+                    self.admit(req, now);
+                }
+                Ok(None) => break,
+                Err(_) => {
+                    inc(&self.shared.metrics.protocol_errors);
+                    self.queue_reply(
+                        &Response {
+                            id: 0,
+                            status: Status::Error,
+                            output: vec![],
+                        },
+                        now,
+                    );
+                    self.begin_drain(now);
+                    pos = self.read_buf.len();
+                    break;
+                }
+            }
+        }
+        if pos > 0 {
+            self.read_buf.drain(..pos);
+        }
+    }
+
+    /// Pull bytes off the socket (bounded per poll) and decode.
+    fn read_phase(&mut self, now: Instant) -> bool {
+        let mut progress = false;
+        let mut chunk = [0u8; READ_CHUNK];
+        let mut reads = 0;
+        while reads < MAX_READS_PER_POLL {
+            reads += 1;
+            match read_some(&mut self.stream, &mut chunk) {
+                Ok(0) => {
+                    self.on_peer_eof();
+                    break;
+                }
+                Ok(n) => {
+                    self.read_buf.extend_from_slice(&chunk[..n]);
+                    self.last_read_progress = now;
+                    progress = true;
+                    if n < chunk.len() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.on_peer_error();
+                    break;
+                }
+            }
+        }
+        if !self.peer_gone && !self.draining && !self.read_buf.is_empty() {
+            self.decode_frames(now);
+        }
+        progress
+    }
+
+    /// Poll every in-flight response; completions are encoded into the
+    /// write buffer and their tenant slots released.
+    fn poll_pending(&mut self, cx: &mut Context<'_>, now: Instant) -> bool {
+        let mut progress = false;
+        let mut i = 0;
+        while i < self.pending.len() {
+            match Pin::new(&mut self.pending[i].fut).poll(cx) {
+                Poll::Ready(resp) => {
+                    let done = self.pending.swap_remove(i);
+                    self.shared.tenants.release(done.tenant);
+                    let wire = match resp.error {
+                        None => Response {
+                            id: done.id,
+                            status: Status::Ok,
+                            output: resp.output,
+                        },
+                        Some(_) => Response {
+                            id: done.id,
+                            status: Status::Error,
+                            output: vec![],
+                        },
+                    };
+                    self.queue_reply(&wire, now);
+                    progress = true;
+                }
+                Poll::Pending => i += 1,
+            }
+        }
+        progress
+    }
+
+    /// Flush as much of the write buffer as the socket accepts.
+    fn write_phase(&mut self, now: Instant) -> bool {
+        if self.peer_gone {
+            return false;
+        }
+        let mut progress = false;
+        while self.write_pos < self.write_buf.len() {
+            match write_some(&mut self.stream, &self.write_buf[self.write_pos..]) {
+                Ok(0) => {
+                    self.on_peer_error();
+                    break;
+                }
+                Ok(n) => {
+                    self.write_pos += n;
+                    self.last_write_progress = now;
+                    progress = true;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.on_peer_error();
+                    break;
+                }
+            }
+        }
+        if !self.peer_gone && self.write_done() && self.unflushed_frames > 0 {
+            add(&self.shared.metrics.frames_out, self.unflushed_frames);
+            if self.draining {
+                add(&self.shared.metrics.drained_replies, self.unflushed_frames);
+            }
+            self.unflushed_frames = 0;
+        }
+        progress
+    }
+
+    /// Read/write/drain deadline enforcement — runs every poll, so a
+    /// reactor tick is enough to time a dead or stalling peer out even
+    /// with zero socket events.
+    fn check_deadlines(&mut self, now: Instant) {
+        if self.peer_gone {
+            return;
+        }
+        if !self.draining
+            && !self.read_buf.is_empty()
+            && now.duration_since(self.last_read_progress) >= self.shared.cfg.read_timeout
+        {
+            // Slow-loris: a partial frame stalled past the read
+            // deadline. Notify (id 0) and drain.
+            inc(&self.shared.metrics.read_timeouts);
+            self.queue_reply(
+                &Response {
+                    id: 0,
+                    status: Status::Timeout,
+                    output: vec![],
+                },
+                now,
+            );
+            self.read_buf.clear();
+            self.begin_drain(now);
+        }
+        if !self.write_done()
+            && now.duration_since(self.last_write_progress) >= self.shared.cfg.write_timeout
+        {
+            inc(&self.shared.metrics.write_timeouts);
+            self.mark_gone();
+            return;
+        }
+        if let Some(t0) = self.drain_started {
+            if now.duration_since(t0) >= self.shared.cfg.drain_timeout {
+                // Drain overran its budget: force the close. Pending
+                // replies are abandoned (and counted) below.
+                self.mark_gone();
+            }
+        }
+    }
+
+    /// Final accounting; runs exactly once, on the poll that returns
+    /// `Ready`.
+    fn finish(&mut self) {
+        inc(&self.shared.metrics.closed);
+        self.shared.active_conns.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+impl Future for Conn {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let this = &mut *self;
+        let now = Instant::now();
+        let mut progress = false;
+
+        if this.shared.stop.load(Ordering::Relaxed) {
+            this.begin_drain(now);
+        }
+        if !this.draining && !this.peer_gone {
+            progress |= this.read_phase(now);
+        }
+        progress |= this.poll_pending(cx, now);
+        progress |= this.write_phase(now);
+        this.check_deadlines(now);
+
+        if this.peer_gone {
+            // Abandon in-flight replies at the socket: release the edge
+            // slots and drop the futures. The server still completes
+            // every slot (served or NACKed), so submitted == completed
+            // holds without this client.
+            for p in this.pending.drain(..) {
+                this.shared.tenants.release(p.tenant);
+                inc(&this.shared.metrics.abandoned_inflight);
+            }
+            let _ = this.stream.shutdown(Shutdown::Both);
+            this.finish();
+            return Poll::Ready(());
+        }
+        if this.draining && this.pending.is_empty() && this.write_done() {
+            let _ = this.stream.shutdown(Shutdown::Both);
+            this.finish();
+            return Poll::Ready(());
+        }
+
+        if progress {
+            this.reactor.note_progress();
+        }
+        // Always park on the reactor: the next tick re-polls us for
+        // socket readiness and deadlines; slot wakers (registered via
+        // poll_pending) fire earlier when replies complete.
+        this.reactor.register(cx);
+        Poll::Pending
+    }
+}

@@ -1,0 +1,306 @@
+//! Accept loop, I/O thread pool, and the [`NetServer`] handle.
+//!
+//! Thread 0 runs the accept loop alongside connections; every I/O
+//! thread runs a `conn_spawner` task pulling accepted sockets off a
+//! *bounded* CMP handoff queue — the accept loop pushes with
+//! [`push_async`](crate::queue::ConcurrentQueue::push_async), so a
+//! full handoff suspends acceptance (kernel backlog absorbs the burst)
+//! instead of growing without bound. Connections spread across threads
+//! by whoever pops first.
+//!
+//! Shutdown: [`NetServer::shutdown`] sets the stop flag, kicks every
+//! reactor, and joins the threads. Connections drain (pending replies
+//! flush, then sockets close) while the inference [`Server`] is still
+//! alive; only after every I/O thread exits is the server itself shut
+//! down, and the net totals are folded into its [`ShutdownReport`].
+
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::conn::Conn;
+use super::{NetConfig, NetMetrics, NetShared};
+use crate::coordinator::server::{Server, ShutdownReport};
+use crate::queue::cmp::{CmpConfig, CmpQueue};
+use crate::queue::ConcurrentQueue;
+use crate::util::executor::{Executor, LocalSpawner, Reactor};
+
+/// How long a `conn_spawner` waits on the handoff queue before
+/// re-checking the stop flag.
+const SPAWNER_POLL: Duration = Duration::from_millis(100);
+
+/// Handle to a running TCP front end. Dropping it without calling
+/// [`NetServer::shutdown`] detaches the I/O threads (they keep serving
+/// until the process exits); call `shutdown` for the graceful path.
+pub struct NetServer {
+    local_addr: SocketAddr,
+    threads: Vec<JoinHandle<()>>,
+    reactors: Vec<Reactor>,
+    handoff: Arc<CmpQueue<TcpStream>>,
+    shared: Arc<NetShared>,
+    server: Arc<Server>,
+}
+
+/// Accept syscall wrapper carrying the `net/accept` fail point. An
+/// injected fault is indistinguishable from a transient kernel error:
+/// the connection stays in the backlog and is accepted on a later
+/// pass, so no socket is ever lost to it.
+fn accept_one(listener: &TcpListener) -> io::Result<(TcpStream, SocketAddr)> {
+    crate::fail_point!(
+        "net/accept",
+        Err(io::Error::new(
+            io::ErrorKind::ConnectionAborted,
+            "injected accept fault",
+        ))
+    );
+    listener.accept()
+}
+
+/// Accept task (thread 0 only): accepted sockets go nonblocking and
+/// into the bounded handoff via `push_async` — the satellite
+/// backpressure path. Parks on a reactor tick when the backlog is
+/// empty.
+async fn accept_loop(
+    listener: TcpListener,
+    handoff: Arc<CmpQueue<TcpStream>>,
+    shared: Arc<NetShared>,
+    reactor: Reactor,
+) {
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match accept_one(&listener) {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    shared.metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                shared.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                shared.active_conns.fetch_add(1, Ordering::Relaxed);
+                handoff.push_async(stream).await;
+                reactor.note_progress();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                reactor.tick().await;
+            }
+            Err(_) => {
+                // Transient (EMFILE, aborted handshake, injected
+                // net/accept fault): count it and back off one tick.
+                shared.metrics.accept_errors.fetch_add(1, Ordering::Relaxed);
+                reactor.tick().await;
+            }
+        }
+    }
+}
+
+/// Per-thread task turning handed-off sockets into [`Conn`] tasks on
+/// this thread's executor. After stop, any sockets still queued are
+/// dropped unserved (and accounted closed).
+async fn conn_spawner(
+    spawner: LocalSpawner,
+    handoff: Arc<CmpQueue<TcpStream>>,
+    server: Arc<Server>,
+    shared: Arc<NetShared>,
+    reactor: Reactor,
+) {
+    loop {
+        let deadline = Instant::now() + SPAWNER_POLL;
+        match handoff.pop_deadline_async(deadline).await {
+            Some(stream) => {
+                spawner.spawn(Conn::new(
+                    stream,
+                    server.clone(),
+                    shared.clone(),
+                    reactor.clone(),
+                ));
+            }
+            None => {
+                if shared.stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+        }
+    }
+    drain_handoff(&handoff, &shared);
+}
+
+/// Drop (and account) sockets that were accepted but never served —
+/// the race window between the accept loop's last push and spawner
+/// exit. Also the post-join backstop in [`NetServer::shutdown`].
+fn drain_handoff(handoff: &CmpQueue<TcpStream>, shared: &NetShared) {
+    while let Some(stream) = handoff.try_dequeue() {
+        drop(stream);
+        shared.metrics.closed.fetch_add(1, Ordering::Relaxed);
+        shared.active_conns.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+fn io_thread(
+    accept: Option<TcpListener>,
+    handoff: Arc<CmpQueue<TcpStream>>,
+    shared: Arc<NetShared>,
+    server: Arc<Server>,
+    reactor: Reactor,
+) {
+    let mut ex = Executor::new();
+    let spawner = ex.spawner();
+    if let Some(listener) = accept {
+        ex.spawn(accept_loop(
+            listener,
+            handoff.clone(),
+            shared.clone(),
+            reactor.clone(),
+        ));
+    }
+    ex.spawn(conn_spawner(spawner, handoff, server, shared, reactor));
+    ex.run();
+}
+
+impl NetServer {
+    /// Bind `cfg.addr` and start the I/O thread pool in front of
+    /// `server`. The server is owned by the front end from here on —
+    /// interact with it through [`NetServer::server`] and get it back
+    /// (shut down) via [`NetServer::shutdown`].
+    pub fn start(cfg: NetConfig, server: Server) -> io::Result<NetServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let io_threads = cfg.io_threads.max(1);
+        let handoff_cap = cfg.handoff_capacity.max(1);
+        let shared = Arc::new(NetShared::new(cfg));
+        let server = Arc::new(server);
+        // Bounded handoff: max_nodes caps occupancy (push_async parks
+        // on full), and the small window keeps freed nodes reusable at
+        // this capacity instead of idling in an unfilled batch.
+        let handoff: Arc<CmpQueue<TcpStream>> = Arc::new(CmpQueue::with_config(
+            CmpConfig::default()
+                .with_max_nodes(handoff_cap)
+                .with_window(64),
+        ));
+        let mut reactors = Vec::with_capacity(io_threads);
+        let mut threads = Vec::with_capacity(io_threads);
+        let mut listener = Some(listener);
+        for i in 0..io_threads {
+            let reactor = Reactor::new(shared.cfg.poll_min, shared.cfg.poll_max);
+            reactors.push(reactor.clone());
+            let accept = if i == 0 { listener.take() } else { None };
+            let handoff = handoff.clone();
+            let shared = shared.clone();
+            let server = server.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("net-io-{i}"))
+                .spawn(move || io_thread(accept, handoff, shared, server, reactor))
+                .expect("spawn net I/O thread");
+            threads.push(handle);
+        }
+        Ok(NetServer {
+            local_addr,
+            threads,
+            reactors,
+            handoff,
+            shared,
+            server,
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The inference server behind the front end (metrics, in-process
+    /// submits).
+    pub fn server(&self) -> &Server {
+        &self.server
+    }
+
+    /// Socket-side counters.
+    pub fn metrics(&self) -> &NetMetrics {
+        &self.shared.metrics
+    }
+
+    /// Shared front-end state (tenant table, config, gauges).
+    pub fn shared(&self) -> &NetShared {
+        &self.shared
+    }
+
+    /// Graceful stop: drain every connection (pending replies flush
+    /// within the drain budget), join the I/O threads, then shut the
+    /// inference server down. The returned report carries both the
+    /// serving ledger and the net totals
+    /// ([`ShutdownReport::net_conns_closed`],
+    /// [`ShutdownReport::net_drained_replies`]).
+    pub fn shutdown(self) -> ShutdownReport {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        for r in &self.reactors {
+            r.kick();
+        }
+        self.handoff.wake_consumers();
+        for h in self.threads {
+            let _ = h.join();
+        }
+        // Backstop for the accept-loop-push vs spawner-exit race: no
+        // pushes can happen after the joins, so this empties for good.
+        drain_handoff(&self.handoff, &self.shared);
+        let server = match Arc::try_unwrap(self.server) {
+            Ok(s) => s,
+            Err(_) => panic!("net I/O threads joined but Server clones remain"),
+        };
+        let mut report = server.shutdown();
+        let m = &self.shared.metrics;
+        report.net_conns_closed = m.closed.load(Ordering::Relaxed);
+        report.net_drained_replies = m.drained_replies.load(Ordering::Relaxed);
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::ServerConfig;
+    use crate::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+
+    fn echo_factory() -> EngineFactory {
+        Arc::new(|| {
+            Ok(Box::new(EchoEngine {
+                batch: 4,
+                features: 2,
+                outputs: 1,
+                scale: 2.0,
+            }) as Box<dyn InferenceEngine>)
+        })
+    }
+
+    #[test]
+    fn start_and_shutdown_without_traffic() {
+        let server = Server::start(ServerConfig::default(), echo_factory());
+        let net = NetServer::start(NetConfig::default(), server).expect("bind");
+        assert_ne!(net.addr().port(), 0, "ephemeral port resolved");
+        let report = net.shutdown();
+        assert!(report.clean(), "idle front end shuts down clean");
+        assert_eq!(report.net_conns_closed, 0);
+    }
+
+    #[test]
+    fn shutdown_accounts_connections_left_in_handoff() {
+        use std::net::TcpStream as StdStream;
+        let server = Server::start(ServerConfig::default(), echo_factory());
+        let net = NetServer::start(NetConfig::default(), server).expect("bind");
+        let addr = net.addr();
+        // Park a few idle connections, give the accept loop a moment,
+        // then shut down: every accepted socket must be accounted
+        // closed, whether it became a Conn or died in the handoff.
+        let clients: Vec<StdStream> = (0..4).map(|_| StdStream::connect(addr).unwrap()).collect();
+        std::thread::sleep(Duration::from_millis(200));
+        let accepted = net.metrics().accepted.load(Ordering::Relaxed);
+        assert_eq!(accepted, 4, "all clients accepted");
+        let report = net.shutdown();
+        assert_eq!(report.net_conns_closed, 4, "accepted == closed");
+        drop(clients);
+    }
+}

@@ -1,0 +1,310 @@
+//! Fault-tolerant TCP front end for the serving stack (DESIGN.md §12).
+//!
+//! A small pool of I/O threads — each running the crate's own
+//! single-threaded [`Executor`](crate::util::executor::Executor) with an
+//! adaptive polling [`Reactor`](crate::util::executor::Reactor) —
+//! multiplexes tens of thousands of nonblocking connections onto a
+//! handful of host threads. No epoll/mio dependency: readiness is
+//! discovered by polling nonblocking sockets on reactor ticks whose
+//! interval adapts between a configured min (busy) and max (idle).
+//!
+//! The accept loop hands fresh sockets to the I/O threads over a
+//! *bounded* CMP queue using the backpressure-aware
+//! [`push_async`](crate::queue::ConcurrentQueue::push_async), so an
+//! accept storm suspends acceptance instead of ballooning memory.
+//! Each connection is one [`conn::Conn`] future speaking the
+//! length-prefixed [`codec`] wire format and feeding
+//! [`Server::submit_async_for_tenant`](crate::coordinator::server::Server::submit_async_for_tenant).
+//!
+//! Robustness contract:
+//!
+//! * **Slow-loris**: a partial frame that stalls past the read deadline
+//!   gets a `Timeout` notice and the connection is drained — the
+//!   reactor is never blocked by one slow peer.
+//! * **Disconnect mid-request**: in-flight responses are abandoned at
+//!   the socket but complete normally server-side, so the conservation
+//!   ledger (`submitted == completed`; shed counted separately) stays
+//!   exact.
+//! * **Overload**: two admission layers — a per-tenant in-flight cap at
+//!   the edge ([`TenantTable`]) and the server's global `max_inflight` —
+//!   both answer with a wire-level `Busy` reply instead of queueing.
+//! * **Shutdown**: connections drain (pending replies flush) before the
+//!   sockets close; the drain totals fold into
+//!   [`ShutdownReport`](crate::coordinator::server::ShutdownReport).
+
+pub mod codec;
+pub mod conn;
+pub mod listener;
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Tuning knobs for the TCP front end.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Listen address (`host:port`; port 0 binds an ephemeral port —
+    /// read it back via [`listener::NetServer::addr`]).
+    pub addr: String,
+    /// I/O threads. Thread 0 also runs the accept loop; every thread
+    /// runs connections. Tens of thousands of connections fit on a
+    /// handful of threads.
+    pub io_threads: usize,
+    /// Reactor tick floor: the polling interval while connections are
+    /// making progress.
+    pub poll_min: Duration,
+    /// Reactor tick ceiling: the polling interval backs off to this
+    /// while every connection is idle.
+    pub poll_max: Duration,
+    /// Slow-loris guard: a connection holding a *partial* frame with no
+    /// read progress for this long gets a `Timeout` notice and drains.
+    pub read_timeout: Duration,
+    /// A connection with unflushed reply bytes and no write progress
+    /// for this long is treated as gone (its socket is closed).
+    pub write_timeout: Duration,
+    /// Draining connections (shutdown, protocol error, read timeout)
+    /// that cannot finish flushing within this long are force-closed
+    /// and their in-flight replies abandoned.
+    pub drain_timeout: Duration,
+    /// Per-tenant in-flight cap at the network edge (0 = unlimited).
+    /// A tenant at its cap gets `Busy` replies while other tenants keep
+    /// being admitted — one noisy tenant cannot starve the rest.
+    pub tenant_max_inflight: usize,
+    /// Capacity of the bounded accept→I/O handoff queue; accepting
+    /// backpressures (via `push_async`) when it fills.
+    pub handoff_capacity: usize,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            addr: "127.0.0.1:0".to_string(),
+            io_threads: 2,
+            poll_min: Duration::from_micros(200),
+            poll_max: Duration::from_millis(10),
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_secs(2),
+            drain_timeout: Duration::from_secs(5),
+            tenant_max_inflight: 0,
+            handoff_capacity: 1024,
+        }
+    }
+}
+
+/// Counters for the network edge. Everything socket-side lives here;
+/// request-side accounting stays in
+/// [`Metrics`](crate::coordinator::metrics::Metrics) so the serving
+/// ledger has a single owner.
+#[derive(Default)]
+pub struct NetMetrics {
+    /// Connections accepted.
+    pub accepted: AtomicU64,
+    /// Connections fully closed (every accepted connection ends here,
+    /// including those dropped unserved during shutdown).
+    pub closed: AtomicU64,
+    /// Request frames decoded.
+    pub frames_in: AtomicU64,
+    /// Response frames fully flushed to a socket.
+    pub frames_out: AtomicU64,
+    /// `Busy` replies sent (either admission layer).
+    pub busy_replies: AtomicU64,
+    /// `Busy` replies caused by the per-tenant cap specifically.
+    pub tenant_busy: AtomicU64,
+    /// Connections drained by the slow-loris read deadline.
+    pub read_timeouts: AtomicU64,
+    /// Connections closed for stalled writes.
+    pub write_timeouts: AtomicU64,
+    /// Connections that disconnected abnormally (EOF or I/O error with
+    /// work still outstanding).
+    pub disconnects: AtomicU64,
+    /// In-flight responses abandoned because their connection died
+    /// first. The server still completes them — the ledger stays exact.
+    pub abandoned_inflight: AtomicU64,
+    /// Replies flushed to peers *after* drain began (graceful-shutdown
+    /// work that would have been lost by an abrupt close).
+    pub drained_replies: AtomicU64,
+    /// Connections poisoned by undecodable bytes.
+    pub protocol_errors: AtomicU64,
+    /// Accept-loop errors (including injected `net/accept` faults).
+    pub accept_errors: AtomicU64,
+}
+
+impl NetMetrics {
+    /// Fresh all-zero counters.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One-line human-readable summary of every nonzero counter group.
+    pub fn report(&self) -> String {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let mut out = format!(
+            "net: accepted={} closed={} frames_in={} frames_out={}",
+            ld(&self.accepted),
+            ld(&self.closed),
+            ld(&self.frames_in),
+            ld(&self.frames_out),
+        );
+        let tail = [
+            ("busy", ld(&self.busy_replies)),
+            ("tenant_busy", ld(&self.tenant_busy)),
+            ("read_timeouts", ld(&self.read_timeouts)),
+            ("write_timeouts", ld(&self.write_timeouts)),
+            ("disconnects", ld(&self.disconnects)),
+            ("abandoned", ld(&self.abandoned_inflight)),
+            ("drained_replies", ld(&self.drained_replies)),
+            ("protocol_errors", ld(&self.protocol_errors)),
+            ("accept_errors", ld(&self.accept_errors)),
+        ];
+        for (name, v) in tail {
+            if v > 0 {
+                out.push_str(&format!(" {name}={v}"));
+            }
+        }
+        out
+    }
+}
+
+/// Per-tenant in-flight accounting for edge admission. A mutex over a
+/// small map is fine here: it is touched twice per request (admit /
+/// release), not per queue operation, and contention is bounded by the
+/// I/O thread count, not the connection count.
+pub struct TenantTable {
+    cap: usize,
+    inflight: Mutex<HashMap<u32, u64>>,
+}
+
+impl TenantTable {
+    /// A table admitting at most `cap` in-flight requests per tenant
+    /// (0 = unlimited; the table then never takes its lock).
+    pub fn new(cap: usize) -> Self {
+        TenantTable {
+            cap,
+            inflight: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Try to admit one request for `tenant`. `false` means the tenant
+    /// is at its cap — the caller answers `Busy` without submitting.
+    /// Every `true` must be paired with exactly one
+    /// [`TenantTable::release`].
+    pub fn try_admit(&self, tenant: u32) -> bool {
+        if self.cap == 0 {
+            return true;
+        }
+        let mut g = self.inflight.lock().unwrap();
+        let e = g.entry(tenant).or_insert(0);
+        if *e >= self.cap as u64 {
+            false
+        } else {
+            *e += 1;
+            true
+        }
+    }
+
+    /// Release one admitted request for `tenant` (response delivered,
+    /// abandoned, or refused downstream).
+    pub fn release(&self, tenant: u32) {
+        if self.cap == 0 {
+            return;
+        }
+        let mut g = self.inflight.lock().unwrap();
+        if let Some(e) = g.get_mut(&tenant) {
+            *e = e.saturating_sub(1);
+            if *e == 0 {
+                g.remove(&tenant);
+            }
+        }
+    }
+
+    /// Current in-flight count for `tenant` (diagnostics).
+    pub fn inflight(&self, tenant: u32) -> u64 {
+        self.inflight
+            .lock()
+            .unwrap()
+            .get(&tenant)
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+/// State shared by the accept loop and every connection across all I/O
+/// threads.
+pub struct NetShared {
+    /// Front-end configuration.
+    pub cfg: NetConfig,
+    /// Edge admission table.
+    pub tenants: TenantTable,
+    /// Socket-side counters.
+    pub metrics: NetMetrics,
+    /// Set once by shutdown: the accept loop stops and every
+    /// connection begins draining.
+    pub stop: AtomicBool,
+    /// Gauge: connections accepted but not yet closed.
+    pub active_conns: AtomicU64,
+}
+
+impl NetShared {
+    /// Build the shared state for `cfg`.
+    pub fn new(cfg: NetConfig) -> Self {
+        let tenants = TenantTable::new(cfg.tenant_max_inflight);
+        NetShared {
+            cfg,
+            tenants,
+            metrics: NetMetrics::new(),
+            stop: AtomicBool::new(false),
+            active_conns: AtomicU64::new(0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tenant_table_caps_and_releases() {
+        let t = TenantTable::new(2);
+        assert!(t.try_admit(7));
+        assert!(t.try_admit(7));
+        assert!(!t.try_admit(7), "tenant 7 at cap");
+        assert!(t.try_admit(8), "other tenants unaffected");
+        assert_eq!(t.inflight(7), 2);
+        t.release(7);
+        assert!(t.try_admit(7), "release frees a slot");
+        t.release(7);
+        t.release(7);
+        assert_eq!(t.inflight(7), 0, "entry removed at zero");
+    }
+
+    #[test]
+    fn tenant_table_zero_cap_is_unlimited() {
+        let t = TenantTable::new(0);
+        for _ in 0..1000 {
+            assert!(t.try_admit(1));
+        }
+        t.release(1); // no-op, must not underflow or panic
+        assert_eq!(t.inflight(1), 0, "unlimited table keeps no counts");
+    }
+
+    #[test]
+    fn net_metrics_report_hides_zero_tails() {
+        let m = NetMetrics::new();
+        m.accepted.store(3, Ordering::Relaxed);
+        let r = m.report();
+        assert!(r.contains("accepted=3"));
+        assert!(!r.contains("disconnects"), "zero counters stay silent");
+        m.disconnects.store(1, Ordering::Relaxed);
+        assert!(m.report().contains("disconnects=1"));
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let c = NetConfig::default();
+        assert!(c.io_threads >= 1);
+        assert!(c.poll_min <= c.poll_max);
+        assert!(c.handoff_capacity > 0);
+        assert_eq!(c.tenant_max_inflight, 0, "edge cap off by default");
+    }
+}

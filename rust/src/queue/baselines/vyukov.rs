@@ -4,12 +4,16 @@
 //! numbers arbitrate producers and consumers without locks.
 
 use std::cell::UnsafeCell;
+use std::future::Future;
 use std::mem::MaybeUninit;
+use std::pin::Pin;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::task::{Context, Poll};
 
 use crossbeam_utils::CachePadded;
 
-use crate::queue::ConcurrentQueue;
+use crate::queue::{BoxFuture, ConcurrentQueue};
+use crate::util::wait::{WaitStrategy, WakerRegistration};
 
 struct Slot<T> {
     /// Sequence protocol: `seq == pos` ⇒ writable by the enqueuer of
@@ -25,6 +29,10 @@ pub struct VyukovQueue<T> {
     mask: usize,
     enqueue_pos: CachePadded<AtomicUsize>,
     dequeue_pos: CachePadded<AtomicUsize>,
+    /// Producer-side eventcount: `push_async` futures of a full ring
+    /// park here; every successful pop notifies, so an awaiting
+    /// producer wakes as soon as capacity exists (no timer polling).
+    producers: WaitStrategy,
 }
 
 unsafe impl<T: Send> Send for VyukovQueue<T> {}
@@ -45,6 +53,7 @@ impl<T: Send> VyukovQueue<T> {
             mask: cap - 1,
             enqueue_pos: CachePadded::new(AtomicUsize::new(0)),
             dequeue_pos: CachePadded::new(AtomicUsize::new(0)),
+            producers: WaitStrategy::new(),
         }
     }
 
@@ -100,6 +109,10 @@ impl<T: Send> VyukovQueue<T> {
                         let v = unsafe { (*slot.val.get()).assume_init_read() };
                         slot.seq
                             .store(pos + self.mask + 1, Ordering::Release);
+                        // The freed slot is capacity: wake any producer
+                        // awaiting it in `push_async` (single fence +
+                        // relaxed load when nobody waits).
+                        self.producers.notify_if_waiting();
                         return Some(v);
                     }
                     Err(now) => pos = now,
@@ -113,6 +126,55 @@ impl<T: Send> VyukovQueue<T> {
     }
 }
 
+/// Future behind [`VyukovQueue`]'s `push_async` override: parks on the
+/// producer-side eventcount and is woken by the pop that frees a slot,
+/// following the same register → re-try → `Pending` protocol as the
+/// CMP pop futures (the re-try after registration is the lost-wakeup
+/// guard — a pop landing between the failed push and the registration
+/// is observed by the second attempt).
+struct PushFuture<'a, T: Send> {
+    queue: &'a VyukovQueue<T>,
+    item: Option<T>,
+    registration: WakerRegistration,
+}
+
+// The item is moved out by value on the successful attempt; nothing is
+// structurally pinned.
+impl<T: Send> Unpin for PushFuture<'_, T> {}
+
+impl<T: Send> Future for PushFuture<'_, T> {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let this = &mut *self;
+        let item = this.item.take().expect("push future polled after completion");
+        let item = match this.queue.push(item) {
+            Ok(()) => {
+                this.registration.clear(&this.queue.producers);
+                return Poll::Ready(());
+            }
+            Err(item) => item,
+        };
+        this.registration.ensure(&this.queue.producers, cx.waker());
+        match this.queue.push(item) {
+            Ok(()) => {
+                this.registration.clear(&this.queue.producers);
+                Poll::Ready(())
+            }
+            Err(item) => {
+                this.item = Some(item);
+                Poll::Pending
+            }
+        }
+    }
+}
+
+impl<T: Send> Drop for PushFuture<'_, T> {
+    fn drop(&mut self) {
+        self.registration.clear(&self.queue.producers);
+    }
+}
+
 impl<T: Send> ConcurrentQueue<T> for VyukovQueue<T> {
     fn try_enqueue(&self, item: T) -> Result<(), T> {
         self.push(item)
@@ -120,6 +182,14 @@ impl<T: Send> ConcurrentQueue<T> for VyukovQueue<T> {
 
     fn try_dequeue(&self) -> Option<T> {
         self.pop()
+    }
+
+    fn push_async(&self, item: T) -> BoxFuture<'_, ()> {
+        Box::pin(PushFuture {
+            queue: self,
+            item: Some(item),
+            registration: WakerRegistration::new(),
+        })
     }
 
     fn name(&self) -> &'static str {
@@ -213,6 +283,49 @@ mod tests {
             drop(q.pop());
         }
         assert_eq!(DROPS.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn push_async_parks_until_pop_frees_slot() {
+        use crate::util::executor::block_on;
+        use std::time::Duration;
+        let q = Arc::new(VyukovQueue::<u32>::new(2));
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        assert_eq!(q.push(9), Err(9), "full");
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || block_on(q2.push_async(3)));
+        std::thread::sleep(Duration::from_millis(20));
+        // The pop's notify (not a timer) is what completes the future.
+        assert_eq!(q.pop(), Some(1));
+        producer.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.producers.registered_wakers(), 0, "slot released");
+    }
+
+    #[test]
+    fn dropped_push_future_releases_registration() {
+        use std::pin::Pin;
+        use std::task::{Context, Poll, Wake, Waker};
+        struct Noop;
+        impl Wake for Noop {
+            fn wake(self: Arc<Self>) {}
+        }
+        let q = VyukovQueue::<u32>::new(2);
+        q.push(1).unwrap();
+        q.push(2).unwrap();
+        let waker = Waker::from(Arc::new(Noop));
+        let mut cx = Context::from_waker(&waker);
+        {
+            let mut fut = q.push_async(3);
+            assert!(Pin::new(&mut fut).poll(&mut cx) == Poll::Pending);
+            assert_eq!(q.producers.registered_wakers(), 1);
+        } // dropped pending: the item and the slot both go
+        assert_eq!(q.producers.registered_wakers(), 0);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), None, "the abandoned 3 was dropped, not enqueued");
     }
 
     #[test]

@@ -26,39 +26,7 @@ use std::time::Instant;
 
 use super::queue::CmpQueue;
 use crate::util::executor::wake_at;
-use crate::util::wait::WakerKey;
-
-/// Waker-slot registration state shared by the pop futures: at most
-/// one live slot on the queue's eventcount, dropped-or-consumed
-/// exactly once.
-struct Registration {
-    key: Option<WakerKey>,
-}
-
-impl Registration {
-    fn new() -> Self {
-        Registration { key: None }
-    }
-
-    /// Ensure a live slot holding (a clone of) `waker`: refresh the
-    /// existing slot, or register a fresh one when a notification
-    /// consumed it (protocol step 2).
-    fn ensure<T: Send + 'static>(&mut self, queue: &CmpQueue<T>, cx: &Context<'_>) {
-        let ws = queue.wait_strategy();
-        match self.key {
-            Some(key) if ws.update_waker(key, cx.waker()) => {}
-            _ => self.key = Some(ws.register_waker(cx.waker())),
-        }
-    }
-
-    /// Drop the slot (resolution or cancellation). Idempotent; a slot
-    /// already consumed by a notification is a no-op.
-    fn clear<T: Send + 'static>(&mut self, queue: &CmpQueue<T>) {
-        if let Some(key) = self.key.take() {
-            queue.wait_strategy().deregister_waker(key);
-        }
-    }
-}
+use crate::util::wait::WakerRegistration;
 
 /// The one copy of the waker-slot poll protocol (module docs steps
 /// 1–3): claim → register/refresh → re-claim → `Pending`. Every pop
@@ -67,18 +35,18 @@ impl Registration {
 /// registration on resolution.
 fn poll_claim<T: Send + 'static, R>(
     queue: &CmpQueue<T>,
-    registration: &mut Registration,
+    registration: &mut WakerRegistration,
     cx: &Context<'_>,
     mut claim: impl FnMut(&CmpQueue<T>) -> Option<R>,
 ) -> Poll<R> {
     if let Some(v) = claim(queue) {
-        registration.clear(queue);
+        registration.clear(queue.wait_strategy());
         return Poll::Ready(v);
     }
-    registration.ensure(queue, cx);
+    registration.ensure(queue.wait_strategy(), cx.waker());
     // Protocol step 3: the re-try after registration.
     if let Some(v) = claim(queue) {
-        registration.clear(queue);
+        registration.clear(queue.wait_strategy());
         return Poll::Ready(v);
     }
     Poll::Pending
@@ -90,14 +58,14 @@ fn poll_claim<T: Send + 'static, R>(
 /// [`CmpQueue::pop_async`] for usage.
 pub struct PopFuture<'a, T: Send + 'static> {
     queue: &'a CmpQueue<T>,
-    registration: Registration,
+    registration: WakerRegistration,
 }
 
 impl<'a, T: Send + 'static> PopFuture<'a, T> {
     pub(super) fn new(queue: &'a CmpQueue<T>) -> Self {
         PopFuture {
             queue,
-            registration: Registration::new(),
+            registration: WakerRegistration::new(),
         }
     }
 }
@@ -113,7 +81,7 @@ impl<T: Send + 'static> Future for PopFuture<'_, T> {
 
 impl<T: Send + 'static> Drop for PopFuture<'_, T> {
     fn drop(&mut self) {
-        self.registration.clear(self.queue);
+        self.registration.clear(self.queue.wait_strategy());
     }
 }
 
@@ -123,7 +91,7 @@ impl<T: Send + 'static> Drop for PopFuture<'_, T> {
 pub struct PopBatchFuture<'a, T: Send + 'static> {
     queue: &'a CmpQueue<T>,
     max: usize,
-    registration: Registration,
+    registration: WakerRegistration,
 }
 
 impl<'a, T: Send + 'static> PopBatchFuture<'a, T> {
@@ -131,7 +99,7 @@ impl<'a, T: Send + 'static> PopBatchFuture<'a, T> {
         PopBatchFuture {
             queue,
             max,
-            registration: Registration::new(),
+            registration: WakerRegistration::new(),
         }
     }
 }
@@ -142,7 +110,7 @@ impl<T: Send + 'static> Future for PopBatchFuture<'_, T> {
     fn poll(self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<Vec<T>> {
         let this = self.get_mut();
         if this.max == 0 {
-            this.registration.clear(this.queue);
+            this.registration.clear(this.queue.wait_strategy());
             return Poll::Ready(Vec::new());
         }
         let max = this.max;
@@ -159,7 +127,7 @@ impl<T: Send + 'static> Future for PopBatchFuture<'_, T> {
 
 impl<T: Send + 'static> Drop for PopBatchFuture<'_, T> {
     fn drop(&mut self) {
-        self.registration.clear(self.queue);
+        self.registration.clear(self.queue.wait_strategy());
     }
 }
 
@@ -171,7 +139,7 @@ impl<T: Send + 'static> Drop for PopBatchFuture<'_, T> {
 pub struct PopDeadlineFuture<'a, T: Send + 'static> {
     queue: &'a CmpQueue<T>,
     deadline: Instant,
-    registration: Registration,
+    registration: WakerRegistration,
     /// The waker the shared timer holds for us; re-armed only if the
     /// task shows up with a different waker (executor migration).
     armed: Option<Waker>,
@@ -182,7 +150,7 @@ impl<'a, T: Send + 'static> PopDeadlineFuture<'a, T> {
         PopDeadlineFuture {
             queue,
             deadline,
-            registration: Registration::new(),
+            registration: WakerRegistration::new(),
             armed: None,
         }
     }
@@ -200,7 +168,7 @@ impl<T: Send + 'static> Future for PopDeadlineFuture<'_, T> {
             // The claim attempts above raced ahead of expiry; the
             // deadline passed with the queue observed empty (the slot
             // registered a moment ago is released right here).
-            this.registration.clear(this.queue);
+            this.registration.clear(this.queue.wait_strategy());
             return Poll::Ready(None);
         }
         let stale = match &this.armed {
@@ -217,7 +185,7 @@ impl<T: Send + 'static> Future for PopDeadlineFuture<'_, T> {
 
 impl<T: Send + 'static> Drop for PopDeadlineFuture<'_, T> {
     fn drop(&mut self) {
-        self.registration.clear(self.queue);
+        self.registration.clear(self.queue.wait_strategy());
     }
 }
 

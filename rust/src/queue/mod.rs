@@ -14,6 +14,7 @@ use std::sync::Arc;
 use std::task::{Context, Poll};
 use std::time::{Duration, Instant};
 
+use crate::util::executor::wake_at;
 use crate::util::Backoff;
 
 /// Boxed future returned by the [`ConcurrentQueue`] async dequeues.
@@ -88,6 +89,43 @@ impl<T: Send, Q: ConcurrentQueue<T> + ?Sized> Future for PollPopBatch<'_, Q, T> 
         }
         cx.waker().wake_by_ref();
         Poll::Pending
+    }
+}
+
+/// Future behind the default [`ConcurrentQueue::push_async`]: try the
+/// enqueue on every poll; while the queue stays full, re-arm the
+/// shared timer with the same bounded exponential backoff the default
+/// blocking dequeues use (50 µs … 1 ms), so an awaiting producer never
+/// busy-spins through its executor. The item rides inside the future
+/// until accepted (dropping a pending future drops the item with it).
+struct PollPush<'a, Q: ?Sized, T> {
+    queue: &'a Q,
+    item: Option<T>,
+    sleep_us: u64,
+}
+
+// No field is structurally pinned (the item is moved out by value on
+// the successful attempt), so the future is `Unpin` regardless of `T`.
+impl<Q: ?Sized, T> Unpin for PollPush<'_, Q, T> {}
+
+impl<T: Send, Q: ConcurrentQueue<T> + ?Sized> Future for PollPush<'_, Q, T> {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        let this = &mut *self;
+        let item = this.item.take().expect("push future polled after completion");
+        match this.queue.try_enqueue(item) {
+            Ok(()) => Poll::Ready(()),
+            Err(item) => {
+                this.item = Some(item);
+                this.sleep_us = (this.sleep_us * 2).clamp(POLL_SLEEP_FLOOR_US, POLL_SLEEP_CAP_US);
+                wake_at(
+                    Instant::now() + Duration::from_micros(this.sleep_us),
+                    cx.waker().clone(),
+                );
+                Poll::Pending
+            }
+        }
     }
 }
 
@@ -226,6 +264,30 @@ pub trait ConcurrentQueue<T: Send>: Send + Sync {
                 }
             }
         }
+    }
+
+    /// Enqueue asynchronously: the returned future resolves once the
+    /// queue accepts the item — backpressure as suspension instead of
+    /// an `Err(item)` to retry (the TCP ingress feeds its bounded
+    /// accept handoff through this, so a full queue slows accepting
+    /// rather than dropping connections — DESIGN.md §12).
+    ///
+    /// The first poll tries [`ConcurrentQueue::try_enqueue`] directly,
+    /// so unbounded implementations (CMP in its default configuration)
+    /// resolve immediately without suspending. Bounded or
+    /// capacity-exhausted queues park the future and retry on
+    /// shared-timer wakeups with bounded exponential backoff
+    /// (50 µs … 1 ms — the dequeue-default escalation mirrored);
+    /// implementations with a producer-side eventcount (Vyukov)
+    /// override this so a pop of the full ring wakes the producer
+    /// immediately instead. Cancellation is `Drop`: a pending future
+    /// still owns its item and drops it along with itself.
+    fn push_async(&self, item: T) -> BoxFuture<'_, ()> {
+        Box::pin(PollPush {
+            queue: self,
+            item: Some(item),
+            sleep_us: 0,
+        })
     }
 
     /// Dequeue, blocking until an item is available.
@@ -592,6 +654,44 @@ mod tests {
             }
             assert!(block_on(q.pop_async_batch(0)).is_empty(), "{}", i.name());
         }
+    }
+
+    #[test]
+    fn push_async_fast_path_every_impl() {
+        use crate::util::executor::block_on;
+        // With headroom, push_async resolves without suspending for
+        // every implementation (the unbounded fast path, plus a
+        // non-full bounded ring).
+        for i in Impl::ALL {
+            let q: Arc<dyn ConcurrentQueue<u64>> = i.make(64);
+            block_on(q.push_async(1));
+            block_on(q.push_async(2));
+            assert_eq!(q.try_dequeue(), Some(1), "{}", i.name());
+            assert_eq!(q.try_dequeue(), Some(2), "{}", i.name());
+        }
+    }
+
+    #[test]
+    fn push_async_awaits_capacity_on_full_bounded() {
+        use crate::util::executor::block_on;
+        let q: Arc<dyn ConcurrentQueue<u64>> = Impl::Vyukov.make(2);
+        q.enqueue(0);
+        q.enqueue(1);
+        assert!(q.try_enqueue(9).is_err(), "ring is full");
+        let q2 = q.clone();
+        let popper = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            q2.try_dequeue()
+        });
+        let t0 = Instant::now();
+        block_on(q.push_async(2)); // suspends until the pop frees a slot
+        assert!(
+            t0.elapsed() >= Duration::from_millis(20),
+            "push_async resolved before capacity existed"
+        );
+        assert_eq!(popper.join().unwrap(), Some(0));
+        assert_eq!(q.try_dequeue(), Some(1));
+        assert_eq!(q.try_dequeue(), Some(2));
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Hand-rolled, dependency-free async plumbing: [`block_on`], a
-//! single-threaded round-robin [`Executor`], and a shared timer
-//! ([`wake_at`] / [`sleep_until`]).
+//! single-threaded round-robin [`Executor`] with a [`LocalSpawner`]
+//! for injecting tasks into a running executor, a shared timer
+//! ([`wake_at`] / [`sleep_until`]), and a readiness-polling
+//! [`Reactor`] for nonblocking I/O tasks.
 //!
 //! The offline image ships no tokio (or any async runtime), and the
 //! queue's async bridge (DESIGN.md §10) is deliberately
@@ -26,14 +28,16 @@
 //!   dedicated thread; the timer serves every deadline future in the
 //!   process.
 
+use std::cell::RefCell;
 use std::collections::BinaryHeap;
 use std::future::Future;
 use std::pin::Pin;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::task::{Context, Poll, Wake, Waker};
 use std::thread::{self, Thread};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Parking-based notification target shared by [`block_on`] and
 /// [`Executor`]: a wake stores the flag and unparks the host thread.
@@ -149,6 +153,34 @@ struct Task {
 pub struct Executor {
     tasks: Vec<Task>,
     parker: Option<Arc<ThreadNotify>>,
+    /// Tasks injected by [`LocalSpawner`] handles, drained into
+    /// `tasks` at the top of each [`Executor::run`] sweep.
+    injector: Option<Injector>,
+}
+
+type Injector = Rc<RefCell<Vec<Pin<Box<dyn Future<Output = ()>>>>>>;
+
+/// Handle for spawning tasks into a *running* [`Executor`] — e.g. a
+/// listener task spawning one connection task per accepted socket.
+///
+/// The handle is `!Send` (like the tasks themselves): it may only be
+/// used from the executor's own thread, typically from inside a task
+/// it hosts. Obtain one with [`Executor::spawner`] before calling
+/// [`Executor::run`] and move clones into the spawning tasks.
+#[derive(Clone)]
+pub struct LocalSpawner {
+    injector: Injector,
+    parker: Arc<ThreadNotify>,
+}
+
+impl LocalSpawner {
+    /// Queue `fut` on the host executor. It is swept into the task
+    /// list (and gets its initial poll) on the executor's next loop
+    /// iteration.
+    pub fn spawn(&self, fut: impl Future<Output = ()> + 'static) {
+        self.injector.borrow_mut().push(Box::pin(fut));
+        self.parker.notify();
+    }
 }
 
 impl Executor {
@@ -170,6 +202,15 @@ impl Executor {
         });
     }
 
+    /// A [`LocalSpawner`] feeding this executor. Must be called on the
+    /// thread that will call [`Executor::run`] (it binds the parker to
+    /// the calling thread, exactly like [`Executor::spawn`]).
+    pub fn spawner(&mut self) -> LocalSpawner {
+        let parker = self.parker.get_or_insert_with(ThreadNotify::for_current).clone();
+        let injector = self.injector.get_or_insert_with(Injector::default).clone();
+        LocalSpawner { injector, parker }
+    }
+
     /// Number of spawned tasks not yet completed.
     pub fn pending_tasks(&self) -> usize {
         self.tasks.iter().filter(|t| t.fut.is_some()).count()
@@ -182,6 +223,18 @@ impl Executor {
             return; // nothing was ever spawned
         };
         loop {
+            if let Some(injector) = &self.injector {
+                let mut incoming = injector.borrow_mut();
+                for fut in incoming.drain(..) {
+                    self.tasks.push(Task {
+                        fut: Some(fut),
+                        state: Arc::new(TaskState {
+                            ready: AtomicBool::new(true),
+                            parker: parker.clone(),
+                        }),
+                    });
+                }
+            }
             let mut any_ready = false;
             let mut all_done = true;
             for task in &mut self.tasks {
@@ -207,6 +260,15 @@ impl Executor {
                 }
             }
             if all_done {
+                // A task may have completed in the same sweep it
+                // spawned a child; don't return with queued injections.
+                let more = self
+                    .injector
+                    .as_ref()
+                    .is_some_and(|i| !i.borrow().is_empty());
+                if more {
+                    continue;
+                }
                 self.tasks.clear();
                 return;
             }
@@ -380,6 +442,172 @@ impl Future for Sleep {
     }
 }
 
+/// Readiness-polling reactor for nonblocking I/O tasks (DESIGN.md §12).
+///
+/// The offline image ships no epoll/kqueue crate, so readiness is
+/// *polled*, not notified: an I/O task that hits `WouldBlock` calls
+/// [`Reactor::register`] with its waker and returns `Pending`; the
+/// reactor batches every waker parked since the last tick and re-wakes
+/// them all on the next tick, driven by the shared timer thread
+/// ([`wake_at`]) — one timer entry per tick *per reactor*, regardless
+/// of how many thousands of connections are parked on it.
+///
+/// The tick interval adapts: any registrant that made progress calls
+/// [`Reactor::note_progress`], snapping the interval back to `min`;
+/// ticks that fire with no progress reported double it up to `max`.
+/// Busy reactors poll near `min` (low latency), idle ones decay toward
+/// `max` (low CPU). [`Reactor::kick`] wakes everything immediately —
+/// the shutdown path uses it so parked connections observe the stop
+/// flag without waiting out a tick.
+///
+/// Cloning shares the reactor (it is an `Arc` internally); clones are
+/// `Send + Sync` so one reactor can serve tasks on one executor thread
+/// while being kicked from another.
+#[derive(Clone)]
+pub struct Reactor {
+    inner: Arc<ReactorInner>,
+}
+
+struct ReactorInner {
+    /// Wakers parked until the next tick, plus whether a tick is
+    /// currently armed on the timer. Both live under one lock so a
+    /// register racing a tick either lands in the drained batch or
+    /// re-arms — never parks unarmed.
+    parked: Mutex<ReactorParked>,
+    /// Current adaptive tick interval, µs.
+    interval_us: AtomicU64,
+    min_us: u64,
+    max_us: u64,
+    /// Set by [`Reactor::note_progress`], consumed by the next tick.
+    progress: AtomicBool,
+}
+
+#[derive(Default)]
+struct ReactorParked {
+    wakers: Vec<Waker>,
+    tick_armed: bool,
+}
+
+impl Reactor {
+    /// A reactor ticking between `min_tick` (busy) and `max_tick`
+    /// (idle). `max_tick` is clamped up to at least `min_tick`.
+    pub fn new(min_tick: Duration, max_tick: Duration) -> Self {
+        let min_us = (min_tick.as_micros() as u64).max(1);
+        let max_us = (max_tick.as_micros() as u64).max(min_us);
+        Reactor {
+            inner: Arc::new(ReactorInner {
+                parked: Mutex::new(ReactorParked::default()),
+                interval_us: AtomicU64::new(min_us),
+                min_us,
+                max_us,
+                progress: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// Park the calling task until the next tick (or [`Reactor::kick`]).
+    /// Call on every `Pending` return of an I/O task — duplicate
+    /// registrations within one tick only cost a spurious wake.
+    pub fn register(&self, cx: &Context<'_>) {
+        let arm = {
+            let mut g = self.inner.parked.lock().unwrap();
+            g.wakers.push(cx.waker().clone());
+            !std::mem::replace(&mut g.tick_armed, true)
+        };
+        if arm {
+            let us = self.inner.interval_us.load(Ordering::Relaxed);
+            wake_at(
+                Instant::now() + Duration::from_micros(us),
+                Waker::from(Arc::new(ReactorTick {
+                    inner: self.inner.clone(),
+                })),
+            );
+        }
+    }
+
+    /// Report that a registrant made progress (bytes moved, connection
+    /// accepted): the next tick is scheduled at the `min` interval.
+    pub fn note_progress(&self) {
+        self.inner.progress.store(true, Ordering::Relaxed);
+        self.inner.interval_us.store(self.inner.min_us, Ordering::Relaxed);
+    }
+
+    /// Wake every parked task *now*, without waiting for the tick.
+    /// An already-armed tick later fires on an empty batch — harmless.
+    pub fn kick(&self) {
+        let wakers = {
+            let mut g = self.inner.parked.lock().unwrap();
+            std::mem::take(&mut g.wakers)
+        };
+        for w in wakers {
+            w.wake();
+        }
+    }
+
+    /// Number of wakers currently parked (telemetry).
+    pub fn parked(&self) -> usize {
+        self.inner.parked.lock().unwrap().wakers.len()
+    }
+
+    /// Future that parks the task until the next tick (or kick): the
+    /// polling analogue of "wait for readiness" — used by accept loops
+    /// after `WouldBlock`. Resolves after at most one suspension, so a
+    /// spurious wake just retries early.
+    pub fn tick(&self) -> TickWait<'_> {
+        TickWait {
+            reactor: self,
+            waited: false,
+        }
+    }
+}
+
+/// Timer-side waker that drives one reactor tick: drain the parked
+/// batch, adapt the interval, wake everyone.
+struct ReactorTick {
+    inner: Arc<ReactorInner>,
+}
+
+impl Wake for ReactorTick {
+    fn wake(self: Arc<Self>) {
+        let inner = &self.inner;
+        let next = if inner.progress.swap(false, Ordering::Relaxed) {
+            inner.min_us
+        } else {
+            (inner.interval_us.load(Ordering::Relaxed) * 2).min(inner.max_us)
+        };
+        inner.interval_us.store(next, Ordering::Relaxed);
+        let wakers = {
+            let mut g = inner.parked.lock().unwrap();
+            g.tick_armed = false;
+            std::mem::take(&mut g.wakers)
+        };
+        // Outside the lock: a woken task may immediately re-register.
+        for w in wakers {
+            w.wake();
+        }
+    }
+}
+
+/// Future returned by [`Reactor::tick`].
+pub struct TickWait<'a> {
+    reactor: &'a Reactor,
+    waited: bool,
+}
+
+impl Future for TickWait<'_> {
+    type Output = ();
+
+    fn poll(mut self: Pin<&mut Self>, cx: &mut Context<'_>) -> Poll<()> {
+        if self.waited {
+            Poll::Ready(())
+        } else {
+            self.waited = true;
+            self.reactor.register(cx);
+            Poll::Pending
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -483,5 +711,92 @@ mod tests {
         }
         ex.run();
         assert_eq!(*fired.lock().unwrap(), vec![1, 2, 0], "nearest first");
+    }
+
+    #[test]
+    fn local_spawner_injects_into_running_executor() {
+        use std::cell::Cell;
+        use std::rc::Rc;
+        let hits = Rc::new(Cell::new(0u32));
+        let mut ex = Executor::new();
+        let spawner = ex.spawner();
+        {
+            let hits = hits.clone();
+            let spawner = spawner.clone();
+            ex.spawn(async move {
+                // Spawn a chain of children from inside a running task.
+                for _ in 0..3 {
+                    let hits = hits.clone();
+                    let spawner = spawner.clone();
+                    spawner.spawn(async move {
+                        hits.set(hits.get() + 1);
+                        let hits = hits.clone();
+                        spawner.spawn(async move {
+                            hits.set(hits.get() + 10);
+                        });
+                    });
+                }
+            });
+        }
+        ex.run();
+        assert_eq!(hits.get(), 33, "3 children + 3 grandchildren all ran");
+    }
+
+    #[test]
+    fn local_spawner_queued_before_run_executes() {
+        use std::cell::Cell;
+        use std::rc::Rc;
+        let hit = Rc::new(Cell::new(false));
+        let mut ex = Executor::new();
+        let spawner = ex.spawner();
+        let h = hit.clone();
+        spawner.spawn(async move { h.set(true) });
+        ex.run();
+        assert!(hit.get());
+    }
+
+    #[test]
+    fn reactor_tick_wakes_parked_task() {
+        let r = Reactor::new(Duration::from_micros(200), Duration::from_millis(5));
+        let t0 = Instant::now();
+        block_on(async {
+            r.tick().await;
+            r.tick().await;
+        });
+        // Two ticks at ≥200µs each; bound generously for slow CI.
+        assert!(t0.elapsed() < Duration::from_secs(5));
+        assert_eq!(r.parked(), 0);
+    }
+
+    #[test]
+    fn reactor_kick_wakes_immediately() {
+        let r = Reactor::new(Duration::from_secs(60), Duration::from_secs(60));
+        let r2 = r.clone();
+        let kicker = thread::spawn(move || {
+            while r2.parked() == 0 {
+                thread::yield_now();
+            }
+            r2.kick();
+        });
+        let t0 = Instant::now();
+        block_on(r.tick());
+        // Far sooner than the 60s tick: the kick did it.
+        assert!(t0.elapsed() < Duration::from_secs(30));
+        kicker.join().unwrap();
+    }
+
+    #[test]
+    fn reactor_interval_adapts() {
+        let r = Reactor::new(Duration::from_micros(100), Duration::from_millis(50));
+        // No progress: ticks decay the interval toward max.
+        block_on(async {
+            for _ in 0..4 {
+                r.tick().await;
+            }
+        });
+        let decayed = r.inner.interval_us.load(Ordering::Relaxed);
+        assert!(decayed > 100, "interval grew without progress: {decayed}");
+        r.note_progress();
+        assert_eq!(r.inner.interval_us.load(Ordering::Relaxed), 100);
     }
 }

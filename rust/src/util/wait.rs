@@ -458,6 +458,55 @@ impl WakerSet {
     }
 }
 
+/// Reusable waker-slot handle for futures parking on a
+/// [`WaitStrategy`]: tracks the [`WakerKey`] across polls so each
+/// `Pending` return refreshes (rather than re-registers) the slot, and
+/// a consumed slot — a notification drained it — is transparently
+/// re-registered. This is the async half of the eventcount protocol
+/// packaged for reuse: the CMP pop futures and the Vyukov
+/// producer-side `push_async` both park through it.
+///
+/// The owner must call [`WakerRegistration::clear`] when the future
+/// resolves or drops; leaking a registered slot inflates the waiter
+/// count and turns every producer notification into a locked drain.
+#[derive(Default)]
+pub struct WakerRegistration {
+    key: Option<WakerKey>,
+}
+
+impl WakerRegistration {
+    /// An empty (unregistered) handle.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Make sure `waker` is registered on `ws`: refresh the existing
+    /// slot when it survives, register afresh when it was drained (or
+    /// never existed). Call *before* re-checking the wait condition,
+    /// per the eventcount protocol — register, re-check, then
+    /// `Pending`.
+    pub fn ensure(&mut self, ws: &WaitStrategy, waker: &Waker) {
+        match self.key {
+            Some(key) if ws.update_waker(key, waker) => {}
+            _ => self.key = Some(ws.register_waker(waker)),
+        }
+    }
+
+    /// Drop the slot if still registered. Idempotent; a slot already
+    /// consumed by a notification is a no-op.
+    pub fn clear(&mut self, ws: &WaitStrategy) {
+        if let Some(key) = self.key.take() {
+            ws.deregister_waker(key);
+        }
+    }
+
+    /// Whether a slot key is currently held (it may already have been
+    /// consumed by a notification — `ensure` repairs that).
+    pub fn is_registered(&self) -> bool {
+        self.key.is_some()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

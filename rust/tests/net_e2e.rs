@@ -1,0 +1,308 @@
+//! End-to-end tests for the TCP front end (DESIGN.md §12): loopback
+//! round-trips, slow-loris read deadlines, disconnect-mid-flight
+//! conservation, wire-level `Busy` under both admission layers, and
+//! graceful drain on shutdown. Every test binds an ephemeral port, so
+//! they parallelize safely.
+
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use cmpq::coordinator::batcher::BatchPolicy;
+use cmpq::coordinator::server::{Server, ServerConfig};
+use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
+use cmpq::net::codec::{self, Status};
+use cmpq::net::listener::NetServer;
+use cmpq::net::NetConfig;
+
+fn echo_factory() -> EngineFactory {
+    Arc::new(|| {
+        Ok(Box::new(EchoEngine {
+            batch: 8,
+            features: 2,
+            outputs: 1,
+            scale: 2.0,
+        }) as Box<dyn InferenceEngine>)
+    })
+}
+
+/// An engine that blocks every `infer` until the shared gate opens —
+/// lets a test pin requests in flight deterministically.
+struct GatedEngine {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl InferenceEngine for GatedEngine {
+    fn batch_size(&self) -> usize {
+        1
+    }
+    fn features_per_row(&self) -> usize {
+        2
+    }
+    fn outputs_per_row(&self) -> usize {
+        1
+    }
+    fn infer(&self, input: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        drop(open);
+        Ok(input.chunks(2).map(|c| c[0] + c[1]).collect())
+    }
+}
+
+fn gated_factory(gate: Arc<(Mutex<bool>, Condvar)>) -> EngineFactory {
+    Arc::new(move || {
+        Ok(Box::new(GatedEngine { gate: gate.clone() }) as Box<dyn InferenceEngine>)
+    })
+}
+
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    *gate.0.lock().unwrap() = true;
+    gate.1.notify_all();
+}
+
+fn req(id: u64, tenant: u32) -> codec::Request {
+    codec::Request {
+        id,
+        tenant,
+        features: vec![1.0, 2.0],
+    }
+}
+
+fn write_req(s: &mut TcpStream, r: &codec::Request) {
+    let mut wire = Vec::new();
+    codec::encode_request(r, &mut wire);
+    s.write_all(&wire).expect("write request");
+}
+
+fn connect(addr: std::net::SocketAddr) -> TcpStream {
+    let s = TcpStream::connect(addr).expect("connect");
+    let timeout = Some(Duration::from_secs(10));
+    s.set_read_timeout(timeout).expect("read timeout");
+    s
+}
+
+/// Read one reply, panicking on EOF/error — the tests below only call
+/// this where a reply is guaranteed.
+fn read_reply(s: &mut TcpStream, buf: &mut Vec<u8>) -> codec::Response {
+    codec::read_response_blocking(s, buf).expect("reply")
+}
+
+#[test]
+fn roundtrip_across_many_connections() {
+    let server = Server::start(ServerConfig::default(), echo_factory());
+    let net = NetServer::start(NetConfig::default(), server).expect("bind");
+    let addr = net.addr();
+    let handles: Vec<_> = (0..32)
+        .map(|c| {
+            thread::spawn(move || {
+                let mut s = connect(addr);
+                let mut buf = Vec::new();
+                for i in 0..8u64 {
+                    write_req(&mut s, &req(i + 1, c as u32));
+                    let resp = read_reply(&mut s, &mut buf);
+                    assert_eq!(resp.id, i + 1);
+                    assert_eq!(resp.status, Status::Ok);
+                    assert_eq!(resp.output, vec![6.0], "echo: (1+2)*2");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client");
+    }
+    let report = net.shutdown();
+    assert!(report.clean(), "clean serving ledger");
+    assert_eq!(report.metrics.submitted.load(Ordering::Relaxed), 32 * 8);
+    assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 32 * 8);
+    assert_eq!(report.net_conns_closed, 32, "every connection accounted");
+}
+
+#[test]
+fn slow_client_hits_read_deadline() {
+    let server = Server::start(ServerConfig::default(), echo_factory());
+    let cfg = NetConfig {
+        read_timeout: Duration::from_millis(200),
+        ..NetConfig::default()
+    };
+    let net = NetServer::start(cfg, server).expect("bind");
+    let mut s = connect(net.addr());
+    // Half a frame: declares 16 payload bytes, delivers 2, stalls.
+    s.write_all(&16u32.to_le_bytes()).unwrap();
+    s.write_all(&[0u8; 2]).unwrap();
+    let mut buf = Vec::new();
+    let resp = read_reply(&mut s, &mut buf);
+    assert_eq!(resp.status, Status::Timeout, "slow loris gets a notice");
+    assert_eq!(resp.id, 0, "connection-level, not per-request");
+    assert!(
+        codec::read_response_blocking(&mut s, &mut buf).is_none(),
+        "server drains the connection after the notice"
+    );
+    assert_eq!(net.metrics().read_timeouts.load(Ordering::Relaxed), 1);
+    let report = net.shutdown();
+    assert!(report.clean(), "nothing was ever submitted");
+}
+
+#[test]
+fn disconnect_mid_flight_preserves_conservation() {
+    let cfg = ServerConfig {
+        // Hold the request in a partial batch long enough for the
+        // client to vanish while it is in flight.
+        batch_policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(300),
+        },
+        ..ServerConfig::default()
+    };
+    let server = Server::start(cfg, echo_factory());
+    let net = NetServer::start(NetConfig::default(), server).expect("bind");
+    {
+        let mut s = connect(net.addr());
+        write_req(&mut s, &req(1, 0));
+        // Let the front end decode + submit, then drop mid-flight.
+        thread::sleep(Duration::from_millis(100));
+    }
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while net.metrics().abandoned_inflight.load(Ordering::Relaxed) < 1
+        && Instant::now() < deadline
+    {
+        thread::sleep(Duration::from_millis(10));
+    }
+    assert_eq!(
+        net.metrics().abandoned_inflight.load(Ordering::Relaxed),
+        1,
+        "the in-flight reply was abandoned at the socket"
+    );
+    assert_eq!(net.metrics().disconnects.load(Ordering::Relaxed), 1);
+    let report = net.shutdown();
+    let submitted = report.metrics.submitted.load(Ordering::Relaxed);
+    let completed = report.metrics.completed.load(Ordering::Relaxed);
+    assert_eq!(submitted, 1);
+    assert_eq!(
+        submitted, completed,
+        "conservation holds without the client"
+    );
+}
+
+#[test]
+fn overload_returns_busy_on_the_wire() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let cfg = ServerConfig {
+        max_inflight: Some(1),
+        batch_policy: BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(5),
+        },
+        ..ServerConfig::default()
+    };
+    let server = Server::start(cfg, gated_factory(gate.clone()));
+    let net = NetServer::start(NetConfig::default(), server).expect("bind");
+    let mut s = connect(net.addr());
+    // Pipeline three requests: #1 occupies the only in-flight slot
+    // (the engine is gated shut); #2 and #3 are shed at admission.
+    for id in 1..=3 {
+        write_req(&mut s, &req(id, 0));
+    }
+    let mut buf = Vec::new();
+    let b1 = read_reply(&mut s, &mut buf);
+    let b2 = read_reply(&mut s, &mut buf);
+    assert_eq!((b1.id, b1.status), (2, Status::Busy));
+    assert_eq!((b2.id, b2.status), (3, Status::Busy));
+    open_gate(&gate);
+    let ok = read_reply(&mut s, &mut buf);
+    assert_eq!((ok.id, ok.status), (1, Status::Ok));
+    assert_eq!(net.metrics().busy_replies.load(Ordering::Relaxed), 2);
+    drop(s);
+    let report = net.shutdown();
+    assert_eq!(report.metrics.shed.load(Ordering::Relaxed), 2);
+    assert_eq!(report.metrics.submitted.load(Ordering::Relaxed), 1);
+    assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 1);
+}
+
+#[test]
+fn tenant_cap_sheds_at_the_edge() {
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let cfg = ServerConfig {
+        batch_policy: BatchPolicy {
+            max_batch: 1,
+            max_wait: Duration::from_millis(5),
+        },
+        ..ServerConfig::default()
+    };
+    let server = Server::start(cfg, gated_factory(gate.clone()));
+    let net_cfg = NetConfig {
+        tenant_max_inflight: 1,
+        ..NetConfig::default()
+    };
+    let net = NetServer::start(net_cfg, server).expect("bind");
+    let mut s = connect(net.addr());
+    // Tenant 7 pipelines two requests; its second hits the edge cap.
+    // Tenant 8 is admitted regardless — per-tenant fairness.
+    write_req(&mut s, &req(1, 7));
+    write_req(&mut s, &req(2, 7));
+    write_req(&mut s, &req(3, 8));
+    let mut buf = Vec::new();
+    let busy = read_reply(&mut s, &mut buf);
+    assert_eq!((busy.id, busy.status), (2, Status::Busy));
+    open_gate(&gate);
+    let mut served: Vec<u64> = (0..2)
+        .map(|_| {
+            let r = read_reply(&mut s, &mut buf);
+            assert_eq!(r.status, Status::Ok);
+            r.id
+        })
+        .collect();
+    served.sort_unstable();
+    assert_eq!(served, vec![1, 3], "both tenants' admitted requests served");
+    assert_eq!(net.metrics().tenant_busy.load(Ordering::Relaxed), 1);
+    drop(s);
+    let report = net.shutdown();
+    assert_eq!(report.metrics.shed_tenant.load(Ordering::Relaxed), 1);
+    assert_eq!(report.metrics.shed.load(Ordering::Relaxed), 1, "one ledger");
+    assert_eq!(report.metrics.submitted.load(Ordering::Relaxed), 2);
+    assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn shutdown_drains_pending_replies_then_closes() {
+    let cfg = ServerConfig {
+        // A long partial-batch hold guarantees the reply is still
+        // pending when shutdown begins.
+        batch_policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(1),
+        },
+        ..ServerConfig::default()
+    };
+    let server = Server::start(cfg, echo_factory());
+    let net = NetServer::start(NetConfig::default(), server).expect("bind");
+    let addr = net.addr();
+    let client = thread::spawn(move || {
+        let mut s = connect(addr);
+        write_req(&mut s, &req(9, 0));
+        let mut buf = Vec::new();
+        let resp = read_reply(&mut s, &mut buf);
+        assert_eq!((resp.id, resp.status), (9, Status::Ok));
+        assert!(
+            codec::read_response_blocking(&mut s, &mut buf).is_none(),
+            "socket closes after the drain"
+        );
+    });
+    // Request admitted and held in the batcher; now shut down.
+    thread::sleep(Duration::from_millis(150));
+    let report = net.shutdown();
+    client.join().expect("client");
+    assert!(report.net_conns_closed >= 1);
+    assert!(
+        report.net_drained_replies >= 1,
+        "the reply flushed during drain, not before"
+    );
+    assert_eq!(report.metrics.submitted.load(Ordering::Relaxed), 1);
+    assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 1);
+}
