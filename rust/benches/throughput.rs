@@ -11,23 +11,33 @@
 //! `cargo bench --bench throughput` — or `repro bench fig1` for the
 //! CLI-configurable version. Env knobs: `BENCH_OPS`, `BENCH_ROUNDS`,
 //! `BENCH_BATCHES` (comma-separated, default `1,8,64`),
+//! `BENCH_PAIRS` (comma-separated symmetric pair sizes, default the
+//! paper's `1,2,4,8,16,32,64` sweep — CI smoke runs pass `1,4`),
 //! `BENCH_SCENARIOS` (comma-separated extra scenarios, default
 //! `bursty,idle,async`; empty string disables), `BENCH_FULL=1` to
 //! include every implementation.
+//!
+//! The run ends with the sharded fabric's rank-error axis (DESIGN.md
+//! §13): strict vs relaxed `ShardedCmp` measured with
+//! [`cmpq::bench::workload::rank_error_trial`], emitted as
+//! `rank-strict` / `rank-relaxed` scenario rows whose
+//! `rank_error_p99` field is a number instead of `null`.
 //!
 //! Outputs:
 //! * `bench_results/fig1_throughput.json` — the batch-1 Figure 1 cells
 //!   (unchanged schema).
 //! * `BENCH_throughput.json` — impl × threads × batch × scenario →
-//!   ops/s + ops per CPU-second + CPU utilization, the machine-readable
-//!   perf trajectory tracked across PRs.
+//!   ops/s + ops per CPU-second + CPU utilization + p99 rank error,
+//!   the machine-readable perf trajectory tracked across PRs.
 
+use std::sync::Arc;
 use std::time::Duration;
 
 use cmpq::bench::report::{self, BatchThroughputRow};
-use cmpq::bench::runner::{throughput_suite, SuiteOptions};
-use cmpq::bench::workload::{PairConfig, Scenario};
+use cmpq::bench::runner::{throughput_suite, SuiteOptions, ThroughputCell};
+use cmpq::bench::workload::{rank_error_trial, PairConfig, Scenario};
 use cmpq::queue::Impl;
+use cmpq::{ConcurrentQueue, ShardMode, ShardedCmp, ShardedConfig};
 
 fn env_u64(k: &str, d: u64) -> u64 {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
@@ -62,6 +72,23 @@ fn env_batches() -> Vec<usize> {
     batches
 }
 
+/// `BENCH_PAIRS=1,4` → symmetric 1P1C and 4P4C; unset/empty → the
+/// paper's full Figure-1 sweep. Lets CI run a smoke-sized matrix with
+/// keys that stay a subset of the full run's.
+fn env_pairs() -> Vec<PairConfig> {
+    std::env::var("BENCH_PAIRS")
+        .ok()
+        .map(|v| {
+            v.split(',')
+                .filter_map(|s| s.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .map(PairConfig::symmetric)
+                .collect()
+        })
+        .filter(|v: &Vec<PairConfig>| !v.is_empty())
+        .unwrap_or_else(PairConfig::paper_sweep)
+}
+
 fn main() {
     let base_opts = SuiteOptions {
         total_ops: env_u64("BENCH_OPS", 60_000),
@@ -76,7 +103,7 @@ fn main() {
         // The paper's set + the lock-based comparator for context.
         vec![Impl::Cmp, Impl::Segmented, Impl::MsHp, Impl::Mutex]
     };
-    let pairs = PairConfig::paper_sweep();
+    let pairs = env_pairs();
     let batches = env_batches();
 
     eprintln!(
@@ -117,6 +144,7 @@ fn main() {
             cell,
             batch,
             scenario: "closed",
+            rank_error_p99: None,
         }));
     }
 
@@ -236,7 +264,73 @@ fn main() {
             cell,
             batch: 1,
             scenario: scenario.label(),
+            rank_error_p99: None,
         }));
+    }
+
+    // Rank-error axis (DESIGN.md §13): the sharded fabric's ordering
+    // quality vs throughput. Strict pays one head-shard ticket RMW per
+    // push and must hold rank error at ~0; relaxed round-robins
+    // producers and is the row that shows what the bound buys.
+    // Stamping is racy (`serialize_stamps = false`) so the producer
+    // side stays contention-honest — the correctness oracle in
+    // `tests/sharded_fabric.rs` is where exact-zero is asserted.
+    // CPU columns are 0 (unmeasured) so `bench diff` never CPU-flags
+    // these rows.
+    let rank_ops = base_opts.total_ops;
+    let rank_pairs = [PairConfig::symmetric(1), PairConfig::symmetric(4)];
+    println!("# Sharded fabric — rank error vs items/s (4 shards)");
+    println!(
+        "{:<10}{:<14}{:>14}{:>10}{:>10}{:>10}",
+        "config", "mode", "items/s", "rank p50", "rank p99", "rank max"
+    );
+    for (label, mode) in [
+        ("rank-strict", ShardMode::Strict),
+        (
+            "rank-relaxed",
+            ShardMode::Relaxed {
+                max_rank_error: 4096,
+            },
+        ),
+    ] {
+        for pair in rank_pairs {
+            // Warmup with default windows to observe the machine's
+            // dequeue rate, then re-size the per-shard protection
+            // windows for ~0.5 s of resilience at that rate.
+            let warm: Arc<dyn ConcurrentQueue<u64>> = Arc::new(ShardedCmp::with_config(
+                ShardedConfig::default().with_mode(mode),
+            ));
+            let rate = rank_error_trial(warm, pair, rank_ops.min(20_000), false).items_per_sec;
+            let cfg = ShardedConfig::default()
+                .with_mode(mode)
+                .sized_for_rate(rate.max(1.0) as u64, 0.5);
+            let q: Arc<dyn ConcurrentQueue<u64>> = Arc::new(ShardedCmp::with_config(cfg));
+            let trial = rank_error_trial(q, pair, rank_ops, false);
+            println!(
+                "{:<10}{:<14}{:>14.0}{:>10}{:>10}{:>10}",
+                pair.label(),
+                label,
+                trial.items_per_sec,
+                trial.stats.p50,
+                trial.stats.p99,
+                trial.stats.max
+            );
+            rows.push(BatchThroughputRow {
+                cell: ThroughputCell {
+                    imp: Impl::Sharded,
+                    pair,
+                    samples: vec![trial.items_per_sec],
+                    mean_ips: trial.items_per_sec,
+                    std_ips: 0.0,
+                    discarded: 0,
+                    mean_ops_per_cpu: 0.0,
+                    mean_cpu_util: 0.0,
+                },
+                batch: 1,
+                scenario: label,
+                rank_error_p99: Some(trial.stats.p99),
+            });
+        }
     }
 
     std::fs::write("BENCH_throughput.json", report::batch_throughput_json(&rows)).ok();

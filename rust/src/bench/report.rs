@@ -181,6 +181,12 @@ pub struct BatchThroughputRow {
     /// Offered-load scenario label (`closed` / `bursty` / `idle`),
     /// from [`crate::bench::workload::Scenario::label`].
     pub scenario: &'static str,
+    /// p99 dequeue rank error measured for this cell
+    /// ([`crate::bench::workload::rank_error_trial`]), or `None` for
+    /// rows where rank error was not measured (plain throughput
+    /// trials). Emitted as JSON `null` when absent so old and new
+    /// dumps stay mutually diffable.
+    pub rank_error_p99: Option<u64>,
 }
 
 /// `impl × threads × batch-size × scenario → ops/s + CPU efficiency`,
@@ -188,6 +194,10 @@ pub struct BatchThroughputRow {
 /// spin-vs-park trade-off are tracked across PRs rather than asserted.
 /// `ops_per_cpu_sec` and `cpu_util` are 0 when CPU time was
 /// unmeasurable (no procfs / below clock resolution).
+/// `rank_error_p99` is a number for rank-error rows (the sharded
+/// fabric's ordering-vs-throughput trade) and `null` elsewhere;
+/// [`diff_bench_json`] ignores the field, so dumps from before it
+/// existed still diff cleanly against new ones.
 pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
     let mut s = String::from("[");
     for (i, r) in rows.iter().enumerate() {
@@ -196,7 +206,7 @@ pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
         }
         let _ = write!(
             s,
-            "{{\"impl\":\"{}\",\"pair\":\"{}\",\"threads\":{},\"batch\":{},\"scenario\":\"{}\",\"mean_ips\":{:.3},\"std_ips\":{:.3},\"ops_per_cpu_sec\":{:.3},\"cpu_util\":{:.5},\"samples\":{:?}}}",
+            "{{\"impl\":\"{}\",\"pair\":\"{}\",\"threads\":{},\"batch\":{},\"scenario\":\"{}\",\"mean_ips\":{:.3},\"std_ips\":{:.3},\"ops_per_cpu_sec\":{:.3},\"cpu_util\":{:.5},\"rank_error_p99\":{},\"samples\":{:?}}}",
             r.cell.imp.name(),
             r.cell.pair.label(),
             r.cell.pair.producers + r.cell.pair.consumers,
@@ -206,6 +216,10 @@ pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
             r.cell.std_ips,
             r.cell.mean_ops_per_cpu,
             r.cell.mean_cpu_util,
+            match r.rank_error_p99 {
+                Some(p) => p.to_string(),
+                None => "null".to_string(),
+            },
             r.cell.samples
         );
     }
@@ -539,11 +553,13 @@ mod tests {
                 cell: tcell(Impl::Cmp, 8, 5.0e6),
                 batch: 64,
                 scenario: "closed",
+                rank_error_p99: None,
             },
             BatchThroughputRow {
-                cell: tcell(Impl::Cmp, 8, 2.0e6),
+                cell: tcell(Impl::Sharded, 8, 2.0e6),
                 batch: 1,
-                scenario: "bursty",
+                scenario: "rank-relaxed",
+                rank_error_p99: Some(17),
             },
         ];
         let j = batch_throughput_json(&rows);
@@ -555,11 +571,18 @@ mod tests {
         assert_eq!(arr[0].get("threads").unwrap().as_usize(), Some(16));
         assert_eq!(arr[0].get("scenario").unwrap().as_str(), Some("closed"));
         assert_eq!(arr[1].get("pair").unwrap().as_str(), Some("8P8C"));
-        assert_eq!(arr[1].get("scenario").unwrap().as_str(), Some("bursty"));
+        assert_eq!(arr[1].get("impl").unwrap().as_str(), Some("sharded"));
+        assert_eq!(arr[1].get("scenario").unwrap().as_str(), Some("rank-relaxed"));
         assert!(arr[0].get("mean_ips").unwrap().as_f64().unwrap() > 0.0);
         assert!(arr[0].get("ops_per_cpu_sec").unwrap().as_f64().unwrap() > 0.0);
         let util = arr[0].get("cpu_util").unwrap().as_f64().unwrap();
         assert!((util - 0.25).abs() < 1e-9);
+        // Unmeasured rows carry an explicit null, measured ones a number.
+        assert_eq!(
+            arr[0].get("rank_error_p99"),
+            Some(&crate::util::json::Json::Null)
+        );
+        assert_eq!(arr[1].get("rank_error_p99").unwrap().as_usize(), Some(17));
     }
 
     fn diff_row(imp: &str, ips: f64, cpu: f64) -> String {
@@ -635,6 +658,7 @@ mod tests {
             cell: tcell(Impl::Cmp, 2, 1234.0),
             batch: 8,
             scenario: "async",
+            rank_error_p99: None,
         }];
         let j = batch_throughput_json(&rows);
         let d = diff_bench_json(&j, &j, 5.0).expect("writer output must diff");

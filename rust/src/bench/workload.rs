@@ -459,6 +459,235 @@ pub fn run_throughput_on(
     }
 }
 
+/// Zipf(s) sampler over ranks `0..n` — the contention-skew knob: a
+/// high exponent concentrates the probability mass on the first few
+/// ranks (hot producers / hot shards), exponent 0 degenerates to
+/// uniform. Inverse-CDF over a precomputed cumulative table, driven by
+/// the crate's own [`crate::util::XorShift64`] so skewed workloads are
+/// seed-replayable (no external rand crate in the offline image).
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    /// Normalized cumulative distribution; `cdf[k]` = P(rank ≤ k).
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build a sampler over `n` ranks with exponent `s ≥ 0`
+    /// (weight of rank `k` ∝ `(k+1)^-s`).
+    ///
+    /// # Panics
+    /// If `n == 0`.
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf over zero ranks");
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0f64;
+        for k in 0..n {
+            acc += ((k + 1) as f64).powf(-s);
+            cdf.push(acc);
+        }
+        let total = acc.max(f64::MIN_POSITIVE);
+        for c in &mut cdf {
+            *c /= total;
+        }
+        Zipf { cdf }
+    }
+
+    /// Number of ranks.
+    pub fn ranks(&self) -> usize {
+        self.cdf.len()
+    }
+
+    /// Draw one rank in `0..ranks()`.
+    pub fn sample(&self, rng: &mut crate::util::XorShift64) -> usize {
+        let r = rng.next_f64();
+        // First rank whose cumulative mass covers r.
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&r).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+/// Rank-error distribution of one dequeue history (BlockFIFO /
+/// MultiFIFO methodology, arXiv:2507.22764): how far each element's
+/// dequeue position strays from its global enqueue ticket.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RankErrorStats {
+    /// Median |position − ticket|.
+    pub p50: u64,
+    /// 99th percentile |position − ticket|.
+    pub p99: u64,
+    /// Worst-case |position − ticket|.
+    pub max: u64,
+}
+
+impl RankErrorStats {
+    /// The all-zero distribution (what a strict FIFO must produce).
+    pub fn zero() -> Self {
+        RankErrorStats {
+            p50: 0,
+            p99: 0,
+            max: 0,
+        }
+    }
+}
+
+/// Compute rank-error stats from per-consumer dequeue sequences of
+/// *dense* tickets (every ticket in `0..total` appears exactly once
+/// across all sequences).
+///
+/// Concurrent consumers give no total dequeue order, so one must be
+/// reconstructed: this uses the **charitable linearization** — at each
+/// step, take the smallest ticket among the consumers' next-undequeued
+/// heads. Any such order is consistent with the per-consumer
+/// observations; the charitable one lower-bounds the rank error, is
+/// deterministic (stable across runs for given sequences), and makes
+/// a strict FIFO score exactly zero: strict per-consumer sequences are
+/// each increasing, so the greedy merge re-sorts them perfectly. The
+/// strict-vs-relaxed *comparison* is what the bench charts, and both
+/// sides use the same reconstruction.
+pub fn rank_error_stats(seqs: &[Vec<u64>]) -> RankErrorStats {
+    let total: usize = seqs.iter().map(|s| s.len()).sum();
+    if total == 0 {
+        return RankErrorStats::zero();
+    }
+    let mut heads = vec![0usize; seqs.len()];
+    let mut errs: Vec<u64> = Vec::with_capacity(total);
+    for pos in 0..total {
+        let mut best: Option<(usize, u64)> = None;
+        for (c, s) in seqs.iter().enumerate() {
+            if let Some(&t) = s.get(heads[c]) {
+                let better = match best {
+                    None => true,
+                    Some((_, bt)) => t < bt,
+                };
+                if better {
+                    best = Some((c, t));
+                }
+            }
+        }
+        let (c, t) = best.expect("total counted non-empty heads");
+        heads[c] += 1;
+        errs.push((pos as i64 - t as i64).unsigned_abs());
+    }
+    errs.sort_unstable();
+    let pct = |p: usize| errs[(errs.len() - 1) * p / 100];
+    RankErrorStats {
+        p50: pct(50),
+        p99: pct(99),
+        max: errs[errs.len() - 1],
+    }
+}
+
+/// Result of a rank-error trial (the sharded fabric's quality axis).
+#[derive(Debug, Clone, Copy)]
+pub struct RankErrorTrial {
+    /// Items actually dequeued (conservation check: == total enqueued).
+    pub items: u64,
+    /// Wall-clock throughput of the trial.
+    pub items_per_sec: f64,
+    /// Rank-error distribution of the dequeue history.
+    pub stats: RankErrorStats,
+}
+
+/// Run a rank-error trial: `pair.producers` threads enqueue
+/// `total_ops` globally-ticketed elements (one shared ticket counter —
+/// the ticket *is* the payload), `pair.consumers` threads dequeue into
+/// per-consumer logs, and the merged history is scored with
+/// [`rank_error_stats`].
+///
+/// `serialize_stamps` controls the stamping discipline. A producer can
+/// stall between drawing its ticket and enqueueing it, so with racy
+/// stamping even a strict queue shows ~producer-count rank-error
+/// noise that is the *harness's*, not the queue's. The correctness
+/// oracle (`tests/sharded_fabric.rs`) passes `true` — ticket draw and
+/// enqueue under one lock, so a strict queue must score exactly zero —
+/// while the throughput bench passes `false` to keep the producer side
+/// contention-honest for the rank-error-vs-ops/s chart.
+pub fn rank_error_trial(
+    queue: Arc<dyn ConcurrentQueue<u64>>,
+    pair: PairConfig,
+    total_ops: u64,
+    serialize_stamps: bool,
+) -> RankErrorTrial {
+    let ticket = Arc::new(AtomicU64::new(0));
+    let stamp_lock = Arc::new(std::sync::Mutex::new(()));
+    let producers_done = Arc::new(AtomicU64::new(0));
+    let barrier = Arc::new(Barrier::new(pair.producers + pair.consumers + 1));
+    let n_producers = pair.producers as u64;
+
+    let mut prod_handles = Vec::with_capacity(pair.producers);
+    for _ in 0..pair.producers {
+        let queue = queue.clone();
+        let ticket = ticket.clone();
+        let producers_done = producers_done.clone();
+        let barrier = barrier.clone();
+        let stamp_lock = stamp_lock.clone();
+        prod_handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            loop {
+                let guard = if serialize_stamps {
+                    Some(stamp_lock.lock().expect("stamp lock poisoned"))
+                } else {
+                    None
+                };
+                let t = ticket.fetch_add(1, Ordering::AcqRel);
+                if t >= total_ops {
+                    break;
+                }
+                queue.enqueue(t);
+                drop(guard);
+            }
+            producers_done.fetch_add(1, Ordering::AcqRel);
+        }));
+    }
+    let mut cons_handles = Vec::with_capacity(pair.consumers);
+    for _ in 0..pair.consumers {
+        let queue = queue.clone();
+        let producers_done = producers_done.clone();
+        let barrier = barrier.clone();
+        cons_handles.push(std::thread::spawn(move || {
+            let mut log: Vec<u64> = Vec::new();
+            barrier.wait();
+            let mut empty_slices = 0u32;
+            loop {
+                match queue.pop_deadline(Instant::now() + Duration::from_millis(10)) {
+                    Some(t) => {
+                        log.push(t);
+                        empty_slices = 0;
+                    }
+                    None => {
+                        if producers_done.load(Ordering::Acquire) == n_producers {
+                            empty_slices += 1;
+                            if empty_slices >= EMPTY_SLICE_EXIT {
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+            log
+        }));
+    }
+
+    barrier.wait();
+    let t0 = Instant::now();
+    for h in prod_handles {
+        h.join().expect("producer panicked");
+    }
+    let seqs: Vec<Vec<u64>> = cons_handles
+        .into_iter()
+        .map(|h| h.join().expect("consumer panicked"))
+        .collect();
+    let elapsed = t0.elapsed();
+    let items: u64 = seqs.iter().map(|s| s.len() as u64).sum();
+    RankErrorTrial {
+        items,
+        items_per_sec: items as f64 / elapsed.as_secs_f64().max(1e-12),
+        stats: rank_error_stats(&seqs),
+    }
+}
+
 /// Run one latency trial of `imp` at `pair`: every enqueue and every
 /// successful dequeue is individually timed.
 pub fn latency_trial(imp: Impl, pair: PairConfig, cfg: &TrialConfig) -> LatencyTrial {
@@ -766,6 +995,61 @@ mod tests {
             loaded.items_per_sec,
             base.items_per_sec
         );
+    }
+
+    #[test]
+    fn zipf_sampler_is_skewed_and_in_range() {
+        let mut rng = crate::util::XorShift64::new(42);
+        let z = Zipf::new(8, 1.5);
+        assert_eq!(z.ranks(), 8);
+        let mut counts = [0u64; 8];
+        for _ in 0..20_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        // Rank 0 dominates under a 1.5 exponent; every rank is legal.
+        assert!(counts[0] > counts[7] * 4, "not skewed: {counts:?}");
+        assert!(counts.iter().all(|&c| c > 0), "rank starved: {counts:?}");
+    }
+
+    #[test]
+    fn zipf_exponent_zero_is_roughly_uniform() {
+        let mut rng = crate::util::XorShift64::new(7);
+        let z = Zipf::new(4, 0.0);
+        let mut counts = [0u64; 4];
+        for _ in 0..40_000 {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for &c in &counts {
+            assert!((8_000..12_000).contains(&c), "not uniform: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn rank_error_of_strict_histories_is_zero() {
+        // Increasing per-consumer sequences (what a strict FIFO
+        // produces) must merge to exactly the ticket order.
+        let seqs = vec![vec![0, 3, 4, 7], vec![1, 2, 5, 6]];
+        assert_eq!(rank_error_stats(&seqs), RankErrorStats::zero());
+        assert_eq!(rank_error_stats(&[]), RankErrorStats::zero());
+    }
+
+    #[test]
+    fn rank_error_detects_reordering() {
+        // Single consumer that saw ticket 4 first: position 0 holds
+        // ticket 4 (err 4) and every later ticket slips by one.
+        let seqs = vec![vec![4, 0, 1, 2, 3]];
+        let stats = rank_error_stats(&seqs);
+        assert_eq!(stats.max, 4);
+        assert!(stats.p99 >= 1);
+    }
+
+    #[test]
+    fn rank_error_trial_strict_sharded_is_zero() {
+        let q: Arc<dyn ConcurrentQueue<u64>> = Impl::Sharded.make(1 << 16);
+        let t = rank_error_trial(q, PairConfig::symmetric(2), 4000, true);
+        assert_eq!(t.items, 4000, "conservation");
+        assert_eq!(t.stats, RankErrorStats::zero());
+        assert!(t.items_per_sec > 0.0);
     }
 
     #[test]

@@ -2,12 +2,21 @@
 //! queues (the fabric the paper motivates for many-thread inference
 //! pipelines). Sharding bounds contention per queue instance while the
 //! queues themselves stay coordination-free.
+//!
+//! The router can own its shards ([`Router::new`]) or ride a
+//! [`ShardedCmp`] fabric ([`Router::over_fabric`], DESIGN.md §13):
+//! both sides then share the same per-shard `CmpQueue` handles, so
+//! batcher drains keep using the router's gauge-tracked paths while
+//! affinity/steal consumers can block on the fabric facade. Routing
+//! into a shared shard finishes with [`ShardedCmp::notify_stealers`]
+//! so a fabric consumer parked on a different home shard still wakes.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::queue::cmp::{CmpConfig, CmpQueue};
+use crate::queue::sharded::ShardedCmp;
 
 use super::request::InferRequest;
 
@@ -34,6 +43,9 @@ pub struct Router {
     /// their batcher was abandoned past the restart cap.
     dead: Vec<AtomicBool>,
     routed: AtomicU64,
+    /// When routing over a [`ShardedCmp`] fabric, the facade handle —
+    /// routed pushes must run its cross-shard notify.
+    fabric: Option<Arc<ShardedCmp<InferRequest>>>,
 }
 
 impl Router {
@@ -49,7 +61,34 @@ impl Router {
             inflight: (0..shards).map(|_| AtomicU64::new(0)).collect(),
             dead: (0..shards).map(|_| AtomicBool::new(false)).collect(),
             routed: AtomicU64::new(0),
+            fabric: None,
         }
+    }
+
+    /// A router that delegates to an existing [`ShardedCmp`] fabric:
+    /// its shard queues *are* the fabric's shards (shared `Arc`s, no
+    /// copy), so requests routed here are visible to fabric consumers
+    /// (`pop_blocking` with affinity + steal) and vice versa. The
+    /// router applies its own [`RoutePolicy`] — per-shard FIFO holds
+    /// regardless of the fabric's [`crate::queue::sharded::ShardMode`],
+    /// which is the contract the batcher drains rely on.
+    pub fn over_fabric(fabric: Arc<ShardedCmp<InferRequest>>, policy: RoutePolicy) -> Self {
+        let n = fabric.shard_count();
+        Router {
+            shards: (0..n).map(|i| fabric.shard_arc(i)).collect(),
+            policy,
+            rr: AtomicU64::new(0),
+            inflight: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            dead: (0..n).map(|_| AtomicBool::new(false)).collect(),
+            routed: AtomicU64::new(0),
+            fabric: Some(fabric),
+        }
+    }
+
+    /// The fabric this router delegates to, if built with
+    /// [`Router::over_fabric`].
+    pub fn fabric(&self) -> Option<&Arc<ShardedCmp<InferRequest>>> {
+        self.fabric.as_ref()
     }
 
     /// Number of shard queues.
@@ -142,7 +181,12 @@ impl Router {
         self.inflight[shard].fetch_add(1, Ordering::Relaxed);
         self.routed.fetch_add(1, Ordering::Relaxed);
         match self.shards[shard].push(req) {
-            Ok(()) => Ok(shard),
+            Ok(()) => {
+                if let Some(f) = &self.fabric {
+                    f.notify_stealers();
+                }
+                Ok(shard)
+            }
             Err(req) => {
                 self.inflight[shard].fetch_sub(1, Ordering::Relaxed);
                 self.routed.fetch_sub(1, Ordering::Relaxed);
@@ -172,6 +216,7 @@ impl Router {
         }
         self.routed.fetch_add(n, Ordering::Relaxed);
         let mut rejected = Vec::new();
+        let mut published = false;
         for (shard, group) in groups.into_iter().enumerate() {
             if group.is_empty() {
                 continue;
@@ -181,6 +226,13 @@ impl Router {
                 self.inflight[shard].fetch_sub(len, Ordering::Relaxed);
                 self.routed.fetch_sub(len, Ordering::Relaxed);
                 rejected.extend(group);
+            } else {
+                published = true;
+            }
+        }
+        if published {
+            if let Some(f) = &self.fabric {
+                f.notify_stealers();
             }
         }
         rejected
@@ -414,6 +466,64 @@ mod tests {
         r.mark_dead(0);
         r.mark_dead(1);
         assert!(r.route(req(1)).is_ok(), "all-dead fallback still enqueues");
+    }
+
+    #[test]
+    fn over_fabric_shares_shards_both_ways() {
+        use crate::queue::sharded::{ShardMode, ShardedCmp, ShardedConfig};
+        use crate::queue::ConcurrentQueue;
+        let fabric: Arc<ShardedCmp<InferRequest>> = Arc::new(ShardedCmp::with_config(
+            ShardedConfig::default()
+                .with_shards(2)
+                .with_mode(ShardMode::Relaxed { max_rank_error: 64 }),
+        ));
+        let r = Router::over_fabric(Arc::clone(&fabric), RoutePolicy::RoundRobin);
+        assert_eq!(r.shard_count(), 2);
+        assert!(r.fabric().is_some());
+
+        // Router → fabric: routed requests are visible to fabric pops.
+        for i in 0..4 {
+            r.route(req(i)).ok().unwrap();
+        }
+        let mut seen = 0;
+        while fabric.try_dequeue().is_some() {
+            seen += 1;
+        }
+        assert_eq!(seen, 4, "fabric consumers see router-published work");
+
+        // Fabric → router: facade enqueues land in router-drainable
+        // shards (gauges only track router-routed work, by design).
+        assert!(fabric.try_enqueue(req(9)).is_ok());
+        let drained = (0..2).filter_map(|s| r.drain_one(s)).count();
+        assert_eq!(drained, 1, "router drains fabric-published work");
+    }
+
+    #[test]
+    fn over_fabric_route_wakes_cross_shard_consumer() {
+        use crate::queue::sharded::{ShardMode, ShardedCmp, ShardedConfig};
+        use crate::queue::ConcurrentQueue;
+        let fabric: Arc<ShardedCmp<InferRequest>> = Arc::new(ShardedCmp::with_config(
+            ShardedConfig::default()
+                .with_shards(2)
+                .with_mode(ShardMode::Relaxed { max_rank_error: 64 }),
+        ));
+        // Claim affinity slot 0 on this thread so the spawned consumer
+        // registers slot 1 → home shard 1.
+        assert!(fabric.try_dequeue().is_none());
+        let consumer = {
+            let fabric = Arc::clone(&fabric);
+            std::thread::spawn(move || fabric.pop_blocking())
+        };
+        let until = Instant::now() + std::time::Duration::from_secs(5);
+        while fabric.parked_consumers() == 0 && Instant::now() < until {
+            std::thread::yield_now();
+        }
+        // First round-robin pick is shard 0 — the other shard from the
+        // consumer's home. Without `notify_stealers` in `route`, the
+        // parked consumer could sleep through this push.
+        let r = Router::over_fabric(Arc::clone(&fabric), RoutePolicy::RoundRobin);
+        r.route(req(42)).ok().unwrap();
+        assert_eq!(consumer.join().unwrap().id, 42);
     }
 
     #[test]

@@ -7,6 +7,9 @@
 //!   strict-FIFO, unbounded MPMC queue with **Cyclic Memory Protection**
 //!   (bounded temporal protection windows instead of hazard-pointer /
 //!   epoch coordination).
+//! * [`queue::sharded::ShardedCmp`] — a sharded fabric over N CMP
+//!   shards: per-consumer affinity, steal-on-empty, and a strict vs
+//!   bounded-rank-error ordering knob (DESIGN.md §13).
 //! * [`queue::baselines`] — every comparator the paper evaluates or
 //!   discusses: Michael & Scott + hazard pointers ("Boost" stand-in),
 //!   M&S + epoch-based reclamation, a per-producer segmented relaxed-FIFO
@@ -63,4 +66,5 @@ pub mod runtime;
 pub mod util;
 
 pub use queue::cmp::{CmpConfig, CmpQueue};
+pub use queue::sharded::{ShardMode, ShardedCmp, ShardedConfig};
 pub use queue::ConcurrentQueue;

@@ -55,7 +55,8 @@ fn main() {
 
 const HELP: &str = "repro — CMP queue reproduction (see README.md)\n\
 commands:\n  \
-bench <fig1|tables|fig2|faults|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--batch K] [--verbose]\n  \
+bench <fig1|tables|fig2|faults|sharded|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--batch K] [--verbose]\n  \
+bench sharded [--shards N] [--relaxed] [--max-rank-error K] [--ops N] [--threads 1,4]   rank error vs ops/s (DESIGN.md §13)\n  \
 bench diff <old.json> <new.json> [--threshold-pct P]   compare two BENCH_throughput.json dumps\n  \
 serve [--requests N] [--clients C] [--shards S] [--workers W] [--idle-ms N] [--async-workers] [--echo]\n  \
 serve --tcp [--addr A] [--io-threads N] [--tenant-max-inflight T] [--requests N] [--clients C]\n  \
@@ -73,6 +74,7 @@ fn suite_options(args: &Args) -> SuiteOptions {
         capacity_hint: args.get_parse("capacity", 1usize << 16),
         batch_size: args.get_parse("batch", 1usize),
         verbose: args.flag("verbose"),
+        ..SuiteOptions::default()
     }
 }
 
@@ -139,10 +141,76 @@ fn cmd_bench_diff(args: &Args) -> i32 {
     }
 }
 
+/// `repro bench sharded [--shards N] [--relaxed] [--max-rank-error K]`:
+/// the sharded fabric's ordering-quality axis (DESIGN.md §13). Runs
+/// [`rank_error_trial`] over a [`ShardedCmp`] with windows sized from
+/// a measured warmup rate and prints rank-error percentiles next to
+/// throughput — strict should sit at ~0, relaxed under its bound.
+fn cmd_bench_sharded(args: &Args) -> i32 {
+    use cmpq::bench::workload::rank_error_trial;
+    use cmpq::queue::ConcurrentQueue;
+    use cmpq::{ShardMode, ShardedCmp, ShardedConfig};
+
+    let shards: usize = args.get_parse("shards", 4usize);
+    let max_rank_error: u64 = args.get_parse("max-rank-error", 4096u64);
+    let mode = if args.flag("relaxed") {
+        ShardMode::Relaxed { max_rank_error }
+    } else {
+        ShardMode::Strict
+    };
+    let ops: u64 = args.get_parse("ops", 50_000u64);
+    let pairs: Vec<PairConfig> = args
+        .get_list::<usize>("threads")
+        .map(|ns| ns.into_iter().map(PairConfig::symmetric).collect())
+        .unwrap_or_else(|| vec![PairConfig::symmetric(1), PairConfig::symmetric(4)]);
+    let pin = args.flag("pin");
+
+    println!(
+        "# Sharded fabric — {} mode, {shards} shards, {ops} ops{}",
+        if mode.is_strict() { "strict" } else { "relaxed" },
+        if pin { ", pinned" } else { "" }
+    );
+    println!(
+        "{:<10}{:>14}{:>10}{:>10}{:>10}{:>12}",
+        "config", "items/s", "rank p50", "rank p99", "rank max", "conserved"
+    );
+    for pair in pairs {
+        let base = || {
+            ShardedConfig::default()
+                .with_shards(shards)
+                .with_mode(mode)
+                .with_pinning(pin)
+        };
+        let warm: Arc<dyn ConcurrentQueue<u64>> = Arc::new(ShardedCmp::with_config(base()));
+        let rate = rank_error_trial(warm, pair, ops.min(20_000), false).items_per_sec;
+        let q: Arc<dyn ConcurrentQueue<u64>> = Arc::new(ShardedCmp::with_config(
+            base().sized_for_rate(rate.max(1.0) as u64, 0.5),
+        ));
+        let trial = rank_error_trial(q, pair, ops, false);
+        println!(
+            "{:<10}{:>14.0}{:>10}{:>10}{:>10}{:>12}",
+            pair.label(),
+            trial.items_per_sec,
+            trial.stats.p50,
+            trial.stats.p99,
+            trial.stats.max,
+            if trial.items == ops { "yes" } else { "NO" }
+        );
+        if trial.items != ops {
+            eprintln!("bench sharded: conservation broken ({} != {ops})", trial.items);
+            return 1;
+        }
+    }
+    0
+}
+
 fn cmd_bench(args: &Args) -> i32 {
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     if what == "diff" {
         return cmd_bench_diff(args);
+    }
+    if what == "sharded" {
+        return cmd_bench_sharded(args);
     }
     let impls = parse_impls(args);
     let pairs = parse_pairs(args);
@@ -231,7 +299,7 @@ fn cmd_bench(args: &Args) -> i32 {
             run_faults();
         }
         other => {
-            eprintln!("unknown bench target {other:?} (fig1|tables|fig2|faults|all|diff)");
+            eprintln!("unknown bench target {other:?} (fig1|tables|fig2|faults|sharded|all|diff)");
             return 2;
         }
     }

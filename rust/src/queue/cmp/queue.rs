@@ -936,8 +936,9 @@ impl<T: Send + 'static> CmpQueue<T> {
     }
 
     /// The queue's eventcount (waker registration surface for the
-    /// async futures in `super::futures`).
-    pub(super) fn wait_strategy(&self) -> &WaitStrategy {
+    /// async futures in `super::futures`; the sharded fabric parks its
+    /// consumers on their home shard's eventcount through this too).
+    pub(crate) fn wait_strategy(&self) -> &WaitStrategy {
         &self.waiters
     }
 

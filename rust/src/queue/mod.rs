@@ -6,6 +6,7 @@
 pub mod baselines;
 pub mod cmp;
 pub mod reclamation;
+pub mod sharded;
 
 use std::future::Future;
 use std::marker::PhantomData;
@@ -446,12 +447,15 @@ pub enum Impl {
     Vyukov,
     /// Mutex-protected VecDeque — TBB/Folly-style blocking comparator.
     Mutex,
+    /// Sharded CMP fabric (strict mode, 4 shards) — the §13
+    /// scale-out facade, benched against the single-queue CMP.
+    Sharded,
 }
 
 impl Impl {
     /// All implementations, in the order the paper's tables list them
     /// (CMP, Moodycamel, Boost) followed by the extra comparators.
-    pub const ALL: [Impl; 7] = [
+    pub const ALL: [Impl; 8] = [
         Impl::Cmp,
         Impl::Segmented,
         Impl::MsHp,
@@ -459,6 +463,7 @@ impl Impl {
         Impl::MsHelping,
         Impl::Vyukov,
         Impl::Mutex,
+        Impl::Sharded,
     ];
 
     /// The paper's evaluation set (Figure 1, Tables 1–3, Figure 2).
@@ -475,6 +480,7 @@ impl Impl {
             Impl::Segmented => "segmented",
             Impl::Vyukov => "vyukov",
             Impl::Mutex => "mutex",
+            Impl::Sharded => "sharded",
         }
     }
 
@@ -488,6 +494,7 @@ impl Impl {
             Impl::Segmented => "Moodycamel-like (segmented)",
             Impl::Vyukov => "Vyukov (bounded)",
             Impl::Mutex => "Mutex (TBB/Folly-like)",
+            Impl::Sharded => "Sharded CMP (strict, 4 shards)",
         }
     }
 
@@ -517,6 +524,15 @@ impl Impl {
             Impl::Segmented => Arc::new(baselines::segmented::SegmentedQueue::new()),
             Impl::Vyukov => Arc::new(baselines::vyukov::VyukovQueue::new(capacity_hint.max(2))),
             Impl::Mutex => Arc::new(baselines::mutex_queue::MutexQueue::new()),
+            Impl::Sharded => {
+                let mut cfg = cmp::CmpConfig::default();
+                if std::env::var_os("CMPQ_NO_STATS").is_some() {
+                    cfg = cfg.without_stats();
+                }
+                Arc::new(sharded::ShardedCmp::with_config(
+                    sharded::ShardedConfig::default().with_shard_config(cfg),
+                ))
+            }
         }
     }
 }

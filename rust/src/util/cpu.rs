@@ -1,5 +1,6 @@
 //! Process CPU-time accounting for the ops-per-CPU-second benchmark
-//! metric (DESIGN.md §8).
+//! metric (DESIGN.md §8), plus best-effort thread→core pinning for the
+//! sharded fabric (DESIGN.md §13).
 //!
 //! Wall-clock throughput cannot distinguish a consumer that parks
 //! through idle gaps from one that burns a core spinning; CPU time can.
@@ -8,6 +9,11 @@
 //! regardless of the kernel's internal tick rate. On platforms without
 //! procfs the probe returns `None` and callers report the metric as
 //! unavailable instead of guessing.
+//!
+//! Pinning goes straight to glibc's `sched_setaffinity` (already
+//! linked through `std` — the offline image forbids a `libc` crate);
+//! failures are reported, never fatal, because affinity is a
+//! performance hint, not a correctness requirement.
 
 /// Linux USER_HZ: the `/proc` clock-tick ABI, fixed at 100 ticks/s.
 const USER_HZ: f64 = 100.0;
@@ -34,6 +40,62 @@ fn parse_stat_cpu_ticks(stat: &str) -> Option<u64> {
     Some(utime + stime)
 }
 
+/// Words in a glibc `cpu_set_t` (1024 bits / 64).
+#[cfg(target_os = "linux")]
+const CPU_SET_WORDS: usize = 16;
+
+/// Pin the calling thread to `cpu`. Returns `false` when the CPU index
+/// is out of the 1024-bit `cpu_set_t` range, the CPU is offline, or
+/// the platform has no `sched_setaffinity` — callers treat pinning as
+/// advisory and proceed unpinned.
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(cpu: usize) -> bool {
+    if cpu >= CPU_SET_WORDS * 64 {
+        return false;
+    }
+    let mut mask = [0u64; CPU_SET_WORDS];
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    set_affinity(&mask)
+}
+
+/// Non-Linux stub: pinning is unavailable, report `false`.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(_cpu: usize) -> bool {
+    false
+}
+
+/// Undo [`pin_current_thread`]: allow the calling thread on every CPU
+/// the kernel will accept (offline bits in the mask are ignored).
+#[cfg(target_os = "linux")]
+pub fn unpin_current_thread() -> bool {
+    set_affinity(&[u64::MAX; CPU_SET_WORDS])
+}
+
+/// Non-Linux stub: nothing to undo.
+#[cfg(not(target_os = "linux"))]
+pub fn unpin_current_thread() -> bool {
+    false
+}
+
+#[cfg(target_os = "linux")]
+fn set_affinity(mask: &[u64; CPU_SET_WORDS]) -> bool {
+    extern "C" {
+        // glibc, linked through std; pid 0 = the calling thread.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // SAFETY: `mask` points to CPU_SET_WORDS * 8 valid, initialized
+    // bytes, matching the cpusetsize argument; the call only reads it.
+    unsafe { sched_setaffinity(0, CPU_SET_WORDS * 8, mask.as_ptr()) == 0 }
+}
+
+/// CPUs available to this process (affinity-mask aware on Linux);
+/// never 0.
+pub fn online_cpus() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -50,6 +112,25 @@ mod tests {
     fn rejects_garbage() {
         assert_eq!(parse_stat_cpu_ticks("no parens here"), None);
         assert_eq!(parse_stat_cpu_ticks("1 (x) R 1"), None);
+    }
+
+    #[test]
+    fn online_cpus_is_positive() {
+        assert!(online_cpus() >= 1);
+    }
+
+    #[test]
+    fn pin_rejects_out_of_range_cpu() {
+        assert!(!pin_current_thread(1 << 20));
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn pin_and_unpin_round_trip() {
+        // Pin to the first available CPU, then restore the full mask so
+        // this test thread doesn't skew later tests on the same worker.
+        assert!(pin_current_thread(0));
+        assert!(unpin_current_thread());
     }
 
     #[test]

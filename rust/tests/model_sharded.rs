@@ -1,0 +1,455 @@
+//! Model-checking the sharded fabric's cross-shard wakeup and steal
+//! protocol (DESIGN.md §13) under the §9 schedule enumerator.
+//!
+//! The fabric's correctness argument has one load-bearing pivot: a
+//! facade-level `parked` counter, incremented *before* a consumer's
+//! post-registration re-sweep of **all** shards and read (after an SC
+//! fence) by every producer after publishing. If the producer's read
+//! misses the increment, the consumer's RMW is SC-after the read, so
+//! the re-sweep must see the item; if the read sees it, the producer
+//! notifies every shard. These tests enumerate that argument:
+//!
+//! * a protocol-level port (mini-shards as model atomics + the real
+//!   `WaitStrategy` per shard) exhaustively explored at 1P×1C with the
+//!   producer and consumer on *different* shards — the pure
+//!   cross-shard case — and prefix-bounded at 2P×2C;
+//! * detection-power variants: a consumer whose re-sweep covers only
+//!   its home shard, and a producer that notifies only the shard it
+//!   pushed — both must be caught as deadlocks and replay;
+//! * the real `ShardedCmp` facade driven through `enqueue` /
+//!   `pop_blocking`, and a steal-vs-reclaim accounting pass over
+//!   `W = 1` shards.
+#![cfg(feature = "model-check")]
+
+use std::sync::atomic::Ordering::SeqCst;
+use std::sync::Arc;
+use std::sync::Mutex as StdMutex;
+
+use cmpq::model::{
+    explore_dfs, fuzz, replay, ExploreConfig, MAtomicU64, Outcome, Scenario, ThreadBody,
+};
+use cmpq::queue::cmp::{CmpConfig, ReclaimTrigger};
+use cmpq::queue::sharded::{ShardMode, ShardedCmp, ShardedConfig};
+use cmpq::queue::ConcurrentQueue;
+use cmpq::util::WaitStrategy;
+
+fn depth_from_env(default: usize) -> usize {
+    std::env::var("MODEL_DEPTH")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+        .clamp(4, 9)
+}
+
+fn cfg_with_depth(depth: usize) -> ExploreConfig {
+    ExploreConfig {
+        max_depth: depth,
+        max_steps: 10_000,
+        max_executions: 600_000,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Protocol-level port: 2 mini-shards, per-shard eventcounts, and the
+// facade `parked` pivot, exactly as `ShardedCmp::pop_wait` orders them.
+// ---------------------------------------------------------------------
+
+const SHARDS: usize = 2;
+
+struct FabricState {
+    /// Item counter per mini-shard (the queue contents, abstracted).
+    items: [MAtomicU64; SHARDS],
+    /// Per-shard eventcount, as in the real fabric.
+    ws: [WaitStrategy; SHARDS],
+    /// The facade-level SC pivot.
+    parked: MAtomicU64,
+}
+
+impl FabricState {
+    fn new() -> Self {
+        FabricState {
+            items: [MAtomicU64::new(0), MAtomicU64::new(0)],
+            ws: [WaitStrategy::new(), WaitStrategy::new()],
+            parked: MAtomicU64::new(0),
+        }
+    }
+}
+
+fn try_take(st: &FabricState, shard: usize) -> bool {
+    let mut cur = st.items[shard].load(SeqCst);
+    while cur > 0 {
+        match st.items[shard].compare_exchange(cur, cur - 1, SeqCst, SeqCst) {
+            Ok(_) => return true,
+            Err(now) => cur = now,
+        }
+    }
+    false
+}
+
+/// Home-first sweep over every shard (the steal scan).
+fn sweep(st: &FabricState, home: usize) -> bool {
+    (0..SHARDS).any(|k| try_take(st, (home + k) % SHARDS))
+}
+
+/// `ShardedCmp::pop_wait`'s ordering: sweep → register on the home
+/// shard → announce on the pivot → re-sweep ALL shards → sleep.
+fn consume_one(st: &FabricState, home: usize) {
+    loop {
+        if sweep(st, home) {
+            return;
+        }
+        let registration = st.ws[home].registration();
+        st.parked.fetch_add(1, SeqCst);
+        if sweep(st, home) {
+            st.parked.fetch_sub(1, SeqCst);
+            return; // registration drops → cancel
+        }
+        registration.wait();
+        st.parked.fetch_sub(1, SeqCst);
+    }
+}
+
+/// Producer half: publish, then read the pivot (model atomics are SC,
+/// so the load is the fence+load of the real `notify_waiters`) and
+/// notify every shard's eventcount when anyone is inside the window.
+fn produce_one(st: &FabricState, shard: usize) {
+    st.items[shard].fetch_add(1, SeqCst);
+    if st.parked.load(SeqCst) > 0 {
+        for ws in &st.ws {
+            ws.notify_if_waiting();
+        }
+    }
+}
+
+/// `producers[i]` pushes one item to the given shard; `homes[j]` is
+/// consumer `j`'s affinity. Totals are balanced, so any surviving
+/// sleeper is a lost cross-shard wakeup.
+fn fabric_scenario(producers: Vec<usize>, homes: Vec<usize>) -> Scenario {
+    assert_eq!(producers.len(), homes.len(), "one item per consumer");
+    let st = Arc::new(FabricState::new());
+    let mut threads: Vec<ThreadBody> = Vec::new();
+    for shard in producers {
+        let st = st.clone();
+        threads.push(Box::new(move || produce_one(&st, shard)));
+    }
+    for home in homes {
+        let st = st.clone();
+        threads.push(Box::new(move || consume_one(&st, home)));
+    }
+    let st2 = st.clone();
+    Scenario {
+        threads,
+        check: Box::new(move || {
+            for (i, items) in st2.items.iter().enumerate() {
+                if items.load(SeqCst) != 0 {
+                    return Err(format!("shard {i} left {} item(s)", items.load(SeqCst)));
+                }
+            }
+            if st2.parked.load(SeqCst) != 0 {
+                return Err(format!("pivot stuck at {}", st2.parked.load(SeqCst)));
+            }
+            for (i, ws) in st2.ws.iter().enumerate() {
+                if ws.waiters() != 0 {
+                    return Err(format!("shard {i} leaked {} waiter(s)", ws.waiters()));
+                }
+            }
+            Ok(())
+        }),
+    }
+}
+
+/// The pure cross-shard case — producer on shard 0, consumer homed on
+/// shard 1 — fully enumerated. The home shard's eventcount never sees
+/// a push-side notify unless the pivot read observes the park, so this
+/// is exactly the lost-wakeup window the pivot closes.
+#[test]
+fn cross_shard_1p1c_full_exhaustive() {
+    let report = explore_dfs(|| fabric_scenario(vec![0], vec![1]), cfg_with_depth(100_000));
+    eprintln!(
+        "cross-shard 1P1C: executions={} max_steps={} truncated={}",
+        report.executions, report.max_steps_seen, report.depth_truncated
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(!report.depth_truncated, "depth bound must never bind here");
+    assert!(report.complete, "1P1C cross-shard race must be fully enumerable");
+}
+
+/// 2 producers (one per shard) × 2 consumers (affinity 0 and 1):
+/// exhaustive over all schedule prefixes at the configured bound, then
+/// deeper states via fixed-seed fuzz. Covers steal-vs-home claims,
+/// double parks, and every pivot interleaving the bound reaches.
+#[test]
+fn affinity_and_steal_2x2_exhaustive_at_bound() {
+    let depth = depth_from_env(6);
+    let report = explore_dfs(|| fabric_scenario(vec![0, 1], vec![0, 1]), cfg_with_depth(depth));
+    eprintln!(
+        "2P2C sharded depth={depth}: executions={} max_steps={} truncated={}",
+        report.executions, report.max_steps_seen, report.depth_truncated
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(report.complete, "prefix space at depth {depth} must be exhausted");
+
+    let fz = fuzz(
+        || fabric_scenario(vec![0, 0], vec![0, 1]),
+        cfg_with_depth(0),
+        0x5AD,
+        300,
+    );
+    assert!(fz.counterexample.is_none(), "fuzz: {:?}", fz.counterexample);
+}
+
+/// Detection power #1 — "steal without re-poll": the consumer's
+/// post-registration re-sweep covers only its home shard. When the
+/// producer's pivot read misses the park announcement, the item on the
+/// *other* shard is never re-polled and the consumer sleeps forever.
+/// The checker must exhibit the deadlock, and the schedule must replay.
+#[test]
+fn home_only_repoll_variant_is_caught() {
+    fn broken_consume_one(st: &FabricState, home: usize) {
+        loop {
+            if sweep(st, home) {
+                return;
+            }
+            let registration = st.ws[home].registration();
+            st.parked.fetch_add(1, SeqCst);
+            // BUG under test: re-polls the home shard only — a stolen
+            // shard's item published concurrently is missed.
+            if try_take(st, home) {
+                st.parked.fetch_sub(1, SeqCst);
+                return;
+            }
+            registration.wait();
+            st.parked.fetch_sub(1, SeqCst);
+        }
+    }
+    let factory = || {
+        let st = Arc::new(FabricState::new());
+        let p = st.clone();
+        let c = st.clone();
+        let threads: Vec<ThreadBody> = vec![
+            Box::new(move || produce_one(&p, 0)),
+            Box::new(move || broken_consume_one(&c, 1)),
+        ];
+        Scenario {
+            threads,
+            check: Box::new(|| Ok(())),
+        }
+    };
+    let report = explore_dfs(factory, cfg_with_depth(12));
+    let cx = report
+        .counterexample
+        .expect("the checker must find the missed cross-shard item");
+    assert!(
+        matches!(cx.outcome, Outcome::Deadlock { .. }),
+        "expected a stranded consumer, got {cx:?}"
+    );
+    eprintln!(
+        "home-only re-poll counterexample after {} executions: schedule {:?}",
+        report.executions, cx.schedule
+    );
+    let again = replay(factory, &cx.schedule, 10_000);
+    assert_eq!(again.outcome, cx.outcome, "counterexample must replay");
+}
+
+/// Detection power #2 — "notify the pushed shard only": the producer
+/// skips the fan-out and wakes just the shard it published to. A
+/// consumer parked on the *other* home never hears about it.
+#[test]
+fn single_shard_notify_variant_is_caught() {
+    fn broken_produce_one(st: &FabricState, shard: usize) {
+        st.items[shard].fetch_add(1, SeqCst);
+        if st.parked.load(SeqCst) > 0 {
+            // BUG under test: only the pushed shard's eventcount.
+            st.ws[shard].notify_if_waiting();
+        }
+    }
+    let factory = || {
+        let st = Arc::new(FabricState::new());
+        let p = st.clone();
+        let c = st.clone();
+        let threads: Vec<ThreadBody> = vec![
+            Box::new(move || broken_produce_one(&p, 0)),
+            Box::new(move || consume_one(&c, 1)),
+        ];
+        Scenario {
+            threads,
+            check: Box::new(|| Ok(())),
+        }
+    };
+    let report = explore_dfs(factory, cfg_with_depth(12));
+    let cx = report
+        .counterexample
+        .expect("the checker must find the unwoken cross-shard park");
+    assert!(
+        matches!(cx.outcome, Outcome::Deadlock { .. }),
+        "expected a stranded consumer, got {cx:?}"
+    );
+    let again = replay(factory, &cx.schedule, 10_000);
+    assert_eq!(again.outcome, cx.outcome, "counterexample must replay");
+}
+
+// ---------------------------------------------------------------------
+// The real facade under the model.
+// ---------------------------------------------------------------------
+
+fn model_shard_cfg() -> CmpConfig {
+    CmpConfig::default()
+        .with_trigger(ReclaimTrigger::Manual)
+        .without_magazines()
+        .without_stats()
+}
+
+/// `enqueue` vs `pop_blocking` through the real `ShardedCmp` (route
+/// ticket, shard push, pivot announce, home-shard park, full-fabric
+/// re-sweep): prefix-bounded exhaustive + deep fuzz, no deadlock, no
+/// lost item, pivot restored.
+fn facade_park_scenario() -> Scenario {
+    let q: Arc<ShardedCmp<u64>> = Arc::new(ShardedCmp::with_config(
+        ShardedConfig::default()
+            .with_shards(2)
+            .with_mode(ShardMode::Relaxed { max_rank_error: 8 })
+            .with_shard_config(model_shard_cfg()),
+    ));
+    let qp = q.clone();
+    let qc = q.clone();
+    let threads: Vec<ThreadBody> = vec![
+        Box::new(move || {
+            qp.enqueue(7);
+        }),
+        Box::new(move || {
+            assert_eq!(qc.pop_blocking(), 7, "single item must arrive");
+        }),
+    ];
+    let q2 = q.clone();
+    Scenario {
+        threads,
+        check: Box::new(move || {
+            if q2.parked_consumers() != 0 {
+                return Err(format!("pivot stuck at {}", q2.parked_consumers()));
+            }
+            if let Some(v) = q2.try_dequeue() {
+                return Err(format!("item {v} left behind"));
+            }
+            Ok(())
+        }),
+    }
+}
+
+#[test]
+fn facade_pop_blocking_never_strands() {
+    let report = explore_dfs(facade_park_scenario, cfg_with_depth(6));
+    eprintln!(
+        "facade park DFS: executions={} max_steps={}",
+        report.executions, report.max_steps_seen
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(report.complete);
+    let fz = fuzz(facade_park_scenario, cfg_with_depth(0), 0xFAB, 200);
+    assert!(fz.counterexample.is_none(), "fuzz: {:?}", fz.counterexample);
+}
+
+/// Steal vs reclaim at the minimum window (`W = 1`): two consumers
+/// sweep-steal over a preloaded 2-shard fabric while a reclaimer
+/// drives both shards. Every preloaded item is delivered exactly once
+/// or dropped by a shard's reclaimer — never duplicated, never
+/// invented — and the popped + drained + dropped accounting closes.
+fn steal_vs_reclaim_scenario() -> Scenario {
+    let cfg = CmpConfig::default()
+        .with_window(1)
+        .with_min_batch(1)
+        .with_trigger(ReclaimTrigger::Manual)
+        .without_magazines();
+    let q: Arc<ShardedCmp<u64>> = Arc::new(ShardedCmp::with_config(
+        ShardedConfig::default()
+            .with_shards(2)
+            .with_mode(ShardMode::Relaxed { max_rank_error: 8 })
+            .with_shard_config(cfg),
+    ));
+    const PRELOAD: u64 = 4;
+    for i in 0..PRELOAD {
+        // Controller-side: round-robin routing lands 2 items per shard.
+        q.enqueue(i);
+    }
+    let got_a = Arc::new(StdMutex::new(Vec::new()));
+    let got_b = Arc::new(StdMutex::new(Vec::new()));
+    let (qa, qb, qr) = (q.clone(), q.clone(), q.clone());
+    let (ga, gb) = (got_a.clone(), got_b.clone());
+    let threads: Vec<ThreadBody> = vec![
+        Box::new(move || {
+            for _ in 0..2 {
+                if let Some(v) = qa.try_dequeue() {
+                    ga.lock().unwrap().push(v);
+                }
+            }
+        }),
+        Box::new(move || {
+            for _ in 0..2 {
+                if let Some(v) = qb.try_dequeue() {
+                    gb.lock().unwrap().push(v);
+                }
+            }
+        }),
+        Box::new(move || {
+            for i in 0..2 {
+                qr.shard(i).reclaim();
+            }
+        }),
+    ];
+    Scenario {
+        threads,
+        check: Box::new(move || {
+            let a = got_a.lock().unwrap().clone();
+            let b = got_b.lock().unwrap().clone();
+            let mut all: Vec<u64> = a.iter().chain(b.iter()).copied().collect();
+            all.sort_unstable();
+            let popped = all.len() as u64;
+            all.dedup();
+            if all.len() as u64 != popped {
+                return Err(format!("duplicate delivery: {a:?} {b:?}"));
+            }
+            if all.iter().any(|&v| v >= PRELOAD) {
+                return Err(format!("phantom value: {all:?}"));
+            }
+            let mut drained = 0u64;
+            while q.try_dequeue().is_some() {
+                drained += 1;
+            }
+            let dropped: u64 = (0..2).map(|i| q.shard(i).stats().payloads_reclaimed).sum();
+            if popped + drained + dropped != PRELOAD {
+                return Err(format!(
+                    "accounting broken: popped={popped} drained={drained} dropped={dropped}"
+                ));
+            }
+            Ok(())
+        }),
+    }
+}
+
+#[test]
+fn steal_vs_reclaim_accounting_holds() {
+    let report = explore_dfs(steal_vs_reclaim_scenario, cfg_with_depth(6));
+    eprintln!(
+        "steal/reclaim DFS: executions={} max_steps={}",
+        report.executions, report.max_steps_seen
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(report.complete);
+    let fz = fuzz(steal_vs_reclaim_scenario, cfg_with_depth(0), 0x57EA1, 300);
+    assert!(fz.counterexample.is_none(), "fuzz: {:?}", fz.counterexample);
+}

@@ -244,6 +244,112 @@ fn concurrent_random_vyukov() {
     }
 }
 
+/// Zipf-skewed producers over a sharded fabric with stealing
+/// consumers (DESIGN.md §13): producer activity is drawn from a
+/// seeded Zipf so one producer dominates (hammering the strict head
+/// shard / the relaxed round-robin unevenly) while the consumers'
+/// sweep has to steal around the hot shard. Strict mode must preserve
+/// each producer's subsequence at every consumer; both modes must
+/// conserve. Failures print the seed — rerun with it to replay.
+fn check_sharded_zipf(seed: u64, strict: bool) {
+    use cmpq::bench::workload::Zipf;
+    use cmpq::{ShardMode, ShardedCmp, ShardedConfig};
+
+    let mut rng = XorShift64::new(seed);
+    const PRODUCERS: usize = 4;
+    const CONSUMERS: usize = 4;
+    const OPS: u64 = 12_000;
+    let zipf = Zipf::new(PRODUCERS, 1.2);
+    let mut quota = [0u64; PRODUCERS];
+    for _ in 0..OPS {
+        quota[zipf.sample(&mut rng)] += 1;
+    }
+    let mode = if strict {
+        ShardMode::Strict
+    } else {
+        ShardMode::Relaxed { max_rank_error: 256 }
+    };
+    let q: Arc<dyn ConcurrentQueue<(u8, u64)>> = Arc::new(ShardedCmp::with_config(
+        ShardedConfig::default().with_shards(8).with_mode(mode),
+    ));
+    let done = Arc::new(AtomicBool::new(false));
+    let prod: Vec<_> = (0..PRODUCERS as u8)
+        .map(|p| {
+            let q = q.clone();
+            let n = quota[p as usize];
+            let mut prng = XorShift64::new(seed ^ (p as u64) << 32);
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    q.enqueue((p, i));
+                    if prng.chance(0.01) {
+                        std::thread::yield_now();
+                    }
+                }
+            })
+        })
+        .collect();
+    let cons: Vec<_> = (0..CONSUMERS)
+        .map(|_| {
+            let q = q.clone();
+            let done = done.clone();
+            std::thread::spawn(move || {
+                let mut got: Vec<(u8, u64)> = Vec::new();
+                loop {
+                    match q.try_dequeue() {
+                        Some(v) => got.push(v),
+                        None => {
+                            if done.load(Ordering::Acquire) && q.try_dequeue().is_none() {
+                                return got;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in prod {
+        h.join().unwrap();
+    }
+    done.store(true, Ordering::Release);
+
+    let mut all: Vec<(u8, u64)> = Vec::new();
+    for h in cons {
+        let got = h.join().unwrap();
+        if strict {
+            // Strict fabric: each consumer's view of each producer is a
+            // monotone subsequence, exactly as for any strict queue.
+            let mut last = [-1i64; PRODUCERS];
+            for &(p, i) in &got {
+                assert!(
+                    last[p as usize] < i as i64,
+                    "sharded strict seed={seed}: producer {p} reordered"
+                );
+                last[p as usize] = i as i64;
+            }
+        }
+        all.extend(got);
+    }
+    assert_eq!(all.len() as u64, OPS, "sharded seed={seed}: conservation");
+    all.sort_unstable();
+    all.dedup();
+    assert_eq!(all.len() as u64, OPS, "sharded seed={seed}: duplicates");
+}
+
+#[test]
+fn sharded_strict_zipf_skew_preserves_producer_order() {
+    for seed in 50..53 {
+        check_sharded_zipf(seed, true);
+    }
+}
+
+#[test]
+fn sharded_relaxed_zipf_skew_conserves() {
+    for seed in 60..63 {
+        check_sharded_zipf(seed, false);
+    }
+}
+
 #[test]
 fn concurrent_random_cmp_stress_configs() {
     // CMP with adversarial configs under concurrency.

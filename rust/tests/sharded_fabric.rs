@@ -1,0 +1,181 @@
+//! Rank-error / steal correctness oracle for the sharded CMP fabric
+//! (DESIGN.md §13).
+//!
+//! Every enqueue is stamped with a global ticket drawn under a lock
+//! (`serialize_stamps = true` in
+//! [`cmpq::bench::workload::rank_error_trial`]), so the ticket order
+//! *is* the true enqueue order and the replayed dequeue history can be
+//! scored exactly:
+//!
+//! * **Strict** mode must score a rank error of exactly zero — the
+//!   head-shard ordering ticket makes the fabric a single strict FIFO,
+//!   no matter how many shards or stealing consumers are involved.
+//! * **Relaxed** mode must keep the measured p99 under the
+//!   `max_rank_error` the fabric was configured with.
+//!
+//! Both are swept across 1/2/8 shards × 1–8 consumers, plus a steal
+//! storm (strict mode parks all items on shard 0 while consumers home
+//! on the other shards) checked for exactly-once delivery.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use cmpq::bench::workload::{rank_error_trial, PairConfig, RankErrorStats};
+use cmpq::queue::ConcurrentQueue;
+use cmpq::{ShardMode, ShardedCmp, ShardedConfig};
+
+const SHARD_COUNTS: [usize; 3] = [1, 2, 8];
+const CONSUMER_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn fabric(shards: usize, mode: ShardMode) -> Arc<dyn ConcurrentQueue<u64>> {
+    Arc::new(ShardedCmp::with_config(
+        ShardedConfig::default().with_shards(shards).with_mode(mode),
+    ))
+}
+
+#[test]
+fn strict_rank_error_is_exactly_zero_across_combos() {
+    for shards in SHARD_COUNTS {
+        for consumers in CONSUMER_COUNTS {
+            let pair = PairConfig {
+                producers: 2,
+                consumers,
+            };
+            let ops = 4_000;
+            let trial = rank_error_trial(fabric(shards, ShardMode::Strict), pair, ops, true);
+            assert_eq!(
+                trial.items, ops,
+                "conservation broken at {shards} shards × {}",
+                pair.label()
+            );
+            assert_eq!(
+                trial.stats,
+                RankErrorStats::zero(),
+                "strict fabric reordered at {shards} shards × {}: {:?}",
+                pair.label(),
+                trial.stats
+            );
+        }
+    }
+}
+
+#[test]
+fn relaxed_rank_error_p99_within_configured_bound() {
+    const BOUND: u64 = 4096;
+    for shards in SHARD_COUNTS {
+        for consumers in CONSUMER_COUNTS {
+            let pair = PairConfig {
+                producers: 2,
+                consumers,
+            };
+            let ops = 8_000;
+            let q = fabric(shards, ShardMode::Relaxed { max_rank_error: BOUND });
+            let trial = rank_error_trial(q, pair, ops, true);
+            assert_eq!(
+                trial.items, ops,
+                "conservation broken at {shards} shards × {}",
+                pair.label()
+            );
+            assert!(
+                trial.stats.p99 <= BOUND,
+                "relaxed p99 {} exceeds configured bound {BOUND} at {shards} shards × {} \
+                 (p50={} max={})",
+                trial.stats.p99,
+                pair.label(),
+                trial.stats.p50,
+                trial.stats.max
+            );
+        }
+    }
+}
+
+#[test]
+fn relaxed_bound_is_exposed_on_the_handle() {
+    let q = ShardedCmp::<u64>::with_config(
+        ShardedConfig::default()
+            .with_shards(4)
+            .with_mode(ShardMode::Relaxed { max_rank_error: 64 }),
+    );
+    assert_eq!(q.mode().max_rank_error(), Some(64));
+    assert!(!q.is_strict_fifo());
+    let strict = ShardedCmp::<u64>::new(4);
+    assert_eq!(strict.mode().max_rank_error(), None);
+    assert!(strict.is_strict_fifo());
+}
+
+/// Steal storm: strict mode routes *every* push to shard 0, so of 8
+/// consumers at most one has home shard 0 — deliveries to the rest can
+/// only happen by stealing. Each payload carries its identity; a
+/// per-payload delivery counter proves exactly-once end to end.
+#[test]
+fn steal_storm_delivers_exactly_once() {
+    const TOTAL: u64 = 30_000;
+    const PRODUCERS: usize = 2;
+    const CONSUMERS: usize = 8;
+    let q: Arc<ShardedCmp<u64>> = Arc::new(ShardedCmp::new(8));
+    let delivered: Arc<Vec<AtomicU32>> =
+        Arc::new((0..TOTAL).map(|_| AtomicU32::new(0)).collect());
+    let next = Arc::new(std::sync::atomic::AtomicU64::new(0));
+    let done = Arc::new(std::sync::atomic::AtomicU64::new(0));
+
+    let producers: Vec<_> = (0..PRODUCERS)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            let next = Arc::clone(&next);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                loop {
+                    let t = next.fetch_add(1, Ordering::Relaxed);
+                    if t >= TOTAL {
+                        break;
+                    }
+                    q.enqueue(t);
+                }
+                done.fetch_add(1, Ordering::Release);
+            })
+        })
+        .collect();
+    let consumers: Vec<_> = (0..CONSUMERS)
+        .map(|_| {
+            let q = Arc::clone(&q);
+            let delivered = Arc::clone(&delivered);
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || loop {
+                let deadline =
+                    std::time::Instant::now() + std::time::Duration::from_millis(10);
+                match q.pop_deadline(deadline) {
+                    Some(v) => {
+                        delivered[v as usize].fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {
+                        if done.load(Ordering::Acquire) == PRODUCERS as u64 {
+                            // All enqueues happen-before this read
+                            // (Release/Acquire on `done`), but the empty
+                            // sweep above may predate the last publish —
+                            // one final drain closes that window.
+                            while let Some(v) = q.try_dequeue() {
+                                delivered[v as usize].fetch_add(1, Ordering::Relaxed);
+                            }
+                            return;
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in producers {
+        h.join().unwrap();
+    }
+    for h in consumers {
+        h.join().unwrap();
+    }
+    for (i, c) in delivered.iter().enumerate() {
+        assert_eq!(
+            c.load(Ordering::Relaxed),
+            1,
+            "payload {i} delivered {} times",
+            c.load(Ordering::Relaxed)
+        );
+    }
+    assert_eq!(q.parked_consumers(), 0, "no consumer left parked");
+}
