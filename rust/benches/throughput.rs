@@ -1,338 +1,68 @@
-//! FIG1 — Figure 1 + the §4.1 throughput narrative: items/sec across
-//! 1P1C…64P64C for CMP vs the paper's comparator set (plus the extra
-//! baselines), with round-robin sequencing and 3-sigma filtering —
-//! swept across an operation batch-size axis (1/8/64) so the
-//! batch-amortization win (DESIGN.md §7) is measured, not asserted,
-//! plus an offered-load scenario axis (bursty arrival bursts with idle
-//! gaps, a zero-load idle floor, and async-task consumers riding the
-//! §10 waker bridge) whose parking consumers report ops per CPU-second
-//! (DESIGN.md §8, §10).
+//! BENCH — execute the declarative workload library.
 //!
-//! `cargo bench --bench throughput` — or `repro bench fig1` for the
-//! CLI-configurable version. Env knobs: `BENCH_OPS`, `BENCH_ROUNDS`,
-//! `BENCH_BATCHES` (comma-separated, default `1,8,64`),
-//! `BENCH_PAIRS` (comma-separated symmetric pair sizes, default the
-//! paper's `1,2,4,8,16,32,64` sweep — CI smoke runs pass `1,4`),
-//! `BENCH_SCENARIOS` (comma-separated extra scenarios, default
-//! `bursty,idle,async`; empty string disables), `BENCH_FULL=1` to
-//! include every implementation.
+//! Every scenario axis lives in the committed `workloads/*.json` specs
+//! (DESIGN.md §14): implementation sets, producer/consumer shapes,
+//! batch mixes, arrival processes (closed / bursty open-loop / idle /
+//! async tasks), zipf-skewed contention, the sharded fabric's
+//! `max_rank_error` sweep, and the coordinator / TCP-ingress
+//! transports. This binary holds **no** hard-coded axes: it loads the
+//! library, runs each spec through the one generic driver
+//! ([`cmpq::bench::runner::run_workload`]), prints the SLO report, and
+//! writes `BENCH_throughput.json` — the machine-readable perf
+//! trajectory `repro bench diff` gates on.
 //!
-//! The run ends with the sharded fabric's rank-error axis (DESIGN.md
-//! §13): strict vs relaxed `ShardedCmp` measured with
-//! [`cmpq::bench::workload::rank_error_trial`], emitted as
-//! `rank-strict` / `rank-relaxed` scenario rows whose
-//! `rank_error_p99` field is a number instead of `null`.
+//! `cargo bench --bench throughput` — or `repro bench --workload-dir
+//! ../workloads` for the CLI version. Env knobs:
 //!
-//! Outputs:
-//! * `bench_results/fig1_throughput.json` — the batch-1 Figure 1 cells
-//!   (unchanged schema).
-//! * `BENCH_throughput.json` — impl × threads × batch × scenario →
-//!   ops/s + ops per CPU-second + CPU utilization + p99 rank error,
-//!   the machine-readable perf trajectory tracked across PRs.
+//! * `BENCH_WORKLOAD_DIR` — library directory (default `../workloads`,
+//!   the committed library relative to the crate root).
+//! * `BENCH_SMOKE` — run each spec's `smoke_ops` × `smoke_pairs`
+//!   instead of the full axes (the CI trajectory knob).
+//! * `BENCH_VERBOSE` — per-trial progress on stderr.
+//! * `BENCH_OPS` / `BENCH_PAIRS` — **deprecated** spec-shadowing
+//!   overrides, kept for one-off experiments; each prints a
+//!   deprecation note when it shadows a spec value.
+//!
+//! The Figure-1 table/JSON (paper-narrative rendering of the closed
+//! loop) stays available via `repro bench fig1`.
 
-use std::sync::Arc;
-use std::time::Duration;
-
-use cmpq::bench::report::{self, BatchThroughputRow};
-use cmpq::bench::runner::{throughput_suite, SuiteOptions, ThroughputCell};
-use cmpq::bench::workload::{rank_error_trial, PairConfig, Scenario};
-use cmpq::queue::Impl;
-use cmpq::{ConcurrentQueue, ShardMode, ShardedCmp, ShardedConfig};
-
-fn env_u64(k: &str, d: u64) -> u64 {
-    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
-}
-
-fn env_batches() -> Vec<usize> {
-    let mut batches: Vec<usize> = std::env::var("BENCH_BATCHES")
-        .ok()
-        .map(|v| {
-            v.split(',')
-                .filter_map(|s| s.trim().parse().ok())
-                .filter(|&b| b > 0)
-                .collect()
-        })
-        .filter(|v: &Vec<usize>| !v.is_empty())
-        .unwrap_or_else(|| vec![1, 8, 64]);
-    // Batch 1 is the amortization baseline and feeds the Figure-1
-    // outputs; always include it, and drop duplicates so no batch size
-    // is swept (or reported) twice.
-    if !batches.contains(&1) {
-        batches.insert(0, 1);
-    }
-    let mut seen = Vec::new();
-    batches.retain(|b| {
-        if seen.contains(b) {
-            false
-        } else {
-            seen.push(*b);
-            true
-        }
-    });
-    batches
-}
-
-/// `BENCH_PAIRS=1,4` → symmetric 1P1C and 4P4C; unset/empty → the
-/// paper's full Figure-1 sweep. Lets CI run a smoke-sized matrix with
-/// keys that stay a subset of the full run's.
-fn env_pairs() -> Vec<PairConfig> {
-    std::env::var("BENCH_PAIRS")
-        .ok()
-        .map(|v| {
-            v.split(',')
-                .filter_map(|s| s.trim().parse::<usize>().ok())
-                .filter(|&n| n > 0)
-                .map(PairConfig::symmetric)
-                .collect()
-        })
-        .filter(|v: &Vec<PairConfig>| !v.is_empty())
-        .unwrap_or_else(PairConfig::paper_sweep)
-}
+use cmpq::bench::report;
+use cmpq::bench::runner::{run_workload, WorkloadRunOptions};
+use cmpq::bench::spec::load_workload_dir;
 
 fn main() {
-    let base_opts = SuiteOptions {
-        total_ops: env_u64("BENCH_OPS", 60_000),
-        rounds: env_u64("BENCH_ROUNDS", 3) as usize,
-        warmup_rounds: 1,
+    let dir = std::env::var("BENCH_WORKLOAD_DIR").unwrap_or_else(|_| "../workloads".to_string());
+    let specs = match load_workload_dir(std::path::Path::new(&dir)) {
+        Ok(specs) => specs,
+        Err(e) => {
+            eprintln!("cannot load workload library from {dir:?}: {e}");
+            std::process::exit(2);
+        }
+    };
+    let opts = WorkloadRunOptions {
+        smoke: std::env::var("BENCH_SMOKE").is_ok(),
         verbose: std::env::var("BENCH_VERBOSE").is_ok(),
-        ..SuiteOptions::default()
     };
-    let impls: Vec<Impl> = if std::env::var("BENCH_FULL").is_ok() {
-        Impl::ALL.to_vec()
-    } else {
-        // The paper's set + the lock-based comparator for context.
-        vec![Impl::Cmp, Impl::Segmented, Impl::MsHp, Impl::Mutex]
-    };
-    let pairs = env_pairs();
-    let batches = env_batches();
-
     eprintln!(
-        "FIG1: {} impls × {} pairs × {} batch sizes × {} rounds, {} ops/trial",
-        impls.len(),
-        pairs.len(),
-        batches.len(),
-        base_opts.rounds,
-        base_opts.total_ops
+        "BENCH: {} workloads from {dir:?}{}",
+        specs.len(),
+        if opts.smoke { " (smoke axes)" } else { "" }
     );
 
-    let mut rows: Vec<BatchThroughputRow> = Vec::new();
-    for &batch in &batches {
-        let opts = SuiteOptions {
-            batch_size: batch,
-            ..base_opts.clone()
-        };
-        eprintln!("-- batch size {batch} --");
-        let cells = throughput_suite(&impls, &pairs, &opts);
-
-        if batch == 1 {
-            println!("{}", report::fig1_table(&cells));
-            let series: Vec<(String, f64)> = cells
-                .iter()
-                .map(|c| (format!("{} {}", c.pair.label(), c.imp.name()), c.mean_ips))
-                .collect();
-            println!("{}", report::bar_chart("Figure 1 (items/sec)", &series, 48));
-            std::fs::create_dir_all("bench_results").ok();
-            std::fs::write(
-                "bench_results/fig1_throughput.json",
-                report::throughput_json(&cells),
-            )
-            .ok();
-            eprintln!("wrote bench_results/fig1_throughput.json");
-        }
-
-        rows.extend(cells.into_iter().map(|cell| BatchThroughputRow {
-            cell,
-            batch,
-            scenario: "closed",
-            rank_error_p99: None,
-        }));
-    }
-
-    // Batch-amortization summary: CMP speedup of each batch size over
-    // batch-1 at the same thread count.
-    if batches.len() > 1 {
-        println!("# Batch amortization — CMP items/s vs batch-1");
-        print!("{:<10}", "config");
-        for b in &batches {
-            print!("{:>14}", format!("batch-{b}"));
-        }
-        println!();
-        for p in &pairs {
-            let base = rows
-                .iter()
-                .find(|r| r.cell.imp == Impl::Cmp && r.cell.pair == *p && r.batch == 1)
-                .map(|r| r.cell.mean_ips)
-                .unwrap_or(0.0);
-            print!("{:<10}", p.label());
-            for &b in &batches {
-                let ips = rows
-                    .iter()
-                    .find(|r| r.cell.imp == Impl::Cmp && r.cell.pair == *p && r.batch == b)
-                    .map(|r| r.cell.mean_ips)
-                    .unwrap_or(0.0);
-                if base > 0.0 {
-                    print!("{:>13.2}x", ips / base);
-                } else {
-                    print!("{:>14}", "-");
-                }
+    let mut rows = Vec::new();
+    for mut spec in specs {
+        spec.apply_env_overrides();
+        eprintln!("-- workload {} --", spec.name);
+        match run_workload(&spec, &opts) {
+            Ok(mut r) => rows.append(&mut r),
+            Err(e) => {
+                eprintln!("workload {} failed: {e}", spec.name);
+                std::process::exit(1);
             }
-            println!();
         }
     }
 
-    // Offered-load scenario axis (DESIGN.md §8): bursty open-loop
-    // arrivals and the zero-load idle floor, both with parking
-    // consumers — measuring ops per CPU-second, not just wall clock.
-    let scenarios: Vec<String> = std::env::var("BENCH_SCENARIOS")
-        .map(|v| {
-            v.split(',')
-                .map(|s| s.trim().to_string())
-                .filter(|s| !s.is_empty())
-                .collect()
-        })
-        .unwrap_or_else(|_| {
-            vec![
-                "bursty".to_string(),
-                "idle".to_string(),
-                "async".to_string(),
-            ]
-        });
-    for name in &scenarios {
-        let (scenario, scen_pairs, rounds) = match name.as_str() {
-            "bursty" => (
-                Scenario::Bursty {
-                    burst: 512,
-                    gap: Duration::from_millis(2),
-                },
-                vec![
-                    PairConfig::symmetric(1),
-                    PairConfig::symmetric(4),
-                    PairConfig::symmetric(16),
-                ],
-                2usize,
-            ),
-            "idle" => (
-                Scenario::Idle {
-                    hold: Duration::from_millis(400),
-                },
-                vec![PairConfig::symmetric(4)],
-                1usize,
-            ),
-            // The async bridge (DESIGN.md §10): consumer threads host
-            // 4 async tasks each; CMP resolves on push-side waker
-            // wakeups, baselines on the polling default — the row is
-            // the measured cost/win of futures vs consumer threads.
-            "async" => (
-                Scenario::Async {
-                    tasks_per_consumer: 4,
-                },
-                vec![PairConfig::symmetric(1), PairConfig::symmetric(4)],
-                2usize,
-            ),
-            other => {
-                eprintln!("unknown scenario {other:?} (bursty|idle|async), skipping");
-                continue;
-            }
-        };
-        eprintln!("-- scenario {} --", scenario.label());
-        let opts = SuiteOptions {
-            scenario,
-            rounds,
-            warmup_rounds: 0,
-            ..base_opts.clone()
-        };
-        let cells = throughput_suite(&impls, &scen_pairs, &opts);
-        println!(
-            "# Scenario {} — items/s, ops per CPU-second, CPU util per thread",
-            scenario.label()
-        );
-        println!(
-            "{:<10}{:<12}{:>14}{:>18}{:>10}",
-            "config", "impl", "items/s", "ops/cpu-s", "util"
-        );
-        for c in &cells {
-            println!(
-                "{:<10}{:<12}{:>14.0}{:>18.0}{:>10.4}",
-                c.pair.label(),
-                c.imp.name(),
-                c.mean_ips,
-                c.mean_ops_per_cpu,
-                c.mean_cpu_util
-            );
-        }
-        rows.extend(cells.into_iter().map(|cell| BatchThroughputRow {
-            cell,
-            batch: 1,
-            scenario: scenario.label(),
-            rank_error_p99: None,
-        }));
-    }
-
-    // Rank-error axis (DESIGN.md §13): the sharded fabric's ordering
-    // quality vs throughput. Strict pays one head-shard ticket RMW per
-    // push and must hold rank error at ~0; relaxed round-robins
-    // producers and is the row that shows what the bound buys.
-    // Stamping is racy (`serialize_stamps = false`) so the producer
-    // side stays contention-honest — the correctness oracle in
-    // `tests/sharded_fabric.rs` is where exact-zero is asserted.
-    // CPU columns are 0 (unmeasured) so `bench diff` never CPU-flags
-    // these rows.
-    let rank_ops = base_opts.total_ops;
-    let rank_pairs = [PairConfig::symmetric(1), PairConfig::symmetric(4)];
-    println!("# Sharded fabric — rank error vs items/s (4 shards)");
-    println!(
-        "{:<10}{:<14}{:>14}{:>10}{:>10}{:>10}",
-        "config", "mode", "items/s", "rank p50", "rank p99", "rank max"
-    );
-    for (label, mode) in [
-        ("rank-strict", ShardMode::Strict),
-        (
-            "rank-relaxed",
-            ShardMode::Relaxed {
-                max_rank_error: 4096,
-            },
-        ),
-    ] {
-        for pair in rank_pairs {
-            // Warmup with default windows to observe the machine's
-            // dequeue rate, then re-size the per-shard protection
-            // windows for ~0.5 s of resilience at that rate.
-            let warm: Arc<dyn ConcurrentQueue<u64>> = Arc::new(ShardedCmp::with_config(
-                ShardedConfig::default().with_mode(mode),
-            ));
-            let rate = rank_error_trial(warm, pair, rank_ops.min(20_000), false).items_per_sec;
-            let cfg = ShardedConfig::default()
-                .with_mode(mode)
-                .sized_for_rate(rate.max(1.0) as u64, 0.5);
-            let q: Arc<dyn ConcurrentQueue<u64>> = Arc::new(ShardedCmp::with_config(cfg));
-            let trial = rank_error_trial(q, pair, rank_ops, false);
-            println!(
-                "{:<10}{:<14}{:>14.0}{:>10}{:>10}{:>10}",
-                pair.label(),
-                label,
-                trial.items_per_sec,
-                trial.stats.p50,
-                trial.stats.p99,
-                trial.stats.max
-            );
-            rows.push(BatchThroughputRow {
-                cell: ThroughputCell {
-                    imp: Impl::Sharded,
-                    pair,
-                    samples: vec![trial.items_per_sec],
-                    mean_ips: trial.items_per_sec,
-                    std_ips: 0.0,
-                    discarded: 0,
-                    mean_ops_per_cpu: 0.0,
-                    mean_cpu_util: 0.0,
-                },
-                batch: 1,
-                scenario: label,
-                rank_error_p99: Some(trial.stats.p99),
-            });
-        }
-    }
-
+    println!("{}", report::slo_table(&rows));
     std::fs::write("BENCH_throughput.json", report::batch_throughput_json(&rows)).ok();
     eprintln!("wrote BENCH_throughput.json ({} rows)", rows.len());
 }

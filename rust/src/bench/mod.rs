@@ -8,5 +8,6 @@ pub mod latency;
 pub mod report;
 pub mod runner;
 pub mod sigma;
+pub mod spec;
 pub mod synthetic;
 pub mod workload;

@@ -169,36 +169,68 @@ pub fn throughput_json(cells: &[ThroughputCell]) -> String {
     s
 }
 
-/// One row of the `BENCH_throughput.json` perf-trajectory dump:
-/// a [`ThroughputCell`] tagged with the operation batch size and the
-/// offered-load scenario it ran under.
+/// One row of the `BENCH_throughput.json` SLO report: a measurement
+/// produced by [`crate::bench::runner::run_workload`], keyed by the
+/// workload name it came from. Optional fields are emitted as JSON
+/// `null` when the workload did not measure them.
 #[derive(Debug, Clone)]
-pub struct BatchThroughputRow {
-    /// The measured cell.
-    pub cell: ThroughputCell,
-    /// Operation batch size the cell ran at.
+pub struct WorkloadRow {
+    /// Name of the workload spec this row belongs to.
+    pub workload: String,
+    /// Implementation / transport label (`cmp`, `sharded-zipf`,
+    /// `coordinator`, `tcp-ingress`, …).
+    pub impl_name: String,
+    /// Thread-shape label (`4P4C` for queue rows, `8C2W` for
+    /// coordinator/TCP rows).
+    pub pair: String,
+    /// Total threads participating in the trial.
+    pub threads: usize,
+    /// Operation batch size the row ran at (1 = single-op API).
     pub batch: usize,
-    /// Offered-load scenario label (`closed` / `bursty` / `idle`),
-    /// from [`crate::bench::workload::Scenario::label`].
-    pub scenario: &'static str,
-    /// p99 dequeue rank error measured for this cell
-    /// ([`crate::bench::workload::rank_error_trial`]), or `None` for
-    /// rows where rank error was not measured (plain throughput
-    /// trials). Emitted as JSON `null` when absent so old and new
-    /// dumps stay mutually diffable.
+    /// Arrival-process label (`closed` / `bursty` / `idle` / `async`)
+    /// or sweep-point label (`strict` / `relaxed-<bound>`).
+    pub scenario: String,
+    /// 3-sigma filtered mean throughput (items/sec).
+    pub mean_ips: f64,
+    /// Standard deviation of the filtered samples (0 for
+    /// single-sample rows).
+    pub std_ips: f64,
+    /// Items per CPU-second (0 when CPU time was unmeasurable).
+    pub ops_per_cpu_sec: f64,
+    /// CPU utilization (CPU-seconds per wall-second per thread; 0
+    /// when unmeasured).
+    pub cpu_util: f64,
+    /// p99 dequeue rank error, for rank-error sweep rows only.
     pub rank_error_p99: Option<u64>,
+    /// Median per-item sojourn (queue rows) or request RTT
+    /// (coordinator/TCP rows) in nanoseconds; `None` when the spec did
+    /// not request latency recording.
+    pub lat_p50_ns: Option<u64>,
+    /// 99th-percentile latency in nanoseconds.
+    pub lat_p99_ns: Option<u64>,
+    /// 99.9th-percentile latency in nanoseconds.
+    pub lat_p999_ns: Option<u64>,
+    /// Per-round throughput samples, pre-filter.
+    pub samples: Vec<f64>,
 }
 
-/// `impl × threads × batch-size × scenario → ops/s + CPU efficiency`,
-/// written to `BENCH_throughput.json` so the amortization win *and* the
-/// spin-vs-park trade-off are tracked across PRs rather than asserted.
-/// `ops_per_cpu_sec` and `cpu_util` are 0 when CPU time was
-/// unmeasurable (no procfs / below clock resolution).
-/// `rank_error_p99` is a number for rank-error rows (the sharded
-/// fabric's ordering-vs-throughput trade) and `null` elsewhere;
-/// [`diff_bench_json`] ignores the field, so dumps from before it
+fn json_opt_u64(v: Option<u64>) -> String {
+    match v {
+        Some(n) => n.to_string(),
+        None => "null".to_string(),
+    }
+}
+
+/// `workload × impl × threads × batch × scenario → ops/s, CPU
+/// efficiency, latency percentiles`, written to `BENCH_throughput.json`
+/// so the whole scenario library is tracked across PRs rather than
+/// asserted. `ops_per_cpu_sec` and `cpu_util` are 0 when CPU time was
+/// unmeasurable (no procfs / below clock resolution); `rank_error_p99`
+/// and the `lat_*_ns` percentiles are numbers where the workload
+/// measured them and `null` elsewhere. [`diff_bench_json`] gates only
+/// on throughput and CPU efficiency, so dumps from before these fields
 /// existed still diff cleanly against new ones.
-pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
+pub fn batch_throughput_json(rows: &[WorkloadRow]) -> String {
     let mut s = String::from("[");
     for (i, r) in rows.iter().enumerate() {
         if i > 0 {
@@ -206,33 +238,86 @@ pub fn batch_throughput_json(rows: &[BatchThroughputRow]) -> String {
         }
         let _ = write!(
             s,
-            "{{\"impl\":\"{}\",\"pair\":\"{}\",\"threads\":{},\"batch\":{},\"scenario\":\"{}\",\"mean_ips\":{:.3},\"std_ips\":{:.3},\"ops_per_cpu_sec\":{:.3},\"cpu_util\":{:.5},\"rank_error_p99\":{},\"samples\":{:?}}}",
-            r.cell.imp.name(),
-            r.cell.pair.label(),
-            r.cell.pair.producers + r.cell.pair.consumers,
+            "{{\"workload\":\"{}\",\"impl\":\"{}\",\"pair\":\"{}\",\"threads\":{},\"batch\":{},\"scenario\":\"{}\",\"mean_ips\":{:.3},\"std_ips\":{:.3},\"ops_per_cpu_sec\":{:.3},\"cpu_util\":{:.5},\"rank_error_p99\":{},\"lat_p50_ns\":{},\"lat_p99_ns\":{},\"lat_p999_ns\":{},\"samples\":{:?}}}",
+            json_escape(&r.workload),
+            json_escape(&r.impl_name),
+            json_escape(&r.pair),
+            r.threads,
             r.batch,
-            r.scenario,
-            r.cell.mean_ips,
-            r.cell.std_ips,
-            r.cell.mean_ops_per_cpu,
-            r.cell.mean_cpu_util,
-            match r.rank_error_p99 {
-                Some(p) => p.to_string(),
-                None => "null".to_string(),
-            },
-            r.cell.samples
+            json_escape(&r.scenario),
+            r.mean_ips,
+            r.std_ips,
+            r.ops_per_cpu_sec,
+            r.cpu_util,
+            json_opt_u64(r.rank_error_p99),
+            json_opt_u64(r.lat_p50_ns),
+            json_opt_u64(r.lat_p99_ns),
+            json_opt_u64(r.lat_p999_ns),
+            r.samples
         );
     }
     s.push(']');
     s
 }
 
+fn fmt_us(ns: Option<u64>) -> String {
+    match ns {
+        Some(n) => format!("{:.1}", n as f64 / 1000.0),
+        None => "-".to_string(),
+    }
+}
+
+/// SLO report table: one aligned line per workload row with
+/// throughput, CPU efficiency, latency percentiles (µs; `-` where the
+/// workload did not record latency) and rank error.
+pub fn slo_table(rows: &[WorkloadRow]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "# SLO report — per-workload throughput and latency");
+    let _ = writeln!(
+        s,
+        "{:<18}{:<14}{:<8}{:>6}{:<14}{:>12}{:>12}{:>9}{:>9}{:>9}{:>9}",
+        "workload",
+        "impl",
+        "pair",
+        "batch",
+        " scenario",
+        "ops/s",
+        "ops/cpu-s",
+        "p50us",
+        "p99us",
+        "p999us",
+        "rank99"
+    );
+    for r in rows {
+        let _ = writeln!(
+            s,
+            "{:<18}{:<14}{:<8}{:>6} {:<13}{:>12}{:>12}{:>9}{:>9}{:>9}{:>9}",
+            r.workload,
+            r.impl_name,
+            r.pair,
+            r.batch,
+            r.scenario,
+            fmt_rate(r.mean_ips),
+            fmt_rate(r.ops_per_cpu_sec),
+            fmt_us(r.lat_p50_ns),
+            fmt_us(r.lat_p99_ns),
+            fmt_us(r.lat_p999_ns),
+            match r.rank_error_p99 {
+                Some(v) => v.to_string(),
+                None => "-".to_string(),
+            }
+        );
+    }
+    s
+}
+
 /// One compared cell of `repro bench diff`: the same
-/// `impl × pair × batch × scenario` key measured in two
+/// `workload × impl × pair × batch × scenario` key measured in two
 /// `BENCH_throughput.json` dumps.
 #[derive(Debug, Clone)]
 pub struct BenchDiffRow {
-    /// Row key: `impl pair batch scenario`.
+    /// Row key: `workload impl pair batch scenario` (`-` for the
+    /// workload in pre-library dumps that lack the field).
     pub key: String,
     /// Old mean items/sec.
     pub old_ips: f64,
@@ -265,6 +350,11 @@ pub struct BenchDiff {
     pub only_old: Vec<String>,
     /// Row keys only the new dump has (coverage grew).
     pub only_new: Vec<String>,
+    /// Workload names only the old dump covers — a removed workload is
+    /// a coverage change to warn about, never a perf regression.
+    pub workloads_only_old: Vec<String>,
+    /// Workload names only the new dump covers (library grew).
+    pub workloads_only_new: Vec<String>,
     /// Regression threshold in percent that was applied.
     pub threshold_pct: f64,
 }
@@ -318,6 +408,12 @@ impl BenchDiff {
         for k in &self.only_new {
             let _ = writeln!(s, "{k:<34} only in new dump (new coverage)");
         }
+        for w in &self.workloads_only_old {
+            let _ = writeln!(s, "warn: workload {w:?} removed (coverage change)");
+        }
+        for w in &self.workloads_only_new {
+            let _ = writeln!(s, "warn: workload {w:?} added (coverage change)");
+        }
         s
     }
 }
@@ -331,15 +427,24 @@ fn delta_pct(old: f64, new: f64) -> f64 {
     }
 }
 
+/// A parsed diff-side row: comparison key, workload name, ips, cpu.
+type ParsedRow = (String, String, f64, f64);
+
 /// Compare two `BENCH_throughput.json` documents (the format
 /// [`batch_throughput_json`] writes). Rows are matched on the
-/// `impl × pair × batch × scenario` key; a drop of more than
-/// `threshold_pct` percent in `mean_ips` or `ops_per_cpu_sec` flags
-/// the row as regressed. A zero `ops_per_cpu_sec` means that run
-/// could not measure CPU time — such rows are never CPU-flagged.
-/// Errors on malformed JSON or missing fields.
+/// `workload × impl × pair × batch × scenario` key (the workload
+/// defaults to `-` for pre-library dumps that lack the field); a drop
+/// of more than `threshold_pct` percent in `mean_ips` or
+/// `ops_per_cpu_sec` flags the row as regressed. A zero
+/// `ops_per_cpu_sec` means that run could not measure CPU time — such
+/// rows are never CPU-flagged. Rows of a workload present on only one
+/// side are *coverage changes* — surfaced via
+/// [`BenchDiff::workloads_only_old`]/[`BenchDiff::workloads_only_new`]
+/// and excluded from the per-row `only_*` lists — so growing or
+/// pruning the library never reads as a perf regression. Errors on
+/// malformed JSON or missing fields.
 pub fn diff_bench_json(old: &str, new: &str, threshold_pct: f64) -> Result<BenchDiff, String> {
-    let parse = |doc: &str, label: &str| -> Result<Vec<(String, f64, f64)>, String> {
+    let parse = |doc: &str, label: &str| -> Result<Vec<ParsedRow>, String> {
         let json = crate::util::json::Json::parse(doc).map_err(|e| format!("{label}: {e}"))?;
         let arr = json
             .as_arr()
@@ -357,25 +462,57 @@ pub fn diff_bench_json(old: &str, new: &str, threshold_pct: f64) -> Result<Bench
                     .and_then(|v| v.as_f64())
                     .ok_or_else(|| format!("{label}: row {i} lacks numeric field {k:?}"))
             };
+            let workload = row
+                .get("workload")
+                .and_then(|v| v.as_str())
+                .unwrap_or("-")
+                .to_string();
             let key = format!(
-                "{} {} batch={} {}",
+                "{} {} {} batch={} {}",
+                workload,
                 field("impl")?,
                 field("pair")?,
                 num("batch")? as u64,
                 field("scenario")?
             );
-            rows.push((key, num("mean_ips")?, num("ops_per_cpu_sec")?));
+            rows.push((key, workload, num("mean_ips")?, num("ops_per_cpu_sec")?));
         }
         Ok(rows)
     };
     let old_rows = parse(old, "old")?;
     let new_rows = parse(new, "new")?;
 
+    let workload_set = |rows: &[ParsedRow]| -> Vec<String> {
+        let mut names: Vec<String> = Vec::new();
+        for (_, w, _, _) in rows {
+            if !names.contains(w) {
+                names.push(w.clone());
+            }
+        }
+        names
+    };
+    let old_workloads = workload_set(&old_rows);
+    let new_workloads = workload_set(&new_rows);
+    let workloads_only_old: Vec<String> = old_workloads
+        .iter()
+        .filter(|w| !new_workloads.contains(w))
+        .cloned()
+        .collect();
+    let workloads_only_new: Vec<String> = new_workloads
+        .iter()
+        .filter(|w| !old_workloads.contains(w))
+        .cloned()
+        .collect();
+
     let mut rows = Vec::new();
     let mut only_old = Vec::new();
-    for (key, old_ips, old_cpu) in &old_rows {
-        let Some((_, new_ips, new_cpu)) = new_rows.iter().find(|(k, _, _)| k == key) else {
-            only_old.push(key.clone());
+    for (key, workload, old_ips, old_cpu) in &old_rows {
+        let Some((_, _, new_ips, new_cpu)) = new_rows.iter().find(|(k, _, _, _)| k == key) else {
+            // A whole missing workload is a coverage change, not a
+            // per-row hole worth listing.
+            if !workloads_only_old.contains(workload) {
+                only_old.push(key.clone());
+            }
             continue;
         };
         let ips_delta_pct = delta_pct(*old_ips, *new_ips);
@@ -399,13 +536,17 @@ pub fn diff_bench_json(old: &str, new: &str, threshold_pct: f64) -> Result<Bench
     }
     let only_new = new_rows
         .iter()
-        .filter(|(k, _, _)| !old_rows.iter().any(|(ok, _, _)| ok == k))
-        .map(|(k, _, _)| k.clone())
+        .filter(|(k, w, _, _)| {
+            !workloads_only_new.contains(w) && !old_rows.iter().any(|(ok, _, _, _)| ok == k)
+        })
+        .map(|(k, _, _, _)| k.clone())
         .collect();
     Ok(BenchDiff {
         rows,
         only_old,
         only_new,
+        workloads_only_old,
+        workloads_only_new,
         threshold_pct,
     })
 }
@@ -546,48 +687,81 @@ mod tests {
         assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
     }
 
+    fn wrow(workload: &str, imp: &str, ips: f64) -> WorkloadRow {
+        WorkloadRow {
+            workload: workload.to_string(),
+            impl_name: imp.to_string(),
+            pair: "8P8C".to_string(),
+            threads: 16,
+            batch: 64,
+            scenario: "closed".to_string(),
+            mean_ips: ips,
+            std_ips: 0.0,
+            ops_per_cpu_sec: ips * 2.0,
+            cpu_util: 0.25,
+            rank_error_p99: None,
+            lat_p50_ns: None,
+            lat_p99_ns: None,
+            lat_p999_ns: None,
+            samples: vec![ips],
+        }
+    }
+
     #[test]
     fn batch_throughput_json_shape() {
-        let rows = vec![
-            BatchThroughputRow {
-                cell: tcell(Impl::Cmp, 8, 5.0e6),
-                batch: 64,
-                scenario: "closed",
-                rank_error_p99: None,
-            },
-            BatchThroughputRow {
-                cell: tcell(Impl::Sharded, 8, 2.0e6),
-                batch: 1,
-                scenario: "rank-relaxed",
-                rank_error_p99: Some(17),
-            },
-        ];
+        let mut sharded = wrow("rank_sweep", "sharded", 2.0e6);
+        sharded.batch = 1;
+        sharded.scenario = "relaxed-1024".to_string();
+        sharded.rank_error_p99 = Some(17);
+        let mut lat = wrow("bursty", "cmp", 3.0e6);
+        lat.lat_p50_ns = Some(1_200);
+        lat.lat_p99_ns = Some(9_000);
+        lat.lat_p999_ns = Some(55_000);
+        let rows = vec![wrow("closed_loop", "cmp", 5.0e6), sharded, lat];
         let j = batch_throughput_json(&rows);
         let parsed = crate::util::json::Json::parse(&j).expect("valid JSON");
         let arr = parsed.as_arr().unwrap();
-        assert_eq!(arr.len(), 2);
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[0].get("workload").unwrap().as_str(), Some("closed_loop"));
         assert_eq!(arr[0].get("impl").unwrap().as_str(), Some("cmp"));
         assert_eq!(arr[0].get("batch").unwrap().as_usize(), Some(64));
         assert_eq!(arr[0].get("threads").unwrap().as_usize(), Some(16));
         assert_eq!(arr[0].get("scenario").unwrap().as_str(), Some("closed"));
         assert_eq!(arr[1].get("pair").unwrap().as_str(), Some("8P8C"));
-        assert_eq!(arr[1].get("impl").unwrap().as_str(), Some("sharded"));
-        assert_eq!(arr[1].get("scenario").unwrap().as_str(), Some("rank-relaxed"));
+        assert_eq!(arr[1].get("scenario").unwrap().as_str(), Some("relaxed-1024"));
         assert!(arr[0].get("mean_ips").unwrap().as_f64().unwrap() > 0.0);
         assert!(arr[0].get("ops_per_cpu_sec").unwrap().as_f64().unwrap() > 0.0);
         let util = arr[0].get("cpu_util").unwrap().as_f64().unwrap();
         assert!((util - 0.25).abs() < 1e-9);
-        // Unmeasured rows carry an explicit null, measured ones a number.
+        // Unmeasured fields carry an explicit null, measured a number.
         assert_eq!(
             arr[0].get("rank_error_p99"),
             Some(&crate::util::json::Json::Null)
         );
         assert_eq!(arr[1].get("rank_error_p99").unwrap().as_usize(), Some(17));
+        assert_eq!(arr[0].get("lat_p50_ns"), Some(&crate::util::json::Json::Null));
+        assert_eq!(arr[2].get("lat_p50_ns").unwrap().as_usize(), Some(1_200));
+        assert_eq!(arr[2].get("lat_p999_ns").unwrap().as_usize(), Some(55_000));
     }
 
-    fn diff_row(imp: &str, ips: f64, cpu: f64) -> String {
+    #[test]
+    fn slo_table_renders_latency_and_dashes() {
+        let mut lat = wrow("bursty", "cmp", 3.0e6);
+        lat.lat_p50_ns = Some(1_200);
+        lat.lat_p99_ns = Some(9_000);
+        lat.lat_p999_ns = Some(55_000);
+        let t = slo_table(&[wrow("closed_loop", "mutex", 5.0e6), lat]);
+        assert!(t.contains("closed_loop"), "{t}");
+        assert!(t.contains("bursty"), "{t}");
+        assert!(t.contains("1.2"), "p50 in µs: {t}");
+        assert!(t.contains("55.0"), "p99.9 in µs: {t}");
+        assert!(t.contains('-'), "unmeasured latency as dash: {t}");
+    }
+
+    fn diff_row(workload: &str, imp: &str, ips: f64, cpu: f64) -> String {
         format!(
-            "{{\"impl\":\"{imp}\",\"pair\":\"4P4C\",\"threads\":8,\"batch\":1,\
+            "{{\"workload\":\"{workload}\",\"impl\":\"{imp}\",\"pair\":\"4P4C\",\
+             \"threads\":8,\"batch\":1,\
              \"scenario\":\"closed\",\"mean_ips\":{ips:.1},\"std_ips\":0.0,\
              \"ops_per_cpu_sec\":{cpu:.1},\"cpu_util\":0.5,\"samples\":[{ips:.1}]}}"
         )
@@ -597,17 +771,17 @@ mod tests {
     fn bench_diff_flags_regressions_only() {
         let old = format!(
             "[{},{},{}]",
-            diff_row("cmp", 1000.0, 2000.0),
-            diff_row("mutex", 500.0, 800.0),
-            diff_row("vyukov", 700.0, 900.0)
+            diff_row("w", "cmp", 1000.0, 2000.0),
+            diff_row("w", "mutex", 500.0, 800.0),
+            diff_row("w", "vyukov", 700.0, 900.0)
         );
         // cmp: ips −20% (regressed), cpu +10%. mutex: ips +20%, cpu
         // −50% (regressed). vyukov: within threshold both ways.
         let new = format!(
             "[{},{},{}]",
-            diff_row("cmp", 800.0, 2200.0),
-            diff_row("mutex", 600.0, 400.0),
-            diff_row("vyukov", 665.0, 900.0)
+            diff_row("w", "cmp", 800.0, 2200.0),
+            diff_row("w", "mutex", 600.0, 400.0),
+            diff_row("w", "vyukov", 665.0, 900.0)
         );
         let d = diff_bench_json(&old, &new, 10.0).expect("valid dumps");
         assert_eq!(d.rows.len(), 3);
@@ -622,30 +796,73 @@ mod tests {
         let t = d.table();
         assert!(t.contains("REGRESS(ips)"), "{t}");
         assert!(t.contains("REGRESS(cpu)"), "{t}");
-        assert!(t.contains("cmp 4P4C batch=1 closed"), "{t}");
+        assert!(t.contains("w cmp 4P4C batch=1 closed"), "{t}");
     }
 
     #[test]
     fn bench_diff_handles_coverage_changes_and_unmeasured_cpu() {
         let old = format!(
             "[{},{}]",
-            diff_row("cmp", 1000.0, 0.0),
-            diff_row("mutex", 1.0, 1.0)
+            diff_row("w", "cmp", 1000.0, 0.0),
+            diff_row("w", "mutex", 1.0, 1.0)
         );
         let new = format!(
             "[{},{}]",
-            diff_row("cmp", 100.0, 3000.0),
-            diff_row("vyukov", 2.0, 2.0)
+            diff_row("w", "cmp", 100.0, 3000.0),
+            diff_row("w", "vyukov", 2.0, 2.0)
         );
         let d = diff_bench_json(&old, &new, 10.0).expect("valid dumps");
         assert_eq!(d.rows.len(), 1, "only cmp matches");
         assert!(d.rows[0].ips_regressed);
         assert!(!d.rows[0].cpu_regressed, "unmeasured old CPU must not flag");
-        assert_eq!(d.only_old, vec!["mutex 4P4C batch=1 closed".to_string()]);
-        assert_eq!(d.only_new, vec!["vyukov 4P4C batch=1 closed".to_string()]);
+        assert_eq!(d.only_old, vec!["w mutex 4P4C batch=1 closed".to_string()]);
+        assert_eq!(d.only_new, vec!["w vyukov 4P4C batch=1 closed".to_string()]);
+        assert!(d.workloads_only_old.is_empty());
+        assert!(d.workloads_only_new.is_empty());
         let t = d.table();
         assert!(t.contains("only in old dump"), "{t}");
         assert!(t.contains("only in new dump"), "{t}");
+    }
+
+    #[test]
+    fn bench_diff_treats_workload_churn_as_coverage_not_regression() {
+        let old = format!(
+            "[{},{}]",
+            diff_row("keep", "cmp", 1000.0, 2000.0),
+            diff_row("gone", "cmp", 1000.0, 2000.0)
+        );
+        let new = format!(
+            "[{},{}]",
+            diff_row("keep", "cmp", 1000.0, 2000.0),
+            diff_row("fresh", "cmp", 5.0, 5.0)
+        );
+        let d = diff_bench_json(&old, &new, 10.0).expect("valid dumps");
+        assert_eq!(d.regressions(), 0, "workload churn must not gate");
+        assert_eq!(d.workloads_only_old, vec!["gone".to_string()]);
+        assert_eq!(d.workloads_only_new, vec!["fresh".to_string()]);
+        assert!(
+            d.only_old.is_empty() && d.only_new.is_empty(),
+            "whole-workload churn is not per-row coverage: {:?} {:?}",
+            d.only_old,
+            d.only_new
+        );
+        let t = d.table();
+        assert!(t.contains("warn: workload \"gone\" removed"), "{t}");
+        assert!(t.contains("warn: workload \"fresh\" added"), "{t}");
+    }
+
+    #[test]
+    fn bench_diff_accepts_legacy_rows_without_workload() {
+        // Pre-library dumps lack the workload field; they key as "-".
+        let legacy = "[{\"impl\":\"cmp\",\"pair\":\"4P4C\",\"threads\":8,\
+             \"batch\":1,\"scenario\":\"closed\",\"mean_ips\":1000.0,\
+             \"std_ips\":0.0,\"ops_per_cpu_sec\":0.0,\"cpu_util\":0.0,\
+             \"samples\":[1000.0]}]";
+        let modern = format!("[{}]", diff_row("-", "cmp", 900.0, 0.0));
+        let d = diff_bench_json(legacy, &modern, 15.0).expect("legacy must parse");
+        assert_eq!(d.rows.len(), 1);
+        assert_eq!(d.rows[0].key, "- cmp 4P4C batch=1 closed");
+        assert!(!d.rows[0].ips_regressed, "−10% is within 15%");
     }
 
     #[test]
@@ -654,17 +871,15 @@ mod tests {
         assert!(diff_bench_json("[]", "{\"a\":1}", 10.0).is_err());
         assert!(diff_bench_json("[{\"impl\":\"cmp\"}]", "[]", 10.0).is_err());
         // Round-trips the real writer output.
-        let rows = vec![BatchThroughputRow {
-            cell: tcell(Impl::Cmp, 2, 1234.0),
-            batch: 8,
-            scenario: "async",
-            rank_error_p99: None,
-        }];
-        let j = batch_throughput_json(&rows);
+        let mut row = wrow("lib", "cmp", 1234.0);
+        row.batch = 8;
+        row.scenario = "async".to_string();
+        row.pair = "2P2C".to_string();
+        let j = batch_throughput_json(&[row]);
         let d = diff_bench_json(&j, &j, 5.0).expect("writer output must diff");
         assert_eq!(d.rows.len(), 1);
         assert_eq!(d.regressions(), 0, "identical dumps never regress");
-        assert_eq!(d.rows[0].key, "cmp 2P2C batch=8 async");
+        assert_eq!(d.rows[0].key, "lib cmp 2P2C batch=8 async");
     }
 
     #[test]

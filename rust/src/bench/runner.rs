@@ -2,13 +2,25 @@
 //! experiments were conducted ... with round-robin sequencing of
 //! implementations to eliminate bias from CPU thermal throttling and
 //! dynamic frequency scaling"), multiple rounds per configuration,
-//! 3-sigma filtering of the per-round samples.
+//! 3-sigma filtering of the per-round samples — plus the generic
+//! workload driver ([`run_workload`]) that executes declarative
+//! [`WorkloadSpec`]s against any target transport (in-process queue,
+//! coordinator pipeline, TCP ingress) and returns SLO report rows.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::latency::LatencySummary;
+use super::report::WorkloadRow;
 use super::sigma;
+use super::spec::{Measure, Target, WorkloadSpec};
 use super::synthetic::LoadProfile;
-use super::workload::{latency_trial, throughput_trial, PairConfig, Scenario, TrialConfig};
-use crate::queue::Impl;
+use super::workload::{
+    latency_trial, rank_error_trial, run_throughput_on, sojourn_percentiles, PairConfig, Scenario,
+    TrialConfig, ZipfRoutedFabric,
+};
+use crate::queue::sharded::{ShardMode, ShardedCmp, ShardedConfig};
+use crate::queue::{ConcurrentQueue, Impl};
 
 /// Suite-level options.
 #[derive(Debug, Clone)]
@@ -28,6 +40,10 @@ pub struct SuiteOptions {
     /// Offered-load scenario for throughput trials (DESIGN.md §8);
     /// latency suites always run closed-loop.
     pub scenario: Scenario,
+    /// Record per-item sojourn latency in throughput trials
+    /// ([`TrialConfig::record_sojourn`]); the samples pool across
+    /// measured rounds into [`FactoryCell::sojourn_ns`].
+    pub record_sojourn: bool,
     /// Print progress lines to stderr.
     pub verbose: bool,
 }
@@ -42,6 +58,7 @@ impl Default for SuiteOptions {
             capacity_hint: 1 << 16,
             batch_size: 1,
             scenario: Scenario::ClosedLoop,
+            record_sojourn: false,
             verbose: false,
         }
     }
@@ -61,8 +78,127 @@ impl SuiteOptions {
             max_samples_per_thread: 200_000,
             batch_size: self.batch_size,
             scenario: self.scenario,
+            record_sojourn: self.record_sojourn,
         }
     }
+}
+
+/// A named queue constructor for [`factory_suite`]: the generalization
+/// of [`Impl`] that also covers queues with runtime configuration (the
+/// zipf-routed relaxed fabric), so one suite loop serves both.
+pub struct NamedFactory {
+    /// Report label for rows produced from this factory.
+    pub name: String,
+    /// Build a fresh queue instance for one trial.
+    pub make: Box<dyn Fn() -> Arc<dyn ConcurrentQueue<u64>> + Send + Sync>,
+}
+
+impl NamedFactory {
+    /// The factory equivalent of `imp.make(capacity_hint)`.
+    pub fn for_impl(imp: Impl, capacity_hint: usize) -> NamedFactory {
+        NamedFactory {
+            name: imp.name().to_string(),
+            make: Box::new(move || imp.make(capacity_hint)),
+        }
+    }
+}
+
+/// One cell of a [`factory_suite`] run: [`ThroughputCell`] plus the
+/// pooled sojourn samples, keyed by factory name instead of [`Impl`].
+#[derive(Debug, Clone)]
+pub struct FactoryCell {
+    /// Factory name this cell measured.
+    pub name: String,
+    /// Producer/consumer configuration.
+    pub pair: PairConfig,
+    /// Per-round samples (items/sec), pre-filter.
+    pub samples: Vec<f64>,
+    /// 3-sigma filtered mean.
+    pub mean_ips: f64,
+    /// Standard deviation of the filtered samples.
+    pub std_ips: f64,
+    /// Samples removed by the 3-sigma filter.
+    pub discarded: usize,
+    /// Mean items per CPU-second across rounds (3-sigma filtered); 0
+    /// when CPU time was unavailable or below clock resolution.
+    pub mean_ops_per_cpu: f64,
+    /// Mean CPU utilization across rounds (CPU-seconds per wall-second
+    /// per thread, ~1.0 = all cores busy); 0 when unmeasured.
+    pub mean_cpu_util: f64,
+    /// Sojourn samples pooled across measured rounds; empty unless
+    /// [`SuiteOptions::record_sojourn`] was set.
+    pub sojourn_ns: Vec<u64>,
+}
+
+/// Round-robin throughput suite over `factories × pairs`: every
+/// factory runs once per round before any runs again (thermal fairness
+/// per the paper), warmup rounds discarded, samples 3-sigma filtered.
+/// Cells come back pair-major (`pairs[0] × factories…`, then
+/// `pairs[1] × factories…`).
+pub fn factory_suite(
+    factories: &[NamedFactory],
+    pairs: &[PairConfig],
+    opts: &SuiteOptions,
+) -> Vec<FactoryCell> {
+    let cells = factories.len() * pairs.len();
+    let mut samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
+    let mut cpu_samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
+    let mut util_samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
+    let mut sojourns: Vec<Vec<u64>> = vec![Vec::new(); cells];
+    for round in 0..(opts.rounds + opts.warmup_rounds) {
+        let measured = round >= opts.warmup_rounds;
+        for (pi, &pair) in pairs.iter().enumerate() {
+            for (fi, f) in factories.iter().enumerate() {
+                let cfg = opts.trial_config(pair);
+                let t = run_throughput_on((f.make)(), pair, &cfg);
+                if opts.verbose {
+                    eprintln!(
+                        "[throughput] round={round} {} {} -> {:.0} items/s{}",
+                        pair.label(),
+                        f.name,
+                        t.items_per_sec,
+                        if measured { "" } else { " (warmup)" },
+                    );
+                }
+                if measured {
+                    let idx = pi * factories.len() + fi;
+                    samples[idx].push(t.items_per_sec);
+                    if let Some(v) = t.ops_per_cpu_sec {
+                        cpu_samples[idx].push(v);
+                    }
+                    if let Some(u) = t.cpu_util {
+                        util_samples[idx].push(u);
+                    }
+                    sojourns[idx].extend(t.sojourn_ns);
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    for (pi, &pair) in pairs.iter().enumerate() {
+        for (fi, f) in factories.iter().enumerate() {
+            let idx = pi * factories.len() + fi;
+            let raw = &samples[idx];
+            let (kept, discarded) = sigma::three_sigma(raw);
+            let (mean, std) = sigma::mean_std(&kept);
+            let (cpu_kept, _) = sigma::three_sigma(&cpu_samples[idx]);
+            let (mean_ops_per_cpu, _) = sigma::mean_std(&cpu_kept);
+            let (util_kept, _) = sigma::three_sigma(&util_samples[idx]);
+            let (mean_cpu_util, _) = sigma::mean_std(&util_kept);
+            out.push(FactoryCell {
+                name: f.name.clone(),
+                pair,
+                samples: raw.clone(),
+                mean_ips: mean,
+                std_ips: std,
+                discarded,
+                mean_ops_per_cpu,
+                mean_cpu_util,
+                sojourn_ns: std::mem::take(&mut sojourns[idx]),
+            });
+        }
+    }
+    out
 }
 
 /// One cell of the Figure-1 style throughput matrix.
@@ -88,69 +224,34 @@ pub struct ThroughputCell {
     pub mean_cpu_util: f64,
 }
 
-/// Round-robin throughput suite over `impls × pairs`.
+/// Round-robin throughput suite over `impls × pairs` — a
+/// [`factory_suite`] over [`Impl`] constructors, keeping the
+/// `Impl`-typed cells the figure/table printers consume.
 pub fn throughput_suite(
     impls: &[Impl],
     pairs: &[PairConfig],
     opts: &SuiteOptions,
 ) -> Vec<ThroughputCell> {
-    let cells = impls.len() * pairs.len();
-    let mut samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
-    let mut cpu_samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
-    let mut util_samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
-    for round in 0..(opts.rounds + opts.warmup_rounds) {
-        let measured = round >= opts.warmup_rounds;
-        // Round-robin: every impl runs once per round before any impl
-        // runs again (thermal fairness per the paper).
-        for (pi, &pair) in pairs.iter().enumerate() {
-            for (ii, &imp) in impls.iter().enumerate() {
-                let cfg = opts.trial_config(pair);
-                let t = throughput_trial(imp, pair, &cfg);
-                if opts.verbose {
-                    eprintln!(
-                        "[throughput] round={round} {} {} -> {:.0} items/s{}",
-                        pair.label(),
-                        imp.name(),
-                        t.items_per_sec,
-                        if measured { "" } else { " (warmup)" },
-                    );
-                }
-                if measured {
-                    samples[pi * impls.len() + ii].push(t.items_per_sec);
-                    if let Some(v) = t.ops_per_cpu_sec {
-                        cpu_samples[pi * impls.len() + ii].push(v);
-                    }
-                    if let Some(u) = t.cpu_util {
-                        util_samples[pi * impls.len() + ii].push(u);
-                    }
-                }
-            }
-        }
-    }
-    let mut out = Vec::new();
-    for (pi, &pair) in pairs.iter().enumerate() {
-        for (ii, &imp) in impls.iter().enumerate() {
-            let idx = pi * impls.len() + ii;
-            let raw = &samples[idx];
-            let (kept, discarded) = sigma::three_sigma(raw);
-            let (mean, std) = sigma::mean_std(&kept);
-            let (cpu_kept, _) = sigma::three_sigma(&cpu_samples[idx]);
-            let (mean_ops_per_cpu, _) = sigma::mean_std(&cpu_kept);
-            let (util_kept, _) = sigma::three_sigma(&util_samples[idx]);
-            let (mean_cpu_util, _) = sigma::mean_std(&util_kept);
-            out.push(ThroughputCell {
-                imp,
-                pair,
-                samples: raw.clone(),
-                mean_ips: mean,
-                std_ips: std,
-                discarded,
-                mean_ops_per_cpu,
-                mean_cpu_util,
-            });
-        }
-    }
-    out
+    let factories: Vec<NamedFactory> = impls
+        .iter()
+        .map(|&imp| NamedFactory::for_impl(imp, opts.capacity_hint))
+        .collect();
+    factory_suite(&factories, pairs, opts)
+        .into_iter()
+        .enumerate()
+        .map(|(idx, c)| ThroughputCell {
+            // factory_suite output is pair-major with the factory index
+            // cycling fastest, so the impl is recovered positionally.
+            imp: impls[idx % impls.len()],
+            pair: c.pair,
+            samples: c.samples,
+            mean_ips: c.mean_ips,
+            std_ips: c.std_ips,
+            discarded: c.discarded,
+            mean_ops_per_cpu: c.mean_ops_per_cpu,
+            mean_cpu_util: c.mean_cpu_util,
+        })
+        .collect()
 }
 
 /// One cell of the Tables 1–3 style latency matrix.
@@ -272,6 +373,360 @@ pub fn retention_suite(
         .collect()
 }
 
+/// Options for one [`run_workload`] execution.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkloadRunOptions {
+    /// Use the spec's `smoke_ops`/`smoke_pairs` instead of the full
+    /// `ops`/`pairs` — the CI trajectory knob.
+    pub smoke: bool,
+    /// Print progress lines to stderr.
+    pub verbose: bool,
+}
+
+/// Execute one declarative workload and return its SLO report rows —
+/// the single generic driver behind `repro bench --workload` and
+/// `benches/throughput.rs`. Dispatch is by spec target and measure:
+///
+/// * queue + throughput — [`factory_suite`] per batch size, over the
+///   spec's impls (or the zipf-routed relaxed fabric when `keys > 0`);
+/// * queue + rank_error — [`rank_error_trial`] per pair per
+///   `sweep_max_rank_error` point (`0` = strict mode), window-sized
+///   from a warmup rate probe as `repro bench sharded` does;
+/// * coordinator — closed-loop client threads against an in-process
+///   [`crate::coordinator::server::Server`] (echo engine);
+/// * tcp — blocking loopback clients through the full TCP ingress
+///   ([`crate::net::listener::NetServer`]).
+pub fn run_workload(
+    spec: &WorkloadSpec,
+    opts: &WorkloadRunOptions,
+) -> Result<Vec<WorkloadRow>, String> {
+    let ops = if opts.smoke { spec.smoke_ops } else { spec.ops };
+    let pairs = if opts.smoke {
+        &spec.smoke_pairs
+    } else {
+        &spec.pairs
+    };
+    match (spec.target, spec.measure) {
+        (Target::Queue, Measure::Throughput) => Ok(run_queue_throughput(spec, ops, pairs, opts)),
+        (Target::Queue, Measure::RankError) => Ok(run_rank_sweep(spec, ops, pairs, opts)),
+        (Target::Coordinator, _) => Ok(vec![run_coordinator(spec, ops)]),
+        (Target::Tcp, _) => run_tcp(spec, ops).map(|row| vec![row]),
+    }
+}
+
+/// Queue factories for a throughput workload: the zipf-routed relaxed
+/// fabric when the spec asks for key skew, plain [`Impl`] constructors
+/// otherwise.
+fn queue_factories(spec: &WorkloadSpec) -> Vec<NamedFactory> {
+    if spec.keys > 0 {
+        let (shards, bound) = (spec.shards, spec.max_rank_error);
+        let (keys, s) = (spec.keys, spec.zipf_s);
+        vec![NamedFactory {
+            name: "sharded-zipf".to_string(),
+            make: Box::new(move || {
+                let fabric = ShardedCmp::with_config(
+                    ShardedConfig::default()
+                        .with_shards(shards)
+                        .with_mode(ShardMode::Relaxed {
+                            max_rank_error: bound,
+                        }),
+                );
+                Arc::new(ZipfRoutedFabric::new(fabric, keys, s))
+            }),
+        }]
+    } else {
+        spec.impls
+            .iter()
+            .map(|&imp| NamedFactory::for_impl(imp, spec.capacity_hint))
+            .collect()
+    }
+}
+
+fn run_queue_throughput(
+    spec: &WorkloadSpec,
+    ops: u64,
+    pairs: &[PairConfig],
+    opts: &WorkloadRunOptions,
+) -> Vec<WorkloadRow> {
+    let factories = queue_factories(spec);
+    let mut rows = Vec::new();
+    for &batch in &spec.batches {
+        let sopts = SuiteOptions {
+            total_ops: ops,
+            rounds: spec.rounds,
+            warmup_rounds: spec.warmup_rounds,
+            capacity_hint: spec.capacity_hint,
+            batch_size: batch,
+            scenario: spec.arrival.scenario(),
+            record_sojourn: spec.latency,
+            verbose: opts.verbose,
+            ..SuiteOptions::default()
+        };
+        for mut cell in factory_suite(&factories, pairs, &sopts) {
+            let lat = sojourn_percentiles(&mut cell.sojourn_ns);
+            rows.push(WorkloadRow {
+                workload: spec.name.clone(),
+                impl_name: cell.name,
+                pair: cell.pair.label(),
+                threads: cell.pair.producers + cell.pair.consumers,
+                batch,
+                scenario: spec.arrival.label().to_string(),
+                mean_ips: cell.mean_ips,
+                std_ips: cell.std_ips,
+                ops_per_cpu_sec: cell.mean_ops_per_cpu,
+                cpu_util: cell.mean_cpu_util,
+                rank_error_p99: None,
+                lat_p50_ns: lat.map(|l| l.0),
+                lat_p99_ns: lat.map(|l| l.1),
+                lat_p999_ns: lat.map(|l| l.2),
+                samples: cell.samples,
+            });
+        }
+    }
+    rows
+}
+
+fn run_rank_sweep(
+    spec: &WorkloadSpec,
+    ops: u64,
+    pairs: &[PairConfig],
+    opts: &WorkloadRunOptions,
+) -> Vec<WorkloadRow> {
+    let mut rows = Vec::new();
+    for &pair in pairs {
+        for &bound in &spec.sweep_max_rank_error {
+            let mode = if bound == 0 {
+                ShardMode::Strict
+            } else {
+                ShardMode::Relaxed {
+                    max_rank_error: bound,
+                }
+            };
+            let base = ShardedConfig::default()
+                .with_shards(spec.shards)
+                .with_mode(mode);
+            // Size the protection window from a short rate probe, like
+            // `repro bench sharded` (an undersized window at benchmark
+            // rates would measure reclamation stalls, not ordering).
+            let warm: Arc<dyn ConcurrentQueue<u64>> =
+                Arc::new(ShardedCmp::with_config(base.clone()));
+            let rate = rank_error_trial(warm, pair, ops.min(20_000), false).items_per_sec;
+            let queue: Arc<dyn ConcurrentQueue<u64>> = Arc::new(ShardedCmp::with_config(
+                base.sized_for_rate(rate.max(1.0) as u64, 0.5),
+            ));
+            let t = rank_error_trial(queue, pair, ops, false);
+            let scenario = if bound == 0 {
+                "strict".to_string()
+            } else {
+                format!("relaxed-{bound}")
+            };
+            if opts.verbose {
+                eprintln!(
+                    "[rank] {} {} {scenario} -> {:.0} items/s p99={}",
+                    spec.name,
+                    pair.label(),
+                    t.items_per_sec,
+                    t.stats.p99
+                );
+            }
+            rows.push(WorkloadRow {
+                workload: spec.name.clone(),
+                impl_name: "sharded".to_string(),
+                pair: pair.label(),
+                threads: pair.producers + pair.consumers,
+                batch: 1,
+                scenario,
+                mean_ips: t.items_per_sec,
+                std_ips: 0.0,
+                ops_per_cpu_sec: 0.0,
+                cpu_util: 0.0,
+                rank_error_p99: Some(t.stats.p99),
+                lat_p50_ns: None,
+                lat_p99_ns: None,
+                lat_p999_ns: None,
+                samples: vec![t.items_per_sec],
+            });
+        }
+    }
+    rows
+}
+
+/// Echo-engine factory matched to the spec's feature width (no model
+/// artifacts in a bench run).
+fn echo_engine(spec: &WorkloadSpec) -> crate::coordinator::worker::EngineFactory {
+    use crate::coordinator::worker::{EchoEngine, InferenceEngine};
+    let features = spec.features;
+    Arc::new(move || {
+        Ok(Box::new(EchoEngine {
+            batch: 8,
+            features,
+            outputs: 16,
+            scale: 1.0,
+        }) as Box<dyn InferenceEngine>)
+    })
+}
+
+fn run_coordinator(spec: &WorkloadSpec, ops: u64) -> WorkloadRow {
+    use crate::coordinator::server::{Server, ServerConfig};
+
+    let cfg = ServerConfig {
+        shards: spec.shards,
+        workers: spec.workers,
+        ..ServerConfig::default()
+    };
+    let server = Arc::new(Server::start(cfg, echo_engine(spec)));
+    let per_client = (ops / spec.clients as u64).max(1);
+    let features = spec.features;
+    let record = spec.latency;
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..spec.clients)
+        .map(|c| {
+            let server = server.clone();
+            std::thread::spawn(move || {
+                let mut rng = crate::util::XorShift64::new(c as u64 + 1);
+                let mut served = 0u64;
+                let mut rtts: Vec<u64> = Vec::new();
+                for _ in 0..per_client {
+                    let row: Vec<f32> =
+                        (0..features).map(|_| rng.next_f64() as f32 - 0.5).collect();
+                    let q0 = Instant::now();
+                    if let Ok(slot) = server.submit(row) {
+                        if slot.wait_timeout(Duration::from_secs(30)).is_some() {
+                            served += 1;
+                            if record {
+                                rtts.push(q0.elapsed().as_nanos() as u64);
+                            }
+                        }
+                    }
+                }
+                (served, rtts)
+            })
+        })
+        .collect();
+    let mut served = 0u64;
+    let mut rtts: Vec<u64> = Vec::new();
+    for c in clients {
+        let (s, r) = c.join().expect("client panicked");
+        served += s;
+        rtts.extend(r);
+    }
+    let elapsed = t0.elapsed();
+    let server = Arc::try_unwrap(server)
+        .ok()
+        .expect("all client handles joined");
+    let _ = server.shutdown();
+    let lat = sojourn_percentiles(&mut rtts);
+    let ips = served as f64 / elapsed.as_secs_f64().max(1e-12);
+    WorkloadRow {
+        workload: spec.name.clone(),
+        impl_name: "coordinator".to_string(),
+        pair: format!("{}C{}W", spec.clients, spec.workers),
+        threads: spec.clients + spec.workers,
+        batch: 1,
+        scenario: "closed".to_string(),
+        mean_ips: ips,
+        std_ips: 0.0,
+        ops_per_cpu_sec: 0.0,
+        cpu_util: 0.0,
+        rank_error_p99: None,
+        lat_p50_ns: lat.map(|l| l.0),
+        lat_p99_ns: lat.map(|l| l.1),
+        lat_p999_ns: lat.map(|l| l.2),
+        samples: vec![ips],
+    }
+}
+
+fn run_tcp(spec: &WorkloadSpec, ops: u64) -> Result<WorkloadRow, String> {
+    use std::io::Write;
+    use std::net::TcpStream;
+
+    use crate::coordinator::server::{Server, ServerConfig};
+    use crate::net::codec::{self, Status};
+    use crate::net::listener::NetServer;
+    use crate::net::NetConfig;
+
+    let cfg = ServerConfig {
+        shards: spec.shards,
+        workers: spec.workers,
+        ..ServerConfig::default()
+    };
+    let net_cfg = NetConfig {
+        addr: "127.0.0.1:0".to_string(),
+        io_threads: spec.io_threads,
+        ..NetConfig::default()
+    };
+    let server = Server::start(cfg, echo_engine(spec));
+    let net = NetServer::start(net_cfg, server)
+        .map_err(|e| format!("workload {:?}: cannot bind TCP front end: {e}", spec.name))?;
+    let addr = net.addr();
+    let per_client = (ops / spec.clients as u64).max(1);
+    let features = spec.features;
+    let record = spec.latency;
+    let t0 = Instant::now();
+    let clients: Vec<_> = (0..spec.clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut stream = TcpStream::connect(addr).expect("connect loopback");
+                let mut rng = crate::util::XorShift64::new(c as u64 + 1);
+                let mut buf = Vec::new();
+                let mut ok = 0u64;
+                let mut rtts: Vec<u64> = Vec::new();
+                for i in 0..per_client {
+                    let req = codec::Request {
+                        id: i + 1,
+                        tenant: c as u32,
+                        features: (0..features).map(|_| rng.next_f64() as f32 - 0.5).collect(),
+                    };
+                    let mut wire = Vec::new();
+                    codec::encode_request(&req, &mut wire);
+                    let q0 = Instant::now();
+                    if stream.write_all(&wire).is_err() {
+                        break;
+                    }
+                    let Some(resp) = codec::read_response_blocking(&mut stream, &mut buf) else {
+                        break;
+                    };
+                    if resp.id == req.id && resp.status == Status::Ok {
+                        ok += 1;
+                        if record {
+                            rtts.push(q0.elapsed().as_nanos() as u64);
+                        }
+                    }
+                }
+                (ok, rtts)
+            })
+        })
+        .collect();
+    let mut ok = 0u64;
+    let mut rtts: Vec<u64> = Vec::new();
+    for c in clients {
+        let (o, r) = c.join().expect("tcp client panicked");
+        ok += o;
+        rtts.extend(r);
+    }
+    let elapsed = t0.elapsed();
+    let _ = net.shutdown();
+    let lat = sojourn_percentiles(&mut rtts);
+    let ips = ok as f64 / elapsed.as_secs_f64().max(1e-12);
+    Ok(WorkloadRow {
+        workload: spec.name.clone(),
+        impl_name: "tcp-ingress".to_string(),
+        pair: format!("{}C{}W", spec.clients, spec.workers),
+        threads: spec.clients + spec.workers + spec.io_threads,
+        batch: 1,
+        scenario: "closed".to_string(),
+        mean_ips: ips,
+        std_ips: 0.0,
+        ops_per_cpu_sec: 0.0,
+        cpu_util: 0.0,
+        rank_error_p99: None,
+        lat_p50_ns: lat.map(|l| l.0),
+        lat_p99_ns: lat.map(|l| l.1),
+        lat_p999_ns: lat.map(|l| l.2),
+        samples: vec![ips],
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -295,6 +750,28 @@ mod tests {
             assert_eq!(c.samples.len(), 2);
             assert!(c.mean_ips > 0.0);
         }
+        // Pair-major order with the impl cycling fastest.
+        assert_eq!(cells[0].imp, Impl::Cmp);
+        assert_eq!(cells[1].imp, Impl::Mutex);
+        assert_eq!(cells[0].pair, pairs[0]);
+        assert_eq!(cells[2].pair, pairs[1]);
+    }
+
+    #[test]
+    fn factory_suite_pools_sojourn() {
+        let opts = SuiteOptions {
+            total_ops: 1000,
+            rounds: 2,
+            warmup_rounds: 1,
+            record_sojourn: true,
+            ..SuiteOptions::default()
+        };
+        let factories = [NamedFactory::for_impl(Impl::Cmp, 1 << 10)];
+        let cells = factory_suite(&factories, &[PairConfig::symmetric(1)], &opts);
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].name, "cmp");
+        // 2 measured rounds × 1000 items, warmup discarded.
+        assert_eq!(cells[0].sojourn_ns.len(), 2000);
     }
 
     #[test]
@@ -355,5 +832,87 @@ mod tests {
         };
         let cells = throughput_suite(&[Impl::Cmp], &[PairConfig::symmetric(1)], &opts);
         assert_eq!(cells[0].samples.len(), 1);
+    }
+
+    #[test]
+    fn run_workload_queue_rows_carry_latency() {
+        let spec = WorkloadSpec::parse(
+            r#"{"name":"t","impls":["cmp"],"pairs":[1],"ops":2000,"rounds":1,
+                "warmup_rounds":0,"arrival":{"kind":"open","burst":128,"gap_ms":1}}"#,
+        )
+        .unwrap();
+        let rows = run_workload(&spec, &WorkloadRunOptions::default()).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.workload, "t");
+        assert_eq!(r.impl_name, "cmp");
+        assert_eq!(r.pair, "1P1C");
+        assert_eq!(r.scenario, "bursty");
+        assert!(r.mean_ips > 0.0);
+        assert!(r.lat_p50_ns.is_some(), "open-loop rows carry percentiles");
+        assert!(r.lat_p50_ns <= r.lat_p99_ns && r.lat_p99_ns <= r.lat_p999_ns);
+    }
+
+    #[test]
+    fn run_workload_smoke_uses_smoke_axes() {
+        let spec = WorkloadSpec::parse(
+            r#"{"name":"t","impls":["cmp","mutex"],"pairs":[1,2],"smoke_pairs":[1],
+                "ops":50000,"smoke_ops":1000,"rounds":1,"warmup_rounds":0}"#,
+        )
+        .unwrap();
+        let rows = run_workload(
+            &spec,
+            &WorkloadRunOptions {
+                smoke: true,
+                verbose: false,
+            },
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 2, "smoke_pairs [1] × 2 impls");
+        assert!(rows.iter().all(|r| r.pair == "1P1C"));
+    }
+
+    #[test]
+    fn run_workload_rank_sweep_rows() {
+        let spec = WorkloadSpec::parse(
+            r#"{"name":"rs","measure":"rank_error","impls":["sharded"],"pairs":[1],
+                "ops":3000,"sweep_max_rank_error":[0,1024]}"#,
+        )
+        .unwrap();
+        let rows = run_workload(&spec, &WorkloadRunOptions::default()).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].scenario, "strict");
+        assert_eq!(rows[0].rank_error_p99, Some(0), "strict fabric in order");
+        assert_eq!(rows[1].scenario, "relaxed-1024");
+        assert!(rows[1].rank_error_p99.is_some());
+    }
+
+    #[test]
+    fn run_workload_zipf_uses_routed_fabric() {
+        let spec = WorkloadSpec::parse(
+            r#"{"name":"z","impls":["sharded"],"keys":16,"zipf_s":1.0,"pairs":[1],
+                "ops":2000,"rounds":1,"warmup_rounds":0}"#,
+        )
+        .unwrap();
+        let rows = run_workload(&spec, &WorkloadRunOptions::default()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].impl_name, "sharded-zipf");
+        assert!(rows[0].mean_ips > 0.0);
+    }
+
+    #[test]
+    fn run_workload_coordinator_row() {
+        let spec = WorkloadSpec::parse(
+            r#"{"name":"c","target":"coordinator","ops":64,"clients":2,"workers":1,
+                "latency":true}"#,
+        )
+        .unwrap();
+        let rows = run_workload(&spec, &WorkloadRunOptions::default()).unwrap();
+        assert_eq!(rows.len(), 1);
+        let r = &rows[0];
+        assert_eq!(r.impl_name, "coordinator");
+        assert_eq!(r.pair, "2C1W");
+        assert!(r.mean_ips > 0.0);
+        assert!(r.lat_p50_ns.is_some());
     }
 }

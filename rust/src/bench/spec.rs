@@ -1,0 +1,822 @@
+//! Declarative workload specs: the scenario-file library behind
+//! `repro bench --workload <file>` / `--workload-dir <dir>` and the
+//! `benches/throughput.rs` entry point (DESIGN.md §14).
+//!
+//! A workload is one JSON object (`workloads/*.json` at the repo root)
+//! describing *what to measure* — target transport, implementations,
+//! producer/consumer pairs, arrival process, batch mix, contention
+//! skew — so the bench matrix lives in committed data instead of
+//! compiled-in axes. Parsing is strict: unknown keys are rejected **by
+//! name**, so a typo'd knob fails loudly instead of silently running
+//! the default. The parser is the in-tree [`crate::util::json`] — no
+//! serde in the offline image.
+//!
+//! Every field has a default (see the field docs), so the smallest
+//! legal spec is `{"name":"my-workload"}` — a closed-loop sweep of the
+//! paper's comparator set. [`WorkloadSpec::to_json`] emits every field
+//! explicitly, and `parse(spec.to_json()) == spec` round-trips exactly
+//! (asserted for every committed spec by `tests/workload_spec.rs`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+use super::report::json_escape;
+use super::workload::{PairConfig, Scenario};
+use crate::queue::Impl;
+use crate::util::json::Json;
+
+/// Transport a workload drives (the `target` spec field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Target {
+    /// In-process queue trials (the default).
+    Queue,
+    /// The coordinator serving pipeline (router → batcher → workers)
+    /// driven by in-process closed-loop clients.
+    Coordinator,
+    /// The TCP ingress (DESIGN.md §12) in front of the coordinator,
+    /// driven by blocking loopback clients speaking the wire format.
+    Tcp,
+}
+
+impl Target {
+    /// Spec-file name of the target.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Target::Queue => "queue",
+            Target::Coordinator => "coordinator",
+            Target::Tcp => "tcp",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Target, String> {
+        match s {
+            "queue" => Ok(Target::Queue),
+            "coordinator" => Ok(Target::Coordinator),
+            "tcp" => Ok(Target::Tcp),
+            other => Err(format!("unknown target {other:?} (queue|coordinator|tcp)")),
+        }
+    }
+}
+
+/// What a queue-target workload measures (the `measure` spec field).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Measure {
+    /// Wall-clock throughput (+ CPU efficiency and, for open-loop
+    /// arrivals, sojourn-latency percentiles). The default.
+    Throughput,
+    /// The sharded fabric's ordering-quality axis: rank error vs
+    /// throughput across a `sweep_max_rank_error` sweep (DESIGN.md
+    /// §13). Requires `impls == ["sharded"]`.
+    RankError,
+}
+
+impl Measure {
+    /// Spec-file name of the measure.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Measure::Throughput => "throughput",
+            Measure::RankError => "rank_error",
+        }
+    }
+
+    fn parse(s: &str) -> Result<Measure, String> {
+        match s {
+            "throughput" => Ok(Measure::Throughput),
+            "rank_error" => Ok(Measure::RankError),
+            other => Err(format!("unknown measure {other:?} (throughput|rank_error)")),
+        }
+    }
+}
+
+/// Arrival process of a queue workload (the `arrival` spec object,
+/// `{"kind": ..., ...}`). Maps onto the trial engine's
+/// [`Scenario`] axis; see DESIGN.md §14 for why latency percentiles
+/// are reported from the open-loop kinds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arrival {
+    /// Closed loop (the default): producers enqueue as fast as they
+    /// can, consumers spin-poll. Peak throughput, no honest latency.
+    Closed,
+    /// Open loop: bursts with idle gaps; consumers park between
+    /// bursts. The latency-measuring arrival.
+    Open {
+        /// Items emitted per burst, per producer.
+        burst: u64,
+        /// Idle milliseconds between bursts.
+        gap_ms: u64,
+    },
+    /// Zero offered load: consumers park for `hold_ms` against an
+    /// empty queue (the idle CPU floor).
+    Idle {
+        /// Milliseconds consumers face the empty queue.
+        hold_ms: u64,
+    },
+    /// Closed-loop producers, async-task consumers riding the §10
+    /// waker bridge.
+    Async {
+        /// Consumer tasks multiplexed per consumer thread.
+        tasks_per_consumer: usize,
+    },
+}
+
+impl Arrival {
+    /// The trial-engine scenario this arrival process maps to.
+    pub fn scenario(&self) -> Scenario {
+        match *self {
+            Arrival::Closed => Scenario::ClosedLoop,
+            Arrival::Open { burst, gap_ms } => Scenario::Bursty {
+                burst,
+                gap: Duration::from_millis(gap_ms),
+            },
+            Arrival::Idle { hold_ms } => Scenario::Idle {
+                hold: Duration::from_millis(hold_ms),
+            },
+            Arrival::Async { tasks_per_consumer } => Scenario::Async { tasks_per_consumer },
+        }
+    }
+
+    /// Report label (`closed` / `bursty` / `idle` / `async`).
+    pub fn label(&self) -> &'static str {
+        self.scenario().label()
+    }
+
+    /// Whether this arrival is open-loop enough for honest sojourn
+    /// latency (DESIGN.md §14) — the default for the `latency` field.
+    pub fn measures_latency(&self) -> bool {
+        matches!(self, Arrival::Open { .. } | Arrival::Async { .. })
+    }
+
+    fn from_json(v: &Json) -> Result<Arrival, String> {
+        let Json::Obj(map) = v else {
+            return Err("\"arrival\" must be an object".into());
+        };
+        let kind = map
+            .get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or("\"arrival\" needs a string \"kind\"")?;
+        let allowed: &[&str] = match kind {
+            "closed" => &["kind"],
+            "open" => &["kind", "burst", "gap_ms"],
+            "idle" => &["kind", "hold_ms"],
+            "async" => &["kind", "tasks_per_consumer"],
+            other => {
+                return Err(format!(
+                    "unknown arrival kind {other:?} (closed|open|idle|async)"
+                ))
+            }
+        };
+        for k in map.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(format!("unknown key {k:?} in \"arrival\" (kind {kind})"));
+            }
+        }
+        match kind {
+            "closed" => Ok(Arrival::Closed),
+            "open" => Ok(Arrival::Open {
+                burst: obj_u64(map, "burst")?.unwrap_or(512).max(1),
+                gap_ms: obj_u64(map, "gap_ms")?.unwrap_or(2),
+            }),
+            "idle" => Ok(Arrival::Idle {
+                hold_ms: obj_u64(map, "hold_ms")?.unwrap_or(400).max(1),
+            }),
+            _ => Ok(Arrival::Async {
+                tasks_per_consumer: obj_u64(map, "tasks_per_consumer")?.unwrap_or(4).max(1)
+                    as usize,
+            }),
+        }
+    }
+
+    fn write_json(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        match *self {
+            Arrival::Closed => out.push_str("{\"kind\":\"closed\"}"),
+            Arrival::Open { burst, gap_ms } => {
+                let _ = write!(out, "{{\"kind\":\"open\",\"burst\":{burst},\"gap_ms\":{gap_ms}}}");
+            }
+            Arrival::Idle { hold_ms } => {
+                let _ = write!(out, "{{\"kind\":\"idle\",\"hold_ms\":{hold_ms}}}");
+            }
+            Arrival::Async { tasks_per_consumer } => {
+                let _ = write!(
+                    out,
+                    "{{\"kind\":\"async\",\"tasks_per_consumer\":{tasks_per_consumer}}}"
+                );
+            }
+        }
+    }
+}
+
+/// One declarative workload: everything a bench run needs, parsed from
+/// a `workloads/*.json` file. See the module docs for the grammar and
+/// README "Workloads" for the schema table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Workload name — the report/diff row key prefix. Required.
+    pub name: String,
+    /// Transport under test. Default `queue`.
+    pub target: Target,
+    /// What to measure (queue target only). Default `throughput`.
+    pub measure: Measure,
+    /// Queue implementations to sweep. Default: the bench comparator
+    /// set `[cmp, segmented, ms-hp, mutex]`.
+    pub impls: Vec<Impl>,
+    /// Producer/consumer pairs: a JSON entry is either `N` (symmetric
+    /// NPNC) or `[P, C]`. Default `[1, 4]`.
+    pub pairs: Vec<PairConfig>,
+    /// Pairs used when running with `--smoke`. Default: same as
+    /// `pairs` — set a subset so CI smoke keys stay a subset of a
+    /// full run's.
+    pub smoke_pairs: Vec<PairConfig>,
+    /// Items per trial (requests per run for coordinator/tcp).
+    /// Default 60 000.
+    pub ops: u64,
+    /// `ops` override when running with `--smoke` (the CI knob).
+    /// Default `max(ops / 10, 1000)`.
+    pub smoke_ops: u64,
+    /// Measured rounds per cell. Default 3.
+    pub rounds: usize,
+    /// Unmeasured warmup rounds per cell. Default 1.
+    pub warmup_rounds: usize,
+    /// Operation batch-size mix (the amortization axis). Default `[1]`.
+    pub batches: Vec<usize>,
+    /// Arrival process. Default closed-loop.
+    pub arrival: Arrival,
+    /// Key-space size for zipf-skewed shard routing; 0 (default)
+    /// disables skew. Non-zero requires `impls == ["sharded"]` — key
+    /// skew only changes contention when keys route to shards.
+    pub keys: usize,
+    /// Zipf exponent over `keys` (0 = uniform). Default 0.
+    pub zipf_s: f64,
+    /// Record per-item sojourn latency and report p50/p99/p99.9.
+    /// Default: `true` for open/async arrivals, `false` otherwise
+    /// (closed-loop percentiles suffer coordinated omission —
+    /// DESIGN.md §14 — and recording distorts peak-throughput rows).
+    pub latency: bool,
+    /// Shard count for sharded-fabric workloads (and coordinator
+    /// request-fabric shards). Default 4.
+    pub shards: usize,
+    /// Rank-error bound for zipf-routed relaxed fabrics
+    /// (`keys > 0`). Default 4096.
+    pub max_rank_error: u64,
+    /// `max_rank_error` sweep for `measure = "rank_error"`: one row
+    /// per value, `0` meaning strict mode. Default `[0, 4096]`.
+    pub sweep_max_rank_error: Vec<u64>,
+    /// Client threads (coordinator/tcp targets). Default 8.
+    pub clients: usize,
+    /// Worker threads (coordinator/tcp targets). Default 2.
+    pub workers: usize,
+    /// I/O threads (tcp target). Default 2.
+    pub io_threads: usize,
+    /// Request feature width (coordinator/tcp targets). Default 64.
+    pub features: usize,
+    /// Capacity hint for bounded comparators. Default 65 536.
+    pub capacity_hint: usize,
+}
+
+/// Every key [`WorkloadSpec::from_json`] accepts at the top level;
+/// anything else is rejected by name.
+const KNOWN_KEYS: &[&str] = &[
+    "name",
+    "target",
+    "measure",
+    "impls",
+    "pairs",
+    "smoke_pairs",
+    "ops",
+    "smoke_ops",
+    "rounds",
+    "warmup_rounds",
+    "batches",
+    "arrival",
+    "keys",
+    "zipf_s",
+    "latency",
+    "shards",
+    "max_rank_error",
+    "sweep_max_rank_error",
+    "clients",
+    "workers",
+    "io_threads",
+    "features",
+    "capacity_hint",
+];
+
+fn obj_u64(map: &BTreeMap<String, Json>, k: &str) -> Result<Option<u64>, String> {
+    match map.get(k) {
+        None => Ok(None),
+        Some(v) => {
+            let n = v
+                .as_f64()
+                .ok_or_else(|| format!("{k:?} must be a number"))?;
+            if n < 0.0 {
+                return Err(format!("{k:?} must be non-negative"));
+            }
+            Ok(Some(n as u64))
+        }
+    }
+}
+
+fn obj_f64(map: &BTreeMap<String, Json>, k: &str) -> Result<Option<f64>, String> {
+    match map.get(k) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| format!("{k:?} must be a number")),
+    }
+}
+
+fn obj_bool(map: &BTreeMap<String, Json>, k: &str) -> Result<Option<bool>, String> {
+    match map.get(k) {
+        None => Ok(None),
+        Some(Json::Bool(b)) => Ok(Some(*b)),
+        Some(_) => Err(format!("{k:?} must be a boolean")),
+    }
+}
+
+fn obj_u64_list(map: &BTreeMap<String, Json>, k: &str) -> Result<Option<Vec<u64>>, String> {
+    match map.get(k) {
+        None => Ok(None),
+        Some(v) => {
+            let ns = v
+                .as_f64_vec()
+                .ok_or_else(|| format!("{k:?} must be an array of numbers"))?;
+            if ns.iter().any(|&n| n < 0.0) {
+                return Err(format!("{k:?} entries must be non-negative"));
+            }
+            Ok(Some(ns.into_iter().map(|n| n as u64).collect()))
+        }
+    }
+}
+
+fn parse_pair_list(
+    map: &BTreeMap<String, Json>,
+    k: &str,
+) -> Result<Option<Vec<PairConfig>>, String> {
+    let Some(v) = map.get(k) else {
+        return Ok(None);
+    };
+    let arr = v
+        .as_arr()
+        .ok_or_else(|| format!("{k:?} must be an array of N or [P, C] entries"))?;
+    let mut out = Vec::with_capacity(arr.len());
+    for e in arr {
+        match e {
+            Json::Num(n) if *n >= 1.0 => out.push(PairConfig::symmetric(*n as usize)),
+            Json::Arr(pc) if pc.len() == 2 => {
+                let p = pc[0].as_usize().filter(|&p| p >= 1);
+                let c = pc[1].as_usize().filter(|&c| c >= 1);
+                match (p, c) {
+                    (Some(producers), Some(consumers)) => out.push(PairConfig {
+                        producers,
+                        consumers,
+                    }),
+                    _ => {
+                        return Err(format!(
+                            "{k:?} [P, C] entries must be two positive integers"
+                        ))
+                    }
+                }
+            }
+            _ => {
+                return Err(format!(
+                    "{k:?} entries must be a positive integer N or a [P, C] pair"
+                ))
+            }
+        }
+    }
+    if out.is_empty() {
+        return Err(format!("{k:?} must not be empty"));
+    }
+    Ok(Some(out))
+}
+
+impl WorkloadSpec {
+    /// Parse one workload spec from JSON text.
+    pub fn parse(text: &str) -> Result<WorkloadSpec, String> {
+        let json = Json::parse(text).map_err(|e| format!("workload spec: {e}"))?;
+        Self::from_json(&json)
+    }
+
+    /// Parse from an already-parsed [`Json`] value. Unknown keys —
+    /// top-level or inside `arrival` — are rejected with the offending
+    /// key named; combination rules are enforced by
+    /// [`WorkloadSpec::validate`].
+    pub fn from_json(json: &Json) -> Result<WorkloadSpec, String> {
+        let Json::Obj(map) = json else {
+            return Err("workload spec: top level is not an object".into());
+        };
+        for k in map.keys() {
+            if !KNOWN_KEYS.contains(&k.as_str()) {
+                return Err(format!("workload spec: unknown key {k:?}"));
+            }
+        }
+        let name = map
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or("workload spec: missing required string \"name\"")?
+            .to_string();
+        let err = |e: String| format!("workload {name:?}: {e}");
+
+        let target = match map.get("target") {
+            None => Target::Queue,
+            Some(v) => Target::parse(
+                v.as_str()
+                    .ok_or_else(|| err("\"target\" must be a string".into()))?,
+            )
+            .map_err(err)?,
+        };
+        let measure = match map.get("measure") {
+            None => Measure::Throughput,
+            Some(v) => Measure::parse(
+                v.as_str()
+                    .ok_or_else(|| err("\"measure\" must be a string".into()))?,
+            )
+            .map_err(err)?,
+        };
+        let impls = match map.get("impls") {
+            None => vec![Impl::Cmp, Impl::Segmented, Impl::MsHp, Impl::Mutex],
+            Some(v) => {
+                let arr = v
+                    .as_arr()
+                    .ok_or_else(|| err("\"impls\" must be an array of strings".into()))?;
+                let mut out = Vec::with_capacity(arr.len());
+                for e in arr {
+                    let s = e
+                        .as_str()
+                        .ok_or_else(|| err("\"impls\" entries must be strings".into()))?;
+                    out.push(
+                        Impl::parse(s).ok_or_else(|| err(format!("unknown impl {s:?}")))?,
+                    );
+                }
+                if out.is_empty() {
+                    return Err(err("\"impls\" must not be empty".into()));
+                }
+                out
+            }
+        };
+        let pairs = parse_pair_list(map, "pairs")
+            .map_err(err)?
+            .unwrap_or_else(|| vec![PairConfig::symmetric(1), PairConfig::symmetric(4)]);
+        let smoke_pairs = parse_pair_list(map, "smoke_pairs")
+            .map_err(err)?
+            .unwrap_or_else(|| pairs.clone());
+        let ops = obj_u64(map, "ops").map_err(err)?.unwrap_or(60_000).max(1);
+        let smoke_ops = obj_u64(map, "smoke_ops")
+            .map_err(err)?
+            .unwrap_or((ops / 10).max(1000))
+            .max(1);
+        let rounds = obj_u64(map, "rounds").map_err(err)?.unwrap_or(3).max(1) as usize;
+        let warmup_rounds = obj_u64(map, "warmup_rounds").map_err(err)?.unwrap_or(1) as usize;
+        let batches = match obj_u64_list(map, "batches").map_err(err)? {
+            None => vec![1usize],
+            Some(bs) => {
+                if bs.is_empty() || bs.iter().any(|&b| b == 0) {
+                    return Err(err("\"batches\" must be non-empty positive integers".into()));
+                }
+                bs.into_iter().map(|b| b as usize).collect()
+            }
+        };
+        let arrival = match map.get("arrival") {
+            None => Arrival::Closed,
+            Some(v) => Arrival::from_json(v).map_err(err)?,
+        };
+        let keys = obj_u64(map, "keys").map_err(err)?.unwrap_or(0) as usize;
+        let zipf_s = obj_f64(map, "zipf_s").map_err(err)?.unwrap_or(0.0);
+        let latency = obj_bool(map, "latency")
+            .map_err(err)?
+            .unwrap_or_else(|| arrival.measures_latency());
+        let shards = obj_u64(map, "shards").map_err(err)?.unwrap_or(4).max(1) as usize;
+        let max_rank_error = obj_u64(map, "max_rank_error")
+            .map_err(err)?
+            .unwrap_or(4096)
+            .max(1);
+        let sweep_max_rank_error = obj_u64_list(map, "sweep_max_rank_error")
+            .map_err(err)?
+            .unwrap_or_else(|| vec![0, 4096]);
+        let clients = obj_u64(map, "clients").map_err(err)?.unwrap_or(8).max(1) as usize;
+        let workers = obj_u64(map, "workers").map_err(err)?.unwrap_or(2).max(1) as usize;
+        let io_threads = obj_u64(map, "io_threads").map_err(err)?.unwrap_or(2).max(1) as usize;
+        let features = obj_u64(map, "features").map_err(err)?.unwrap_or(64).max(1) as usize;
+        let capacity_hint = obj_u64(map, "capacity_hint")
+            .map_err(err)?
+            .unwrap_or(1 << 16)
+            .max(1) as usize;
+
+        let spec = WorkloadSpec {
+            name,
+            target,
+            measure,
+            impls,
+            pairs,
+            smoke_pairs,
+            ops,
+            smoke_ops,
+            rounds,
+            warmup_rounds,
+            batches,
+            arrival,
+            keys,
+            zipf_s,
+            latency,
+            shards,
+            max_rank_error,
+            sweep_max_rank_error,
+            clients,
+            workers,
+            io_threads,
+            features,
+            capacity_hint,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Combination rules a structurally-valid spec must still satisfy.
+    /// Called by [`WorkloadSpec::from_json`]; public so tests can
+    /// probe the rules directly.
+    pub fn validate(&self) -> Result<(), String> {
+        let err = |e: &str| Err(format!("workload {:?}: {e}", self.name));
+        if self.name.is_empty() {
+            return err("\"name\" must not be empty");
+        }
+        if self.measure == Measure::RankError {
+            if self.target != Target::Queue {
+                return err("measure \"rank_error\" requires target \"queue\"");
+            }
+            if self.impls != [Impl::Sharded] {
+                return err("measure \"rank_error\" requires impls [\"sharded\"]");
+            }
+            if self.sweep_max_rank_error.is_empty() {
+                return err("measure \"rank_error\" requires a non-empty sweep_max_rank_error");
+            }
+        }
+        if self.keys > 0 {
+            if self.impls != [Impl::Sharded] {
+                return err("\"keys\" (zipf routing) requires impls [\"sharded\"]");
+            }
+            if self.measure != Measure::Throughput {
+                return err("\"keys\" (zipf routing) requires measure \"throughput\"");
+            }
+        }
+        if self.zipf_s != 0.0 {
+            if self.zipf_s < 0.0 {
+                return err("\"zipf_s\" must be non-negative");
+            }
+            if self.keys == 0 {
+                return err("\"zipf_s\" requires \"keys\" > 0");
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize back to JSON with every field explicit, such that
+    /// `parse(spec.to_json()) == spec`.
+    pub fn to_json(&self) -> String {
+        use std::fmt::Write as _;
+        fn write_pairs(out: &mut String, pairs: &[PairConfig]) {
+            use std::fmt::Write as _;
+            out.push('[');
+            for (i, p) in pairs.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                if p.producers == p.consumers {
+                    let _ = write!(out, "{}", p.producers);
+                } else {
+                    let _ = write!(out, "[{},{}]", p.producers, p.consumers);
+                }
+            }
+            out.push(']');
+        }
+        let mut s = String::from("{");
+        let _ = write!(s, "\"name\":\"{}\"", json_escape(&self.name));
+        let _ = write!(s, ",\"target\":\"{}\"", self.target.name());
+        let _ = write!(s, ",\"measure\":\"{}\"", self.measure.name());
+        s.push_str(",\"impls\":[");
+        for (i, imp) in self.impls.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "\"{}\"", imp.name());
+        }
+        s.push(']');
+        s.push_str(",\"pairs\":");
+        write_pairs(&mut s, &self.pairs);
+        s.push_str(",\"smoke_pairs\":");
+        write_pairs(&mut s, &self.smoke_pairs);
+        let _ = write!(s, ",\"ops\":{}", self.ops);
+        let _ = write!(s, ",\"smoke_ops\":{}", self.smoke_ops);
+        let _ = write!(s, ",\"rounds\":{}", self.rounds);
+        let _ = write!(s, ",\"warmup_rounds\":{}", self.warmup_rounds);
+        s.push_str(",\"batches\":[");
+        for (i, b) in self.batches.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{b}");
+        }
+        s.push(']');
+        s.push_str(",\"arrival\":");
+        self.arrival.write_json(&mut s);
+        let _ = write!(s, ",\"keys\":{}", self.keys);
+        let _ = write!(s, ",\"zipf_s\":{}", self.zipf_s);
+        let _ = write!(s, ",\"latency\":{}", self.latency);
+        let _ = write!(s, ",\"shards\":{}", self.shards);
+        let _ = write!(s, ",\"max_rank_error\":{}", self.max_rank_error);
+        s.push_str(",\"sweep_max_rank_error\":[");
+        for (i, k) in self.sweep_max_rank_error.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            let _ = write!(s, "{k}");
+        }
+        s.push(']');
+        let _ = write!(s, ",\"clients\":{}", self.clients);
+        let _ = write!(s, ",\"workers\":{}", self.workers);
+        let _ = write!(s, ",\"io_threads\":{}", self.io_threads);
+        let _ = write!(s, ",\"features\":{}", self.features);
+        let _ = write!(s, ",\"capacity_hint\":{}", self.capacity_hint);
+        s.push('}');
+        s
+    }
+
+    /// Apply the deprecated `BENCH_OPS` / `BENCH_PAIRS` env overrides
+    /// (kept so old invocations keep working): when set, they shadow
+    /// the spec's `ops`/`smoke_ops` and `pairs`/`smoke_pairs` with a
+    /// one-line deprecation note. The other pre-library `BENCH_*`
+    /// knobs (`BENCH_BATCHES`, `BENCH_SCENARIOS`, `BENCH_FULL`,
+    /// `BENCH_ROUNDS`) are gone from the throughput bench — their
+    /// axes are spec fields now. (`benches/latency.rs` and friends
+    /// keep their own `BENCH_OPS`/`BENCH_ROUNDS` readers.)
+    pub fn apply_env_overrides(&mut self) {
+        let ops = std::env::var("BENCH_OPS").ok();
+        let pairs = std::env::var("BENCH_PAIRS").ok();
+        self.apply_overrides(ops.as_deref(), pairs.as_deref());
+    }
+
+    /// Testable core of [`WorkloadSpec::apply_env_overrides`]: the
+    /// raw override strings, already read from wherever.
+    pub fn apply_overrides(&mut self, ops: Option<&str>, pairs: Option<&str>) {
+        if let Some(n) = ops.and_then(|s| s.parse::<u64>().ok()).filter(|&n| n > 0) {
+            eprintln!(
+                "workload {}: deprecated BENCH_OPS={n} shadows spec ops={} — move it into the spec",
+                self.name, self.ops
+            );
+            self.ops = n;
+            self.smoke_ops = n;
+        }
+        if let Some(ps) = pairs.map(|s| {
+            s.split(',')
+                .filter_map(|p| p.trim().parse::<usize>().ok())
+                .filter(|&n| n > 0)
+                .map(PairConfig::symmetric)
+                .collect::<Vec<_>>()
+        }) {
+            if !ps.is_empty() {
+                eprintln!(
+                    "workload {}: deprecated BENCH_PAIRS shadows spec pairs ({} entries) — move it into the spec",
+                    self.name,
+                    self.pairs.len()
+                );
+                self.pairs = ps.clone();
+                self.smoke_pairs = ps;
+            }
+        }
+    }
+}
+
+/// Load every `*.json` spec in `dir`, sorted by file name (so row
+/// order is deterministic), rejecting duplicate workload names. Errors
+/// name the offending file.
+pub fn load_workload_dir(dir: &Path) -> Result<Vec<WorkloadSpec>, String> {
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .map_err(|e| format!("cannot read workload dir {}: {e}", dir.display()))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().map(|x| x == "json").unwrap_or(false))
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        return Err(format!("no *.json workloads in {}", dir.display()));
+    }
+    let mut specs: Vec<WorkloadSpec> = Vec::with_capacity(paths.len());
+    for p in &paths {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{}: {e}", p.display()))?;
+        let spec = WorkloadSpec::parse(&text).map_err(|e| format!("{}: {e}", p.display()))?;
+        if specs.iter().any(|s| s.name == spec.name) {
+            return Err(format!(
+                "{}: duplicate workload name {:?}",
+                p.display(),
+                spec.name
+            ));
+        }
+        specs.push(spec);
+    }
+    Ok(specs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_spec_gets_defaults() {
+        let s = WorkloadSpec::parse(r#"{"name":"t"}"#).unwrap();
+        assert_eq!(s.name, "t");
+        assert_eq!(s.target, Target::Queue);
+        assert_eq!(s.measure, Measure::Throughput);
+        assert_eq!(s.impls, vec![Impl::Cmp, Impl::Segmented, Impl::MsHp, Impl::Mutex]);
+        assert_eq!(s.pairs, vec![PairConfig::symmetric(1), PairConfig::symmetric(4)]);
+        assert_eq!(s.smoke_pairs, s.pairs);
+        assert_eq!(s.ops, 60_000);
+        assert_eq!(s.smoke_ops, 6_000);
+        assert_eq!(s.batches, vec![1]);
+        assert_eq!(s.arrival, Arrival::Closed);
+        assert!(!s.latency, "closed loop defaults latency off");
+    }
+
+    #[test]
+    fn unknown_key_is_named() {
+        let e = WorkloadSpec::parse(r#"{"name":"t","opz":1}"#).unwrap_err();
+        assert!(e.contains("\"opz\""), "must name the key: {e}");
+        let e = WorkloadSpec::parse(r#"{"name":"t","arrival":{"kind":"open","gapms":3}}"#)
+            .unwrap_err();
+        assert!(e.contains("\"gapms\""), "must name the nested key: {e}");
+    }
+
+    #[test]
+    fn asymmetric_pairs_parse() {
+        let s = WorkloadSpec::parse(r#"{"name":"t","pairs":[2,[4,1]]}"#).unwrap();
+        assert_eq!(
+            s.pairs,
+            vec![
+                PairConfig::symmetric(2),
+                PairConfig {
+                    producers: 4,
+                    consumers: 1
+                }
+            ]
+        );
+    }
+
+    #[test]
+    fn latency_defaults_follow_arrival() {
+        let open =
+            WorkloadSpec::parse(r#"{"name":"t","arrival":{"kind":"open"}}"#).unwrap();
+        assert!(open.latency);
+        assert_eq!(open.arrival, Arrival::Open { burst: 512, gap_ms: 2 });
+        let idle =
+            WorkloadSpec::parse(r#"{"name":"t","arrival":{"kind":"idle"}}"#).unwrap();
+        assert!(!idle.latency);
+        // Explicit value wins over the arrival-derived default.
+        let forced = WorkloadSpec::parse(
+            r#"{"name":"t","arrival":{"kind":"idle"},"latency":true}"#,
+        )
+        .unwrap();
+        assert!(forced.latency);
+    }
+
+    #[test]
+    fn combination_rules_enforced() {
+        let e = WorkloadSpec::parse(r#"{"name":"t","measure":"rank_error"}"#).unwrap_err();
+        assert!(e.contains("sharded"), "{e}");
+        let e = WorkloadSpec::parse(r#"{"name":"t","keys":8}"#).unwrap_err();
+        assert!(e.contains("sharded"), "{e}");
+        let e = WorkloadSpec::parse(
+            r#"{"name":"t","impls":["sharded"],"zipf_s":1.0}"#,
+        )
+        .unwrap_err();
+        assert!(e.contains("keys"), "{e}");
+        assert!(WorkloadSpec::parse(
+            r#"{"name":"t","impls":["sharded"],"keys":8,"zipf_s":1.0}"#
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn to_json_round_trips() {
+        let s = WorkloadSpec::parse(
+            r#"{"name":"rt","impls":["cmp","mutex"],"pairs":[1,[3,2]],"ops":5000,
+                "batches":[1,8],"arrival":{"kind":"open","burst":64,"gap_ms":5},
+                "rounds":2,"zipf_s":0}"#,
+        )
+        .unwrap();
+        let back = WorkloadSpec::parse(&s.to_json()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn env_overrides_shadow_with_note() {
+        let mut s = WorkloadSpec::parse(r#"{"name":"t","ops":9999,"pairs":[8]}"#).unwrap();
+        s.apply_overrides(Some("1234"), Some("1,2"));
+        assert_eq!(s.ops, 1234);
+        assert_eq!(s.smoke_ops, 1234);
+        assert_eq!(s.pairs, vec![PairConfig::symmetric(1), PairConfig::symmetric(2)]);
+        assert_eq!(s.smoke_pairs, s.pairs);
+        // Garbage overrides are ignored, spec values survive.
+        let mut s2 = WorkloadSpec::parse(r#"{"name":"t","ops":9999}"#).unwrap();
+        s2.apply_overrides(Some("banana"), None);
+        assert_eq!(s2.ops, 9999);
+    }
+}

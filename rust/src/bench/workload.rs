@@ -13,7 +13,8 @@ use std::time::{Duration, Instant};
 
 use super::latency::Histogram;
 use super::synthetic::LoadProfile;
-use crate::queue::{ConcurrentQueue, Impl};
+use crate::queue::sharded::{ShardMode, ShardedCmp};
+use crate::queue::{BoxFuture, ConcurrentQueue, Impl};
 use crate::util::cpu::process_cpu_seconds;
 
 /// Producer/consumer pair configuration. The paper sweeps symmetric
@@ -121,6 +122,13 @@ pub struct TrialConfig {
     /// Offered-load scenario (DESIGN.md §8). Latency trials always run
     /// closed-loop.
     pub scenario: Scenario,
+    /// Record per-item sojourn time (enqueue → dequeue, DESIGN.md §14):
+    /// producers stamp the payload with the trial clock and consumers
+    /// log `now − stamp` into [`ThroughputTrial::sojourn_ns`], capped
+    /// at `max_samples_per_thread` per consumer. Off by default —
+    /// recording costs a clock read per item, which distorts peak
+    /// closed-loop rows.
+    pub record_sojourn: bool,
 }
 
 impl Default for TrialConfig {
@@ -132,12 +140,13 @@ impl Default for TrialConfig {
             max_samples_per_thread: 200_000,
             batch_size: 1,
             scenario: Scenario::ClosedLoop,
+            record_sojourn: false,
         }
     }
 }
 
 /// Result of a throughput trial.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ThroughputTrial {
     /// Items actually consumed. Can be slightly below the enqueued
     /// count for CMP when a consumer is preempted past the protection
@@ -161,6 +170,11 @@ pub struct ThroughputTrial {
     /// every thread burned its core the whole trial; an idle parked
     /// fleet sits near 0.
     pub cpu_util: Option<f64>,
+    /// Per-item sojourn samples (enqueue → dequeue, nanoseconds),
+    /// pooled across consumers. Empty unless
+    /// [`TrialConfig::record_sojourn`] was set; feed to
+    /// [`sojourn_percentiles`] for the SLO report.
+    pub sojourn_ns: Vec<u64>,
 }
 
 /// Consecutive empty polls (with producers finished) that terminate a
@@ -226,6 +240,13 @@ pub fn run_throughput_on(
     }
 
     let batch = cfg.batch_size.max(1);
+    // Sojourn recording (DESIGN.md §14): when enabled, the payload *is*
+    // the enqueue timestamp (the trial's own anchor clock), so each
+    // consumed item yields one enqueue→dequeue sample with no side
+    // table. Payload values are otherwise unobserved by the trial.
+    let record = cfg.record_sojourn;
+    let cap = cfg.max_samples_per_thread;
+    let sojourn: Arc<std::sync::Mutex<Vec<u64>>> = Arc::new(std::sync::Mutex::new(Vec::new()));
     let cpu_before = process_cpu_seconds();
 
     let mut handles = Vec::with_capacity(pair.producers + pair.consumers);
@@ -246,7 +267,7 @@ pub fn run_throughput_on(
                     if batch <= 1 {
                         for i in 0..per_producer {
                             load.run(i ^ (p as u64) << 32);
-                            queue.enqueue(base + i);
+                            queue.enqueue(if record { anchor.ns() } else { base + i });
                         }
                     } else {
                         let mut i = 0u64;
@@ -255,7 +276,12 @@ pub fn run_throughput_on(
                             for j in 0..k {
                                 load.run((i + j) ^ (p as u64) << 32);
                             }
-                            queue.enqueue_batch((base + i..base + i + k).collect());
+                            let items: Vec<u64> = if record {
+                                vec![anchor.ns(); k as usize]
+                            } else {
+                                (base + i..base + i + k).collect()
+                            };
+                            queue.enqueue_batch(items);
                             i += k;
                         }
                     }
@@ -271,9 +297,14 @@ pub fn run_throughput_on(
                                 load.run((i + j) ^ (p as u64) << 32);
                             }
                             if k == 1 {
-                                queue.enqueue(base + i);
+                                queue.enqueue(if record { anchor.ns() } else { base + i });
                             } else {
-                                queue.enqueue_batch((base + i..base + i + k).collect());
+                                let items: Vec<u64> = if record {
+                                    vec![anchor.ns(); k as usize]
+                                } else {
+                                    (base + i..base + i + k).collect()
+                                };
+                                queue.enqueue_batch(items);
                             }
                             i += k;
                         }
@@ -293,12 +324,14 @@ pub fn run_throughput_on(
         let barrier = barrier.clone();
         let consumed = consumed.clone();
         let producers_done = producers_done.clone();
+        let sojourn = sojourn.clone();
         let (start_ns, end_ns) = (start_ns.clone(), end_ns.clone());
         handles.push(std::thread::spawn(move || {
             barrier.wait();
             stamp_start(anchor, &start_ns);
             let mut salt = c as u64;
             let mut buf: Vec<u64> = Vec::with_capacity(batch);
+            let mut lat: Vec<u64> = Vec::new();
             let closed_loop = scenario == Scenario::ClosedLoop;
             if closed_loop {
                 let mut empty_streak = 0u32;
@@ -307,11 +340,25 @@ pub fn run_throughput_on(
                         load.run(salt);
                         salt = salt.wrapping_add(0x9E37_79B9);
                         match queue.try_dequeue() {
-                            Some(_) => 1,
+                            Some(v) => {
+                                if record && lat.len() < cap {
+                                    lat.push(anchor.ns().saturating_sub(v));
+                                }
+                                1
+                            }
                             None => 0,
                         }
                     } else {
                         let n = queue.try_dequeue_batch(batch, &mut buf);
+                        if record {
+                            let now = anchor.ns();
+                            for &v in &buf {
+                                if lat.len() >= cap {
+                                    break;
+                                }
+                                lat.push(now.saturating_sub(v));
+                            }
+                        }
                         buf.clear();
                         // Run the inter-op load once per received item so
                         // synthetic-load regimes stay comparable per item.
@@ -356,15 +403,20 @@ pub fn run_throughput_on(
                     let producers_done = producers_done.clone();
                     let end_ns = end_ns.clone();
                     let thread_claimed = thread_claimed.clone();
+                    let sojourn = sojourn.clone();
                     let mut salt = salt.wrapping_add(t as u64);
                     ex.spawn(async move {
                         let mut empty_slices = 0u32;
+                        let mut tlat: Vec<u64> = Vec::new();
                         loop {
                             let slice_end = Instant::now() + PARK_SLICE;
                             match queue.pop_deadline_async(slice_end).await {
-                                Some(_) => {
+                                Some(v) => {
                                     load.run(salt);
                                     salt = salt.wrapping_add(0x9E37_79B9);
+                                    if record && tlat.len() < cap {
+                                        tlat.push(anchor.ns().saturating_sub(v));
+                                    }
                                     consumed.fetch_add(1, Ordering::AcqRel);
                                     end_ns.fetch_max(anchor.ns(), Ordering::AcqRel);
                                     thread_claimed.fetch_add(1, Ordering::Relaxed);
@@ -379,6 +431,9 @@ pub fn run_throughput_on(
                                     }
                                 }
                             }
+                        }
+                        if !tlat.is_empty() {
+                            sojourn.lock().expect("sojourn lock poisoned").extend(tlat);
                         }
                     });
                 }
@@ -399,6 +454,15 @@ pub fn run_throughput_on(
                 loop {
                     let slice_end = Instant::now() + PARK_SLICE;
                     let n = queue.pop_deadline_batch(batch, &mut buf, slice_end);
+                    if record {
+                        let now = anchor.ns();
+                        for &v in &buf {
+                            if lat.len() >= cap {
+                                break;
+                            }
+                            lat.push(now.saturating_sub(v));
+                        }
+                    }
                     buf.clear();
                     if n > 0 {
                         for _ in 0..n {
@@ -426,6 +490,9 @@ pub fn run_throughput_on(
                     end_ns.fetch_max(anchor.ns(), Ordering::AcqRel);
                 }
             }
+            if !lat.is_empty() {
+                sojourn.lock().expect("sojourn lock poisoned").extend(lat);
+            }
         }));
     }
 
@@ -442,6 +509,7 @@ pub fn run_throughput_on(
         _ => None,
     };
     let threads = (pair.producers + pair.consumers) as f64;
+    let sojourn_ns = std::mem::take(&mut *sojourn.lock().expect("sojourn lock poisoned"));
     ThroughputTrial {
         items: got,
         elapsed,
@@ -456,7 +524,19 @@ pub fn run_throughput_on(
             }
         }),
         cpu_util: cpu_seconds.map(|c| c / (elapsed.as_secs_f64().max(1e-12) * threads)),
+        sojourn_ns,
     }
+}
+
+/// Percentiles of a sojourn-sample pool: `(p50, p99, p99.9)` in
+/// nanoseconds, or `None` for an empty pool. Sorts `samples` in place.
+pub fn sojourn_percentiles(samples: &mut [u64]) -> Option<(u64, u64, u64)> {
+    if samples.is_empty() {
+        return None;
+    }
+    samples.sort_unstable();
+    let at = |num: usize, den: usize| samples[(samples.len() - 1) * num / den];
+    Some((at(50, 100), at(99, 100), at(999, 1000)))
 }
 
 /// Zipf(s) sampler over ranks `0..n` — the contention-skew knob: a
@@ -497,6 +577,14 @@ impl Zipf {
         self.cdf.len()
     }
 
+    /// Cumulative probability of ranks `0..=k` (clamped to the last
+    /// rank, so `cdf(ranks() - 1) == 1.0`). Exposed for deterministic
+    /// skew assertions: `s = 0` gives `cdf(k) = (k+1)/n`, and a larger
+    /// exponent strictly raises every proper prefix's mass.
+    pub fn cdf(&self, k: usize) -> f64 {
+        self.cdf[k.min(self.cdf.len() - 1)]
+    }
+
     /// Draw one rank in `0..ranks()`.
     pub fn sample(&self, rng: &mut crate::util::XorShift64) -> usize {
         let r = rng.next_f64();
@@ -505,6 +593,128 @@ impl Zipf {
             Ok(i) => i,
             Err(i) => i.min(self.cdf.len() - 1),
         }
+    }
+}
+
+/// A [`ShardedCmp`] fabric whose *producers* route by zipf-sampled key
+/// instead of the fabric's round-robin ticket — the contention-skew
+/// knob for the sharded rows (workload fields `keys` / `zipf_s`): a
+/// high exponent concentrates pushes on the low shards (hot-key
+/// traffic), exponent 0 reproduces uniform spread. Dequeues delegate
+/// to the fabric unchanged (affinity + steal-on-empty), so the row
+/// measures exactly how skew degrades the fabric's scale-out.
+///
+/// Requires a `Relaxed` fabric: strict mode funnels every push through
+/// shard 0's global ticket, which a direct-into-shard router would
+/// bypass (breaking the strict-FIFO claim), so skew has no meaning
+/// there.
+pub struct ZipfRoutedFabric {
+    fabric: ShardedCmp<u64>,
+    zipf: Zipf,
+}
+
+impl ZipfRoutedFabric {
+    /// Wrap `fabric` with zipf(`s`) routing over `keys` keys (keys map
+    /// onto shards modulo the shard count).
+    ///
+    /// # Panics
+    /// If the fabric is in strict mode or `keys == 0`.
+    pub fn new(fabric: ShardedCmp<u64>, keys: usize, s: f64) -> Self {
+        assert!(
+            matches!(fabric.mode(), ShardMode::Relaxed { .. }),
+            "zipf routing requires a relaxed fabric (strict routes via shard 0's ticket)"
+        );
+        assert!(keys > 0, "zipf routing over zero keys");
+        ZipfRoutedFabric {
+            fabric,
+            zipf: Zipf::new(keys, s),
+        }
+    }
+
+    /// Draw a key from the per-thread RNG and map it to a shard. Each
+    /// thread seeds its own [`crate::util::XorShift64`] from a shared
+    /// counter (odd-forced, so no thread lands on the all-zero state).
+    fn route(&self) -> usize {
+        use std::cell::RefCell;
+        static ROUTE_SEED: AtomicU64 = AtomicU64::new(0x9E37_79B9_7F4A_7C15);
+        thread_local! {
+            static RNG: RefCell<crate::util::XorShift64> =
+                RefCell::new(crate::util::XorShift64::new(
+                    ROUTE_SEED.fetch_add(0x9E37_79B9, Ordering::Relaxed) | 1,
+                ));
+        }
+        let key = RNG.with(|r| self.zipf.sample(&mut r.borrow_mut()));
+        key % self.fabric.shard_count()
+    }
+}
+
+impl ConcurrentQueue<u64> for ZipfRoutedFabric {
+    fn try_enqueue(&self, item: u64) -> Result<(), u64> {
+        self.fabric.shard(self.route()).push(item)?;
+        // Direct-into-shard publishers must kick parked cross-shard
+        // stealers themselves (the fabric's own push does this).
+        self.fabric.notify_stealers();
+        Ok(())
+    }
+
+    fn try_enqueue_batch(&self, items: Vec<u64>) -> Result<(), Vec<u64>> {
+        // The whole batch lands on one shard: a batch models one
+        // producer's run of same-key traffic.
+        self.fabric.shard(self.route()).push_batch(items)?;
+        self.fabric.notify_stealers();
+        Ok(())
+    }
+
+    fn try_dequeue(&self) -> Option<u64> {
+        self.fabric.try_dequeue()
+    }
+
+    fn try_dequeue_batch(&self, max: usize, out: &mut Vec<u64>) -> usize {
+        self.fabric.try_dequeue_batch(max, out)
+    }
+
+    fn pop_blocking(&self) -> u64 {
+        self.fabric.pop_blocking()
+    }
+
+    fn pop_deadline(&self, deadline: Instant) -> Option<u64> {
+        self.fabric.pop_deadline(deadline)
+    }
+
+    fn pop_blocking_batch(&self, max: usize, out: &mut Vec<u64>) -> usize {
+        self.fabric.pop_blocking_batch(max, out)
+    }
+
+    fn pop_deadline_batch(&self, max: usize, out: &mut Vec<u64>, deadline: Instant) -> usize {
+        self.fabric.pop_deadline_batch(max, out, deadline)
+    }
+
+    fn pop_async(&self) -> BoxFuture<'_, u64> {
+        self.fabric.pop_async()
+    }
+
+    fn pop_deadline_async(&self, deadline: Instant) -> BoxFuture<'_, Option<u64>> {
+        self.fabric.pop_deadline_async(deadline)
+    }
+
+    fn pop_async_batch(&self, max: usize) -> BoxFuture<'_, Vec<u64>> {
+        self.fabric.pop_async_batch(max)
+    }
+
+    fn wake_all(&self) {
+        self.fabric.wake_all();
+    }
+
+    fn name(&self) -> &'static str {
+        "sharded-zipf"
+    }
+
+    fn is_strict_fifo(&self) -> bool {
+        false
+    }
+
+    fn is_lock_free(&self) -> bool {
+        true
     }
 }
 
@@ -1060,5 +1270,106 @@ mod tests {
         };
         let t = throughput_trial(Impl::Mutex, PairConfig::symmetric(3), &cfg);
         assert_eq!(t.items, 999, "333 per producer × 3");
+    }
+
+    #[test]
+    fn sojourn_recording_yields_one_sample_per_item() {
+        let cfg = TrialConfig {
+            total_ops: 2000,
+            record_sojourn: true,
+            scenario: Scenario::Bursty {
+                burst: 256,
+                gap: Duration::from_millis(1),
+            },
+            ..TrialConfig::default()
+        };
+        let t = throughput_trial(Impl::Cmp, PairConfig::symmetric(2), &cfg);
+        assert_eq!(t.items, 2000);
+        assert_eq!(t.sojourn_ns.len(), 2000, "one sample per consumed item");
+        let mut s = t.sojourn_ns.clone();
+        let (p50, p99, p999) = sojourn_percentiles(&mut s).expect("non-empty pool");
+        assert!(p50 <= p99 && p99 <= p999, "{p50} {p99} {p999}");
+    }
+
+    #[test]
+    fn sojourn_recording_covers_closed_and_async_paths() {
+        for (scenario, batch) in [
+            (Scenario::ClosedLoop, 1usize),
+            (Scenario::ClosedLoop, 8),
+            (
+                Scenario::Async {
+                    tasks_per_consumer: 2,
+                },
+                1,
+            ),
+        ] {
+            let cfg = TrialConfig {
+                total_ops: 1000,
+                record_sojourn: true,
+                batch_size: batch,
+                scenario,
+                ..TrialConfig::default()
+            };
+            let t = throughput_trial(Impl::Cmp, PairConfig::symmetric(2), &cfg);
+            assert_eq!(t.items, 1000, "{scenario:?} batch={batch}");
+            assert_eq!(t.sojourn_ns.len(), 1000, "{scenario:?} batch={batch}");
+        }
+    }
+
+    #[test]
+    fn sojourn_off_records_nothing() {
+        let t = throughput_trial(Impl::Cmp, PairConfig::symmetric(1), &small_cfg());
+        assert!(t.sojourn_ns.is_empty());
+        assert_eq!(sojourn_percentiles(&mut []), None);
+    }
+
+    #[test]
+    fn sojourn_percentiles_sort_and_index() {
+        let mut v: Vec<u64> = (1..=1000).rev().collect();
+        let (p50, p99, p999) = sojourn_percentiles(&mut v).unwrap();
+        assert_eq!(p50, 500);
+        assert_eq!(p99, 990);
+        assert_eq!(p999, 999);
+    }
+
+    #[test]
+    fn zipf_cdf_accessor_uniform_and_skewed() {
+        let u = Zipf::new(10, 0.0);
+        assert!((u.cdf(4) - 0.5).abs() < 1e-9);
+        assert!((u.cdf(9) - 1.0).abs() < 1e-9);
+        let z = Zipf::new(10, 1.5);
+        assert!(z.cdf(0) > u.cdf(0), "skew concentrates mass on rank 0");
+    }
+
+    #[test]
+    fn zipf_routed_fabric_conserves_items() {
+        use crate::queue::sharded::ShardedConfig;
+        for batch in [1usize, 8] {
+            let fabric = ShardedCmp::with_config(
+                ShardedConfig::default()
+                    .with_shards(4)
+                    .with_mode(ShardMode::Relaxed {
+                        max_rank_error: 4096,
+                    }),
+            );
+            let q: Arc<dyn ConcurrentQueue<u64>> =
+                Arc::new(ZipfRoutedFabric::new(fabric, 64, 1.2));
+            let cfg = TrialConfig {
+                total_ops: 4000,
+                batch_size: batch,
+                ..TrialConfig::default()
+            };
+            let t = run_throughput_on(q, PairConfig::symmetric(2), &cfg);
+            assert_eq!(t.items, 4000, "batch={batch}");
+            assert_eq!(t.lost, 0, "batch={batch}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "relaxed fabric")]
+    fn zipf_routed_fabric_rejects_strict_mode() {
+        use crate::queue::sharded::ShardedConfig;
+        let fabric = ShardedCmp::with_config(ShardedConfig::default().with_shards(2));
+        let _ = ZipfRoutedFabric::new(fabric, 8, 1.0);
     }
 }

@@ -56,6 +56,7 @@ fn main() {
 const HELP: &str = "repro — CMP queue reproduction (see README.md)\n\
 commands:\n  \
 bench <fig1|tables|fig2|faults|sharded|all> [--ops N] [--rounds R] [--threads 1,2,..] [--impls a,b] [--batch K] [--verbose]\n  \
+bench --workload <spec.json> [--workload ..] [--workload-dir D] [--smoke] [--verbose]   run declarative workload specs (README Workloads)\n  \
 bench sharded [--shards N] [--relaxed] [--max-rank-error K] [--ops N] [--threads 1,4]   rank error vs ops/s (DESIGN.md §13)\n  \
 bench diff <old.json> <new.json> [--threshold-pct P]   compare two BENCH_throughput.json dumps\n  \
 serve [--requests N] [--clients C] [--shards S] [--workers W] [--idle-ms N] [--async-workers] [--echo]\n  \
@@ -204,7 +205,72 @@ fn cmd_bench_sharded(args: &Args) -> i32 {
     0
 }
 
+/// `repro bench --workload <spec.json> [--workload-dir D] [--smoke]`:
+/// run declarative workload specs (README "Workloads") through the
+/// generic driver and write the SLO rows to `BENCH_throughput.json` —
+/// the same dump `cargo bench --bench throughput` produces from the
+/// committed library, diffable with `repro bench diff`.
+fn cmd_bench_workload(args: &Args) -> i32 {
+    use cmpq::bench::runner::{run_workload, WorkloadRunOptions};
+    use cmpq::bench::spec::{load_workload_dir, WorkloadSpec};
+
+    let mut specs: Vec<WorkloadSpec> = Vec::new();
+    if let Some(dir) = args.get("workload-dir") {
+        match load_workload_dir(Path::new(dir)) {
+            Ok(mut s) => specs.append(&mut s),
+            Err(e) => {
+                eprintln!("bench workload: {e}");
+                return 2;
+            }
+        }
+    }
+    for path in args.get_all("workload") {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bench workload: cannot read {path}: {e}");
+                return 2;
+            }
+        };
+        match WorkloadSpec::parse(&text) {
+            Ok(s) => specs.push(s),
+            Err(e) => {
+                eprintln!("bench workload: {path}: {e}");
+                return 2;
+            }
+        }
+    }
+    if specs.is_empty() {
+        eprintln!("bench workload: no specs (pass --workload <file> or --workload-dir <dir>)");
+        return 2;
+    }
+    let opts = WorkloadRunOptions {
+        smoke: args.flag("smoke"),
+        verbose: args.flag("verbose"),
+    };
+    let mut rows = Vec::new();
+    for mut spec in specs {
+        spec.apply_env_overrides();
+        eprintln!("-- workload {} --", spec.name);
+        match run_workload(&spec, &opts) {
+            Ok(mut r) => rows.append(&mut r),
+            Err(e) => {
+                eprintln!("bench workload: {e}");
+                return 1;
+            }
+        }
+    }
+    println!("{}", report::slo_table(&rows));
+    std::fs::write("BENCH_throughput.json", report::batch_throughput_json(&rows))
+        .expect("write BENCH_throughput.json");
+    eprintln!("wrote BENCH_throughput.json ({} rows)", rows.len());
+    0
+}
+
 fn cmd_bench(args: &Args) -> i32 {
+    if args.get("workload").is_some() || args.get("workload-dir").is_some() {
+        return cmd_bench_workload(args);
+    }
     let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
     if what == "diff" {
         return cmd_bench_diff(args);

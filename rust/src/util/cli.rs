@@ -10,7 +10,12 @@ pub struct Args {
     /// Positional arguments, in order.
     pub positional: Vec<String>,
     /// `--key value` / `--key=value` options (flags store `"true"`).
+    /// Last occurrence wins; see [`Args::get_all`] for every one.
     pub options: BTreeMap<String, String>,
+    /// Every `(key, value)` occurrence in command-line order, for
+    /// options that may repeat (e.g. `--workload a.json --workload
+    /// b.json`).
+    pub multi: Vec<(String, String)>,
 }
 
 impl Args {
@@ -21,6 +26,7 @@ impl Args {
         while let Some(arg) = iter.next() {
             if let Some(stripped) = arg.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
+                    out.multi.push((k.to_string(), v.to_string()));
                     out.options.insert(k.to_string(), v.to_string());
                 } else {
                     // `--key value` unless the next token is another option
@@ -29,12 +35,13 @@ impl Args {
                         .peek()
                         .map(|n| !n.starts_with("--"))
                         .unwrap_or(false);
-                    if takes_value {
-                        let v = iter.next().unwrap();
-                        out.options.insert(stripped.to_string(), v);
+                    let v = if takes_value {
+                        iter.next().unwrap()
                     } else {
-                        out.options.insert(stripped.to_string(), String::from("true"));
-                    }
+                        String::from("true")
+                    };
+                    out.multi.push((stripped.to_string(), v.clone()));
+                    out.options.insert(stripped.to_string(), v);
                 }
             } else {
                 out.positional.push(arg);
@@ -72,6 +79,16 @@ impl Args {
                 .parse()
                 .unwrap_or_else(|_| panic!("--{name}: cannot parse {s:?}")),
         }
+    }
+
+    /// Every value passed for option `name`, in command-line order —
+    /// for options that may repeat. Empty when the option was absent.
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.multi
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     /// Comma-separated list option, e.g. `--threads 1,2,4` → `[1,2,4]`.
@@ -151,5 +168,13 @@ mod tests {
         let a = parse("--impl cmp");
         assert_eq!(a.get_or("impl", "all"), "cmp");
         assert_eq!(a.get_or("mode", "baseline"), "baseline");
+    }
+
+    #[test]
+    fn repeated_options_accumulate_last_wins_in_map() {
+        let a = parse("--workload a.json --workload b.json --workload=c.json");
+        assert_eq!(a.get("workload"), Some("c.json"), "map keeps the last");
+        assert_eq!(a.get_all("workload"), vec!["a.json", "b.json", "c.json"]);
+        assert!(a.get_all("absent").is_empty());
     }
 }

@@ -1,0 +1,209 @@
+//! Spec-parser contract tests for the declarative workload library
+//! (DESIGN.md §14): strict unknown-key rejection with the offending
+//! key named, defaulting rules, round-trip of every committed
+//! `workloads/*.json`, and the zipf-exponent skew property the
+//! contention knob rests on.
+
+use std::path::Path;
+
+use cmpq::bench::spec::{load_workload_dir, Arrival, Measure, Target, WorkloadSpec};
+use cmpq::bench::workload::{PairConfig, Zipf};
+use cmpq::queue::Impl;
+use cmpq::util::XorShift64;
+
+/// The committed library, relative to the crate root.
+fn workload_dir() -> &'static Path {
+    Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../workloads"))
+}
+
+#[test]
+fn malformed_json_is_rejected_with_context() {
+    let e = WorkloadSpec::parse("{not json").unwrap_err();
+    assert!(e.contains("workload spec"), "{e}");
+    let e = WorkloadSpec::parse("[1,2]").unwrap_err();
+    assert!(e.contains("not an object"), "{e}");
+    let e = WorkloadSpec::parse("{\"ops\":1000}").unwrap_err();
+    assert!(e.contains("name"), "missing name must be called out: {e}");
+}
+
+#[test]
+fn unknown_keys_are_rejected_by_name() {
+    let e = WorkloadSpec::parse(r#"{"name":"t","opps":9}"#).unwrap_err();
+    assert!(e.contains("\"opps\""), "top-level key must be named: {e}");
+    let e =
+        WorkloadSpec::parse(r#"{"name":"t","arrival":{"kind":"open","burst_sz":9}}"#).unwrap_err();
+    assert!(e.contains("\"burst_sz\""), "nested key must be named: {e}");
+    // Keys legal for one arrival kind are still unknown for another.
+    let e =
+        WorkloadSpec::parse(r#"{"name":"t","arrival":{"kind":"closed","burst":4}}"#).unwrap_err();
+    assert!(e.contains("\"burst\""), "{e}");
+}
+
+#[test]
+fn defaulting_rules() {
+    let s = WorkloadSpec::parse(r#"{"name":"d"}"#).unwrap();
+    assert_eq!(s.target, Target::Queue);
+    assert_eq!(s.measure, Measure::Throughput);
+    assert_eq!(
+        s.impls,
+        vec![Impl::Cmp, Impl::Segmented, Impl::MsHp, Impl::Mutex]
+    );
+    assert_eq!(
+        s.pairs,
+        vec![PairConfig::symmetric(1), PairConfig::symmetric(4)]
+    );
+    assert_eq!(s.smoke_pairs, s.pairs, "smoke_pairs defaults to pairs");
+    assert_eq!(s.ops, 60_000);
+    assert_eq!(s.smoke_ops, 6_000, "smoke_ops defaults to ops/10");
+    assert_eq!((s.rounds, s.warmup_rounds), (3, 1));
+    assert_eq!(s.batches, vec![1]);
+    assert_eq!(s.arrival, Arrival::Closed);
+    assert!(!s.latency, "closed loop defaults latency off");
+    assert_eq!((s.keys, s.zipf_s), (0, 0.0));
+    assert_eq!((s.shards, s.max_rank_error), (4, 4096));
+    assert_eq!(s.sweep_max_rank_error, vec![0, 4096]);
+    assert_eq!((s.clients, s.workers, s.io_threads), (8, 2, 2));
+    assert_eq!((s.features, s.capacity_hint), (64, 1 << 16));
+    // smoke_ops floor when ops is tiny.
+    let tiny = WorkloadSpec::parse(r#"{"name":"d","ops":50}"#).unwrap();
+    assert_eq!(tiny.smoke_ops, 1000);
+    // Open/async arrivals flip the latency default on.
+    let open = WorkloadSpec::parse(r#"{"name":"d","arrival":{"kind":"open"}}"#).unwrap();
+    assert!(open.latency);
+    assert_eq!(
+        open.arrival,
+        Arrival::Open {
+            burst: 512,
+            gap_ms: 2
+        }
+    );
+}
+
+#[test]
+fn every_committed_workload_round_trips() {
+    let specs = load_workload_dir(workload_dir()).expect("committed library must load");
+    assert!(specs.len() >= 8, "library shrank to {}", specs.len());
+    for spec in &specs {
+        let back = WorkloadSpec::parse(&spec.to_json())
+            .unwrap_or_else(|e| panic!("round-trip of {:?} failed: {e}", spec.name));
+        assert_eq!(*spec, back, "round-trip changed {:?}", spec.name);
+    }
+    // The library must cover all four legacy scenarios, the sharded
+    // sweep, the zipf contention knob, and both serving transports.
+    let arrival_of = |name: &str| {
+        specs
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap_or_else(|| panic!("workload {name:?} missing from library"))
+    };
+    assert_eq!(arrival_of("closed_loop").arrival, Arrival::Closed);
+    assert!(matches!(
+        arrival_of("bursty").arrival,
+        Arrival::Open { .. }
+    ));
+    assert!(matches!(arrival_of("idle").arrival, Arrival::Idle { .. }));
+    assert!(matches!(
+        arrival_of("async_tasks").arrival,
+        Arrival::Async { .. }
+    ));
+    let sweep = arrival_of("rank_error_sweep");
+    assert_eq!(sweep.measure, Measure::RankError);
+    assert!(sweep.sweep_max_rank_error.contains(&0), "strict point");
+    assert!(sweep.sweep_max_rank_error.len() >= 3, "a sweep, not modes");
+    let zipf = arrival_of("zipf_contention");
+    assert!(zipf.keys > 0 && zipf.zipf_s > 0.0);
+    assert_eq!(arrival_of("coordinator").target, Target::Coordinator);
+    assert_eq!(arrival_of("tcp_ingress").target, Target::Tcp);
+    // Every latency-true workload uses an honest (open-loop) arrival
+    // or a request/response transport (DESIGN.md §14).
+    for s in &specs {
+        if s.latency && s.target == Target::Queue {
+            assert!(
+                s.arrival.measures_latency(),
+                "{:?} reports latency from a closed loop",
+                s.name
+            );
+        }
+    }
+}
+
+#[test]
+fn duplicate_names_and_empty_dirs_are_rejected() {
+    let dir = std::env::temp_dir().join(format!("cmpq-wl-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let e = load_workload_dir(&dir).unwrap_err();
+    assert!(e.contains("no *.json"), "{e}");
+    std::fs::write(dir.join("a.json"), r#"{"name":"same"}"#).unwrap();
+    std::fs::write(dir.join("b.json"), r#"{"name":"same"}"#).unwrap();
+    let e = load_workload_dir(&dir).unwrap_err();
+    assert!(e.contains("duplicate") && e.contains("same"), "{e}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn zipf_zero_exponent_is_uniform() {
+    let n = 64;
+    let z = Zipf::new(n, 0.0);
+    for k in 0..n {
+        let expect = (k + 1) as f64 / n as f64;
+        assert!(
+            (z.cdf(k) - expect).abs() < 1e-9,
+            "cdf({k}) = {} != {expect}",
+            z.cdf(k)
+        );
+    }
+}
+
+#[test]
+fn higher_zipf_exponent_strictly_skews_mass_to_low_keys() {
+    let n = 64;
+    // P(rank ≤ k) must strictly grow with s for every prefix k < n-1:
+    // more exponent, more mass on the low keys.
+    let exponents = [0.0, 0.5, 1.0, 1.5, 2.0];
+    for k in [0, 1, 7, 31] {
+        let mut prev = -1.0;
+        for &s in &exponents {
+            let c = Zipf::new(n, s).cdf(k);
+            assert!(
+                c > prev,
+                "cdf({k}) not strictly increasing in s: {c} after {prev} at s={s}"
+            );
+            prev = c;
+        }
+    }
+    // Sampling sanity: at s=2 the low quarter dominates; uniform s=0
+    // gives it ~a quarter.
+    let draws = 20_000;
+    let share = |s: f64| {
+        let z = Zipf::new(n, s);
+        let mut rng = XorShift64::new(7);
+        let low = (0..draws).filter(|_| z.sample(&mut rng) < n / 4).count();
+        low as f64 / draws as f64
+    };
+    let uniform = share(0.0);
+    let skewed = share(2.0);
+    assert!((uniform - 0.25).abs() < 0.05, "uniform low-share {uniform}");
+    assert!(skewed > 0.9, "s=2 low-share only {skewed}");
+}
+
+#[test]
+fn env_override_shadowing_is_applied_symmetrically() {
+    // Via the testable core, not real env vars (tests run in parallel).
+    let mut s =
+        WorkloadSpec::parse(r#"{"name":"t","ops":60000,"smoke_ops":9000,"pairs":[8]}"#).unwrap();
+    s.apply_overrides(Some("2500"), Some("1,4"));
+    assert_eq!((s.ops, s.smoke_ops), (2500, 2500));
+    assert_eq!(
+        s.pairs,
+        vec![PairConfig::symmetric(1), PairConfig::symmetric(4)]
+    );
+    assert_eq!(s.smoke_pairs, s.pairs);
+    // Absent/garbage overrides leave the spec untouched.
+    let mut s2 = WorkloadSpec::parse(r#"{"name":"t","ops":60000}"#).unwrap();
+    s2.apply_overrides(None, Some(""));
+    assert_eq!(s2.ops, 60_000);
+    assert_eq!(
+        s2.pairs,
+        vec![PairConfig::symmetric(1), PairConfig::symmetric(4)]
+    );
+}
