@@ -210,6 +210,14 @@ pub struct WorkloadRow {
     pub lat_p99_ns: Option<u64>,
     /// 99.9th-percentile latency in nanoseconds.
     pub lat_p999_ns: Option<u64>,
+    /// Fraction of blocking-wait exits that parked, from the queue's
+    /// control report at trial end (DESIGN.md §15); `None` for rows
+    /// whose implementation has no control plane.
+    pub park_ratio: Option<f64>,
+    /// Reclamation Bernoulli probability in effect at trial end — the
+    /// occupancy-tuned live value under `cmp-adaptive`, the configured
+    /// constant under plain `cmp`; `None` elsewhere.
+    pub reclaim_p: Option<f64>,
     /// Per-round throughput samples, pre-filter.
     pub samples: Vec<f64>,
 }
@@ -221,13 +229,21 @@ fn json_opt_u64(v: Option<u64>) -> String {
     }
 }
 
+fn json_opt_f64(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.6}"),
+        None => "null".to_string(),
+    }
+}
+
 /// `workload × impl × threads × batch × scenario → ops/s, CPU
 /// efficiency, latency percentiles`, written to `BENCH_throughput.json`
 /// so the whole scenario library is tracked across PRs rather than
 /// asserted. `ops_per_cpu_sec` and `cpu_util` are 0 when CPU time was
-/// unmeasurable (no procfs / below clock resolution); `rank_error_p99`
-/// and the `lat_*_ns` percentiles are numbers where the workload
-/// measured them and `null` elsewhere. [`diff_bench_json`] gates only
+/// unmeasurable (no procfs / below clock resolution); `rank_error_p99`,
+/// the `lat_*_ns` percentiles, and the control-plane observations
+/// `park_ratio`/`reclaim_p` are numbers where the workload measured
+/// them and `null` elsewhere. [`diff_bench_json`] gates only
 /// on throughput and CPU efficiency, so dumps from before these fields
 /// existed still diff cleanly against new ones.
 pub fn batch_throughput_json(rows: &[WorkloadRow]) -> String {
@@ -238,7 +254,7 @@ pub fn batch_throughput_json(rows: &[WorkloadRow]) -> String {
         }
         let _ = write!(
             s,
-            "{{\"workload\":\"{}\",\"impl\":\"{}\",\"pair\":\"{}\",\"threads\":{},\"batch\":{},\"scenario\":\"{}\",\"mean_ips\":{:.3},\"std_ips\":{:.3},\"ops_per_cpu_sec\":{:.3},\"cpu_util\":{:.5},\"rank_error_p99\":{},\"lat_p50_ns\":{},\"lat_p99_ns\":{},\"lat_p999_ns\":{},\"samples\":{:?}}}",
+            "{{\"workload\":\"{}\",\"impl\":\"{}\",\"pair\":\"{}\",\"threads\":{},\"batch\":{},\"scenario\":\"{}\",\"mean_ips\":{:.3},\"std_ips\":{:.3},\"ops_per_cpu_sec\":{:.3},\"cpu_util\":{:.5},\"rank_error_p99\":{},\"lat_p50_ns\":{},\"lat_p99_ns\":{},\"lat_p999_ns\":{},\"park_ratio\":{},\"reclaim_p\":{},\"samples\":{:?}}}",
             json_escape(&r.workload),
             json_escape(&r.impl_name),
             json_escape(&r.pair),
@@ -253,6 +269,8 @@ pub fn batch_throughput_json(rows: &[WorkloadRow]) -> String {
             json_opt_u64(r.lat_p50_ns),
             json_opt_u64(r.lat_p99_ns),
             json_opt_u64(r.lat_p999_ns),
+            json_opt_f64(r.park_ratio),
+            json_opt_f64(r.reclaim_p),
             r.samples
         );
     }
@@ -703,6 +721,8 @@ mod tests {
             lat_p50_ns: None,
             lat_p99_ns: None,
             lat_p999_ns: None,
+            park_ratio: None,
+            reclaim_p: None,
             samples: vec![ips],
         }
     }
@@ -717,6 +737,8 @@ mod tests {
         lat.lat_p50_ns = Some(1_200);
         lat.lat_p99_ns = Some(9_000);
         lat.lat_p999_ns = Some(55_000);
+        lat.park_ratio = Some(0.125);
+        lat.reclaim_p = Some(0.03125);
         let rows = vec![wrow("closed_loop", "cmp", 5.0e6), sharded, lat];
         let j = batch_throughput_json(&rows);
         let parsed = crate::util::json::Json::parse(&j).expect("valid JSON");
@@ -742,6 +764,14 @@ mod tests {
         assert_eq!(arr[0].get("lat_p50_ns"), Some(&crate::util::json::Json::Null));
         assert_eq!(arr[2].get("lat_p50_ns").unwrap().as_usize(), Some(1_200));
         assert_eq!(arr[2].get("lat_p999_ns").unwrap().as_usize(), Some(55_000));
+        // Control-plane observations: null where absent, numbers where
+        // the queue reported them.
+        assert_eq!(arr[0].get("park_ratio"), Some(&crate::util::json::Json::Null));
+        assert_eq!(arr[0].get("reclaim_p"), Some(&crate::util::json::Json::Null));
+        let pr = arr[2].get("park_ratio").unwrap().as_f64().unwrap();
+        assert!((pr - 0.125).abs() < 1e-9, "park_ratio round-trips: {pr}");
+        let rp = arr[2].get("reclaim_p").unwrap().as_f64().unwrap();
+        assert!((rp - 0.03125).abs() < 1e-9, "reclaim_p round-trips: {rp}");
     }
 
     #[test]

@@ -128,6 +128,10 @@ pub struct FactoryCell {
     /// Sojourn samples pooled across measured rounds; empty unless
     /// [`SuiteOptions::record_sojourn`] was set.
     pub sojourn_ns: Vec<u64>,
+    /// Control-plane report from the last measured round (each round
+    /// builds a fresh queue, so the last one reflects the steady
+    /// state); `None` for implementations without a control plane.
+    pub control: Option<crate::queue::ControlReport>,
 }
 
 /// Round-robin throughput suite over `factories × pairs`: every
@@ -145,6 +149,7 @@ pub fn factory_suite(
     let mut cpu_samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
     let mut util_samples: Vec<Vec<f64>> = vec![Vec::new(); cells];
     let mut sojourns: Vec<Vec<u64>> = vec![Vec::new(); cells];
+    let mut controls: Vec<Option<crate::queue::ControlReport>> = vec![None; cells];
     for round in 0..(opts.rounds + opts.warmup_rounds) {
         let measured = round >= opts.warmup_rounds;
         for (pi, &pair) in pairs.iter().enumerate() {
@@ -170,6 +175,9 @@ pub fn factory_suite(
                         util_samples[idx].push(u);
                     }
                     sojourns[idx].extend(t.sojourn_ns);
+                    if t.control.is_some() {
+                        controls[idx] = t.control;
+                    }
                 }
             }
         }
@@ -195,6 +203,7 @@ pub fn factory_suite(
                 mean_ops_per_cpu,
                 mean_cpu_util,
                 sojourn_ns: std::mem::take(&mut sojourns[idx]),
+                control: controls[idx],
             });
         }
     }
@@ -479,6 +488,8 @@ fn run_queue_throughput(
                 lat_p50_ns: lat.map(|l| l.0),
                 lat_p99_ns: lat.map(|l| l.1),
                 lat_p999_ns: lat.map(|l| l.2),
+                park_ratio: cell.control.and_then(|c| c.park_ratio),
+                reclaim_p: cell.control.and_then(|c| c.reclaim_p),
                 samples: cell.samples,
             });
         }
@@ -544,6 +555,8 @@ fn run_rank_sweep(
                 lat_p50_ns: None,
                 lat_p99_ns: None,
                 lat_p999_ns: None,
+                park_ratio: None,
+                reclaim_p: None,
                 samples: vec![t.items_per_sec],
             });
         }
@@ -632,6 +645,8 @@ fn run_coordinator(spec: &WorkloadSpec, ops: u64) -> WorkloadRow {
         lat_p50_ns: lat.map(|l| l.0),
         lat_p99_ns: lat.map(|l| l.1),
         lat_p999_ns: lat.map(|l| l.2),
+        park_ratio: None,
+        reclaim_p: None,
         samples: vec![ips],
     }
 }
@@ -723,6 +738,8 @@ fn run_tcp(spec: &WorkloadSpec, ops: u64) -> Result<WorkloadRow, String> {
         lat_p50_ns: lat.map(|l| l.0),
         lat_p99_ns: lat.map(|l| l.1),
         lat_p999_ns: lat.map(|l| l.2),
+        park_ratio: None,
+        reclaim_p: None,
         samples: vec![ips],
     })
 }
@@ -772,6 +789,10 @@ mod tests {
         assert_eq!(cells[0].name, "cmp");
         // 2 measured rounds × 1000 items, warmup discarded.
         assert_eq!(cells[0].sojourn_ns.len(), 2000);
+        // CMP reports its control plane into the cell; the effective
+        // reclamation probability is always known.
+        let control = cells[0].control.expect("cmp has a control report");
+        assert!(control.reclaim_p.is_some());
     }
 
     #[test]

@@ -175,6 +175,10 @@ pub struct ThroughputTrial {
     /// [`TrialConfig::record_sojourn`] was set; feed to
     /// [`sojourn_percentiles`] for the SLO report.
     pub sojourn_ns: Vec<u64>,
+    /// The queue's control-plane report sampled at trial end
+    /// (`park_ratio`, live `reclaim_p`, learned spin budget). `None`
+    /// for implementations without one (everything but CMP).
+    pub control: Option<crate::queue::ControlReport>,
 }
 
 /// Consecutive empty polls (with producers finished) that terminate a
@@ -525,6 +529,7 @@ pub fn run_throughput_on(
         }),
         cpu_util: cpu_seconds.map(|c| c / (elapsed.as_secs_f64().max(1e-12) * threads)),
         sojourn_ns,
+        control: queue.control_report(),
     }
 }
 

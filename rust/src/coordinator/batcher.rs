@@ -9,6 +9,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::queue::cmp::{CmpConfig, CmpQueue};
+use crate::runtime::adaptive::{flush_wait_for, Ewma};
 use crate::util::Backoff;
 
 use super::metrics::Metrics;
@@ -56,6 +57,11 @@ pub fn new_work_queue() -> WorkQueue {
 /// immediately; the slice only bounds stop-latency.
 const BATCHER_PARK: Duration = Duration::from_millis(50);
 
+/// Smoothing factor for the observed-batch-fill EWMA that drives the
+/// adaptive flush deadline ([`flush_wait_for`]): a couple of full
+/// batches shrink the deadline, a couple of starved ones restore it.
+const FILL_ALPHA: f64 = 0.25;
+
 /// Run one batcher loop over `shard` of `router`, publishing batches to
 /// `work`. Returns when `stop` is set *and* the shard is drained.
 ///
@@ -80,10 +86,20 @@ const BATCHER_PARK: Duration = Duration::from_millis(50);
 /// rotation ([`Router::mark_dead`]) and this thread becomes a drain
 /// loop that NACKs anything still routed there — a dead shard costs
 /// clients an explicit error, never a hung wait.
+///
+/// With `adaptive` set (derived from the server's
+/// `ServerConfig::queue_config`, so one flag arms the whole control
+/// plane) the flush deadline is tuned online: an EWMA of batch fill
+/// observed at each flush feeds [`flush_wait_for`], shrinking the
+/// deadline when batches fill on their own and restoring the full
+/// `max_wait` when the shard is starved. With it unset the fixed
+/// `policy.max_wait` schedule is unchanged.
+#[allow(clippy::too_many_arguments)] // supervision wiring: every arg is load-bearing
 pub fn batcher_loop(
     router: Arc<Router>,
     shard: usize,
     policy: BatchPolicy,
+    adaptive: bool,
     work: WorkQueue,
     stop: Arc<AtomicBool>,
     metrics: Arc<Metrics>,
@@ -95,7 +111,16 @@ pub fn batcher_loop(
     let mut restarts: u64 = 0;
     loop {
         let pass = catch_unwind(AssertUnwindSafe(|| {
-            batcher_core(&router, shard, &policy, &work, &stop, &metrics, &mut pending)
+            batcher_core(
+                &router,
+                shard,
+                &policy,
+                adaptive,
+                &work,
+                &stop,
+                &metrics,
+                &mut pending,
+            )
         }));
         match pass {
             Ok(()) => return,
@@ -167,10 +192,12 @@ fn dead_shard_drain(router: &Router, shard: usize, stop: &AtomicBool, metrics: &
 
 /// One supervised collection pass (the pre-supervision `batcher_loop`
 /// body). Returns on drain-then-exit; panics propagate to the wrapper.
+#[allow(clippy::too_many_arguments)] // supervision wiring: every arg is load-bearing
 fn batcher_core(
     router: &Router,
     shard: usize,
     policy: &BatchPolicy,
+    adaptive: bool,
     work: &WorkQueue,
     stop: &AtomicBool,
     metrics: &Metrics,
@@ -181,8 +208,19 @@ fn batcher_core(
     } else {
         Some(Instant::now())
     };
+    // Observed batch fill at flush time; local to the pass, so a
+    // supervisor restart re-learns the regime instead of trusting
+    // pre-panic history.
+    let mut fill = Ewma::new(FILL_ALPHA);
     let mut idle = Backoff::new();
     loop {
+        // Effective flush deadline for this iteration: the configured
+        // knob on the fixed path, fill-feedback-scaled when adaptive.
+        let max_wait = if adaptive {
+            flush_wait_for(policy.max_wait, fill.value().unwrap_or(0.0))
+        } else {
+            policy.max_wait
+        };
         // `pending` is always below max_batch here (flushed on fill).
         let room = policy.max_batch - pending.len();
         let got = if idle.is_yielding() {
@@ -192,7 +230,7 @@ fn batcher_core(
             // how stale a `stop` observation can get).
             let backstop = Instant::now() + BATCHER_PARK;
             let deadline = match window_start {
-                Some(t) => (t + policy.max_wait).min(backstop),
+                Some(t) => (t + max_wait).min(backstop),
                 None => backstop,
             };
             router.drain_deadline(shard, room, pending, deadline)
@@ -205,18 +243,22 @@ fn batcher_core(
                 window_start = Some(Instant::now());
             }
             if pending.len() >= policy.max_batch {
+                observe_fill(&mut fill, pending.len(), policy, max_wait, metrics);
                 flush(pending, work, metrics);
                 window_start = None;
             }
         } else {
             let expired = window_start
-                .map(|t| t.elapsed() >= policy.max_wait)
+                .map(|t| t.elapsed() >= max_wait)
                 .unwrap_or(false);
             if !pending.is_empty() && expired {
+                observe_fill(&mut fill, pending.len(), policy, max_wait, metrics);
                 flush(pending, work, metrics);
                 window_start = None;
             } else if stop.load(Ordering::Acquire) {
-                // Drain-then-exit: flush whatever is left.
+                // Drain-then-exit: flush whatever is left (no fill
+                // observation — a shutdown remnant says nothing about
+                // the arrival regime).
                 if router.inflight(shard) == 0 {
                     if !pending.is_empty() {
                         flush(pending, work, metrics);
@@ -228,6 +270,20 @@ fn batcher_core(
             }
         }
     }
+}
+
+/// Fold one sealed batch's fill into the EWMA and publish the batcher
+/// control gauges ([`Metrics::set_batch_window`]). Runs once per flush,
+/// never on the per-request path.
+fn observe_fill(
+    fill: &mut Ewma,
+    sealed: usize,
+    policy: &BatchPolicy,
+    max_wait: Duration,
+    metrics: &Metrics,
+) {
+    let observed = fill.observe(sealed as f64 / policy.max_batch.max(1) as f64);
+    metrics.set_batch_window(observed, max_wait);
 }
 
 fn flush(pending: &mut Vec<InferRequest>, work: &WorkQueue, metrics: &Metrics) {
@@ -288,6 +344,14 @@ mod tests {
         router: &Arc<Router>,
         policy: BatchPolicy,
     ) -> (WorkQueue, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
+        spawn_batcher_mode(router, policy, false)
+    }
+
+    fn spawn_batcher_mode(
+        router: &Arc<Router>,
+        policy: BatchPolicy,
+        adaptive: bool,
+    ) -> (WorkQueue, Arc<AtomicBool>, std::thread::JoinHandle<()>) {
         let work = new_work_queue();
         let stop = Arc::new(AtomicBool::new(false));
         let h = {
@@ -299,6 +363,7 @@ mod tests {
                     router,
                     0,
                     policy,
+                    adaptive,
                     work,
                     stop,
                     Arc::new(Metrics::new()),
@@ -369,6 +434,58 @@ mod tests {
         assert_eq!(batch.requests.len(), 3, "partial batch after max_wait");
         stop.store(true, Ordering::Release);
         h.join().unwrap();
+    }
+
+    #[test]
+    fn adaptive_batcher_flushes_full_and_partial() {
+        // Same contract as the fixed path: full batches seal on size,
+        // partials on deadline — adaptivity only moves the deadline
+        // within (0, max_wait], never past it.
+        let router = Arc::new(Router::new(1, RoutePolicy::RoundRobin, CmpConfig::default()));
+        let (work, stop, h) = spawn_batcher_mode(
+            &router,
+            BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(5),
+            },
+            true,
+        );
+        for i in 0..6 {
+            router.route(req(i)).ok().unwrap();
+        }
+        let mut got = Vec::new();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while got.iter().map(|b: &Batch| b.requests.len()).sum::<usize>() < 6 {
+            assert!(Instant::now() < deadline, "adaptive batcher stalled");
+            match work.pop() {
+                Some(b) => got.push(b),
+                None => std::thread::yield_now(),
+            }
+        }
+        assert_eq!(got[0].requests.len(), 4, "first batch seals on size");
+        let ids: Vec<u64> = got
+            .iter()
+            .flat_map(|b| b.requests.iter().map(|r| r.id))
+            .collect();
+        assert_eq!(ids, (0..6).collect::<Vec<_>>(), "FIFO preserved");
+        stop.store(true, Ordering::Release);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn observe_fill_publishes_gauges() {
+        let metrics = Metrics::new();
+        let policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+        };
+        let mut fill = Ewma::new(FILL_ALPHA);
+        observe_fill(&mut fill, 8, &policy, policy.max_wait, &metrics);
+        assert_eq!(metrics.batch_fill_permille.load(Ordering::Relaxed), 1000);
+        assert_eq!(metrics.batch_wait_us.load(Ordering::Relaxed), 2000);
+        // A starved flush drags the EWMA down: 1.0 + 0.25 × (0.25 − 1.0).
+        observe_fill(&mut fill, 2, &policy, policy.max_wait, &metrics);
+        assert_eq!(metrics.batch_fill_permille.load(Ordering::Relaxed), 813);
     }
 
     #[test]

@@ -48,6 +48,14 @@ pub struct Metrics {
     pub batchers_dead: AtomicU64,
     /// Gauge: workers currently running but not heartbeating (wedged).
     pub workers_stalled: AtomicU64,
+    /// Gauge: EWMA of observed batch fill at flush time, in permille
+    /// (0–1000). Written by batchers after every flush; last writer
+    /// wins across shards, which is fine for a coarse control signal.
+    pub batch_fill_permille: AtomicU64,
+    /// Gauge: effective batcher flush deadline in microseconds (equals
+    /// `BatchPolicy::max_wait` on the fixed path; shrinks under the
+    /// adaptive control plane when batches run full).
+    pub batch_wait_us: AtomicU64,
     /// Latched once any stage is abandoned: the server still serves
     /// what it can, but at reduced capacity.
     degraded: AtomicBool,
@@ -148,6 +156,15 @@ impl Metrics {
     /// Update the wedged-worker gauge (set by the supervisor monitor).
     pub fn set_stalled(&self, n: u64) {
         self.workers_stalled.store(n, Ordering::Relaxed);
+    }
+
+    /// Update the batcher control gauges: smoothed flush fill (0.0–1.0)
+    /// and the effective flush deadline currently in force.
+    pub fn set_batch_window(&self, fill: f64, wait: Duration) {
+        let permille = (fill.clamp(0.0, 1.0) * 1000.0).round() as u64;
+        self.batch_fill_permille.store(permille, Ordering::Relaxed);
+        self.batch_wait_us
+            .store(wait.as_micros() as u64, Ordering::Relaxed);
     }
 
     /// Whether any stage has been abandoned (reduced capacity).
@@ -309,5 +326,16 @@ mod tests {
         assert_eq!(m.batchers_dead.load(Ordering::Relaxed), 1);
         m.set_stalled(3);
         assert_eq!(m.workers_stalled.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn batch_window_gauges_clamp_and_convert() {
+        let m = Metrics::new();
+        m.set_batch_window(0.75, Duration::from_millis(2));
+        assert_eq!(m.batch_fill_permille.load(Ordering::Relaxed), 750);
+        assert_eq!(m.batch_wait_us.load(Ordering::Relaxed), 2000);
+        m.set_batch_window(1.7, Duration::from_micros(500));
+        assert_eq!(m.batch_fill_permille.load(Ordering::Relaxed), 1000);
+        assert_eq!(m.batch_wait_us.load(Ordering::Relaxed), 500);
     }
 }

@@ -202,6 +202,9 @@ impl Server {
         };
         let supervision = Arc::new(Supervision::new(worker_slots, cfg.supervisor.clone()));
 
+        // One flag arms the whole control plane: the batcher's adaptive
+        // flush deadline follows the queues' `CmpConfig::adaptive`.
+        let adaptive = cfg.queue_config.adaptive;
         let batchers = (0..cfg.shards)
             .map(|shard| {
                 let (r, w, s) = (router.clone(), work.clone(), stop_batchers.clone());
@@ -210,7 +213,7 @@ impl Server {
                 let restart = cfg.supervisor.clone();
                 std::thread::Builder::new()
                     .name(format!("batcher-{shard}"))
-                    .spawn(move || batcher_loop(r, shard, policy, w, s, m, restart))
+                    .spawn(move || batcher_loop(r, shard, policy, adaptive, w, s, m, restart))
                     .expect("spawn batcher")
             })
             .collect();
@@ -495,6 +498,13 @@ impl Server {
     /// Nodes retained by the work queue's CMP pool (telemetry).
     pub fn work_queue_footprint(&self) -> u64 {
         self.work.footprint_nodes()
+    }
+
+    /// The batcher→worker work queue (telemetry: the `/metrics`
+    /// endpoint reads its stats, control report, and adaptive
+    /// decisions from here).
+    pub fn work_queue(&self) -> &crate::queue::cmp::CmpQueue<super::batcher::Batch> {
+        &self.work
     }
 
     /// Drain-then-park shutdown: batchers stop first (flushing whatever

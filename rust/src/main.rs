@@ -59,8 +59,8 @@ bench <fig1|tables|fig2|faults|sharded|all> [--ops N] [--rounds R] [--threads 1,
 bench --workload <spec.json> [--workload ..] [--workload-dir D] [--smoke] [--verbose]   run declarative workload specs (README Workloads)\n  \
 bench sharded [--shards N] [--relaxed] [--max-rank-error K] [--ops N] [--threads 1,4]   rank error vs ops/s (DESIGN.md §13)\n  \
 bench diff <old.json> <new.json> [--threshold-pct P]   compare two BENCH_throughput.json dumps\n  \
-serve [--requests N] [--clients C] [--shards S] [--workers W] [--idle-ms N] [--async-workers] [--echo]\n  \
-serve --tcp [--addr A] [--io-threads N] [--tenant-max-inflight T] [--requests N] [--clients C]\n  \
+serve [--requests N] [--clients C] [--shards S] [--workers W] [--idle-ms N] [--async-workers] [--adaptive] [--metrics-port P] [--echo]\n  \
+serve --tcp [--addr A] [--io-threads N] [--tenant-max-inflight T] [--requests N] [--clients C] [--adaptive] [--metrics-port P]\n  \
 chaos [--requests N] [--clients C] [--seed S] [--p-panic P] [--p-delay P] [--delay-us U] [--max-inflight D]\n  \
 chaos --tcp [--connections N] [--concurrency K] [--io-threads N] [--seed S] [--p-net P] [--p-disconnect P] [--p-stall P] [--read-timeout-ms M]\n  \
 selftest [--artifacts DIR]\n  \
@@ -403,7 +403,7 @@ fn cmd_serve(args: &Args) -> i32 {
         eprintln!("serve: loading AOT model from {}", dir.display());
         model_factory(&dir)
     };
-    let cfg = ServerConfig {
+    let mut cfg = ServerConfig {
         shards: args.get_parse("shards", 2usize),
         workers: args.get_parse("workers", 2usize),
         // Async worker mode (DESIGN.md §10): the workers become
@@ -411,6 +411,16 @@ fn cmd_serve(args: &Args) -> i32 {
         async_workers: args.flag("async-workers"),
         ..ServerConfig::default()
     };
+    if args.flag("adaptive") {
+        // Arm the adaptive control plane (DESIGN.md §15) on every queue
+        // in the pipeline; the Bernoulli trigger is what the live
+        // reclamation probability feeds.
+        cfg.queue_config = cfg
+            .queue_config
+            .with_trigger(cmpq::queue::cmp::ReclaimTrigger::Bernoulli)
+            .with_adaptive();
+        eprintln!("serve: adaptive control plane enabled");
+    }
     if cfg.async_workers {
         eprintln!(
             "serve: async worker mode ({} tasks, 1 host thread)",
@@ -421,6 +431,21 @@ fn cmd_serve(args: &Args) -> i32 {
         return cmd_serve_tcp(args, cfg, factory);
     }
     let server = Arc::new(Server::start(cfg, factory));
+
+    // Optional live-metrics sidecar: `--metrics-port P` serves the
+    // Prometheus text exposition at GET /metrics (port 0 = ephemeral,
+    // printed below). Shut down before the server Arc is unwrapped.
+    let metrics_http = args.get("metrics-port").map(|port| {
+        use cmpq::net::metrics_http::{render_prometheus, MetricsServer, RenderFn};
+        let render: RenderFn = {
+            let server = server.clone();
+            Arc::new(move || render_prometheus(&server, None))
+        };
+        let ms = MetricsServer::start(&format!("127.0.0.1:{port}"), render)
+            .expect("bind metrics endpoint");
+        eprintln!("serve: metrics on http://{}/metrics", ms.addr());
+        ms
+    });
 
     let n_requests: u64 = args.get_parse("requests", 512u64);
     let n_clients: usize = args.get_parse("clients", 8usize);
@@ -476,6 +501,11 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     }
 
+    // The metrics thread holds a Server clone via its render closure;
+    // join it before reclaiming unique ownership.
+    if let Some(ms) = metrics_http {
+        ms.shutdown();
+    }
     let server = Arc::try_unwrap(server).ok().expect("all clients joined");
     let report = server.shutdown();
     println!("{}", report.metrics.report());
@@ -509,6 +539,22 @@ fn cmd_serve_tcp(args: &Args, cfg: ServerConfig, factory: EngineFactory) -> i32 
     };
     let addr = net.addr();
     eprintln!("serve: TCP front end on {addr}");
+
+    // Live-metrics sidecar (also exports the socket-side counters).
+    // Must shut down before `net.shutdown()`, which reclaims unique
+    // ownership of the Server the render closure holds.
+    let metrics_http = args.get("metrics-port").map(|port| {
+        use cmpq::net::metrics_http::{render_prometheus, MetricsServer, RenderFn};
+        let render: RenderFn = {
+            let server = net.server_handle();
+            let shared = net.shared_handle();
+            Arc::new(move || render_prometheus(&server, Some(&shared)))
+        };
+        let ms = MetricsServer::start(&format!("127.0.0.1:{port}"), render)
+            .expect("bind metrics endpoint");
+        eprintln!("serve: metrics on http://{}/metrics", ms.addr());
+        ms
+    });
 
     let n_requests: u64 = args.get_parse("requests", 512u64);
     let n_clients: usize = args.get_parse("clients", 8usize);
@@ -557,6 +603,9 @@ fn cmd_serve_tcp(args: &Args, cfg: ServerConfig, factory: EngineFactory) -> i32 
         ok as f64 / elapsed.as_secs_f64()
     );
     println!("{}", net.metrics().report());
+    if let Some(ms) = metrics_http {
+        ms.shutdown();
+    }
     let report = net.shutdown();
     println!("{}", report.metrics.report());
     println!(

@@ -229,6 +229,21 @@ impl NetServer {
         &self.shared
     }
 
+    /// Cloned handle to the inference server for sidecars (the
+    /// `/metrics` endpoint's render closure). Every clone must be
+    /// dropped before [`NetServer::shutdown`], which reclaims unique
+    /// ownership — shut the sidecar down first.
+    pub fn server_handle(&self) -> Arc<Server> {
+        self.server.clone()
+    }
+
+    /// Cloned handle to the shared front-end state (sidecars; no
+    /// uniqueness requirement at shutdown, unlike
+    /// [`NetServer::server_handle`]).
+    pub fn shared_handle(&self) -> Arc<NetShared> {
+        self.shared.clone()
+    }
+
     /// Graceful stop: drain every connection (pending replies flush
     /// within the drain budget), join the I/O threads, then shut the
     /// inference server down. The returned report carries both the

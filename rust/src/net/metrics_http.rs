@@ -1,0 +1,405 @@
+//! Dependency-free Prometheus text `/metrics` endpoint (DESIGN.md §15).
+//!
+//! One extra thread runs the crate's own single-threaded
+//! [`Executor`](crate::util::executor::Executor) with an adaptive
+//! [`Reactor`](crate::util::executor::Reactor) — the same idiom as the
+//! TCP ingress ([`super::listener`]) — serving a minimal HTTP/1.0
+//! subset: `GET /metrics` returns the Prometheus text exposition
+//! (version 0.0.4), everything else gets a 404. No HTTP library, no
+//! keep-alive, no TLS: a scrape is one connection, one request, one
+//! response, close.
+//!
+//! The endpoint is a pure *reader*: the render closure samples
+//! published counters and gauges (relaxed atomic loads) on each scrape,
+//! so scraping never touches the lock-free fast paths — the adaptive
+//! control decisions it exports were already published out-of-band by
+//! the control plane ([`crate::runtime::adaptive`]).
+
+use std::collections::BTreeSet;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::server::Server;
+use crate::queue::ConcurrentQueue;
+use crate::util::executor::{Executor, LocalSpawner, Reactor};
+
+use super::NetShared;
+
+/// Renders the current exposition on every scrape. Captures whatever
+/// handles it needs (e.g. an `Arc<Server>`); the serving thread owns
+/// the closure, so joining the thread via [`MetricsServer::shutdown`]
+/// releases those handles.
+pub type RenderFn = Arc<dyn Fn() -> String + Send + Sync>;
+
+/// Reactor tick floor while scrapes are making progress.
+const POLL_MIN: Duration = Duration::from_micros(200);
+/// Reactor tick ceiling while the endpoint is idle.
+const POLL_MAX: Duration = Duration::from_millis(20);
+/// Per-connection budget: a scrape that cannot finish reading its
+/// request head and flushing the response within this long is dropped.
+const SCRAPE_DEADLINE: Duration = Duration::from_secs(2);
+/// Request heads larger than this are dropped (a scraper sends a few
+/// hundred bytes; anything bigger is not a scraper).
+const MAX_HEAD: usize = 8 * 1024;
+
+/// Incremental builder for the Prometheus text exposition format.
+///
+/// Enforces the conventions the e2e tests pin: every family gets a
+/// `# HELP` and `# TYPE` line, family names are unique per exposition,
+/// and counters carry the `_total` suffix (appended here, so callers
+/// pass the base name).
+pub struct PromText {
+    out: String,
+    seen: BTreeSet<String>,
+}
+
+impl PromText {
+    /// An empty exposition.
+    pub fn new() -> Self {
+        PromText {
+            out: String::new(),
+            seen: BTreeSet::new(),
+        }
+    }
+
+    fn family(&mut self, name: &str, help: &str, kind: &str) {
+        assert!(
+            self.seen.insert(name.to_string()),
+            "duplicate metric family {name}"
+        );
+        self.out
+            .push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+    }
+
+    /// Append a monotone counter; `_total` is appended to `name`.
+    pub fn counter(&mut self, name: &str, help: &str, value: u64) {
+        let full = format!("{name}_total");
+        self.family(&full, help, "counter");
+        self.out.push_str(&format!("{full} {value}\n"));
+    }
+
+    /// Append a gauge (point-in-time value, may go down).
+    pub fn gauge(&mut self, name: &str, help: &str, value: f64) {
+        self.family(name, help, "gauge");
+        self.out.push_str(&format!("{name} {value}\n"));
+    }
+
+    /// Finish: the complete exposition body.
+    pub fn render(self) -> String {
+        self.out
+    }
+}
+
+impl Default for PromText {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Render the full exposition for a running pipeline: coordinator
+/// counters, work-queue stats and adaptive-control decisions, and —
+/// when the TCP ingress is present — the socket-side counters.
+///
+/// Every adaptive decision the control plane publishes is here:
+/// `cmpq_spin_budget`, `cmpq_gap_ewma_seconds`, `cmpq_reclaim_p`,
+/// `cmpq_park_ratio`, `cmpq_batch_fill`, `cmpq_batch_wait_seconds`.
+pub fn render_prometheus(server: &Server, net: Option<&NetShared>) -> String {
+    let mut p = PromText::new();
+    let ld = |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed);
+
+    // Serving ledger (coordinator Metrics).
+    let m = server.metrics();
+    p.counter("cmpq_submitted", "Requests accepted by the server.", ld(&m.submitted));
+    p.counter("cmpq_completed", "Responses delivered, including failures and NACKs.", ld(&m.completed));
+    p.counter("cmpq_batches", "Model invocations executed.", ld(&m.batches));
+    p.counter("cmpq_padding_rows", "Padded rows across all batches.", ld(&m.padding_rows));
+    p.counter("cmpq_failures", "Failed inferences (engine errors).", ld(&m.failures));
+    p.counter("cmpq_nacks", "Requests resolved with an explicit NACK.", ld(&m.nacks));
+    p.counter("cmpq_deadline_expired", "Requests NACKed for an expired deadline.", ld(&m.deadline_expired));
+    p.counter("cmpq_shed", "Requests refused at admission.", ld(&m.shed));
+    p.counter("cmpq_shed_tenant", "Requests refused by the per-tenant edge cap.", ld(&m.shed_tenant));
+    p.counter("cmpq_worker_panics", "Worker panics caught by supervision.", ld(&m.worker_panics));
+    p.counter("cmpq_worker_restarts", "Supervisor-driven worker respawns.", ld(&m.worker_restarts));
+    p.counter("cmpq_workers_dead", "Workers abandoned past the restart cap.", ld(&m.workers_dead));
+    p.counter("cmpq_batcher_panics", "Batcher panics caught by the restart wrapper.", ld(&m.batcher_panics));
+    p.counter("cmpq_batchers_dead", "Batchers abandoned past the restart cap.", ld(&m.batchers_dead));
+    p.gauge("cmpq_workers_stalled", "Workers running but not heartbeating.", ld(&m.workers_stalled) as f64);
+    p.gauge("cmpq_degraded", "1 when any supervised stage has been abandoned.", server.is_degraded() as u64 as f64);
+
+    // Batcher control plane (written by observe_fill at each flush).
+    p.gauge("cmpq_batch_fill", "EWMA of batch fill observed at flush (0-1).", ld(&m.batch_fill_permille) as f64 / 1000.0);
+    p.gauge("cmpq_batch_wait_seconds", "Effective batcher flush deadline.", ld(&m.batch_wait_us) as f64 / 1e6);
+
+    // Work queue: CMP stats plus the published adaptive decisions.
+    let q = server.work_queue();
+    let s = q.stats();
+    p.counter("cmpq_wait_spins", "Spin iterations on the blocking wait path.", s.wait_spins);
+    p.counter("cmpq_wait_parks", "Park registrations on the blocking wait path.", s.wait_parks);
+    p.counter("cmpq_wait_sleeps", "Eventcount waits that reached the kernel-sleep loop.", q.wait_sleeps());
+    p.counter("cmpq_reclaim_passes", "Completed reclamation passes.", s.reclaim_passes);
+    p.counter("cmpq_nodes_reclaimed", "Nodes recycled to the pool.", s.nodes_reclaimed);
+    p.gauge("cmpq_footprint_nodes", "Total nodes drawn from the OS by the work queue.", q.footprint_nodes() as f64);
+    p.gauge("cmpq_nodes_in_use", "Work-queue nodes currently outside the freelist.", q.nodes_in_use() as f64);
+
+    let snap = q.adaptive_snapshot();
+    p.gauge("cmpq_spin_budget", "Learned spin steps before parking (0-7).", snap.spin_budget as f64);
+    p.gauge("cmpq_gap_ewma_seconds", "Smoothed consumer inter-arrival gap.", snap.gap_ewma_ns as f64 / 1e9);
+    if let Some(report) = q.control_report() {
+        if let Some(pr) = report.park_ratio {
+            p.gauge("cmpq_park_ratio", "Parks over parks-plus-spins on the wait path.", pr);
+        }
+        if let Some(rp) = report.reclaim_p {
+            p.gauge("cmpq_reclaim_p", "Live Bernoulli reclamation probability.", rp);
+        }
+    }
+
+    // Socket-side counters (TCP ingress only).
+    if let Some(shared) = net {
+        let n = &shared.metrics;
+        p.counter("cmpq_net_accepted", "Connections accepted.", ld(&n.accepted));
+        p.counter("cmpq_net_closed", "Connections fully closed.", ld(&n.closed));
+        p.counter("cmpq_net_frames_in", "Request frames decoded.", ld(&n.frames_in));
+        p.counter("cmpq_net_frames_out", "Response frames flushed.", ld(&n.frames_out));
+        p.counter("cmpq_net_busy_replies", "Busy replies sent by either admission layer.", ld(&n.busy_replies));
+        p.counter("cmpq_net_tenant_busy", "Busy replies from the per-tenant cap.", ld(&n.tenant_busy));
+        p.counter("cmpq_net_read_timeouts", "Connections drained by the slow-loris deadline.", ld(&n.read_timeouts));
+        p.counter("cmpq_net_write_timeouts", "Connections closed for stalled writes.", ld(&n.write_timeouts));
+        p.counter("cmpq_net_disconnects", "Abnormal disconnects with work outstanding.", ld(&n.disconnects));
+        p.counter("cmpq_net_abandoned_inflight", "In-flight responses whose connection died first.", ld(&n.abandoned_inflight));
+        p.counter("cmpq_net_drained_replies", "Replies flushed during graceful drain.", ld(&n.drained_replies));
+        p.counter("cmpq_net_protocol_errors", "Connections poisoned by undecodable bytes.", ld(&n.protocol_errors));
+        p.counter("cmpq_net_accept_errors", "Accept-loop errors.", ld(&n.accept_errors));
+        p.gauge("cmpq_net_active_conns", "Connections accepted but not yet closed.", ld(&shared.active_conns) as f64);
+    }
+    p.render()
+}
+
+/// Handle to a running `/metrics` endpoint. Call
+/// [`MetricsServer::shutdown`] to stop it and release the render
+/// closure's handles *before* tearing down whatever those handles
+/// point at (e.g. before `NetServer::shutdown` reclaims unique
+/// ownership of its `Server`). Dropping without `shutdown` detaches
+/// the thread, mirroring [`super::listener::NetServer`].
+pub struct MetricsServer {
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    reactor: Reactor,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (`host:port`; port 0 picks an ephemeral port) and
+    /// serve `render`'s output at `GET /metrics`.
+    pub fn start(addr: &str, render: RenderFn) -> io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let reactor = Reactor::new(POLL_MIN, POLL_MAX);
+        let thread = {
+            let (stop, reactor) = (stop.clone(), reactor.clone());
+            std::thread::Builder::new()
+                .name("metrics-http".into())
+                .spawn(move || {
+                    let mut ex = Executor::new();
+                    let spawner = ex.spawner();
+                    ex.spawn(scrape_accept_loop(listener, render, stop, reactor, spawner));
+                    ex.run();
+                })?
+        };
+        Ok(MetricsServer {
+            local_addr,
+            stop,
+            reactor,
+            thread: Some(thread),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting, join the serving thread, and drop the render
+    /// closure (releasing every handle it captured).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.reactor.kick();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Accept loop: one task per scrape connection on the same executor.
+async fn scrape_accept_loop(
+    listener: TcpListener,
+    render: RenderFn,
+    stop: Arc<AtomicBool>,
+    reactor: Reactor,
+    spawner: LocalSpawner,
+) {
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                spawner.spawn(serve_scrape(stream, render.clone(), reactor.clone()));
+                reactor.note_progress();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                reactor.tick().await;
+            }
+            Err(_) => {
+                reactor.tick().await;
+            }
+        }
+    }
+}
+
+/// `true` iff the request line asks for `GET /metrics`.
+fn wants_metrics(head: &[u8]) -> bool {
+    let line = head.split(|&b| b == b'\r').next().unwrap_or(&[]);
+    let Ok(line) = std::str::from_utf8(line) else {
+        return false;
+    };
+    let mut parts = line.split_whitespace();
+    parts.next() == Some("GET") && matches!(parts.next(), Some("/metrics") | Some("/metrics/"))
+}
+
+/// One scrape: read the request head, render, write, close.
+async fn serve_scrape(mut stream: TcpStream, render: RenderFn, reactor: Reactor) {
+    let deadline = Instant::now() + SCRAPE_DEADLINE;
+    let mut head: Vec<u8> = Vec::with_capacity(256);
+    let mut buf = [0u8; 512];
+    let ok = loop {
+        if Instant::now() >= deadline || head.len() > MAX_HEAD {
+            return;
+        }
+        match stream.read(&mut buf) {
+            Ok(0) => return,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                reactor.note_progress();
+                if head.windows(4).any(|w| w == b"\r\n\r\n") {
+                    break wants_metrics(&head);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                reactor.tick().await;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    };
+    let (status, body) = if ok {
+        ("200 OK", render())
+    } else {
+        ("404 Not Found", "not found\n".to_string())
+    };
+    let resp = format!(
+        "HTTP/1.0 {status}\r\n\
+         Content-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    let mut bytes = resp.as_bytes();
+    while !bytes.is_empty() {
+        if Instant::now() >= deadline {
+            return;
+        }
+        match stream.write(bytes) {
+            Ok(0) => return,
+            Ok(n) => {
+                bytes = &bytes[n..];
+                reactor.note_progress();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                reactor.tick().await;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+    let _ = stream.flush();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prom_text_builds_valid_families() {
+        let mut p = PromText::new();
+        p.counter("cmpq_things", "Things counted.", 42);
+        p.gauge("cmpq_level", "Current level.", 0.25);
+        let out = p.render();
+        assert!(out.contains("# TYPE cmpq_things_total counter\n"));
+        assert!(out.contains("cmpq_things_total 42\n"));
+        assert!(out.contains("# TYPE cmpq_level gauge\n"));
+        assert!(out.contains("cmpq_level 0.25\n"));
+        assert!(out.contains("# HELP cmpq_things_total Things counted.\n"));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate metric family")]
+    fn prom_text_rejects_duplicate_families() {
+        let mut p = PromText::new();
+        p.gauge("cmpq_level", "Once.", 1.0);
+        p.gauge("cmpq_level", "Twice.", 2.0);
+    }
+
+    #[test]
+    fn request_line_parsing() {
+        assert!(wants_metrics(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n"));
+        assert!(wants_metrics(b"GET /metrics/ HTTP/1.0\r\n\r\n"));
+        assert!(!wants_metrics(b"GET / HTTP/1.1\r\n\r\n"));
+        assert!(!wants_metrics(b"POST /metrics HTTP/1.1\r\n\r\n"));
+        assert!(!wants_metrics(b"\xff\xfe\r\n\r\n"));
+    }
+
+    #[test]
+    fn scrape_roundtrip_and_404() {
+        let hits = Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let render: RenderFn = {
+            let hits = hits.clone();
+            Arc::new(move || {
+                hits.fetch_add(1, Ordering::Relaxed);
+                let mut p = PromText::new();
+                p.counter("cmpq_scrapes", "Scrapes served.", 1);
+                p.render()
+            })
+        };
+        let ms = MetricsServer::start("127.0.0.1:0", render).expect("bind");
+        let addr = ms.addr();
+
+        let get = |path: &str| -> String {
+            let mut c = TcpStream::connect(addr).expect("connect");
+            write!(c, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+            let mut out = String::new();
+            c.read_to_string(&mut out).expect("read reply");
+            out
+        };
+
+        let ok = get("/metrics");
+        assert!(ok.starts_with("HTTP/1.0 200 OK\r\n"), "got: {ok}");
+        assert!(ok.contains("cmpq_scrapes_total 1"));
+        assert!(ok.contains("Content-Type: text/plain; version=0.0.4"));
+
+        let missing = get("/nope");
+        assert!(missing.starts_with("HTTP/1.0 404 Not Found\r\n"));
+        assert!(!missing.contains("cmpq_scrapes_total"));
+
+        assert_eq!(hits.load(Ordering::Relaxed), 1, "404s never render");
+        ms.shutdown();
+    }
+}

@@ -35,6 +35,7 @@
 pub mod codec;
 pub mod conn;
 pub mod listener;
+pub mod metrics_http;
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

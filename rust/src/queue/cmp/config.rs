@@ -55,6 +55,12 @@ pub struct CmpConfig {
     /// unconditionally when a queue is constructed, so a manual field
     /// write to `reclaim_period` cannot leave it stale.
     pub bernoulli_p: f64,
+    /// Enable the adaptive control plane (DESIGN.md §15): a learned
+    /// per-consumer spin budget replaces the fixed spin phase on the
+    /// blocking wait path, and window-occupancy feedback tunes the
+    /// live Bernoulli reclamation probability. Off by default — the
+    /// fixed-knob paths are byte-identical when this is `false`.
+    pub adaptive: bool,
 }
 
 /// Paper's `MIN_WINDOW` floor; also comfortably exceeds any thread count
@@ -78,6 +84,7 @@ impl Default for CmpConfig {
             track_stats: true,
             magazine_capacity: DEFAULT_MAGAZINE_CAPACITY,
             bernoulli_p: 1.0 / 1024.0,
+            adaptive: false,
         }
     }
 }
@@ -153,6 +160,14 @@ impl CmpConfig {
         self.magazine_capacity = 0;
         self
     }
+
+    /// Enable the adaptive control plane (DESIGN.md §15): learned spin
+    /// budget on the blocking wait path, occupancy-tuned live
+    /// reclamation probability.
+    pub fn with_adaptive(mut self) -> Self {
+        self.adaptive = true;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -170,6 +185,7 @@ mod tests {
         assert!(c.max_nodes.is_none());
         assert_eq!(c.magazine_capacity, DEFAULT_MAGAZINE_CAPACITY);
         assert!((c.bernoulli_p - 1.0 / c.reclaim_period as f64).abs() < 1e-15);
+        assert!(!c.adaptive, "fixed knobs must stay the default");
     }
 
     #[test]
@@ -216,6 +232,12 @@ mod tests {
         assert!(!c.use_scan_cursor);
         assert!(c.helping);
         assert!(!c.track_stats);
+    }
+
+    #[test]
+    fn adaptive_builder_applies() {
+        let c = CmpConfig::default().with_adaptive();
+        assert!(c.adaptive);
     }
 
     #[test]

@@ -21,7 +21,8 @@ use super::config::{CmpConfig, ReclaimTrigger};
 use super::node::{Node, STATE_AVAILABLE, STATE_CLAIMED, STATE_FREE};
 use super::pool::NodePool;
 use super::stats::{CmpStats, CmpStatsSnapshot};
-use crate::queue::ConcurrentQueue;
+use crate::queue::{ConcurrentQueue, ControlReport};
+use crate::runtime::adaptive::{AdaptiveSnapshot, GapTracker, QueueAdaptive};
 use crate::util::{Backoff, WaitStrategy, XorShift64};
 
 thread_local! {
@@ -40,6 +41,12 @@ thread_local! {
             h.finish() | 1
         },
     ));
+
+    /// Per-thread inter-arrival tracker for the adaptive wait path
+    /// (DESIGN.md §15), tagged with the owning queue's adaptive id so
+    /// a thread that moves between queues re-learns the new regime
+    /// instead of dragging a stale gap estimate across.
+    static GAP_TRACKER: RefCell<(u64, GapTracker)> = RefCell::new((0, GapTracker::new()));
 }
 
 /// Outcome of the dequeue Phase 1–2 scan ([`CmpQueue::claim_first`]):
@@ -86,6 +93,11 @@ pub struct CmpQueue<T> {
     /// relaxed load per enqueue; parking happens exclusively on the
     /// empty slow path.
     waiters: WaitStrategy,
+    /// Published adaptive decisions (DESIGN.md §15): spin budget, gap
+    /// EWMA, live reclamation probability. Plain relaxed std atomics,
+    /// read by waiters once per wait and written only off the
+    /// lock-free fast path; inert unless `config.adaptive`.
+    pub(super) adaptive: QueueAdaptive,
 }
 
 unsafe impl<T: Send> Send for CmpQueue<T> {}
@@ -137,6 +149,7 @@ impl<T: Send + 'static> CmpQueue<T> {
             (*dummy).next.store(ptr::null_mut(), Ordering::Relaxed);
             (*dummy).cycle.store(super::node::DUMMY_CYCLE, Ordering::Relaxed);
         }
+        let adaptive = QueueAdaptive::new(config.bernoulli_p);
         Self {
             head: CachePadded::new(AtomicPtr::new(dummy)),
             tail: CachePadded::new(AtomicPtr::new(dummy)),
@@ -148,6 +161,7 @@ impl<T: Send + 'static> CmpQueue<T> {
             config,
             stats: CmpStats::default(),
             waiters: WaitStrategy::new(),
+            adaptive,
         }
     }
 
@@ -159,6 +173,21 @@ impl<T: Send + 'static> CmpQueue<T> {
     /// Statistics snapshot (all zeros when `track_stats` is off).
     pub fn stats(&self) -> CmpStatsSnapshot {
         self.stats.snapshot()
+    }
+
+    /// Published adaptive-control decisions (DESIGN.md §15). With
+    /// `adaptive` off the snapshot stays at its optimistic initial
+    /// values (full spin budget, `live_p == bernoulli_p`) — nothing
+    /// writes it.
+    pub fn adaptive_snapshot(&self) -> AdaptiveSnapshot {
+        self.adaptive.snapshot()
+    }
+
+    /// Eventcount sleeps: wait calls on this queue that reached the
+    /// kernel-sleep loop (exported by the `/metrics` endpoint;
+    /// unconditional — not gated by `track_stats`).
+    pub fn wait_sleeps(&self) -> u64 {
+        self.waiters.sleeps()
     }
 
     /// Total nodes drawn from the OS (pool footprint; never shrinks —
@@ -402,7 +431,16 @@ impl<T: Send + 'static> CmpQueue<T> {
                 last_cycle / n != (last_cycle - span) / n
             }
             ReclaimTrigger::Bernoulli => {
-                let p = (self.config.bernoulli_p * span as f64).min(1.0);
+                // Adaptive mode reads the live, occupancy-tuned
+                // probability published by the last reclamation pass
+                // (DESIGN.md §15); one relaxed load, no extra traffic
+                // on the fixed path.
+                let base = if self.config.adaptive {
+                    self.adaptive.live_p()
+                } else {
+                    self.config.bernoulli_p
+                };
+                let p = (base * span as f64).min(1.0);
                 TRIGGER_RNG.with(|r| r.borrow_mut().chance(p))
             }
             ReclaimTrigger::Manual => false,
@@ -800,26 +838,49 @@ impl<T: Send + 'static> CmpQueue<T> {
         // time does not advance; deadline paths are checked by their
         // wakeup edges).
         let model = crate::model::shims_active();
-        loop {
+        // Adaptive spin budget (DESIGN.md §15): sampled once per wait
+        // from the queue's published decisions, so one wait follows
+        // one consistent policy. Forced off under the model checker —
+        // the spin phase is skipped there anyway, and reading wall
+        // clocks would perturb schedule determinism. A budget of
+        // MAX_SPIN_STEPS reproduces the fixed `is_yielding` schedule
+        // exactly; smaller budgets only park *sooner*, so the
+        // register → re-attempt → sleep protocol below (the
+        // lost-wakeup guard) is unchanged in either mode.
+        let adaptive = self.config.adaptive && !model;
+        let budget = if adaptive {
+            self.adaptive.spin_budget()
+        } else {
+            0
+        };
+        let mut spins = 0u64;
+        let result = loop {
             if let Some(r) = attempt() {
-                return Some(r);
+                break Some(r);
             }
             if let Some(d) = deadline {
                 if !model && Instant::now() >= d {
-                    return None;
+                    break None;
                 }
             }
-            if !model && !backoff.is_yielding() {
+            let keep_spinning = if adaptive {
+                backoff.step() < budget
+            } else {
+                !backoff.is_yielding()
+            };
+            if !model && keep_spinning {
                 backoff.spin();
+                spins += 1;
                 continue;
             }
             // RAII registration: if `attempt` (a queue re-poll running
             // arbitrary payload Drops) unwinds, the waiter count is
             // still decremented — a leak here would permanently force
             // every producer onto the notify lock path.
+            CmpStats::bump(&self.stats.wait_parks, self.config.track_stats);
             let registration = self.waiters.registration();
             if let Some(r) = attempt() {
-                return Some(r); // registration drops → cancel
+                break Some(r); // registration drops → cancel
             }
             match deadline {
                 Some(d) => {
@@ -827,12 +888,34 @@ impl<T: Send + 'static> CmpQueue<T> {
                         // Deadline expired while parked: one final
                         // attempt so a push racing the expiry is not
                         // left behind.
-                        return attempt();
+                        break attempt();
                     }
                 }
                 None => registration.wait(),
             }
+        };
+        CmpStats::add(&self.stats.wait_spins, spins, self.config.track_stats);
+        if adaptive && result.is_some() {
+            self.observe_arrival();
         }
+        result
+    }
+
+    /// Record an arrival observed by the blocking wait path (adaptive
+    /// mode only): fold the gap since this thread's previous arrival
+    /// into its EWMA and publish the updated estimate and spin budget.
+    /// Runs strictly after the claim — never inside the lock-free
+    /// scan/claim path (DESIGN.md §15).
+    fn observe_arrival(&self) {
+        GAP_TRACKER.with(|t| {
+            let mut t = t.borrow_mut();
+            if t.0 != self.adaptive.id() {
+                *t = (self.adaptive.id(), GapTracker::new());
+            }
+            if let Some(ewma_ns) = t.1.observe(Instant::now()) {
+                self.adaptive.record_gap(ewma_ns);
+            }
+        });
     }
 
     /// [`Self::park_wait`] over [`Self::pop`].
@@ -1028,7 +1111,11 @@ impl<T: Send + 'static> ConcurrentQueue<T> for CmpQueue<T> {
     }
 
     fn name(&self) -> &'static str {
-        "cmp"
+        if self.config.adaptive {
+            "cmp-adaptive"
+        } else {
+            "cmp"
+        }
     }
 
     fn is_strict_fifo(&self) -> bool {
@@ -1037,6 +1124,24 @@ impl<T: Send + 'static> ConcurrentQueue<T> for CmpQueue<T> {
 
     fn is_lock_free(&self) -> bool {
         true
+    }
+
+    fn control_report(&self) -> Option<ControlReport> {
+        let s = self.stats.snapshot();
+        let waits = s.wait_spins + s.wait_parks;
+        ControlReport {
+            // Fraction of blocking-wait effort that ended in a park
+            // registration; needs `track_stats` for the inputs.
+            park_ratio: (self.config.track_stats && waits > 0)
+                .then(|| s.wait_parks as f64 / waits as f64),
+            reclaim_p: Some(if self.config.adaptive {
+                self.adaptive.live_p()
+            } else {
+                self.config.bernoulli_p
+            }),
+            spin_budget: Some(self.adaptive.spin_budget()),
+        }
+        .into()
     }
 }
 

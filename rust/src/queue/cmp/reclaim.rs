@@ -38,6 +38,24 @@ impl<T: Send + 'static> CmpQueue<T> {
         self.reclaim_busy.store(false, Ordering::Release);
         CmpStats::bump(&self.stats.reclaim_passes, self.config.track_stats);
         CmpStats::add(&self.stats.nodes_reclaimed, freed, self.config.track_stats);
+        // Occupancy feedback (DESIGN.md §15): publish a live Bernoulli
+        // probability for the *next* trigger decisions. Occupancy is
+        // the live backlog (enqueue cycle minus the dequeue frontier)
+        // as a fraction of the protection window — NOT `nodes_in_use`,
+        // which stays ≈ W even on a drained queue because consumed
+        // nodes remain linked until they exit the window. Only the
+        // single reclaimer writes it — once per pass, never on the
+        // lock-free enqueue/dequeue paths — and only in adaptive mode;
+        // the fixed path keeps the configured constant untouched.
+        if self.config.adaptive {
+            let backlog = self.enqueue_cycle().saturating_sub(self.dequeue_cycle());
+            let occ = backlog as f64 / self.config.window.max(1) as f64;
+            self.adaptive
+                .set_live_p(crate::runtime::adaptive::reclaim_p_for(
+                    self.config.bernoulli_p,
+                    occ,
+                ));
+        }
         freed
     }
 
@@ -267,6 +285,49 @@ mod tests {
             q.footprint_nodes() < 4096,
             "footprint={} should be bounded by W + slack",
             q.footprint_nodes()
+        );
+    }
+
+    #[test]
+    fn adaptive_reclaim_p_tracks_backlog() {
+        let q: CmpQueue<u64> = CmpQueue::with_config(manual_cfg(64).with_adaptive());
+        let base = q.config().bernoulli_p;
+        assert_eq!(q.adaptive_snapshot().live_p, base, "seeded from config");
+        // Drained queue: backlog 0 after the pass → eager (p above base).
+        for i in 0..5000 {
+            q.push(i).unwrap();
+        }
+        for _ in 0..5000 {
+            q.pop().unwrap();
+        }
+        q.reclaim();
+        let eager = q.adaptive_snapshot().live_p;
+        assert!(eager > base, "low occupancy must raise p ({eager} vs {base})");
+        // Hot queue: backlog well past the window → lazy (p below base).
+        for i in 0..5000 {
+            q.push(i).unwrap();
+        }
+        q.reclaim();
+        let lazy = q.adaptive_snapshot().live_p;
+        assert!(lazy < base, "high occupancy must lower p ({lazy} vs {base})");
+        assert!(eager > lazy);
+    }
+
+    #[test]
+    fn fixed_mode_never_touches_live_p() {
+        let q: CmpQueue<u64> = CmpQueue::with_config(manual_cfg(64));
+        let base = q.config().bernoulli_p;
+        for i in 0..5000 {
+            q.push(i).unwrap();
+        }
+        for _ in 0..5000 {
+            q.pop().unwrap();
+        }
+        q.reclaim();
+        assert_eq!(
+            q.adaptive_snapshot().live_p,
+            base,
+            "adaptive off: the published p must stay the configured constant"
         );
     }
 

@@ -40,6 +40,12 @@ pub(crate) struct CmpStats {
     pub batch_dequeues: CachePadded<AtomicU64>,
     /// Items dequeued through `pop_batch`.
     pub batch_dequeued_items: CachePadded<AtomicU64>,
+    /// Spin iterations performed on the blocking wait path (flushed
+    /// once per wait, not per iteration).
+    pub wait_spins: CachePadded<AtomicU64>,
+    /// Park registrations on the blocking wait path (spin phase gave
+    /// up and the consumer announced itself to the eventcount).
+    pub wait_parks: CachePadded<AtomicU64>,
 }
 
 impl CmpStats {
@@ -76,6 +82,8 @@ impl CmpStats {
             batch_enqueued_items: self.batch_enqueued_items.load(Ordering::Relaxed),
             batch_dequeues: self.batch_dequeues.load(Ordering::Relaxed),
             batch_dequeued_items: self.batch_dequeued_items.load(Ordering::Relaxed),
+            wait_spins: self.wait_spins.load(Ordering::Relaxed),
+            wait_parks: self.wait_parks.load(Ordering::Relaxed),
         }
     }
 }
@@ -111,6 +119,10 @@ pub struct CmpStatsSnapshot {
     pub batch_dequeues: u64,
     /// Items dequeued through `pop_batch`.
     pub batch_dequeued_items: u64,
+    /// Spin iterations performed on the blocking wait path.
+    pub wait_spins: u64,
+    /// Park registrations on the blocking wait path.
+    pub wait_parks: u64,
 }
 
 impl CmpStatsSnapshot {
@@ -119,7 +131,7 @@ impl CmpStatsSnapshot {
         format!(
             "enq_retries={} extra_scans={} claim_fails={} cursor_adv={} cursor_miss={} \
              lost_claims={} reclaims={} reclaim_contended={} nodes_reclaimed={} payloads_reclaimed={} \
-             batch_enq={}/{} batch_deq={}/{}",
+             batch_enq={}/{} batch_deq={}/{} wait_spins={} wait_parks={}",
             self.enq_retries,
             self.deq_extra_scans,
             self.deq_claim_fails,
@@ -134,6 +146,8 @@ impl CmpStatsSnapshot {
             self.batch_enqueued_items,
             self.batch_dequeues,
             self.batch_dequeued_items,
+            self.wait_spins,
+            self.wait_parks,
         )
     }
 }
@@ -172,6 +186,8 @@ mod tests {
             "lost_claims",
             "reclaims",
             "nodes_reclaimed",
+            "wait_spins",
+            "wait_parks",
         ] {
             assert!(txt.contains(key), "missing {key} in {txt}");
         }

@@ -427,6 +427,33 @@ pub trait ConcurrentQueue<T: Send>: Send + Sync {
     fn is_bounded(&self) -> bool {
         false
     }
+
+    /// Adaptive-control observability (DESIGN.md §15): the queue's
+    /// current park ratio, reclamation probability, and spin budget,
+    /// reported into bench rows and the `/metrics` endpoint. Default
+    /// `None` — implementations without a control plane report
+    /// nothing; CMP overrides it.
+    fn control_report(&self) -> Option<ControlReport> {
+        None
+    }
+}
+
+/// Point-in-time adaptive-control observations reported by a queue
+/// through [`ConcurrentQueue::control_report`] (DESIGN.md §15).
+/// Fields are individually optional: an implementation reports only
+/// what it measures.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ControlReport {
+    /// Fraction of blocking-wait exits that went through a park
+    /// registration (`parks / (spins + parks)`); `None` when the
+    /// inputs are not tracked or nothing has waited yet.
+    pub park_ratio: Option<f64>,
+    /// Reclamation Bernoulli probability in effect — the live,
+    /// occupancy-tuned value in adaptive mode, the configured
+    /// constant otherwise.
+    pub reclaim_p: Option<f64>,
+    /// Spin steps a blocking waiter performs before parking.
+    pub spin_budget: Option<u32>,
 }
 
 /// Identifier for each queue implementation, used by the CLI and the
@@ -435,6 +462,9 @@ pub trait ConcurrentQueue<T: Send>: Send + Sync {
 pub enum Impl {
     /// The paper's contribution (Cyclic Memory Protection).
     Cmp,
+    /// CMP with the adaptive control plane on (DESIGN.md §15):
+    /// learned spin budget, occupancy-tuned Bernoulli reclamation.
+    CmpAdaptive,
     /// Michael & Scott + hazard pointers — the paper's "Boost" comparator.
     MsHp,
     /// Michael & Scott + epoch-based reclamation (§2.2 discussion).
@@ -455,8 +485,9 @@ pub enum Impl {
 impl Impl {
     /// All implementations, in the order the paper's tables list them
     /// (CMP, Moodycamel, Boost) followed by the extra comparators.
-    pub const ALL: [Impl; 8] = [
+    pub const ALL: [Impl; 9] = [
         Impl::Cmp,
+        Impl::CmpAdaptive,
         Impl::Segmented,
         Impl::MsHp,
         Impl::MsEbr,
@@ -474,6 +505,7 @@ impl Impl {
     pub fn name(&self) -> &'static str {
         match self {
             Impl::Cmp => "cmp",
+            Impl::CmpAdaptive => "cmp-adaptive",
             Impl::MsHp => "ms-hp",
             Impl::MsEbr => "ms-ebr",
             Impl::MsHelping => "ms-helping",
@@ -488,6 +520,7 @@ impl Impl {
     pub fn label(&self) -> &'static str {
         match self {
             Impl::Cmp => "CMP",
+            Impl::CmpAdaptive => "CMP (adaptive control)",
             Impl::MsHp => "Boost-like (M&S+HP)",
             Impl::MsEbr => "M&S+EBR",
             Impl::MsHelping => "M&S (helping)",
@@ -513,6 +546,17 @@ impl Impl {
         match self {
             Impl::Cmp => {
                 let mut cfg = cmp::CmpConfig::default();
+                if std::env::var_os("CMPQ_NO_STATS").is_some() {
+                    cfg = cfg.without_stats();
+                }
+                Arc::new(cmp::CmpQueue::with_config(cfg))
+            }
+            Impl::CmpAdaptive => {
+                // Bernoulli trigger so the occupancy-tuned live `p`
+                // actually drives reclamation (Modulo ignores it).
+                let mut cfg = cmp::CmpConfig::default()
+                    .with_trigger(cmp::ReclaimTrigger::Bernoulli)
+                    .with_adaptive();
                 if std::env::var_os("CMPQ_NO_STATS").is_some() {
                     cfg = cfg.without_stats();
                 }

@@ -1,0 +1,392 @@
+//! Online control laws for the adaptive runtime plane (DESIGN.md §15).
+//!
+//! Three fixed knobs become observed feedback loops, all **off by
+//! default** behind `CmpConfig::adaptive` (the coordinator derives the
+//! batcher's flag from its `ServerConfig::queue_config`, so one switch
+//! arms the whole control plane):
+//!
+//! 1. **Spin vs park** — a per-consumer EWMA of inter-arrival gaps
+//!    ([`GapTracker`]) feeds [`spin_budget_for`]: tight gaps keep the
+//!    full spin phase (parking would only add wakeup latency), wide
+//!    gaps shed spin steps until the consumer parks immediately.
+//! 2. **Reclamation probability** — window occupancy feeds
+//!    [`reclaim_p_for`]: a near-empty protection window reclaims
+//!    eagerly (tight window, small footprint), a hot window backs off
+//!    and lets the amortized batch grow (the paper's lazy-reclamation
+//!    argument).
+//! 3. **Batcher deadline** — observed batch fill feeds
+//!    [`flush_wait_for`]: full batches flush on a short deadline
+//!    (waiting buys nothing), starved batchers stretch toward the
+//!    configured maximum.
+//!
+//! Every law here is a **pure function** over observed state, kept out
+//! of the lock-free fast path: observations happen only on the blocking
+//! wait path, inside reclamation passes, and at batch-flush edges, and
+//! the resulting decisions are published through plain relaxed atomics
+//! ([`QueueAdaptive`]) that hot-path readers sample once per wait.
+//! Nothing in this module touches the model-check shims, so enabling
+//! adaptivity cannot perturb the §9 enumerated state spaces.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Spin steps the *fixed* path performs before parking
+/// (`Backoff::is_yielding` flips after this many `spin()` calls); the
+/// adaptive budget ranges over `0..=MAX_SPIN_STEPS`, so a budget of
+/// `MAX_SPIN_STEPS` reproduces the fixed schedule exactly.
+pub const MAX_SPIN_STEPS: u32 = 7;
+
+/// Inter-arrival gap (ns) at or below which the full spin budget is
+/// kept: a wakeup that will arrive within ~4 µs is cheaper to spin for
+/// than to park and pay a futex round trip.
+pub const FULL_SPIN_GAP_NS: u64 = 4_096;
+
+/// Gap observations are clamped to this (1 s): a consumer waking from a
+/// long idle night should re-learn the current regime in a few
+/// arrivals, not drag a multi-minute outlier through the EWMA forever.
+pub const GAP_CAP_NS: u64 = 1_000_000_000;
+
+/// Smoothing factor for the inter-arrival EWMA: small enough to ride
+/// out single stragglers, large enough to flip regimes within ~a dozen
+/// arrivals.
+pub const GAP_ALPHA: f64 = 0.25;
+
+/// Exponentially weighted moving average with explicit priming: the
+/// first observation *becomes* the value (no bias toward a synthetic
+/// zero start), every later one folds in with weight `alpha`.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: f64,
+    primed: bool,
+}
+
+impl Ewma {
+    /// A fresh, unprimed estimator. `alpha` is clamped to `(0, 1]`.
+    pub fn new(alpha: f64) -> Self {
+        Self {
+            alpha: alpha.clamp(f64::MIN_POSITIVE, 1.0),
+            value: 0.0,
+            primed: false,
+        }
+    }
+
+    /// Fold in one observation and return the updated estimate.
+    pub fn observe(&mut self, sample: f64) -> f64 {
+        if self.primed {
+            self.value += self.alpha * (sample - self.value);
+        } else {
+            self.value = sample;
+            self.primed = true;
+        }
+        self.value
+    }
+
+    /// Current estimate, `None` until the first observation.
+    pub fn value(&self) -> Option<f64> {
+        self.primed.then_some(self.value)
+    }
+
+    /// The smoothing factor this estimator was built with.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+}
+
+/// Map a smoothed inter-arrival gap to a spin budget (number of
+/// `Backoff::spin` steps before parking).
+///
+/// Monotone non-increasing in the gap: gaps at or below
+/// [`FULL_SPIN_GAP_NS`] keep all [`MAX_SPIN_STEPS`] steps, and every
+/// doubling beyond it sheds one step, reaching an immediate park
+/// (budget 0) at ~64× the full-spin gap (~262 µs). Faster arrivals can
+/// therefore never move a consumer *toward* parking — the monotonicity
+/// property pinned by `tests/adaptive_control.rs`.
+pub fn spin_budget_for(gap_ns: u64) -> u32 {
+    if gap_ns <= FULL_SPIN_GAP_NS {
+        return MAX_SPIN_STEPS;
+    }
+    // gap > FULL_SPIN_GAP_NS ⇒ ratio ≥ 1 ⇒ ilog2 well-defined.
+    let shed = (gap_ns / FULL_SPIN_GAP_NS).ilog2() + 1;
+    MAX_SPIN_STEPS.saturating_sub(shed)
+}
+
+/// Occupancy at or below which reclamation runs at its most eager
+/// (4× the configured base probability).
+pub const RECLAIM_EAGER_OCC: f64 = 0.25;
+/// Most-eager multiplier on the base Bernoulli probability.
+pub const RECLAIM_MAX_SCALE: f64 = 4.0;
+/// Laziest multiplier, reached when the window is fully occupied.
+pub const RECLAIM_MIN_SCALE: f64 = 0.25;
+
+/// Map protection-window occupancy (`nodes in use / window`, clamped
+/// to `[0, 1]`) to a live reclamation probability.
+///
+/// Low occupancy ⇒ eager reclamation (up to [`RECLAIM_MAX_SCALE`]× the
+/// base `p`, capped at 1.0): the window is mostly slack, so trimming it
+/// tight is cheap and keeps the node footprint minimal. High occupancy
+/// ⇒ lazy reclamation (down to [`RECLAIM_MIN_SCALE`]×): the queue is
+/// hot, passes would find little to free, and the amortized batch
+/// should be allowed to grow. Monotone non-increasing in occupancy.
+pub fn reclaim_p_for(base_p: f64, occupancy: f64) -> f64 {
+    let occ = occupancy.clamp(0.0, 1.0);
+    let scale = if occ <= RECLAIM_EAGER_OCC {
+        RECLAIM_MAX_SCALE
+    } else {
+        let t = (occ - RECLAIM_EAGER_OCC) / (1.0 - RECLAIM_EAGER_OCC);
+        RECLAIM_MAX_SCALE + t * (RECLAIM_MIN_SCALE - RECLAIM_MAX_SCALE)
+    };
+    (base_p * scale).clamp(0.0, 1.0)
+}
+
+/// Batch fill at which the flush deadline starts shrinking; below it
+/// the batcher waits the full configured `max_wait`.
+pub const FLUSH_FULL_FILL: f64 = 0.5;
+/// Floor on the deadline scale, so a saturated batcher still coalesces
+/// a little instead of degenerating to per-item flushes.
+pub const FLUSH_MIN_SCALE: f64 = 0.25;
+
+/// Map observed batch fill (`batch len / max_batch`, clamped to
+/// `[0, 1]`) to an effective flush deadline.
+///
+/// Starved batchers (fill below [`FLUSH_FULL_FILL`]) keep the full
+/// `max_wait` — waiting is how they coalesce at all. As fill rises the
+/// deadline shrinks linearly to [`FLUSH_MIN_SCALE`]` × max_wait`:
+/// batches that fill on their own gain nothing from waiting out the
+/// clock, so latency is returned to the caller.
+pub fn flush_wait_for(max_wait: Duration, fill: f64) -> Duration {
+    let f = fill.clamp(0.0, 1.0);
+    let scale = if f <= FLUSH_FULL_FILL {
+        1.0
+    } else {
+        let t = (f - FLUSH_FULL_FILL) / (1.0 - FLUSH_FULL_FILL);
+        1.0 + t * (FLUSH_MIN_SCALE - 1.0)
+    };
+    max_wait.mul_f64(scale)
+}
+
+/// Per-consumer inter-arrival observer: timestamps successive arrivals
+/// and maintains the smoothed gap that drives [`spin_budget_for`].
+///
+/// Lives in consumer thread-locals — observing an arrival is two
+/// subtractions and a multiply, with no shared-state traffic; only the
+/// resulting estimate is published (see [`QueueAdaptive::record_gap`]).
+#[derive(Debug, Clone)]
+pub struct GapTracker {
+    last: Option<Instant>,
+    ewma: Ewma,
+}
+
+impl GapTracker {
+    /// A fresh tracker with no arrivals observed.
+    pub fn new() -> Self {
+        Self {
+            last: None,
+            ewma: Ewma::new(GAP_ALPHA),
+        }
+    }
+
+    /// Record an arrival at `now`; returns the updated smoothed gap in
+    /// nanoseconds, or `None` for the very first arrival (no gap yet).
+    /// Gaps are clamped to [`GAP_CAP_NS`].
+    pub fn observe(&mut self, now: Instant) -> Option<u64> {
+        let gap = match self.last {
+            Some(prev) => {
+                let ns = now.saturating_duration_since(prev).as_nanos();
+                Some((ns.min(GAP_CAP_NS as u128)) as u64)
+            }
+            None => None,
+        };
+        self.last = Some(now);
+        gap.map(|g| self.ewma.observe(g as f64) as u64)
+    }
+
+    /// Current smoothed gap (ns), `None` until two arrivals were seen.
+    pub fn gap_ewma_ns(&self) -> Option<u64> {
+        self.ewma.value().map(|v| v as u64)
+    }
+}
+
+impl Default for GapTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Monotone id source for [`QueueAdaptive`] instances, letting
+/// thread-local [`GapTracker`]s detect that they have been handed a
+/// different queue and reset instead of dragging stale gaps across.
+static NEXT_ADAPTIVE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Shared adaptive state of one queue: the latest published decisions,
+/// readable from any thread with relaxed loads.
+///
+/// Deliberately built on raw `std` atomics (never the model-check
+/// shims): decisions are advisory gauges, and keeping them invisible
+/// to the §9 enumerator leaves the modeled state spaces unchanged.
+#[derive(Debug)]
+pub struct QueueAdaptive {
+    id: u64,
+    /// Latest published smoothed inter-arrival gap (ns).
+    gap_ewma_ns: AtomicU64,
+    /// Latest spin budget derived from the gap (stored widened).
+    spin_budget: AtomicU64,
+    /// Live reclamation probability, stored as `f64` bits.
+    live_p_bits: AtomicU64,
+}
+
+impl QueueAdaptive {
+    /// Fresh state: full spin budget (optimistic — an unknown regime
+    /// spins like the fixed path), live `p` seeded from the configured
+    /// base probability.
+    pub fn new(base_p: f64) -> Self {
+        Self {
+            id: NEXT_ADAPTIVE_ID.fetch_add(1, Ordering::Relaxed),
+            gap_ewma_ns: AtomicU64::new(0),
+            spin_budget: AtomicU64::new(MAX_SPIN_STEPS as u64),
+            live_p_bits: AtomicU64::new(base_p.to_bits()),
+        }
+    }
+
+    /// Process-unique id of this instance (thread-local tracker reset
+    /// detection).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Publish a smoothed gap observation and the spin budget derived
+    /// from it.
+    pub fn record_gap(&self, gap_ewma_ns: u64) {
+        self.gap_ewma_ns.store(gap_ewma_ns, Ordering::Relaxed);
+        self.spin_budget
+            .store(spin_budget_for(gap_ewma_ns) as u64, Ordering::Relaxed);
+    }
+
+    /// Current spin budget (steps before parking), in
+    /// `0..=`[`MAX_SPIN_STEPS`].
+    pub fn spin_budget(&self) -> u32 {
+        self.spin_budget.load(Ordering::Relaxed) as u32
+    }
+
+    /// Latest published smoothed inter-arrival gap (ns); 0 until a
+    /// consumer has published one.
+    pub fn gap_ewma_ns(&self) -> u64 {
+        self.gap_ewma_ns.load(Ordering::Relaxed)
+    }
+
+    /// Publish a new live reclamation probability.
+    pub fn set_live_p(&self, p: f64) {
+        self.live_p_bits.store(p.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current live reclamation probability.
+    pub fn live_p(&self) -> f64 {
+        f64::from_bits(self.live_p_bits.load(Ordering::Relaxed))
+    }
+
+    /// Coherent-enough snapshot of all published decisions (each field
+    /// individually relaxed-loaded; they are independent gauges).
+    pub fn snapshot(&self) -> AdaptiveSnapshot {
+        AdaptiveSnapshot {
+            gap_ewma_ns: self.gap_ewma_ns(),
+            spin_budget: self.spin_budget(),
+            live_p: self.live_p(),
+        }
+    }
+}
+
+/// Point-in-time view of a queue's published adaptive decisions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveSnapshot {
+    /// Smoothed inter-arrival gap (ns); 0 until published.
+    pub gap_ewma_ns: u64,
+    /// Spin steps a waiter performs before parking.
+    pub spin_budget: u32,
+    /// Live reclamation Bernoulli probability.
+    pub live_p: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_primes_on_first_sample() {
+        let mut e = Ewma::new(0.25);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.observe(100.0), 100.0);
+        assert_eq!(e.value(), Some(100.0));
+        // Second sample folds with alpha, not a fresh prime.
+        assert_eq!(e.observe(200.0), 125.0);
+    }
+
+    #[test]
+    fn spin_budget_endpoints_and_monotone() {
+        assert_eq!(spin_budget_for(0), MAX_SPIN_STEPS);
+        assert_eq!(spin_budget_for(FULL_SPIN_GAP_NS), MAX_SPIN_STEPS);
+        assert_eq!(spin_budget_for(GAP_CAP_NS), 0);
+        let mut prev = spin_budget_for(0);
+        for gap in (0..10_000_000u64).step_by(997) {
+            let b = spin_budget_for(gap);
+            assert!(b <= prev, "budget must not grow with the gap");
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn reclaim_p_eager_when_empty_lazy_when_hot() {
+        let base = 1.0 / 1024.0;
+        assert!((reclaim_p_for(base, 0.0) - base * RECLAIM_MAX_SCALE).abs() < 1e-12);
+        assert!((reclaim_p_for(base, 1.0) - base * RECLAIM_MIN_SCALE).abs() < 1e-12);
+        // Never escapes [0, 1] even for silly base values.
+        assert_eq!(reclaim_p_for(0.9, 0.0), 1.0);
+        let mut prev = reclaim_p_for(base, 0.0);
+        for i in 0..=100 {
+            let p = reclaim_p_for(base, i as f64 / 100.0);
+            assert!(p <= prev + 1e-12, "p must not grow with occupancy");
+            prev = p;
+        }
+    }
+
+    #[test]
+    fn flush_wait_shrinks_with_fill() {
+        let w = Duration::from_millis(2);
+        assert_eq!(flush_wait_for(w, 0.0), w);
+        assert_eq!(flush_wait_for(w, FLUSH_FULL_FILL), w);
+        assert_eq!(flush_wait_for(w, 1.0), w.mul_f64(FLUSH_MIN_SCALE));
+        let mut prev = flush_wait_for(w, 0.0);
+        for i in 0..=100 {
+            let d = flush_wait_for(w, i as f64 / 100.0);
+            assert!(d <= prev, "deadline must not grow with fill");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn gap_tracker_caps_and_smooths() {
+        let mut t = GapTracker::new();
+        let t0 = Instant::now();
+        assert_eq!(t.observe(t0), None, "first arrival has no gap");
+        let e1 = t.observe(t0 + Duration::from_micros(10)).unwrap();
+        assert_eq!(e1, 10_000);
+        // A multi-second outlier clamps to the cap instead of poisoning
+        // the estimate for minutes.
+        let e2 = t.observe(t0 + Duration::from_secs(30)).unwrap();
+        assert!(e2 <= 10_000 + (GAP_CAP_NS as f64 * GAP_ALPHA) as u64 + 1);
+    }
+
+    #[test]
+    fn queue_adaptive_publishes_decisions() {
+        let qa = QueueAdaptive::new(1.0 / 512.0);
+        assert_eq!(qa.spin_budget(), MAX_SPIN_STEPS, "optimistic start");
+        qa.record_gap(GAP_CAP_NS);
+        assert_eq!(qa.spin_budget(), 0);
+        assert_eq!(qa.gap_ewma_ns(), GAP_CAP_NS);
+        qa.set_live_p(0.5);
+        let snap = qa.snapshot();
+        assert_eq!(snap.spin_budget, 0);
+        assert_eq!(snap.live_p, 0.5);
+        let other = QueueAdaptive::new(0.1);
+        assert_ne!(qa.id(), other.id(), "ids are process-unique");
+    }
+}

@@ -1,8 +1,10 @@
-//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`, HLO text —
-//! see DESIGN.md §1 and /opt/xla-example/README.md for why text, not
-//! serialized protos), compile once on the CPU PJRT client, execute
-//! from the Rust hot path.
+//! Runtime services: the PJRT model runtime (load AOT artifacts —
+//! `artifacts/*.hlo.txt`, HLO text; see DESIGN.md §1 and
+//! /opt/xla-example/README.md for why text, not serialized protos —
+//! compile once on the CPU PJRT client, execute from the Rust hot
+//! path) and the adaptive control plane ([`adaptive`], DESIGN.md §15).
 
+pub mod adaptive;
 pub mod client;
 
 pub use client::{ModelRuntime, TestVectors};

@@ -52,6 +52,15 @@ impl Backoff {
     pub fn is_yielding(&self) -> bool {
         self.step > SPIN_LIMIT
     }
+
+    /// Number of [`Self::spin`] calls performed since the last reset
+    /// (capped at `YIELD_LIMIT + 1`). The adaptive wait path
+    /// (DESIGN.md §15) compares this against a learned spin budget
+    /// instead of the fixed [`Self::is_yielding`] threshold.
+    #[inline]
+    pub fn step(&self) -> u32 {
+        self.step
+    }
 }
 
 /// Single CPU pause — the paper's `CPU_PAUSE()` primitive.

@@ -84,6 +84,11 @@ pub struct WaitStrategy {
     /// only by registering futures and by notifications that already
     /// observed `waiters > 0`.
     wakers: WakerSet,
+    /// Monotone count of sleep calls (threads that went past the
+    /// re-check and into the condvar path). A raw `std` atomic, like
+    /// the `WakerSet` gate, so the metrics plumbing stays invisible to
+    /// the §9 model checker.
+    sleeps: AtomicUsize,
 }
 
 impl WaitStrategy {
@@ -151,6 +156,7 @@ impl WaitStrategy {
     /// without touching the waiter count — callers hold a
     /// [`WaitRegistration`] for that.
     fn sleep_until_notified(&self, token: WaitToken) {
+        self.sleeps.fetch_add(1, Ordering::Relaxed);
         let mut guard = self.lock.lock().unwrap();
         while self.epoch.load(Ordering::SeqCst) == token.0 {
             guard = self.cv.wait(guard).unwrap();
@@ -168,6 +174,7 @@ impl WaitStrategy {
     /// loaded machine. `shims_active()` is constant `false` in normal
     /// builds.
     fn sleep_until_notified_or_deadline(&self, token: WaitToken, deadline: Instant) -> bool {
+        self.sleeps.fetch_add(1, Ordering::Relaxed);
         let model = crate::model::shims_active();
         let mut guard = self.lock.lock().unwrap();
         let mut woken = true;
@@ -289,6 +296,13 @@ impl WaitStrategy {
     /// registered async waker slots (diagnostics; racy by nature).
     pub fn waiters(&self) -> u64 {
         self.waiters.load(Ordering::Relaxed)
+    }
+
+    /// Monotone count of wait calls that reached the sleep loop —
+    /// registrations whose re-check still found nothing (exported as a
+    /// counter by the `/metrics` endpoint).
+    pub fn sleeps(&self) -> u64 {
+        self.sleeps.load(Ordering::Relaxed) as u64
     }
 }
 
@@ -613,6 +627,21 @@ mod tests {
         }));
         assert!(r.is_err());
         assert_eq!(ws.waiters(), 0);
+    }
+
+    #[test]
+    fn sleeps_counter_counts_wait_calls() {
+        let ws = WaitStrategy::new();
+        assert_eq!(ws.sleeps(), 0);
+        let t = ws.register();
+        ws.notify_all(); // epoch moves: the wait below returns at once…
+        ws.wait(t);
+        assert_eq!(ws.sleeps(), 1, "…but still reached the sleep loop");
+        let t = ws.register();
+        let _ = ws.wait_deadline(t, Instant::now() + Duration::from_millis(1));
+        assert_eq!(ws.sleeps(), 2);
+        ws.notify_if_waiting(); // fast path: no waiters, no sleep
+        assert_eq!(ws.sleeps(), 2);
     }
 
     #[test]

@@ -1,0 +1,416 @@
+//! Adaptive-behavior test net for the §15 runtime control plane.
+//!
+//! Pins the control laws themselves (EWMA determinism, convergence
+//! bounds, the spin-budget monotonicity that keeps faster arrivals
+//! from ever drifting *toward* parking), the gap-tracker regime
+//! changes on synthetic arrival traces, the live decisions a real
+//! adaptive `CmpQueue` publishes under idle vs burst load, and the
+//! A/B guarantee the whole feature rides on: adaptive mode must never
+//! be meaningfully worse than the fixed knobs it replaces.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cmpq::bench::workload::{run_throughput_on, PairConfig, Scenario, TrialConfig};
+use cmpq::queue::cmp::{CmpConfig, CmpQueue, ReclaimTrigger};
+use cmpq::queue::{ConcurrentQueue, Impl};
+use cmpq::runtime::adaptive::{
+    flush_wait_for, reclaim_p_for, spin_budget_for, Ewma, GapTracker, QueueAdaptive, FULL_SPIN_GAP_NS,
+    GAP_ALPHA, GAP_CAP_NS, MAX_SPIN_STEPS,
+};
+use cmpq::util::XorShift64;
+
+// ---------------------------------------------------------------------
+// Control-law properties (pure functions — fully deterministic).
+// ---------------------------------------------------------------------
+
+/// The same seeded trace must produce bit-identical EWMA trajectories:
+/// the estimator has no hidden state, clocks, or allocation order to
+/// diverge on.
+#[test]
+fn ewma_is_deterministic_for_a_seeded_trace() {
+    let trace = |seed: u64| -> Vec<f64> {
+        let mut rng = XorShift64::new(seed);
+        let mut e = Ewma::new(GAP_ALPHA);
+        (0..1000)
+            .map(|_| e.observe(rng.next_f64() * 1e6))
+            .collect()
+    };
+    let a = trace(42);
+    let b = trace(42);
+    assert_eq!(a, b, "identical seeds must replay identically");
+    assert_ne!(a, trace(43), "different seeds must actually differ");
+}
+
+/// Step response: after the input jumps to a new constant, the error
+/// decays geometrically as `(1 − α)^n` — the bound that sizes how many
+/// arrivals a regime flip costs.
+#[test]
+fn ewma_converges_geometrically_under_a_step() {
+    let mut e = Ewma::new(GAP_ALPHA);
+    e.observe(1e6); // prime in the old regime
+    let target = 1e3;
+    let mut expected_err = 1e6 - target;
+    for n in 1..=40 {
+        let v = e.observe(target);
+        expected_err *= 1.0 - GAP_ALPHA;
+        let err = (v - target).abs();
+        assert!(
+            (err - expected_err).abs() < 1e-6,
+            "step {n}: error {err} deviates from (1-α)^n bound {expected_err}"
+        );
+    }
+    // A dozen arrivals get within 3% of the new regime.
+    assert!((e.value().unwrap() - target) / (1e6 - target) < 0.03);
+}
+
+/// Burst immunity: a single outlier moves the estimate by at most
+/// `α × (outlier − value)`, and a handful of tight follow-ups undo it.
+#[test]
+fn ewma_rides_out_single_outliers() {
+    let mut e = Ewma::new(GAP_ALPHA);
+    for _ in 0..20 {
+        e.observe(1_000.0);
+    }
+    let before = e.value().unwrap();
+    let after_outlier = e.observe(1e8);
+    assert!(
+        after_outlier <= before + GAP_ALPHA * (1e8 - before) + 1e-6,
+        "one outlier is damped by α"
+    );
+    for _ in 0..20 {
+        e.observe(1_000.0);
+    }
+    let recovered = e.value().unwrap();
+    assert!(
+        recovered < 1e8 * 0.01,
+        "tight follow-ups must bury the outlier: {recovered}"
+    );
+}
+
+/// The satellite monotonicity property: faster arrivals can never
+/// shrink the spin budget (never push a consumer *toward* parking).
+/// Checked both pointwise over random gap pairs and along whole
+/// traces, where a uniformly faster trace keeps a uniformly
+/// greater-or-equal budget at every step.
+#[test]
+fn faster_arrivals_never_shrink_the_spin_budget() {
+    let mut rng = XorShift64::new(0xBEEF);
+    for _ in 0..10_000 {
+        let a = rng.next_below(GAP_CAP_NS);
+        let b = rng.next_below(GAP_CAP_NS);
+        let (fast, slow) = (a.min(b), a.max(b));
+        assert!(
+            spin_budget_for(fast) >= spin_budget_for(slow),
+            "budget({fast}) < budget({slow})"
+        );
+    }
+    // Trace form: the same arrival process sped up 4× (every gap
+    // quartered). The EWMA is linear, so the fast trace's estimate is
+    // exactly a quarter of the slow one at every step — and the budget
+    // law must respect the ordering throughout.
+    let mut rng = XorShift64::new(7);
+    let mut slow = Ewma::new(GAP_ALPHA);
+    let mut fast = Ewma::new(GAP_ALPHA);
+    for _ in 0..2_000 {
+        let gap = rng.next_below(GAP_CAP_NS) as f64;
+        let s = slow.observe(gap);
+        let f = fast.observe(gap / 4.0);
+        assert!(
+            spin_budget_for(f as u64) >= spin_budget_for(s as u64),
+            "faster trace fell below the slower one: {f} vs {s}"
+        );
+    }
+}
+
+/// Endpoint pins for all three laws, so a refactor cannot silently
+/// invert a slope (module unit tests cover the full monotone sweeps).
+#[test]
+fn control_law_endpoints() {
+    assert_eq!(spin_budget_for(FULL_SPIN_GAP_NS), MAX_SPIN_STEPS);
+    assert_eq!(spin_budget_for(GAP_CAP_NS), 0);
+    let base = 1.0 / 1024.0;
+    assert!(reclaim_p_for(base, 0.0) > base, "empty window: eager");
+    assert!(reclaim_p_for(base, 1.0) < base, "full window: lazy");
+    let w = Duration::from_millis(2);
+    assert_eq!(flush_wait_for(w, 0.0), w, "starved batcher keeps max_wait");
+    assert!(flush_wait_for(w, 1.0) < w, "full batcher flushes sooner");
+}
+
+// ---------------------------------------------------------------------
+// GapTracker regimes over synthetic (constructed-Instant) traces.
+// ---------------------------------------------------------------------
+
+/// Burst → idle → burst on a synthetic clock: the tracker's smoothed
+/// gap (and the derived budget) must follow each regime flip within a
+/// bounded number of arrivals. No real clocks — every Instant is
+/// constructed, so this is deterministic on any machine.
+#[test]
+fn gap_tracker_follows_burst_and_idle_regimes() {
+    let mut t = GapTracker::new();
+    let t0 = Instant::now();
+    let mut now = t0;
+    assert_eq!(t.observe(now), None, "first arrival has no gap");
+
+    // Tight phase: 50 arrivals 1 µs apart → full spin budget.
+    for _ in 0..50 {
+        now += Duration::from_micros(1);
+        t.observe(now);
+    }
+    let tight = t.gap_ewma_ns().unwrap();
+    assert!(tight <= FULL_SPIN_GAP_NS, "tight regime: {tight} ns");
+    assert_eq!(spin_budget_for(tight), MAX_SPIN_STEPS);
+
+    // Idle phase: 30 arrivals 100 ms apart → immediate park.
+    for _ in 0..30 {
+        now += Duration::from_millis(100);
+        t.observe(now);
+    }
+    let idle = t.gap_ewma_ns().unwrap();
+    assert!(idle > 10_000_000, "idle regime must dominate: {idle} ns");
+    assert_eq!(spin_budget_for(idle), 0);
+
+    // Back to tight: convergence within ~a hundred arrivals, as the
+    // (1-α)^n bound promises (0.75^100 × 100 ms ≪ 4 µs).
+    for _ in 0..100 {
+        now += Duration::from_micros(1);
+        t.observe(now);
+    }
+    let back = t.gap_ewma_ns().unwrap();
+    assert!(back <= FULL_SPIN_GAP_NS, "regime must flip back: {back} ns");
+    assert_eq!(spin_budget_for(back), MAX_SPIN_STEPS);
+}
+
+/// Published decisions stay mutually consistent: whatever gap the
+/// tracker hands to [`QueueAdaptive::record_gap`], the stored budget
+/// is exactly the law applied to the stored gap.
+#[test]
+fn published_budget_always_matches_published_gap() {
+    let qa = QueueAdaptive::new(1.0 / 512.0);
+    let mut rng = XorShift64::new(0xA11CE);
+    for _ in 0..1_000 {
+        qa.record_gap(rng.next_below(GAP_CAP_NS * 2));
+        let snap = qa.snapshot();
+        assert_eq!(snap.spin_budget, spin_budget_for(snap.gap_ewma_ns));
+    }
+}
+
+// ---------------------------------------------------------------------
+// The real queue: decisions visibly move between idle and burst.
+// ---------------------------------------------------------------------
+
+fn adaptive_cfg() -> CmpConfig {
+    CmpConfig::default()
+        .with_trigger(ReclaimTrigger::Bernoulli)
+        .with_adaptive()
+}
+
+/// Idle phase (arrivals milliseconds apart) must drive the learned
+/// spin budget to an immediate park; a subsequent burst drain must
+/// pull the smoothed gap back down. This is the live half of the
+/// acceptance criterion ("gauges visibly move between bursty and idle
+/// phases"), asserted directly on the queue's published snapshot.
+#[test]
+fn adaptive_queue_learns_idle_then_recovers_on_burst() {
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::with_config(adaptive_cfg()));
+    assert_eq!(
+        q.adaptive_snapshot().spin_budget,
+        MAX_SPIN_STEPS,
+        "unknown regime starts optimistic (fixed-schedule spinning)"
+    );
+
+    // Idle phase: 5 items spaced ~4 ms. The consumer's observed
+    // inter-arrival gaps are all ≥ the spacing, so the EWMA lands well
+    // past the 262 µs park threshold — deterministically budget 0.
+    let qc = q.clone();
+    let consumer = std::thread::spawn(move || {
+        for i in 0..5u64 {
+            assert_eq!(qc.pop_blocking(), i);
+        }
+    });
+    for i in 0..5u64 {
+        std::thread::sleep(Duration::from_millis(4));
+        q.push(i).unwrap();
+    }
+    consumer.join().unwrap();
+    let idle = q.adaptive_snapshot();
+    assert!(
+        idle.gap_ewma_ns >= 1_000_000,
+        "ms-spaced arrivals must read as a wide gap: {} ns",
+        idle.gap_ewma_ns
+    );
+    assert_eq!(idle.spin_budget, 0, "idle regime parks immediately");
+    let stats = q.stats();
+    assert!(stats.wait_parks > 0, "idle waits actually parked");
+
+    // The control report exports the same story.
+    let report = q.control_report().expect("cmp reports its control plane");
+    let ratio = report.park_ratio.expect("stats on ⇒ park ratio known");
+    assert!(ratio > 0.0 && ratio <= 1.0, "park ratio {ratio}");
+    assert!(report.reclaim_p.is_some());
+    assert_eq!(report.spin_budget, Some(0));
+
+    // Burst phase: a prefilled queue drained through the blocking path
+    // publishes hundreds of tight gaps; the smoothed gap must fall
+    // (strictly below the idle estimate — robust to scheduler jitter,
+    // which would have to exceed the idle spacing itself to mask it).
+    for i in 0..300u64 {
+        q.push(i).unwrap();
+    }
+    for i in 0..300u64 {
+        assert_eq!(q.pop_blocking(), i);
+    }
+    let burst = q.adaptive_snapshot();
+    assert!(
+        burst.gap_ewma_ns < idle.gap_ewma_ns,
+        "burst drain must pull the gap down: {} → {}",
+        idle.gap_ewma_ns,
+        burst.gap_ewma_ns
+    );
+    assert_eq!(
+        burst.spin_budget,
+        spin_budget_for(burst.gap_ewma_ns),
+        "published decisions stay consistent"
+    );
+}
+
+/// The `Impl` registry wires the adaptive variant correctly: same
+/// element contract as plain CMP, distinct report name, adaptive
+/// control plane armed.
+#[test]
+fn impl_registry_exposes_the_adaptive_variant() {
+    let fixed: Arc<dyn ConcurrentQueue<u64>> = Impl::Cmp.make(1 << 10);
+    let adaptive: Arc<dyn ConcurrentQueue<u64>> = Impl::CmpAdaptive.make(1 << 10);
+    assert_eq!(fixed.name(), "cmp");
+    assert_eq!(adaptive.name(), "cmp-adaptive");
+    assert!(adaptive.is_strict_fifo() && adaptive.is_lock_free());
+    for i in 0..100u64 {
+        adaptive.enqueue(i);
+    }
+    for i in 0..100u64 {
+        assert_eq!(adaptive.try_dequeue(), Some(i), "FIFO preserved");
+    }
+    // Fixed mode reports the configured constant; the registry's
+    // adaptive queue reports a live probability too.
+    let fr = fixed.control_report().unwrap();
+    let ar = adaptive.control_report().unwrap();
+    assert!(fr.reclaim_p.is_some() && ar.reclaim_p.is_some());
+    // A mutex baseline has no control plane at all.
+    let mx: Arc<dyn ConcurrentQueue<u64>> = Impl::Mutex.make(1 << 10);
+    assert_eq!(mx.control_report(), None);
+}
+
+// ---------------------------------------------------------------------
+// A/B smoke: adaptive must not lose to the fixed knobs it replaces.
+// ---------------------------------------------------------------------
+
+struct AbBest {
+    items_per_sec: f64,
+    ops_per_cpu_sec: f64,
+}
+
+/// Best-of-3 for one implementation under one trial shape. Best-of
+/// (not mean) so a single descheduled round cannot fail the A/B
+/// assertion; the two variants share every fast-path instruction, so
+/// their bests track each other tightly.
+fn best_of_3(imp: Impl, pair: PairConfig, cfg: &TrialConfig) -> AbBest {
+    let mut best = AbBest {
+        items_per_sec: 0.0,
+        ops_per_cpu_sec: 0.0,
+    };
+    for _ in 0..3 {
+        let t = run_throughput_on(imp.make(1 << 16), pair, cfg);
+        best.items_per_sec = best.items_per_sec.max(t.items_per_sec);
+        if let Some(c) = t.ops_per_cpu_sec {
+            best.ops_per_cpu_sec = best.ops_per_cpu_sec.max(c);
+        }
+    }
+    best
+}
+
+/// Closed loop: consumers never block, so the adaptive path is never
+/// even sampled — throughput must be within the ±10% noise band of
+/// fixed CMP (best-of-3 on both sides).
+#[test]
+fn adaptive_closed_loop_throughput_is_no_worse() {
+    let cfg = TrialConfig {
+        total_ops: 30_000,
+        scenario: Scenario::ClosedLoop,
+        ..TrialConfig::default()
+    };
+    let pair = PairConfig::symmetric(2);
+    let fixed = best_of_3(Impl::Cmp, pair, &cfg);
+    let adaptive = best_of_3(Impl::CmpAdaptive, pair, &cfg);
+    assert!(
+        adaptive.items_per_sec >= fixed.items_per_sec * 0.9,
+        "adaptive closed-loop regressed: {} vs {} items/s",
+        adaptive.items_per_sec,
+        fixed.items_per_sec
+    );
+}
+
+/// Bursty/idle alternation (the `adaptive_burst` workload shape):
+/// consumers park between bursts, which is exactly where the learned
+/// budget sheds spin work. CPU efficiency (items per CPU-second) must
+/// be at least fixed CMP's, within the same 10% noise allowance.
+#[test]
+fn adaptive_bursty_cpu_efficiency_is_no_worse() {
+    let cfg = TrialConfig {
+        total_ops: 6_000,
+        scenario: Scenario::Bursty {
+            burst: 256,
+            gap: Duration::from_millis(3),
+        },
+        ..TrialConfig::default()
+    };
+    let pair = PairConfig::symmetric(2);
+    let fixed = best_of_3(Impl::Cmp, pair, &cfg);
+    let adaptive = best_of_3(Impl::CmpAdaptive, pair, &cfg);
+    // CPU accounting is best-effort (procfs); when unmeasured on either
+    // side fall back to the throughput bound so the test still bites.
+    if fixed.ops_per_cpu_sec > 0.0 && adaptive.ops_per_cpu_sec > 0.0 {
+        assert!(
+            adaptive.ops_per_cpu_sec >= fixed.ops_per_cpu_sec * 0.9,
+            "adaptive idle-phase CPU efficiency regressed: {} vs {} items/CPU-s",
+            adaptive.ops_per_cpu_sec,
+            fixed.ops_per_cpu_sec
+        );
+    }
+    assert!(
+        adaptive.items_per_sec >= fixed.items_per_sec * 0.9,
+        "adaptive bursty throughput regressed: {} vs {} items/s",
+        adaptive.items_per_sec,
+        fixed.items_per_sec
+    );
+}
+
+/// Byte-identical default: constructing a queue without `with_adaptive`
+/// leaves every published decision at its fixed-path constant, the
+/// wait path on the `is_yielding` schedule, and the live `p` pinned to
+/// the configured value — the "fixed-knob path remains default"
+/// acceptance criterion.
+#[test]
+fn fixed_path_is_untouched_by_default() {
+    let cfg = CmpConfig::default();
+    assert!(!cfg.adaptive, "adaptive must be opt-in");
+    let q: Arc<CmpQueue<u64>> = Arc::new(CmpQueue::with_config(cfg));
+    assert_eq!(q.name(), "cmp", "default queue reports the fixed name");
+    let qc = q.clone();
+    let consumer = std::thread::spawn(move || {
+        for i in 0..3u64 {
+            assert_eq!(qc.pop_blocking(), i);
+        }
+    });
+    for i in 0..3u64 {
+        std::thread::sleep(Duration::from_millis(2));
+        q.push(i).unwrap();
+    }
+    consumer.join().unwrap();
+    let snap = q.adaptive_snapshot();
+    assert_eq!(
+        (snap.gap_ewma_ns, snap.spin_budget),
+        (0, MAX_SPIN_STEPS),
+        "fixed mode never publishes gap observations"
+    );
+    assert_eq!(snap.live_p, q.config().bernoulli_p);
+}

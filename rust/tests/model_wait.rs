@@ -11,6 +11,10 @@
 //! * exhaustive DFS passes (complete at the configured bound) over the
 //!   §8 lost-wakeup race, 1P×1C in full and 2P×2C prefix-bounded;
 //! * the same protocol driven through `CmpQueue::pop_blocking`;
+//! * the §15 adaptive spin→park protocol with its spin budget pinned
+//!   per schedule (the EWMA is sampled once per wait, so pinned
+//!   budgets cover every policy the controller can emit), including a
+//!   broken no-re-poll variant the checker must catch;
 //! * claim-CAS vs. reclamation and freelist-ABA property scenarios;
 //! * pinned adversarial schedules as named deterministic regressions;
 //! * detection-power checks: deliberately broken variants (no re-poll,
@@ -26,6 +30,7 @@ use cmpq::model::{
     explore_dfs, fuzz, replay, ExploreConfig, MAtomicU64, Outcome, Scenario, ThreadBody,
 };
 use cmpq::queue::cmp::{CmpConfig, CmpQueue, Node, NodePool, ReclaimTrigger};
+use cmpq::runtime::adaptive::MAX_SPIN_STEPS;
 use cmpq::util::WaitStrategy;
 
 /// Exhaustive prefix depth for the 2P×2C pass. Branching is ≤ 4, so
@@ -286,6 +291,193 @@ fn missing_repoll_variant_is_caught() {
         report.executions, cx.schedule
     );
     // The counterexample schedule replays deterministically.
+    let again = replay(factory, &cx.schedule, 10_000);
+    assert_eq!(again.outcome, cx.outcome, "counterexample must replay");
+}
+
+// ---------------------------------------------------------------------
+// The §15 adaptive wait path. `park_wait` with `config.adaptive`
+// samples a spin budget once per wait and performs that many extra
+// polls before the §8 register → re-poll → sleep protocol; the guard
+// itself is untouched. In production the budget comes from the gap
+// EWMA — but it is sampled *once*, so every concrete schedule runs
+// under some pinned budget value, and enumerating pinned budgets
+// covers every policy the controller can emit.
+// ---------------------------------------------------------------------
+
+/// The adaptive consumer protocol from `park_wait` (DESIGN.md §15):
+/// up to `budget` spin polls (the learned phase), then the canonical
+/// poll → register → re-poll → sleep. `budget = 0` is the immediate
+/// park that only adaptive mode can reach; `budget = MAX_SPIN_STEPS`
+/// reproduces the fixed schedule.
+fn adaptive_consume_one(st: &EcState, budget: u32) {
+    let mut spins = 0u32;
+    loop {
+        if try_take(st) {
+            return;
+        }
+        // Spin phase: the budget never resets within one wait, exactly
+        // like `backoff.step() < budget` in `park_wait`.
+        if spins < budget {
+            spins += 1;
+            continue;
+        }
+        let registration = st.ws.registration();
+        if try_take(st) {
+            return; // registration drops → cancel
+        }
+        registration.wait();
+    }
+}
+
+fn adaptive_scenario_1p1c(budget: u32) -> Scenario {
+    let st = Arc::new(EcState {
+        items: MAtomicU64::new(0),
+        ws: WaitStrategy::new(),
+    });
+    let p = st.clone();
+    let c = st.clone();
+    let threads: Vec<ThreadBody> = vec![
+        Box::new(move || produce_one(&p)),
+        Box::new(move || adaptive_consume_one(&c, budget)),
+    ];
+    let st2 = st.clone();
+    Scenario {
+        threads,
+        check: Box::new(move || {
+            if st2.items.load(SeqCst) != 0 {
+                return Err(format!("items left behind: {}", st2.items.load(SeqCst)));
+            }
+            if st2.ws.waiters() != 0 {
+                return Err(format!("leaked waiters: {}", st2.ws.waiters()));
+            }
+            Ok(())
+        }),
+    }
+}
+
+/// Every pinned spin budget — from the adaptive-only immediate park
+/// (0) through the fixed schedule (`MAX_SPIN_STEPS`) — fully
+/// enumerated at 1P×1C: no budget value can lose the wakeup or leak a
+/// waiter. Spin polls are pure re-reads, so the extra budgets grow the
+/// space modestly and `complete` stays a hard assertion.
+#[test]
+fn adaptive_budget_pinned_exhaustive_1p1c() {
+    for budget in [0, 1, 2, MAX_SPIN_STEPS] {
+        let report = explore_dfs(|| adaptive_scenario_1p1c(budget), cfg_with_depth(100_000));
+        eprintln!(
+            "adaptive 1P1C budget={budget}: executions={} max_steps={}",
+            report.executions, report.max_steps_seen
+        );
+        assert!(
+            report.counterexample.is_none(),
+            "budget {budget} counterexample: {:?}",
+            report.counterexample
+        );
+        assert!(
+            report.complete,
+            "budget {budget} must be fully enumerable"
+        );
+    }
+}
+
+/// Heterogeneous budgets — the regime only adaptivity creates, where
+/// one consumer parks immediately while its peer still spins. 2P×2C,
+/// exhaustive over all schedule prefixes at the configured bound, plus
+/// a fixed-seed fuzz pass beyond it.
+#[test]
+fn adaptive_mixed_budgets_2x2() {
+    fn scenario() -> Scenario {
+        let st = Arc::new(EcState {
+            items: MAtomicU64::new(0),
+            ws: WaitStrategy::new(),
+        });
+        let mut threads: Vec<ThreadBody> = Vec::new();
+        for _ in 0..2 {
+            let st = st.clone();
+            threads.push(Box::new(move || produce_one(&st)));
+        }
+        for budget in [0, 2] {
+            let st = st.clone();
+            threads.push(Box::new(move || adaptive_consume_one(&st, budget)));
+        }
+        let st2 = st.clone();
+        Scenario {
+            threads,
+            check: Box::new(move || {
+                if st2.items.load(SeqCst) != 0 {
+                    return Err(format!("items left behind: {}", st2.items.load(SeqCst)));
+                }
+                if st2.ws.waiters() != 0 {
+                    return Err(format!("leaked waiters: {}", st2.ws.waiters()));
+                }
+                Ok(())
+            }),
+        }
+    }
+    let depth = depth_2x2();
+    let report = explore_dfs(scenario, cfg_with_depth(depth));
+    eprintln!(
+        "adaptive 2P2C depth={depth}: executions={} truncated={}",
+        report.executions, report.depth_truncated
+    );
+    assert!(
+        report.counterexample.is_none(),
+        "counterexample: {:?}",
+        report.counterexample
+    );
+    assert!(report.complete, "prefix space at depth {depth} must be exhausted");
+    let fz = fuzz(scenario, cfg_with_depth(0), 0xADAF, 300);
+    assert!(fz.counterexample.is_none(), "fuzz: {:?}", fz.counterexample);
+}
+
+/// Detection power for the adaptive path: spin polls are *not* a
+/// substitute for the post-registration re-poll. A variant that spins
+/// its whole budget but registers and sleeps without re-polling is the
+/// §8 lost wakeup again, and the checker must exhibit it as a
+/// stranded-consumer deadlock — proving the passes above can fail.
+#[test]
+fn adaptive_missing_repoll_variant_is_caught() {
+    fn broken_adaptive_consume_one(st: &EcState, budget: u32) {
+        let mut spins = 0u32;
+        loop {
+            if try_take(st) {
+                return;
+            }
+            if spins < budget {
+                spins += 1;
+                continue;
+            }
+            let registration = st.ws.registration();
+            // BUG under test: the spin phase "already polled plenty",
+            // so no re-poll between register and sleep.
+            registration.wait();
+        }
+    }
+    let factory = || {
+        let st = Arc::new(EcState {
+            items: MAtomicU64::new(0),
+            ws: WaitStrategy::new(),
+        });
+        let p = st.clone();
+        let c = st.clone();
+        let threads: Vec<ThreadBody> = vec![
+            Box::new(move || produce_one(&p)),
+            Box::new(move || broken_adaptive_consume_one(&c, 2)),
+        ];
+        Scenario {
+            threads,
+            check: Box::new(|| Ok(())),
+        }
+    };
+    let report = explore_dfs(factory, cfg_with_depth(14));
+    let cx = report
+        .counterexample
+        .expect("the checker must find the adaptive lost wakeup");
+    assert!(
+        matches!(cx.outcome, Outcome::Deadlock { .. }),
+        "expected a stranded consumer, got {cx:?}"
+    );
     let again = replay(factory, &cx.schedule, 10_000);
     assert_eq!(again.outcome, cx.outcome, "counterexample must replay");
 }

@@ -1,10 +1,12 @@
 //! End-to-end tests for the TCP front end (DESIGN.md §12): loopback
 //! round-trips, slow-loris read deadlines, disconnect-mid-flight
-//! conservation, wire-level `Busy` under both admission layers, and
-//! graceful drain on shutdown. Every test binds an ephemeral port, so
-//! they parallelize safely.
+//! conservation, wire-level `Busy` under both admission layers,
+//! graceful drain on shutdown, and the `/metrics` scrape contract
+//! (DESIGN.md §15). Every test binds an ephemeral port, so they
+//! parallelize safely.
 
-use std::io::Write;
+use std::collections::{HashMap, HashSet};
+use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex};
@@ -16,6 +18,7 @@ use cmpq::coordinator::server::{Server, ServerConfig};
 use cmpq::coordinator::worker::{EchoEngine, EngineFactory, InferenceEngine};
 use cmpq::net::codec::{self, Status};
 use cmpq::net::listener::NetServer;
+use cmpq::net::metrics_http::{render_prometheus, MetricsServer, RenderFn};
 use cmpq::net::NetConfig;
 
 fn echo_factory() -> EngineFactory {
@@ -305,4 +308,138 @@ fn shutdown_drains_pending_replies_then_closes() {
     );
     assert_eq!(report.metrics.submitted.load(Ordering::Relaxed), 1);
     assert_eq!(report.metrics.completed.load(Ordering::Relaxed), 1);
+}
+
+/// Parse a Prometheus text exposition, enforcing the format contract
+/// the scrape test pins: every sample's family carries a `# TYPE`
+/// line, no family or sample name appears twice, and every value
+/// parses as a finite float. Returns `sample name → value` (this
+/// exposition is label-free, so the name is the whole key).
+fn parse_exposition(body: &str) -> HashMap<String, f64> {
+    let mut families: HashSet<String> = HashSet::new();
+    let mut samples: HashMap<String, f64> = HashMap::new();
+    for line in body.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().expect("TYPE line names a family").to_string();
+            let kind = it.next().expect("TYPE line names a kind");
+            assert!(
+                matches!(kind, "counter" | "gauge"),
+                "unexpected metric kind {kind:?} for {name}"
+            );
+            assert!(families.insert(name.clone()), "duplicate family {name}");
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // HELP or comment
+        }
+        let mut it = line.split_whitespace();
+        let name = it.next().expect("sample line has a name");
+        let value: f64 = it
+            .next()
+            .expect("sample line has a value")
+            .parse()
+            .unwrap_or_else(|e| panic!("unparseable value on {line:?}: {e}"));
+        assert!(value.is_finite(), "non-finite sample {line:?}");
+        assert!(it.next().is_none(), "trailing tokens on {line:?}");
+        assert!(
+            samples.insert(name.to_string(), value).is_none(),
+            "duplicate sample {name}"
+        );
+    }
+    for name in samples.keys() {
+        assert!(families.contains(name), "{name} exported without # TYPE");
+    }
+    samples
+}
+
+#[test]
+fn metrics_scrape_is_valid_prometheus_with_monotone_counters() {
+    let server = Server::start(ServerConfig::default(), echo_factory());
+    let net = NetServer::start(NetConfig::default(), server).expect("bind");
+    let (srv, shared) = (net.server_handle(), net.shared_handle());
+    let render: RenderFn = Arc::new(move || render_prometheus(&srv, Some(&shared)));
+    let metrics = MetricsServer::start("127.0.0.1:0", render).expect("bind metrics");
+    let maddr = metrics.addr();
+
+    let scrape = move |path: &str| -> (String, String) {
+        let mut c = TcpStream::connect(maddr).expect("connect scrape");
+        write!(c, "GET {path} HTTP/1.0\r\nHost: t\r\n\r\n").unwrap();
+        let mut out = String::new();
+        c.read_to_string(&mut out).expect("scrape reply");
+        let (head, body) = out.split_once("\r\n\r\n").expect("http head/body");
+        (head.to_string(), body.to_string())
+    };
+
+    // Load phase one: four served requests, then a scrape.
+    let mut s = connect(net.addr());
+    let mut buf = Vec::new();
+    for i in 1..=4u64 {
+        write_req(&mut s, &req(i, 0));
+        assert_eq!(read_reply(&mut s, &mut buf).status, Status::Ok);
+    }
+    let (head1, body1) = scrape("/metrics");
+    assert!(head1.starts_with("HTTP/1.0 200 OK\r\n"), "{head1}");
+    assert!(
+        head1.contains("text/plain; version=0.0.4"),
+        "exposition content type: {head1}"
+    );
+    let s1 = parse_exposition(&body1);
+    // The adaptive control plane and both counter layers are exported.
+    for family in [
+        "cmpq_submitted_total",
+        "cmpq_completed_total",
+        "cmpq_spin_budget",
+        "cmpq_gap_ewma_seconds",
+        "cmpq_reclaim_p",
+        "cmpq_batch_fill",
+        "cmpq_batch_wait_seconds",
+        "cmpq_net_frames_in_total",
+        "cmpq_net_active_conns",
+    ] {
+        assert!(s1.contains_key(family), "{family} missing:\n{body1}");
+    }
+    assert_eq!(s1["cmpq_submitted_total"], 4.0, "serving ledger exported");
+
+    // Load phase two: four more requests, scrape again.
+    for i in 5..=8u64 {
+        write_req(&mut s, &req(i, 0));
+        assert_eq!(read_reply(&mut s, &mut buf).status, Status::Ok);
+    }
+    let (_, body2) = scrape("/metrics");
+    let s2 = parse_exposition(&body2);
+    for (name, v1) in &s1 {
+        if !name.ends_with("_total") {
+            continue; // gauges may move either way
+        }
+        let v2 = s2
+            .get(name)
+            .unwrap_or_else(|| panic!("{name} vanished between scrapes"));
+        assert!(v2 >= v1, "counter {name} went backwards: {v1} -> {v2}");
+    }
+    assert_eq!(s2["cmpq_submitted_total"], 8.0);
+    assert_eq!(s2["cmpq_net_frames_in_total"], 8.0);
+    // `completed` is bumped *after* the reply is released to the slot,
+    // so a scrape can trail in-flight replies by a scheduling quantum —
+    // bound it instead of pinning it (monotonicity is checked above).
+    assert!(
+        (4.0..=8.0).contains(&s2["cmpq_completed_total"]),
+        "completed ledger off: {}",
+        s2["cmpq_completed_total"]
+    );
+
+    // Anything but /metrics is a 404 and never renders.
+    let (head404, _) = scrape("/favicon.ico");
+    assert!(head404.starts_with("HTTP/1.0 404 Not Found\r\n"), "{head404}");
+
+    drop(s);
+    // Sidecar first: shutdown joins the serving thread and releases the
+    // render closure's Server handle, which `net.shutdown()` requires
+    // to be unique.
+    metrics.shutdown();
+    let report = net.shutdown();
+    assert!(report.clean(), "clean ledger after scraping under load");
 }

@@ -112,6 +112,15 @@ fn every_committed_workload_round_trips() {
     assert!(sweep.sweep_max_rank_error.len() >= 3, "a sweep, not modes");
     let zipf = arrival_of("zipf_contention");
     assert!(zipf.keys > 0 && zipf.zipf_s > 0.0);
+    // The adaptive A/B workload: bursty↔idle alternation over the
+    // fixed and adaptive CMP variants side by side (DESIGN.md §15).
+    let ab = arrival_of("adaptive_burst");
+    assert!(matches!(ab.arrival, Arrival::Open { .. }));
+    assert!(
+        ab.impls.contains(&Impl::Cmp) && ab.impls.contains(&Impl::CmpAdaptive),
+        "adaptive_burst must A/B fixed vs adaptive: {:?}",
+        ab.impls
+    );
     assert_eq!(arrival_of("coordinator").target, Target::Coordinator);
     assert_eq!(arrival_of("tcp_ingress").target, Target::Tcp);
     // Every latency-true workload uses an honest (open-loop) arrival
